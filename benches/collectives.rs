@@ -1,0 +1,34 @@
+//! Collective cost-model benchmarks: these sit in the DP inner loop's
+//! setup path (CostModel::new prices every layer's collectives), so they
+//! must stay in the tens-of-nanoseconds range.
+
+use nest::graph::models;
+use nest::graph::subgraph::{layer_collectives, SgConfig};
+use nest::network::Cluster;
+use nest::util::bench::bench;
+
+fn main() {
+    let c = Cluster::spine_leaf_h100(1024, 2.0);
+    let shape32 = c.compact_shape(32);
+    let shape512 = c.compact_shape(512);
+
+    bench("allreduce_32dev_100MB", || c.allreduce(1e8, &shape32));
+    bench("allreduce_512dev_1GB", || c.allreduce(1e9, &shape512));
+    bench("allgather_32dev_100MB", || c.allgather(1e8, &shape32));
+    bench("alltoall_32dev_100MB", || c.alltoall(1e8, &shape32));
+    bench("dp_allreduce_d8_stride64", || c.dp_allreduce(1e9, 8, 64));
+    bench("compact_shape_512", || c.compact_shape(512));
+    bench("p2p_time_l2_10MB", || c.p2p_time(2, 1e7));
+
+    // Per-layer collective enumeration (graph-side cost).
+    let g = models::mixtral_8x7b(1);
+    let sg = SgConfig {
+        tp: 1,
+        sp: false,
+        ep: 8,
+        cp: 2,
+    };
+    bench("layer_collectives_moe_ep8cp2", || {
+        layer_collectives(&g.layers[1], g.tokens, &sg)
+    });
+}

@@ -1,0 +1,38 @@
+//! Discrete-event simulator benchmarks: every harness cell runs one DES
+//! evaluation, and the MCMC baseline runs thousands of plan evaluations,
+//! so both `simulate` and `build_plan` are hot.
+
+use nest::baselines::{build_plan, even_cuts};
+use nest::graph::models;
+use nest::graph::subgraph::SgConfig;
+use nest::network::Cluster;
+use nest::sim::{simulate, Schedule};
+use nest::solver::{solve, SolverOpts};
+use nest::util::bench::{bench, bench_n};
+
+fn main() {
+    let g = models::gpt3_175b(1);
+    let c = Cluster::fat_tree_tpuv4(512);
+    let plan = solve(&g, &c, &SolverOpts::default()).unwrap().plan;
+
+    bench_n("des_gpt3_512dev_1f1b", 10, || {
+        simulate(&g, &c, &plan, Schedule::OneFOneB)
+    });
+    bench_n("des_gpt3_512dev_gpipe", 10, || {
+        simulate(&g, &c, &plan, Schedule::GPipe)
+    });
+
+    // The MCMC-hot path: candidate construction + evaluation.
+    let cuts = even_cuts(g.n_layers(), 16);
+    bench("build_plan_gpt3_p16", || {
+        build_plan(&g, &c, "bench", SgConfig::tp(4), &cuts, 8, true, 8)
+    });
+
+    // DES scaling with microbatch count.
+    let small = models::llama2_7b(1);
+    let c64 = Cluster::fat_tree_tpuv4(64);
+    let plan64 = solve(&small, &c64, &SolverOpts::default()).unwrap().plan;
+    bench_n("des_llama2_64dev", 10, || {
+        simulate(&small, &c64, &plan64, Schedule::OneFOneB)
+    });
+}

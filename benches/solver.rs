@@ -1,0 +1,59 @@
+//! Solver benchmarks (mini-criterion harness, `cargo bench --bench solver`).
+//!
+//! One bench per paper-relevant solve: the Table 4 runtime comparison and
+//! the §Perf targets in EXPERIMENTS.md track these numbers.
+
+use nest::baselines::mist;
+use nest::graph::models;
+use nest::network::Cluster;
+use nest::solver::exact::{solve_exact, ExactOpts};
+use nest::solver::{solve, SolverOpts};
+use nest::util::bench::{bench, bench_n};
+
+fn main() {
+    let opts = SolverOpts::default();
+
+    // Cost-model construction (the per-config setup inside the solver).
+    let g = models::gpt3_175b(1);
+    let c = Cluster::fat_tree_tpuv4(1024);
+    bench("cost_model_gpt3_1024", || {
+        nest::cost::CostModel::new(&g, &c, nest::graph::subgraph::SgConfig::tp(8))
+    });
+
+    // End-to-end solves across model scale (Table 4 analogue).
+    for (name, graph) in [
+        ("bertlarge", models::bert_large(1)),
+        ("llama2_7b", models::llama2_7b(1)),
+        ("llama3_70b", models::llama3_70b(1)),
+        ("gpt3_175b", models::gpt3_175b(1)),
+        ("mixtral_8x7b", models::mixtral_8x7b(1)),
+    ] {
+        let c = Cluster::fat_tree_tpuv4(1024);
+        bench_n(&format!("solve_{name}_fattree_1024"), 3, || {
+            solve(&graph, &c, &opts)
+        });
+    }
+
+    // Spine-leaf (Figure 7 cell) and the Mist comparison point.
+    let g35 = models::gpt3_35b(1);
+    let sl = Cluster::spine_leaf_h100(1024, 2.0);
+    bench_n("solve_gpt3_35b_spineleaf_1024", 3, || solve(&g35, &sl, &opts));
+    bench_n("mist_gpt3_35b_spineleaf_1024", 3, || mist::solve(&g35, &sl));
+
+    // Exact small-cluster solver (§5.4 regime).
+    let mx = models::mixtral_scaled(1);
+    let v = Cluster::v100_cluster(16);
+    bench_n("solve_exact_mixtral790m_v100_16", 3, || {
+        solve_exact(&mx, &v, &ExactOpts::default())
+    });
+
+    // Scaling with cluster size (the paper's 3 min – 1.5 h claim is about
+    // growth with devices; ours must stay sub-minute).
+    for n in [64usize, 256, 1024] {
+        let c = Cluster::fat_tree_tpuv4(n);
+        let g = models::gpt3_175b(1);
+        bench_n(&format!("solve_gpt3_175b_fattree_{n}"), 3, || {
+            solve(&g, &c, &opts)
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example end_to_end_train
+//!   [-- --steps N --microbatches M --dp D]
+//! ```
+//!
+//! This is the composition proof required of the reproduction
+//! (DESIGN.md §3, EXPERIMENTS.md §E2E). In one run it:
+//!
+//! 1. **Profiles** the Pallas/JAX probe artifacts on the PJRT CPU
+//!    backend and calibrates the analytical compute model (L1/L2 → cost
+//!    model).
+//! 2. **Solves** placement for the artifact transformer on a 4-thread-
+//!    device cluster with the calibrated accelerator and **predicts**
+//!    step time with the discrete-event simulator.
+//! 3. **Executes** real 1F1B pipeline-parallel training across stage
+//!    threads running the AOT HLO artifacts — the Pallas flash-attention
+//!    kernel included — on the learnable successor language, logging the
+//!    loss curve.
+//! 4. **Compares** the measured step time and stage utilization against
+//!    the simulator's prediction.
+
+use nest::graph::models;
+use nest::hw::GB;
+use nest::network::{Cluster, Tier};
+use nest::profiler::calibrate;
+use nest::runtime::{artifacts_dir, manifest::Manifest};
+use nest::sim::{simulate, Schedule};
+use nest::solver::{solve, SolverOpts};
+use nest::trainer::{train, TrainOpts};
+use nest::util::cli::Args;
+
+fn main() {
+    let mut args = Args::parse(std::env::args().skip(1).collect());
+    let steps = args.get_usize("steps", 30);
+    let microbatches = args.get_usize("microbatches", 8);
+    let dp = args.get_usize("dp", 1);
+    args.finish().unwrap();
+
+    let dir = artifacts_dir().expect("artifacts/ missing — run `make artifacts` first");
+    let man = Manifest::load(dir.join("manifest.json")).unwrap();
+    let cfg = &man.config;
+    println!(
+        "== E2E: {}-layer transformer, {:.1}M params, {} stages, dp={} ==",
+        cfg.n_layers,
+        cfg.param_count as f64 / 1e6,
+        man.stages.len(),
+        dp
+    );
+
+    // ---- 1. Profile & calibrate ------------------------------------------
+    println!("\n[1/4] profiling probe artifacts on PJRT CPU…");
+    let cal = calibrate(&dir, 5).expect("calibration failed");
+    for p in &cal.probes {
+        println!(
+            "  block h={:4}: median {}, {:.2} GFLOP/s achieved",
+            p.hidden,
+            nest::util::table::fmt_time(p.median_seconds),
+            p.achieved_flops_per_s / 1e9
+        );
+    }
+
+    // ---- 2. Solve + predict ----------------------------------------------
+    println!("\n[2/4] solving placement on the calibrated thread-device cluster…");
+    let graph = models::tiny_transformer(cfg.n_layers, cfg.hidden, cfg.seq, cfg.mbs);
+    let p = man.stages.len();
+    let cluster = Cluster {
+        name: format!("cpu-threads-{}", p * dp),
+        accel: cal.accel_for_hidden(cfg.hidden),
+        tiers: vec![Tier {
+            name: "shm".into(),
+            arity: p * dp,
+            link_bw: 10.0 * GB, // memcpy through channels
+            latency: 5e-6,
+            oversub: 1.0,
+        }],
+    };
+    let sol = solve(&graph, &cluster, &SolverOpts::default());
+    if let Some(s) = &sol {
+        println!(
+            "  NEST would choose {} on this cluster (batch model {})",
+            s.plan.strategy_string(),
+            nest::util::table::fmt_time(s.plan.batch_time)
+        );
+    }
+    // Predict the *baked* artifact decomposition (even cuts from aot.py).
+    let cuts: Vec<usize> = man.cuts.clone();
+    let baked = nest::baselines::build_plan(
+        &graph,
+        &cluster,
+        "artifacts",
+        nest::graph::subgraph::SgConfig::serial(),
+        &cuts,
+        dp,
+        false,
+        1,
+    )
+    .expect("baked plan infeasible?");
+    let mut baked = baked;
+    baked.n_microbatches = microbatches;
+    let pred = simulate(&graph, &cluster, &baked, Schedule::OneFOneB);
+    let pred_step = pred.batch_time;
+    println!(
+        "  DES prediction for the baked {}-stage pipeline: {} per step",
+        p,
+        nest::util::table::fmt_time(pred_step)
+    );
+
+    // ---- 3. Real pipeline training ----------------------------------------
+    println!("\n[3/4] real 1F1B pipeline training ({} threads)…", p * dp);
+    let opts = TrainOpts {
+        steps,
+        microbatches,
+        dp_width: dp,
+        link_delay: 0.0,
+        seed: 42,
+        log_every: (steps / 10).max(1),
+    };
+    let rep = train(&dir, &opts).expect("training failed");
+
+    // ---- 4. Compare ---------------------------------------------------------
+    println!("\n[4/4] summary");
+    let measured_step = nest::util::stats::median(&rep.step_times[rep.step_times.len() / 2..]);
+    println!(
+        "  loss: {:.4} → {:.4} over {} steps (ln V = {:.2})",
+        rep.losses.first().unwrap(),
+        rep.losses.last().unwrap(),
+        steps,
+        (cfg.vocab as f64).ln()
+    );
+    println!(
+        "  throughput: {:.0} tokens/s | measured step {} vs DES prediction {} ({:.2}x)",
+        rep.tokens_per_s,
+        nest::util::table::fmt_time(measured_step),
+        nest::util::table::fmt_time(pred_step),
+        measured_step / pred_step
+    );
+    println!("  stage busy fractions: {:?}", rep.stage_busy);
+    assert!(
+        rep.losses.last().unwrap() < rep.losses.first().unwrap(),
+        "loss did not decrease!"
+    );
+    println!("\nE2E OK: L1 Pallas kernel → L2 JAX stages → L3 Rust 1F1B coordinator all compose.");
+}

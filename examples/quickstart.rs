@@ -1,0 +1,52 @@
+//! Quickstart: solve a placement with NEST's DP and inspect the plan.
+//!
+//! ```text
+//! cargo run --release --example quickstart [-- <model> <devices>]
+//! ```
+//!
+//! Solves Llama2-7B on a 64-device TPUv4 fat-tree by default, prints the
+//! Table-2-style strategy, the per-stage layout (layers, devices, memory
+//! spec, communication level to the next stage), and a discrete-event
+//! evaluation of the plan.
+
+use nest::graph::models;
+use nest::network::Cluster;
+use nest::sim::{simulate, Schedule};
+use nest::solver::{solve, SolverOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("llama2-7b");
+    let devices: usize = args
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+
+    let graph = models::by_name(model, 1).expect("unknown model");
+    let cluster = Cluster::fat_tree_tpuv4(devices);
+
+    println!("model:   {} ({:.1}B params)", model, graph.total_params() / 1e9);
+    println!("cluster: {}", cluster.describe());
+
+    let sol = solve(&graph, &cluster, &SolverOpts::default()).expect("no feasible placement");
+    println!(
+        "\nsolved in {} — explored {} DP states across {} configurations",
+        nest::util::table::fmt_time(sol.solve_seconds),
+        sol.dp_states,
+        sol.configs_tried
+    );
+    println!("\n{}", sol.plan.describe());
+
+    sol.plan
+        .validate(&graph, &cluster)
+        .expect("plan failed validation");
+
+    let rep = simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB);
+    println!(
+        "\nDES evaluation: batch {} | {:.1} samples/s | comm share {:.1}% | bubble {:.1}%",
+        nest::util::table::fmt_time(rep.batch_time),
+        rep.throughput,
+        rep.comm_fraction * 100.0,
+        rep.bubble_fraction * 100.0,
+    );
+}

@@ -1,0 +1,67 @@
+//! Topology co-design sweep (the paper's motivation for "co-designing
+//! parallelization strategies and datacenter interconnects", §1/§7).
+//!
+//! Sweeps the spine-tier oversubscription ratio of a 256-GPU H100
+//! spine-leaf cluster and shows how NEST's chosen strategy *adapts*:
+//! as the cross-rack links degrade, the solver shifts from wide data
+//! parallelism (communication-hungry gradient sync across racks) toward
+//! deeper pipelines that keep heavy traffic inside racks — while
+//! topology-agnostic Phaze keeps the same plan and pays for it.
+
+use nest::baselines::phaze;
+use nest::graph::models;
+use nest::network::Cluster;
+use nest::sim::{simulate, Schedule};
+use nest::solver::{solve, SolverOpts};
+use nest::util::table::Table;
+
+fn main() {
+    let model = "gpt3-175b";
+    let graph = models::by_name(model, 1).unwrap();
+    let opts = SolverOpts::default();
+
+    let mut tbl = Table::new(&[
+        "oversubscription",
+        "nest strategy",
+        "nest tput",
+        "phaze strategy",
+        "phaze tput",
+        "nest gain",
+    ]);
+
+    for oversub in [1.0f64, 2.0, 4.0, 8.0] {
+        let cluster = Cluster::spine_leaf_h100(256, oversub);
+        let nest = solve(&graph, &cluster, &opts).expect("nest plan");
+        let nest_rep = simulate(&graph, &cluster, &nest.plan, Schedule::OneFOneB);
+
+        let (phaze_strategy, phaze_tput) = match phaze::solve(&graph, &cluster, &opts) {
+            Some(p) => {
+                let r = simulate(&graph, &cluster, &p, Schedule::OneFOneB);
+                (p.strategy_string(), r.throughput)
+            }
+            None => ("✗".into(), 0.0),
+        };
+
+        let gain = if phaze_tput > 0.0 {
+            format!("{:.2}x", nest_rep.throughput / phaze_tput)
+        } else {
+            "∞".into()
+        };
+        tbl.row(vec![
+            format!("{oversub}:1"),
+            nest.plan.strategy_string(),
+            format!("{:.1}/s", nest_rep.throughput),
+            phaze_strategy,
+            format!("{phaze_tput:.1}/s"),
+            gain,
+        ]);
+    }
+
+    println!("== {model} on 256×H100 spine-leaf, oversubscription sweep ==");
+    println!("{}", tbl.render());
+    println!(
+        "\nReading: as cross-rack bandwidth shrinks, NEST re-balances stage\n\
+         cuts and parallelism to keep hot traffic inside racks; a network-\n\
+         agnostic search cannot react, so its realized throughput degrades."
+    );
+}

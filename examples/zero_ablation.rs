@@ -1,0 +1,96 @@
+//! ZeRO ablation (Table 7 / Appendix C.3): how adaptive ZeRO unlocks
+//! training on memory-constrained accelerators.
+//!
+//! Sweeps device HBM capacity for Llama3-70B on a 1024-device fat-tree
+//! and reports, per capacity: feasibility without any memory tricks,
+//! with recomputation only, and with NEST's full adaptive ZeRO — plus
+//! the strategy and ZeRO stages the solver chose.
+
+use nest::graph::models;
+use nest::hw::GIB;
+use nest::memory::ZeroStage;
+use nest::network::Cluster;
+use nest::solver::{solve, SolverOpts};
+use nest::util::table::Table;
+
+fn main() {
+    let graph = models::llama3_70b(1);
+    let mut tbl = Table::new(&[
+        "HBM/device",
+        "plain",
+        "recompute only",
+        "full (ZeRO adaptive)",
+        "chosen strategy",
+        "ZeRO stages used",
+    ]);
+
+    for cap_gb in [80.0f64, 48.0, 24.0, 16.0] {
+        let mut cluster = Cluster::fat_tree_tpuv4(1024);
+        cluster.accel = cluster.accel.with_capacity(cap_gb * GIB);
+
+        let plain = solve(
+            &graph,
+            &cluster,
+            &SolverOpts {
+                zero_max_degree: 1,
+                try_recompute: false,
+                ..Default::default()
+            },
+        );
+        let rc_only = solve(
+            &graph,
+            &cluster,
+            &SolverOpts {
+                zero_max_degree: 1,
+                ..Default::default()
+            },
+        );
+        let full = solve(&graph, &cluster, &SolverOpts::default());
+
+        let feas = |s: &Option<nest::solver::Solution>| {
+            s.as_ref()
+                .map(|s| format!("{:.0} samp/s", s.plan.throughput(graph.global_batch)))
+                .unwrap_or_else(|| "✗".into())
+        };
+        let (strategy, zeros) = match &full {
+            Some(s) => {
+                let mut used: Vec<String> = s
+                    .plan
+                    .stages
+                    .iter()
+                    .map(|st| st.mem.zero)
+                    .filter(|z| *z != ZeroStage::None)
+                    .map(|z| z.describe())
+                    .collect();
+                used.sort();
+                used.dedup();
+                (
+                    s.plan.strategy_string(),
+                    if used.is_empty() {
+                        "none needed".into()
+                    } else {
+                        used.join(", ")
+                    },
+                )
+            }
+            None => ("✗".into(), "-".into()),
+        };
+        tbl.row(vec![
+            format!("{cap_gb:.0} GB"),
+            feas(&plain),
+            feas(&rc_only),
+            feas(&full),
+            strategy,
+            zeros,
+        ]);
+    }
+
+    println!("== Llama3-70B on 1024 devices: memory-capacity ablation (Table 7 style) ==");
+    println!("{}", tbl.render());
+    println!(
+        "\nReading: as capacity shrinks, plain placement dies first, then\n\
+         recomputation alone stops sufficing; adaptive ZeRO (stage and degree\n\
+         chosen per pipeline stage inside the DP) keeps training feasible —\n\
+         exactly the Table 7 behaviour."
+    );
+}

@@ -1,0 +1,226 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for Rust (L3).
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path. Emits into ``artifacts/``:
+
+* ``stage{k}_fwd|bwd|update.hlo.txt`` — per-pipeline-stage forward,
+  backward (stage-recompute VJP), and Adam-update computations for the
+  Rust 1F1B trainer;
+* ``train_step.hlo.txt`` — the full single-device train step (smoke
+  path / single-device throughput reference);
+* ``probe_h{H}.hlo.txt`` — single transformer-block forwards at several
+  widths, parameters baked in, used by the Rust profiler to calibrate
+  the analytical compute model;
+* ``manifest.json`` — shapes/dtypes/arg-order/FLOP metadata for all of
+  the above.
+
+HLO **text** is the interchange format (not serialized protos): jax ≥0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[jnp.dtype(dt).name]
+
+
+def _leaf_specs(tree):
+    """Flattened (path, shape, dtype) list in jit argument order."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves_with_paths:
+        name = ".".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append(
+            {
+                "path": name,
+                "shape": list(leaf.shape),
+                "dtype": _dtype_tag(leaf.dtype),
+            }
+        )
+    return out
+
+
+def _shaped(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def block_fwd_flops(cfg: model.Config, tokens: int) -> float:
+    """Analytical matmul FLOPs of one block forward (profiler metadata)."""
+    h, i, s = cfg.hidden, cfg.intermediate, cfg.seq
+    proj = 2.0 * tokens * (4 * h * h + 2 * h * i)
+    attn = 4.0 * tokens * s * h
+    return proj + attn
+
+
+def emit(out_dir: str, cfg: model.Config, mbs: int, n_stages: int,
+         fullstep: bool = True, probes=(128, 256, 512)) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    rng = jax.random.PRNGKey(0)
+    chain = cfg.n_layers + 2
+    assert 1 <= n_stages <= chain // 2 or n_stages <= chain
+    cuts = [round(k * chain / n_stages) for k in range(n_stages + 1)]
+    # Ensure strictly increasing cuts.
+    for k in range(1, n_stages + 1):
+        cuts[k] = max(cuts[k], cuts[k - 1] + 1)
+    cuts[-1] = chain
+
+    params = model.init_params(rng, cfg)
+    manifest = {
+        "config": {
+            "n_layers": cfg.n_layers,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "intermediate": cfg.intermediate,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "mbs": mbs,
+            "param_count": cfg.param_count(),
+        },
+        "cuts": cuts,
+        "n_stages": n_stages,
+        "stages": [],
+        "probes": [],
+    }
+
+    tokens_spec = jax.ShapeDtypeStruct((mbs, cfg.seq), jnp.int32)
+    hidden_spec = jax.ShapeDtypeStruct((mbs, cfg.seq, cfg.hidden), jnp.float32)
+
+    for k in range(n_stages):
+        sp = model.stage_params(params, cfg, cuts, k)
+        sp_spec = _shaped(sp)
+        first, last = k == 0, k == n_stages - 1
+        x_spec = tokens_spec if first else hidden_spec
+        fwd, bwd = model.make_stage_fns(cfg, cuts, k, n_stages)
+
+        entry = {
+            "index": k,
+            "first": first,
+            "last": last,
+            "params": _leaf_specs(sp),
+            "x_shape": list(x_spec.shape),
+            "x_dtype": _dtype_tag(x_spec.dtype),
+        }
+
+        if last:
+            lowered_f = jax.jit(fwd, keep_unused=True).lower(sp_spec, x_spec, tokens_spec)
+            lowered_b = jax.jit(bwd, keep_unused=True).lower(sp_spec, x_spec, tokens_spec)
+            entry["y_shape"] = []  # scalar loss
+        else:
+            lowered_f = jax.jit(fwd, keep_unused=True).lower(sp_spec, x_spec)
+            y_spec = jax.eval_shape(fwd, sp_spec, x_spec)
+            lowered_b = jax.jit(bwd, keep_unused=True).lower(sp_spec, x_spec, y_spec)
+            entry["y_shape"] = list(y_spec.shape)
+
+        m0, v0 = model.adam_init(sp)
+        step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered_u = jax.jit(model.adam_update, keep_unused=True).lower(
+            sp_spec, sp_spec, _shaped(m0), _shaped(v0), step_spec
+        )
+
+        for tag, lowered in (("fwd", lowered_f), ("bwd", lowered_b), ("update", lowered_u)):
+            fname = f"stage{k}_{tag}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(to_hlo_text(lowered))
+            entry[tag] = fname
+        manifest["stages"].append(entry)
+
+    if fullstep:
+        m0, v0 = model.adam_init(params)
+        lowered = jax.jit(
+            lambda p, x, t, m, v, s: model.train_step(p, x, t, m, v, s, cfg),
+            keep_unused=True,
+        ).lower(
+            _shaped(params), tokens_spec, tokens_spec, _shaped(m0), _shaped(v0),
+            jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["train_step"] = {
+            "file": "train_step.hlo.txt",
+            "params": _leaf_specs(params),
+        }
+
+    # Profiler probes: one block forward, params baked as constants.
+    for h in probes:
+        pcfg = model.Config(
+            n_layers=1, hidden=h, heads=max(h // 64, 1),
+            intermediate=4 * h, vocab=256, seq=cfg.seq,
+        )
+        bp = model.init_block(jax.random.fold_in(rng, h), pcfg)
+        x_spec = jax.ShapeDtypeStruct((mbs, pcfg.seq, h), jnp.float32)
+        lowered = jax.jit(lambda x, bp=bp, pcfg=pcfg: model.block_fwd(bp, x, pcfg)).lower(x_spec)
+        fname = f"probe_h{h}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["probes"].append(
+            {
+                "file": fname,
+                "hidden": h,
+                "tokens": mbs * pcfg.seq,
+                "x_shape": list(x_spec.shape),
+                "flops": block_fwd_flops(pcfg, mbs * pcfg.seq),
+            }
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--intermediate", type=int, default=1024)
+    ap.add_argument("--vocab", type=int, default=4096)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--mbs", type=int, default=4)
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--no-fullstep", action="store_true")
+    args = ap.parse_args()
+
+    cfg = model.Config(
+        n_layers=args.layers, hidden=args.hidden, heads=args.heads,
+        intermediate=args.intermediate, vocab=args.vocab, seq=args.seq,
+    )
+    manifest = emit(
+        args.out, cfg, args.mbs, args.stages, fullstep=not args.no_fullstep
+    )
+    n_files = 3 * manifest["n_stages"] + len(manifest["probes"]) + (
+        1 if "train_step" in manifest else 0
+    )
+    print(
+        f"wrote {n_files} HLO artifacts + manifest.json to {args.out} "
+        f"({manifest['config']['param_count'] / 1e6:.1f}M params, "
+        f"{manifest['n_stages']} stages)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""L1: flash-attention Pallas kernel — the L2 model's compute hot-spot.
+
+Blockwise attention with online softmax (Dao et al.), written for the TPU
+mental model per the hardware-adaptation rule (DESIGN.md):
+
+* **VMEM tiling** instead of CUDA shared-memory tiles: the grid iterates
+  over query blocks; for each, K/V stream through VMEM in ``block_k``
+  chunks. Per-(q-block, k-block) VMEM footprint is
+  ``(Bq·d + 2·Bk·d + Bq·Bk + 2·Bq) · 4`` bytes — with the default
+  Bq=Bk=128, d≤128 that is < 0.26 MiB, comfortably inside a TPU core's
+  ~16 MiB VMEM even with double-buffering, leaving headroom for the MXU
+  to stay fed.
+* **MXU-shaped matmuls**: both the ``q·kᵀ`` and ``p·v`` contractions are
+  [128×d]·[d×128] / [128×128]·[128×d] — multiples of the 128×128 systolic
+  array, so the estimated MXU utilization of the kernel's matmul phase is
+  ≈ d/128 per pass (1.0 at head_dim 128); see DESIGN.md §Perf.
+* **interpret=True**: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; interpret mode lowers to plain HLO so the same artifact
+  runs under the Rust runtime. Real-TPU performance is *estimated* from
+  the footprint/utilization above, never from interpret-mode wallclock.
+
+The public entry point :func:`flash_attention` wraps the kernel in a
+``jax.custom_vjp`` whose backward pass uses the pure-jnp reference
+(mathematically identical), keeping autodiff in plain-HLO land.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default block sizes: MXU-aligned, VMEM-friendly (see module docstring).
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool, q_offset_blocks: int):
+    """One query-block of flash attention with online softmax.
+
+    Refs arrive blocked by the BlockSpecs in :func:`_flash_call`:
+      q_ref: [block_q, d]   — this grid step's query tile
+      k_ref: [seq_k, d]     — full K for the (batch·head) row
+      v_ref: [seq_k, d]     — full V
+      o_ref: [block_q, d]   — output tile
+    """
+    q = q_ref[...].astype(jnp.float32)
+    block_q, head_dim = q.shape
+    seq_k = k_ref.shape[0]
+    scale = 1.0 / (head_dim**0.5)
+
+    q_block_idx = pl.program_id(1)
+    q_start = (q_block_idx + q_offset_blocks) * block_q
+
+    acc = jnp.zeros((block_q, head_dim), jnp.float32)
+    m_i = jnp.full((block_q,), _NEG_INF, jnp.float32)  # running max
+    l_i = jnp.zeros((block_q,), jnp.float32)  # running denom
+
+    num_k_blocks = seq_k // block_k
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k_start = kb * block_k
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[...], k_start, block_k).astype(
+            jnp.float32
+        )
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[...], k_start, block_k).astype(
+            jnp.float32
+        )
+        s = (q @ k_blk.T) * scale  # [block_q, block_k] — MXU matmul 1
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        # Online softmax update.
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ v_blk  # MXU matmul 2
+        return acc_new, m_new, l_new
+
+    acc, m_i, l_i = jax.lax.fori_loop(0, num_k_blocks, body, (acc, m_i, l_i))
+    # Rows that saw no unmasked key keep l_i == 0; guard the divide.
+    l_safe = jnp.where(l_i == 0.0, 1.0, l_i)
+    o_ref[...] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def _flash_call(q, k, v, block_q: int, block_k: int, causal: bool):
+    """pallas_call plumbing over a [bh, seq, d] layout."""
+    bh, seq_q, head_dim = q.shape
+    seq_k = k.shape[1]
+    grid = (bh, seq_q // block_q)
+    kernel = functools.partial(
+        _flash_kernel,
+        block_k=block_k,
+        causal=causal,
+        # When seq_q < seq_k (not used by the model but supported), align
+        # the causal mask to the *end* of the key sequence.
+        q_offset_blocks=(seq_k - seq_q) // block_q if causal else 0,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, head_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, seq_k, head_dim), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, seq_k, head_dim), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, head_dim), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq_q, head_dim), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(q, k, v)
+
+
+def _pick_blocks(seq, block_q, block_k):
+    """Shrink blocks to divide short sequences."""
+    bq = min(block_q, seq)
+    while seq % bq:
+        bq //= 2
+    bk = min(block_k, seq)
+    while seq % bk:
+        bk //= 2
+    return max(bq, 1), max(bk, 1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(
+    q,
+    k,
+    v,
+    causal=True,
+    block_q=DEFAULT_BLOCK_Q,
+    block_k=DEFAULT_BLOCK_K,
+):
+    """Flash attention over ``[batch, heads, seq, head_dim]`` inputs.
+
+    Forward runs the Pallas kernel; backward differentiates the pure-jnp
+    reference (identical math) via ``custom_vjp``.
+    """
+    return _flash_forward(q, k, v, causal, block_q, block_k)
+
+
+def _flash_forward(q, k, v, causal, block_q, block_k):
+    b, h, seq_q, d = q.shape
+    seq_k = k.shape[2]
+    bq, bk = _pick_blocks(min(seq_q, seq_k), block_q, block_k)
+    qf = q.reshape(b * h, seq_q, d)
+    kf = k.reshape(b * h, seq_k, d)
+    vf = v.reshape(b * h, seq_k, d)
+    o = _flash_call(qf, kf, vf, bq, bk, causal)
+    return o.reshape(b, h, seq_q, d)
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k):
+    return _flash_forward(q, k, v, causal, block_q, block_k), (q, k, v)
+
+
+def _flash_bwd(causal, block_q, block_k, residuals, g):
+    q, k, v = residuals
+    _, vjp = jax.vjp(lambda q, k, v: ref.attention_ref(q, k, v, causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,47 @@
+"""Pure-jnp reference implementations — the correctness oracle (L1).
+
+Every Pallas kernel in this package is checked against these functions by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes/dtypes and
+asserts allclose). They are also used as the backward rule for the
+flash-attention ``custom_vjp`` so autodiff stays in plain-HLO land (the
+interpret-mode Pallas call is forward-only).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True):
+    """Reference scaled-dot-product attention.
+
+    Args:
+      q, k, v: ``[batch, heads, seq, head_dim]``.
+      causal: apply a causal mask.
+
+    Returns:
+      ``[batch, heads, seq, head_dim]`` attention output.
+    """
+    head_dim = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(head_dim, q.dtype)
+    )
+    if causal:
+        seq_q, seq_k = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((seq_q, seq_k), dtype=bool), seq_k - seq_q)
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """Reference LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def mlp_ref(x, w_in, b_in, w_out, b_out):
+    """Reference GELU MLP."""
+    h = jax.nn.gelu(x @ w_in + b_in)
+    return h @ w_out + b_out

@@ -1,0 +1,241 @@
+"""L2: configurable decoder-only transformer in pure JAX (no flax).
+
+This is the build-time workload of the three-layer stack: it provides
+
+* the full forward/backward training step, lowered once to HLO for the
+  Rust runtime's single-device smoke path;
+* a *stage decomposition* — per-stage forward / backward / Adam-update
+  functions mirroring a pipeline-parallel placement plan, each lowered to
+  its own HLO artifact so the Rust trainer can execute true 1F1B pipeline
+  training over thread-devices;
+* probe computations used by the Rust profiler to calibrate the
+  analytical roofline (DESIGN.md §Hardware-Adaptation).
+
+Attention runs through the L1 Pallas flash kernel (``kernels.flash``);
+``use_flash=False`` switches to the pure-jnp reference for A/B tests.
+"""
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash, ref
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Model hyperparameters (defaults sized for CPU pipeline training)."""
+
+    n_layers: int = 6
+    hidden: int = 256
+    heads: int = 4
+    intermediate: int = 1024
+    vocab: int = 4096
+    seq: int = 64
+    use_flash: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    def param_count(self) -> int:
+        block = 4 * self.hidden**2 + 2 * self.hidden * self.intermediate
+        block += self.intermediate + self.hidden  # MLP biases
+        block += 4 * self.hidden  # layernorm gamma/beta ×2
+        emb = self.vocab * self.hidden
+        head = self.vocab * self.hidden
+        return emb + self.n_layers * block + head
+
+
+# ----- initialization -------------------------------------------------------
+
+
+def init_block(rng, cfg: Config) -> Params:
+    h, i = cfg.hidden, cfg.intermediate
+    ks = jax.random.split(rng, 6)
+    s = 0.02
+    return {
+        "wqkv": jax.random.normal(ks[0], (h, 3 * h), jnp.float32) * s,
+        "wo": jax.random.normal(ks[1], (h, h), jnp.float32) * s,
+        "w_in": jax.random.normal(ks[2], (h, i), jnp.float32) * s,
+        "b_in": jnp.zeros((i,), jnp.float32),
+        "w_out": jax.random.normal(ks[3], (i, h), jnp.float32) * s,
+        "b_out": jnp.zeros((h,), jnp.float32),
+        "ln1_g": jnp.ones((h,), jnp.float32),
+        "ln1_b": jnp.zeros((h,), jnp.float32),
+        "ln2_g": jnp.ones((h,), jnp.float32),
+        "ln2_b": jnp.zeros((h,), jnp.float32),
+    }
+
+
+def init_params(rng, cfg: Config) -> Params:
+    ks = jax.random.split(rng, cfg.n_layers + 2)
+    return {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.hidden), jnp.float32) * 0.02,
+        "blocks": [init_block(ks[1 + l], cfg) for l in range(cfg.n_layers)],
+        "head": jax.random.normal(ks[-1], (cfg.hidden, cfg.vocab), jnp.float32) * 0.02,
+    }
+
+
+# ----- forward --------------------------------------------------------------
+
+
+def block_fwd(p: Params, x, cfg: Config):
+    """Pre-LN transformer block; attention via the Pallas flash kernel."""
+    b, s, h = x.shape
+    y = ref.layernorm_ref(x, p["ln1_g"], p["ln1_b"])
+    qkv = y @ p["wqkv"]  # [b, s, 3h]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    if cfg.use_flash:
+        attn = flash.flash_attention(heads(q), heads(k), heads(v), True)
+    else:
+        attn = ref.attention_ref(heads(q), heads(k), heads(v), True)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, h)
+    x = x + attn @ p["wo"]
+    y = ref.layernorm_ref(x, p["ln2_g"], p["ln2_b"])
+    x = x + ref.mlp_ref(y, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+    return x
+
+
+def forward(params: Params, tokens, cfg: Config):
+    """tokens [b, s] int32 → logits [b, s, vocab]."""
+    x = params["embed"][tokens]
+    for p in params["blocks"]:
+        x = block_fwd(p, x, cfg)
+    return x @ params["head"]
+
+
+def loss_fn(params: Params, tokens, targets, cfg: Config):
+    """Mean next-token cross-entropy."""
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ----- stage decomposition ---------------------------------------------------
+#
+# A pipeline plan cuts the chain [embed, block0..blockN-1, head] into
+# contiguous stages. Stage 0 starts with the embedding; the last stage
+# ends with head + loss. Cut indices are in "layer chain" coordinates:
+# 0 = embedding, 1..n_layers = blocks, n_layers+1 = head.
+
+
+def stage_param_slices(cfg: Config, cuts: List[int]) -> List[Params]:
+    """Describe each stage's parameter subtree (shapes only via init)."""
+    assert cuts[0] == 0 and cuts[-1] == cfg.n_layers + 2
+    return cuts
+
+
+def stage_params(params: Params, cfg: Config, cuts: List[int], k: int) -> Params:
+    """Extract stage k's parameters from the full tree."""
+    i, j = cuts[k], cuts[k + 1]
+    out: Params = {}
+    if i == 0:
+        out["embed"] = params["embed"]
+    lo = max(i - 1, 0)
+    hi = min(j - 1, cfg.n_layers)
+    out["blocks"] = params["blocks"][lo:hi]
+    if j == cfg.n_layers + 2:
+        out["head"] = params["head"]
+    return out
+
+
+def stage_fwd(sp: Params, x, cfg: Config, first: bool, last: bool):
+    """Forward of one stage. `x` is tokens (int32) for the first stage,
+    hidden states otherwise. Returns hidden states (or logits if last —
+    but the last stage is driven via `stage_loss` instead)."""
+    if first:
+        x = sp["embed"][x]
+    for p in sp["blocks"]:
+        x = block_fwd(p, x, cfg)
+    if last:
+        x = x @ sp["head"]
+    return x
+
+
+def stage_loss(sp: Params, x, targets, cfg: Config, first: bool):
+    """Last-stage forward ending in the mean cross-entropy loss."""
+    logits = stage_fwd(sp, x, cfg, first, True)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def make_stage_fns(cfg: Config, cuts: List[int], k: int, n_stages: int):
+    """Build (fwd, bwd) closures for stage k, pure in (params, inputs).
+
+    fwd(sp, x)            -> y                      (non-last stages)
+    bwd(sp, x, gy)        -> (gsp, gx)              (non-last stages)
+    fwd_loss(sp, x, t)    -> loss                   (last stage)
+    bwd_loss(sp, x, t)    -> (loss, gsp, gx)        (last stage)
+
+    The backward recomputes the stage forward (activation recomputation at
+    stage granularity) so each artifact is a pure function — exactly what
+    AOT lowering needs.
+    """
+    first = k == 0
+    last = k == n_stages - 1
+
+    if last:
+
+        def fwd_loss(sp, x, targets):
+            return stage_loss(sp, x, targets, cfg, first)
+
+        def bwd_loss(sp, x, targets):
+            (loss, (gsp, gx)) = jax.value_and_grad(
+                lambda sp, x: stage_loss(sp, x, targets, cfg, first), argnums=(0, 1)
+            )(sp, x)
+            return loss, gsp, gx
+
+        return fwd_loss, bwd_loss
+
+    def fwd(sp, x):
+        return stage_fwd(sp, x, cfg, first, False)
+
+    def bwd(sp, x, gy):
+        _, vjp = jax.vjp(lambda sp, x: stage_fwd(sp, x, cfg, first, False), sp, x)
+        gsp, gx = vjp(gy)
+        return gsp, gx
+
+    return fwd, bwd
+
+
+# ----- Adam ------------------------------------------------------------------
+
+
+def adam_init(sp: Params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, sp)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, sp)
+
+
+def adam_update(sp, grads, m, v, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step over a stage's parameter tree. `step` is 1-based."""
+    step = step.astype(jnp.float32)
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, v, grads)
+    mhat_scale = 1.0 / (1.0 - b1**step)
+    vhat_scale = 1.0 / (1.0 - b2**step)
+    sp = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps),
+        sp,
+        m,
+        v,
+    )
+    return sp, m, v
+
+
+def train_step(params, tokens, targets, m, v, step, cfg: Config):
+    """Full single-device train step (for the smoke artifact)."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, tokens, targets, cfg))(params)
+    params, m, v = adam_update(params, grads, m, v, step)
+    return loss, params, m, v

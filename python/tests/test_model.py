@@ -1,0 +1,138 @@
+"""L2 model tests: shapes, stage decomposition == full model, training
+actually learns, flash vs reference A/B."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+CFG = model.Config(n_layers=4, hidden=64, heads=2, intermediate=256,
+                   vocab=512, seq=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _batch(seed, mbs=2, vocab=None, seq=None):
+    vocab = vocab or CFG.vocab
+    seq = seq or CFG.seq
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.randint(key, (mbs, seq), 0, vocab, jnp.int32)
+    # Deterministic successor task: t+1 = (3t + 7) mod vocab (same
+    # synthetic language the Rust trainer generates).
+    y = (3 * x + 7) % vocab
+    return x, y
+
+
+def test_forward_shapes(params):
+    x, _ = _batch(0)
+    logits = model.forward(params, x, CFG)
+    assert logits.shape == (2, CFG.seq, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_param_count_formula():
+    # init_params tree must match Config.param_count().
+    p = model.init_params(jax.random.PRNGKey(1), CFG)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(p))
+    assert n == CFG.param_count()
+
+
+def test_initial_loss_near_uniform(params):
+    x, y = _batch(1)
+    loss = model.loss_fn(params, x, y, CFG)
+    expect = np.log(CFG.vocab)
+    assert abs(float(loss) - expect) / expect < 0.15
+
+
+def test_stage_decomposition_matches_full(params):
+    """Pipeline-split forward+loss must equal the monolithic model."""
+    cuts = [0, 2, 4, CFG.n_layers + 2]
+    n_stages = len(cuts) - 1
+    x, y = _batch(2)
+    full = model.loss_fn(params, x, y, CFG)
+
+    h = x
+    for k in range(n_stages):
+        sp = model.stage_params(params, CFG, cuts, k)
+        fwd, _ = model.make_stage_fns(CFG, cuts, k, n_stages)
+        if k == n_stages - 1:
+            h = fwd(sp, h, y)
+        else:
+            h = fwd(sp, h)
+    np.testing.assert_allclose(float(h), float(full), rtol=1e-5)
+
+
+def test_stage_backward_chain_matches_full_grad(params):
+    """Chained per-stage VJPs must equal the monolithic gradient."""
+    cuts = [0, 3, CFG.n_layers + 2]
+    n_stages = 2
+    x, y = _batch(3)
+
+    full_grads = jax.grad(lambda p: model.loss_fn(p, x, y, CFG))(params)
+
+    sp0 = model.stage_params(params, CFG, cuts, 0)
+    sp1 = model.stage_params(params, CFG, cuts, 1)
+    fwd0, bwd0 = model.make_stage_fns(CFG, cuts, 0, n_stages)
+    _, bwd1 = model.make_stage_fns(CFG, cuts, 1, n_stages)
+
+    h0 = fwd0(sp0, x)
+    loss, gsp1, gx1 = bwd1(sp1, h0, y)
+    gsp0, _ = bwd0(sp0, x, gx1)
+
+    np.testing.assert_allclose(
+        gsp0["embed"], full_grads["embed"], rtol=2e-4, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        gsp1["head"], full_grads["head"], rtol=2e-4, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        gsp0["blocks"][0]["wqkv"],
+        full_grads["blocks"][0]["wqkv"],
+        rtol=2e-4,
+        atol=1e-6,
+    )
+
+
+def test_training_learns_successor_task():
+    """A few hundred steps on t+1 = (3t+7) mod V must cut the loss."""
+    cfg = model.Config(n_layers=2, hidden=64, heads=2, intermediate=128,
+                       vocab=64, seq=16)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    m, v = model.adam_init(params)
+    step_fn = jax.jit(
+        lambda p, x, y, m, v, s: model.train_step(p, x, y, m, v, s, cfg)
+    )
+    losses = []
+    for i in range(150):
+        x, y = _batch(i, mbs=8, vocab=cfg.vocab, seq=cfg.seq)
+        loss, params, m, v = step_fn(params, x, y, m, v, jnp.int32(i + 1))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, f"{losses[0]} -> {losses[-1]}"
+
+
+def test_flash_and_ref_models_agree(params):
+    x, y = _batch(4)
+    cfg_ref = model.Config(**{**CFG.__dict__, "use_flash": False})
+    l1 = model.loss_fn(params, x, y, CFG)
+    l2 = model.loss_fn(params, x, y, cfg_ref)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_adam_update_moves_params(params):
+    x, y = _batch(5)
+    grads = jax.grad(lambda p: model.loss_fn(p, x, y, CFG))(params)
+    m, v = model.adam_init(params)
+    new_p, m2, v2 = model.adam_update(params, grads, m, v, jnp.int32(1))
+    assert not np.allclose(new_p["head"], params["head"])
+    assert bool(jnp.isfinite(new_p["head"]).all())
+    # Momentum captured the gradient direction.
+    np.testing.assert_allclose(m2["head"], 0.1 * grads["head"], rtol=1e-5)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,111 @@
+//! Manual placement baseline (§5.1 baseline 1): the expert recipes of
+//! Megatron-LM practice (Narayanan et al. 2021; Table 2 "Manual" column),
+//! scaling data parallelism with cluster size.
+//!
+//! Recipes fix the pipeline depth and tensor-parallel width per model;
+//! remaining devices go to data parallelism. Layers are split evenly
+//! across stages (manual plans do not topology-balance — that is NEST's
+//! contribution). Activation recomputation follows Table 2's
+//! "Recomputation vs. Stashing" column.
+
+use super::{build_plan, even_cuts};
+use crate::graph::subgraph::SgConfig;
+use crate::graph::LayerGraph;
+use crate::network::Cluster;
+use crate::solver::plan::PlacementPlan;
+
+/// Table 2 manual recipe for a model: (pipeline depth, tp width, expert
+/// degree, recompute).
+fn recipe(model: &str) -> Option<(usize, usize, usize, bool)> {
+    match model {
+        "llama2-7b" => Some((8, 1, 1, true)),
+        "llama3-70b" => Some((80, 1, 1, true)),
+        "bertlarge" => Some((8, 1, 1, false)),
+        "gpt3-175b" => Some((32, 4, 1, true)),
+        "gpt3-35b" => Some((16, 4, 1, true)),
+        "mixtral-8x7b" => Some((32, 1, 4, true)),
+        "mixtral-790m" => Some((4, 1, 2, true)),
+        _ => None,
+    }
+}
+
+/// Produce the manual plan for `graph` on `cluster`, or `None` when the
+/// recipe does not fit (too few devices, or memory-infeasible — the ✗
+/// marks in Figures 5–7).
+pub fn solve(graph: &LayerGraph, cluster: &Cluster) -> Option<PlacementPlan> {
+    let (mut p, tp, ep, rc) = recipe(&graph.model_name)?;
+    let k = cluster.n_devices();
+    let sg = SgConfig {
+        tp,
+        sp: tp > 1,
+        ep,
+        cp: 1,
+    };
+    let g = sg.group_size();
+    // Shrink the pipeline if the cluster can't hold one replica (manual
+    // practice: halve p until it fits).
+    while p > 1 && p * g > k {
+        p /= 2;
+    }
+    p = p.min(graph.n_layers());
+    let d = k / (p * g);
+    if d == 0 {
+        return None;
+    }
+    let cuts = even_cuts(graph.n_layers(), p);
+    build_plan(graph, cluster, "manual", sg, &cuts, d, rc, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn manual_matches_table2_at_512() {
+        // Table 2: Llama2-7B manual = {8, 64, 1, 1} at 512 devices.
+        let g = models::llama2_7b(1);
+        let c = Cluster::fat_tree_tpuv4(512);
+        let plan = solve(&g, &c).unwrap();
+        plan.validate(&g, &c).unwrap();
+        assert_eq!(plan.n_stages(), 8);
+        assert_eq!(plan.dp_width, 64);
+    }
+
+    #[test]
+    fn manual_gpt3_uses_tp4() {
+        let g = models::gpt3_175b(1);
+        let c = Cluster::fat_tree_tpuv4(512);
+        let plan = solve(&g, &c).unwrap();
+        plan.validate(&g, &c).unwrap();
+        assert_eq!(plan.sg.tp, 4);
+        assert_eq!(plan.n_stages(), 32);
+        assert_eq!(plan.dp_width, 4);
+    }
+
+    #[test]
+    fn manual_scales_dp_with_cluster() {
+        let g = models::bert_large(1);
+        let d64 = solve(&g, &Cluster::fat_tree_tpuv4(64)).unwrap().dp_width;
+        let d512 = solve(&g, &Cluster::fat_tree_tpuv4(512)).unwrap().dp_width;
+        assert_eq!(d512, d64 * 8);
+    }
+
+    #[test]
+    fn manual_llama3_shrinks_pipeline_on_small_cluster() {
+        // p=80 doesn't fit 64 devices; the recipe halves to 40.
+        let g = models::llama3_70b(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        if let Some(plan) = solve(&g, &c) {
+            plan.validate(&g, &c).unwrap();
+            assert!(plan.n_stages() <= 64);
+        }
+        // (None is also acceptable: 70B on 64×64 GB without ZeRO is tight.)
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        let g = models::tiny_transformer(4, 128, 64, 1);
+        assert!(solve(&g, &Cluster::fat_tree_tpuv4(64)).is_none());
+    }
+}

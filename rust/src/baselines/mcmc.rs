@@ -1,0 +1,290 @@
+//! MCMC baseline (§5.1 baseline 3): TopoOpt-style Markov-Chain Monte
+//! Carlo placement search (Wang et al. 2023), "implemented to explore the
+//! same parallelization strategies as NEST".
+//!
+//! The chain walks over (SUB-GRAPH config, pipeline depth, cut points,
+//! recomputation) with simulated-annealing acceptance; candidates are
+//! costed with the same real-topology model NEST uses (TopoOpt is
+//! topology-aware — its weakness is the *search*, not the cost model:
+//! no optimality guarantees, sensitivity to initialization, poor scaling
+//! with the number of parallelization dimensions). Following §5.1 we run
+//! 10 independently seeded chains and report the best.
+
+use super::{build_plan_ordered, even_cuts};
+use crate::graph::subgraph::{enumerate_sg, SgConfig};
+use crate::graph::LayerGraph;
+use crate::network::Cluster;
+use crate::solver::plan::PlacementPlan;
+use crate::util::rng::Rng;
+
+/// MCMC options.
+#[derive(Debug, Clone)]
+pub struct McmcOpts {
+    pub iters: usize,
+    pub restarts: usize,
+    pub seed: u64,
+    pub zero_max_degree: usize,
+}
+
+impl Default for McmcOpts {
+    fn default() -> Self {
+        McmcOpts {
+            iters: 2000,
+            restarts: 10,
+            seed: 0x705_0709,
+            zero_max_degree: 8,
+        }
+    }
+}
+
+#[derive(Clone)]
+struct State {
+    sg_idx: usize,
+    p: usize,
+    cuts: Vec<usize>,
+    /// Stage → device-block assignment (TopoOpt searches *placement*,
+    /// not just partitioning — random layouts start with pipeline
+    /// neighbors scattered across racks).
+    blocks: Vec<usize>,
+    recompute: bool,
+}
+
+/// Random cut vector: p−1 distinct interior cut points (TopoOpt-style
+/// random initialization — the source of the paper's "highly sensitive
+/// to initialization" observation; chains must *discover* balanced cuts
+/// through single-layer moves).
+fn random_cuts(rng: &mut Rng, n: usize, p: usize) -> Vec<usize> {
+    let mut interior: Vec<usize> = (1..n).collect();
+    rng.shuffle(&mut interior);
+    let mut cuts: Vec<usize> = interior[..p - 1].to_vec();
+    cuts.push(0);
+    cuts.push(n);
+    cuts.sort_unstable();
+    cuts
+}
+
+fn random_blocks(rng: &mut Rng, p: usize) -> Vec<usize> {
+    let mut blocks: Vec<usize> = (0..p).collect();
+    rng.shuffle(&mut blocks);
+    blocks
+}
+
+fn random_state(rng: &mut Rng, n: usize, sgs: &[SgConfig], k: usize) -> State {
+    let sg_idx = rng.gen_range(sgs.len());
+    let g = sgs[sg_idx].group_size();
+    let p_max = (k / g).min(n).max(1);
+    let p = 1 + rng.gen_range(p_max);
+    State {
+        sg_idx,
+        p,
+        cuts: random_cuts(rng, n, p),
+        blocks: random_blocks(rng, p),
+        recompute: rng.gen_bool(0.5),
+    }
+}
+
+fn perturb(rng: &mut Rng, st: &State, n: usize, sgs: &[SgConfig], k: usize) -> State {
+    let mut s = st.clone();
+    match rng.gen_range(5) {
+        0 => {
+            // Re-draw the SUB-GRAPH config (keep depth if it still fits).
+            s.sg_idx = rng.gen_range(sgs.len());
+            let g = sgs[s.sg_idx].group_size();
+            let p_max = (k / g).min(n).max(1);
+            if s.p > p_max {
+                s.p = p_max;
+                s.cuts = even_cuts(n, s.p);
+                s.blocks = random_blocks(rng, s.p);
+            }
+        }
+        1 => {
+            // Grow/shrink the pipeline by inserting/removing one cut.
+            let g = sgs[s.sg_idx].group_size();
+            let p_max = (k / g).min(n).max(1);
+            if rng.gen_bool(0.5) && s.p < p_max {
+                // Insert a random new interior cut.
+                let candidates: Vec<usize> =
+                    (1..n).filter(|c| !s.cuts.contains(c)).collect();
+                if !candidates.is_empty() {
+                    s.cuts.push(*rng.choose(&candidates));
+                    s.cuts.sort_unstable();
+                    s.blocks.push(s.p);
+                    s.p += 1;
+                }
+            } else if s.p > 1 {
+                let ci = 1 + rng.gen_range(s.p - 1);
+                s.cuts.remove(ci);
+                // Drop the highest block id to keep blocks a permutation
+                // of 0..p−1.
+                let drop = s.blocks.iter().position(|&b| b == s.p - 1).unwrap();
+                s.blocks.remove(drop);
+                s.p -= 1;
+            }
+        }
+        2 if s.p > 1 => {
+            // Move one interior cut by one layer.
+            let ci = 1 + rng.gen_range(s.p - 1);
+            let lo = s.cuts[ci - 1] + 1;
+            let hi = s.cuts[ci + 1] - 1;
+            if hi >= lo {
+                let delta: isize = if rng.gen_bool(0.5) { 1 } else { -1 };
+                let moved = (s.cuts[ci] as isize + delta).clamp(lo as isize, hi as isize);
+                s.cuts[ci] = moved as usize;
+            }
+        }
+        3 if s.p > 1 => {
+            // Swap two stages' device blocks (placement move).
+            let a = rng.gen_range(s.p);
+            let b = rng.gen_range(s.p);
+            s.blocks.swap(a, b);
+        }
+        _ => s.recompute = !s.recompute,
+    }
+    s
+}
+
+fn eval(
+    graph: &LayerGraph,
+    cluster: &Cluster,
+    sgs: &[SgConfig],
+    st: &State,
+    zero_max: usize,
+) -> Option<PlacementPlan> {
+    let sg = sgs[st.sg_idx];
+    let g = sg.group_size();
+    let d = cluster.n_devices() / (st.p * g);
+    if d == 0 {
+        return None;
+    }
+    build_plan_ordered(
+        graph,
+        cluster,
+        "mcmc",
+        sg,
+        &st.cuts,
+        &st.blocks,
+        d,
+        st.recompute,
+        zero_max,
+    )
+}
+
+/// Run the MCMC search; returns the best plan found across restarts.
+pub fn solve(graph: &LayerGraph, cluster: &Cluster, opts: &McmcOpts) -> Option<PlacementPlan> {
+    let n = graph.n_layers();
+    let k = cluster.n_devices();
+    let sgs = enumerate_sg(&graph.tp_widths, &graph.ep_degrees, &graph.cp_degrees, k);
+    let mut best: Option<PlacementPlan> = None;
+
+    for restart in 0..opts.restarts {
+        let mut rng = Rng::new(opts.seed.wrapping_add(restart as u64));
+        let mut cur = random_state(&mut rng, n, &sgs, k);
+        let mut cur_cost = eval(graph, cluster, &sgs, &cur, opts.zero_max_degree)
+            .map(|p| p.batch_time)
+            .unwrap_or(f64::INFINITY);
+        // Geometric annealing: T from 20% of current cost to ~0.1%.
+        for it in 0..opts.iters {
+            let cand = perturb(&mut rng, &cur, n, &sgs, k);
+            let cand_plan = eval(graph, cluster, &sgs, &cand, opts.zero_max_degree);
+            let cand_cost = cand_plan.as_ref().map(|p| p.batch_time).unwrap_or(f64::INFINITY);
+            let frac = it as f64 / opts.iters as f64;
+            let temp = 0.20 * (1.0 - frac) + 0.001;
+            let accept = cand_cost < cur_cost || {
+                cur_cost.is_finite()
+                    && cand_cost.is_finite()
+                    && rng.gen_f64() < (-(cand_cost - cur_cost) / (temp * cur_cost)).exp()
+            };
+            if accept {
+                cur = cand;
+                cur_cost = cand_cost;
+            }
+            if let Some(p) = cand_plan {
+                if best
+                    .as_ref()
+                    .map(|b| p.batch_time < b.batch_time)
+                    .unwrap_or(true)
+                {
+                    best = Some(p);
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::solver::{solve as nest_solve, SolverOpts};
+
+    fn quick_opts() -> McmcOpts {
+        McmcOpts {
+            iters: 300,
+            restarts: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mcmc_finds_valid_plan() {
+        let g = models::llama2_7b(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let plan = solve(&g, &c, &quick_opts()).expect("mcmc plan");
+        plan.validate(&g, &c).unwrap();
+    }
+
+    #[test]
+    fn mcmc_deterministic_per_seed() {
+        let g = models::bert_large(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let a = solve(&g, &c, &quick_opts()).unwrap().batch_time;
+        let b = solve(&g, &c, &quick_opts()).unwrap().batch_time;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nest_never_worse_than_mcmc() {
+        // MCMC explores a subset of NEST's space with the same cost
+        // model, so the DP (optimal in that space) must be ≤.
+        let g = models::llama2_7b(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let nest = nest_solve(&g, &c, &SolverOpts::default()).unwrap().plan;
+        let mcmc = solve(&g, &c, &quick_opts()).unwrap();
+        assert!(
+            nest.batch_time <= mcmc.batch_time * 1.0001,
+            "nest {} > mcmc {}",
+            nest.batch_time,
+            mcmc.batch_time
+        );
+    }
+
+    #[test]
+    fn more_iterations_no_worse() {
+        let g = models::bert_large(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let short = solve(
+            &g,
+            &c,
+            &McmcOpts {
+                iters: 50,
+                restarts: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .batch_time;
+        let long = solve(
+            &g,
+            &c,
+            &McmcOpts {
+                iters: 500,
+                restarts: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .batch_time;
+        assert!(long <= short * 1.0001);
+    }
+}

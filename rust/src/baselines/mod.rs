@@ -1,0 +1,236 @@
+//! Baseline placement methods (§5.1): Manual, MCMC (TopoOpt-style),
+//! Phaze, Alpa-E, and Mist.
+//!
+//! All baselines emit the same [`PlacementPlan`] type and are evaluated
+//! with the same cost model and simulator as NEST ("For fairness, NEST
+//! and baselines use PipeDream-Flush schedule and shared cost model").
+//! What differs is *how each one searches*: flat-network assumptions
+//! (Phaze, Alpa, Mist), stochastic exploration (MCMC), or fixed recipes
+//! (Manual). `build_plan` is the shared constructor that realizes a
+//! candidate (sg, cuts, d) on the real cluster with compact tail-first
+//! packing — identical to the NEST solver's layout — so comparisons
+//! isolate search quality, not layout plumbing.
+
+pub mod alpa;
+pub mod manual;
+pub mod mcmc;
+pub mod mist;
+pub mod phaze;
+
+use crate::cost::CostModel;
+use crate::graph::subgraph::SgConfig;
+use crate::graph::LayerGraph;
+use crate::network::Cluster;
+use crate::solver::assign::stage_devices;
+use crate::solver::plan::{PlacementPlan, StagePlan};
+
+/// Build (and memory-check) a plan from explicit decisions: SUB-GRAPH
+/// config, stage cut points (`cuts[k]..cuts[k+1]` = stage k's layers),
+/// data-parallel width, and the recomputation flag. Memory specs are
+/// chosen per stage exactly as the NEST solver does (escalating ZeRO),
+/// with the degree capped by `d`. Returns `None` if any stage cannot be
+/// made to fit — the "baseline failed to find a valid placement" ✗ in
+/// Figures 5–7.
+pub fn build_plan(
+    graph: &LayerGraph,
+    cluster: &Cluster,
+    method: &str,
+    sg: SgConfig,
+    cuts: &[usize],
+    d: usize,
+    recompute: bool,
+    zero_max_degree: usize,
+) -> Option<PlacementPlan> {
+    // Default compact tail-first layout: stage k on block p−1−k.
+    let p = cuts.len() - 1;
+    let blocks: Vec<usize> = (0..p).map(|k| p - 1 - k).collect();
+    build_plan_ordered(
+        graph,
+        cluster,
+        method,
+        sg,
+        cuts,
+        &blocks,
+        d,
+        recompute,
+        zero_max_degree,
+    )
+}
+
+/// Like [`build_plan`] but with an explicit stage→device-block
+/// assignment (`blocks[k]` is the index of the `g`-device block stage
+/// `k` occupies). Inter-stage levels are derived per block pair, so
+/// non-compact layouts price their cross-rack boundaries honestly.
+/// Used by placement-searching baselines (MCMC/TopoOpt).
+#[allow(clippy::too_many_arguments)]
+pub fn build_plan_ordered(
+    graph: &LayerGraph,
+    cluster: &Cluster,
+    method: &str,
+    sg: SgConfig,
+    cuts: &[usize],
+    blocks: &[usize],
+    d: usize,
+    recompute: bool,
+    zero_max_degree: usize,
+) -> Option<PlacementPlan> {
+    let p = cuts.len() - 1;
+    assert!(p >= 1 && cuts[0] == 0 && cuts[p] == graph.n_layers());
+    assert_eq!(blocks.len(), p, "one device block per stage");
+    let g = sg.group_size();
+    if p * g * d > cluster.n_devices() || d == 0 {
+        return None;
+    }
+    let cm = CostModel::new(graph, cluster, sg);
+    let cap = cluster.accel.hbm_capacity;
+    let zero_cap = zero_max_degree.min(crate::solver::pow2_floor(d));
+
+    let mut stages = Vec::with_capacity(p);
+    let mut bottleneck: f64 = 0.0;
+    for k in 0..p {
+        let (i, j) = (cuts[k], cuts[k + 1]);
+        if j <= i {
+            return None;
+        }
+        let stash = p - 1 - k;
+        let spec = cm.stage_choose_spec(i, j, stash, cap, zero_cap.min(d), recompute)?;
+        let send_level = if k + 1 < p {
+            Some(crate::solver::assign::block_pair_level(
+                cluster,
+                blocks[k],
+                blocks[k + 1],
+                g,
+            ))
+        } else {
+            None
+        };
+        let recv_level = if k > 0 {
+            Some(crate::solver::assign::block_pair_level(
+                cluster,
+                blocks[k - 1],
+                blocks[k],
+                g,
+            ))
+        } else {
+            None
+        };
+        let load = cm.stage_load(i, j, recv_level, send_level, &spec, cluster);
+        bottleneck = bottleneck.max(load);
+        stages.push(StagePlan {
+            layers: (i, j),
+            devices: stage_devices(blocks[k], g),
+            sg,
+            mem: spec,
+            send_level,
+            load,
+        });
+    }
+
+    let m = graph.global_batch.div_ceil(d * graph.mbs);
+    let stride = p * g;
+    let sync = stages
+        .iter()
+        .map(|st| cluster.dp_allreduce(cm.stage_grad_bytes(st.layers.0, st.layers.1), d, stride))
+        .fold(0.0, f64::max);
+    let batch_time = bottleneck * (m as f64 + p as f64 - 1.0) + sync;
+
+    Some(PlacementPlan {
+        model_name: graph.model_name.clone(),
+        method: method.into(),
+        sg,
+        stages,
+        dp_width: d,
+        mbs: graph.mbs,
+        n_microbatches: m,
+        devices_per_replica: stride,
+        bottleneck,
+        sync_time: sync,
+        batch_time,
+    })
+}
+
+/// Evenly split `n` layers into `p` contiguous stages.
+pub fn even_cuts(n: usize, p: usize) -> Vec<usize> {
+    assert!(p >= 1 && p <= n);
+    let mut cuts = Vec::with_capacity(p + 1);
+    for k in 0..=p {
+        cuts.push(k * n / p);
+    }
+    cuts
+}
+
+/// Split `n` layers into `p` stages balancing a per-layer weight.
+pub fn balanced_cuts(weights: &[f64], p: usize) -> Vec<usize> {
+    let n = weights.len();
+    assert!(p >= 1 && p <= n);
+    let total: f64 = weights.iter().sum();
+    let target = total / p as f64;
+    let mut cuts = vec![0usize];
+    let mut acc = 0.0;
+    for (k, w) in weights.iter().enumerate() {
+        acc += w;
+        // Leave enough layers for the remaining stages.
+        let stages_left = p - cuts.len();
+        let layers_left = n - (k + 1);
+        if cuts.len() < p && acc >= target * cuts.len() as f64 && layers_left >= stages_left {
+            cuts.push(k + 1);
+        }
+    }
+    while cuts.len() < p {
+        // Degenerate fallback: even split of the remainder.
+        let last = *cuts.last().unwrap();
+        cuts.push(last + (n - last) / (p + 1 - cuts.len()));
+    }
+    cuts.push(n);
+    cuts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn build_plan_validates() {
+        let g = models::llama2_7b(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let cuts = even_cuts(g.n_layers(), 8);
+        let plan = build_plan(&g, &c, "test", SgConfig::serial(), &cuts, 8, true, 8).unwrap();
+        plan.validate(&g, &c).unwrap();
+        assert_eq!(plan.n_stages(), 8);
+        assert_eq!(plan.dp_width, 8);
+    }
+
+    #[test]
+    fn build_plan_rejects_oversize() {
+        let g = models::llama2_7b(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let cuts = even_cuts(g.n_layers(), 8);
+        assert!(build_plan(&g, &c, "t", SgConfig::serial(), &cuts, 9, true, 8).is_none());
+    }
+
+    #[test]
+    fn even_cuts_cover() {
+        for (n, p) in [(34, 8), (26, 3), (98, 16), (10, 10)] {
+            let cuts = even_cuts(n, p);
+            assert_eq!(cuts.len(), p + 1);
+            assert_eq!(cuts[0], 0);
+            assert_eq!(cuts[p], n);
+            assert!(cuts.windows(2).all(|w| w[1] > w[0]));
+        }
+    }
+
+    #[test]
+    fn balanced_cuts_balance() {
+        // Heavy head: balanced cuts should give the heavy layer its own
+        // small stage.
+        let mut w = vec![1.0; 10];
+        w[0] = 9.0;
+        let cuts = balanced_cuts(&w, 2);
+        assert_eq!(cuts.len(), 3);
+        let s0: f64 = w[cuts[0]..cuts[1]].iter().sum();
+        let s1: f64 = w[cuts[1]..cuts[2]].iter().sum();
+        assert!((s0 - s1).abs() <= 9.0);
+        assert!(cuts[1] <= 2);
+    }
+}

@@ -1,0 +1,445 @@
+//! The unified compute–network–memory cost model: the DP's `load(·)` term
+//! (§4 "Unified Cost Model and Recurrence").
+//!
+//! [`CostModel`] pre-characterizes one (graph, cluster, SUB-GRAPH config)
+//! triple: per-layer forward+backward compute time, intra-stage collective
+//! time (TP/SP/EP/CP traffic at the group's locality), sharded parameter
+//! counts, and activation footprints — all as prefix sums so any
+//! contiguous stage `[i, j)` is costed in O(1) inside the DP's inner loop.
+//! This mirrors the paper's offline SUB-GRAPH profiling (§3.1): local
+//! strategies are characterized once and composed analytically during
+//! placement.
+
+use crate::graph::subgraph::{layer_collectives, SgConfig};
+use crate::graph::LayerGraph;
+use crate::hw::Accelerator;
+use crate::memory::{self, MemSpec, ZeroStage};
+use crate::network::Cluster;
+
+/// Pre-computed per-layer costs with prefix sums for O(1) range queries.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub sg: SgConfig,
+    /// Devices per stage replica (= sg.group_size()).
+    pub group: usize,
+    /// Communication level at which a compact group of `group` devices
+    /// lives; SUB-GRAPH collectives price at this locality.
+    pub group_level: usize,
+    n_layers: usize,
+    /// prefix[i] = Σ_{k<i} fwd compute seconds of layer k (per microbatch,
+    /// per device). Backward is 2×; recompute adds another 1×.
+    fwd_compute: Vec<f64>,
+    /// prefix of per-layer fwd+bwd collective seconds.
+    collective: Vec<f64>,
+    /// prefix of per-device sharded param counts.
+    params_sharded: Vec<f64>,
+    /// prefix of activation stash bytes (no recompute / recompute).
+    act_plain: Vec<f64>,
+    act_rc: Vec<f64>,
+    /// per-layer boundary bytes (activation crossing layer k → k+1).
+    boundary: Vec<f64>,
+    /// ZeRO-3 weight all-gather cost model at the replica-adjacent
+    /// locality: `z3_alpha + bytes · z3_beta` (latency + bandwidth terms
+    /// kept separate so large payloads don't multiply the α term).
+    z3_alpha: f64,
+    z3_beta: f64,
+    pub tokens: f64,
+}
+
+impl CostModel {
+    pub fn new(graph: &LayerGraph, cluster: &Cluster, sg: SgConfig) -> Self {
+        let n = graph.n_layers();
+        let accel = &cluster.accel;
+        let group = sg.group_size();
+        let group_level = cluster.level_of_group(group);
+        let tokens = graph.tokens;
+
+        let mut fwd_compute = vec![0.0; n + 1];
+        let mut collective = vec![0.0; n + 1];
+        let mut params_sharded = vec![0.0; n + 1];
+        let mut act_plain = vec![0.0; n + 1];
+        let mut act_rc = vec![0.0; n + 1];
+        let mut boundary = vec![0.0; n];
+
+        for (k, layer) in graph.layers.iter().enumerate() {
+            fwd_compute[k + 1] = fwd_compute[k] + layer_fwd_time(layer, tokens, &sg, accel);
+            let coll: f64 = layer_collectives(layer, tokens, &sg)
+                .iter()
+                .map(|c| cluster.collective_time(c))
+                .sum();
+            collective[k + 1] = collective[k] + coll;
+            params_sharded[k + 1] = params_sharded[k] + layer.param_count_sharded(&sg);
+            act_plain[k + 1] = act_plain[k] + layer.act_stash_bytes(tokens, &sg, false);
+            act_rc[k + 1] = act_rc[k] + layer.act_stash_bytes(tokens, &sg, true);
+            boundary[k] = layer.boundary_bytes(tokens, &sg);
+        }
+
+        // ZeRO-3 param all-gather: the sharding group is the z nearest
+        // data-parallel replicas; we price it as a gather over a group of
+        // size z placed one pipeline-replica stride apart. The stride is
+        // unknown during the DP (it depends on the final stage count), so
+        // we use the compact-adjacent approximation — identical for all
+        // candidate cuts, hence ranking-preserving (DESIGN.md §4).
+        let z3_shape = cluster.compact_shape(group * 2);
+        let z3_alpha = cluster.allgather(0.0, &z3_shape);
+        let z3_beta = cluster.allgather(1e9, &z3_shape) / 1e9 - z3_alpha / 1e9;
+
+        CostModel {
+            sg,
+            group,
+            group_level,
+            n_layers: n,
+            fwd_compute,
+            collective,
+            params_sharded,
+            act_plain,
+            act_rc,
+            boundary,
+            z3_alpha,
+            z3_beta,
+            tokens,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Per-device sharded parameter count of stage `[i, j)`.
+    pub fn stage_params(&self, i: usize, j: usize) -> f64 {
+        self.params_sharded[j] - self.params_sharded[i]
+    }
+
+    /// Activation stash bytes of one microbatch for stage `[i, j)`.
+    pub fn stage_act_bytes(&self, i: usize, j: usize, recompute: bool) -> f64 {
+        if recompute {
+            self.act_rc[j] - self.act_rc[i]
+        } else {
+            self.act_plain[j] - self.act_plain[i]
+        }
+    }
+
+    /// Peak memory of stage `[i, j)` under `spec` with `stash` extra
+    /// in-flight microbatches (Eq. 1 via prefix sums).
+    pub fn stage_peak_bytes(&self, i: usize, j: usize, spec: &MemSpec, stash: usize) -> f64 {
+        let p = self.stage_params(i, j);
+        let z = spec.zero.degree() as f64;
+        let static_bytes = match spec.zero {
+            ZeroStage::None => p * 16.0,
+            ZeroStage::Z1 { .. } => p * (4.0 + 12.0 / z),
+            ZeroStage::Z2 { .. } => p * (2.0 + 14.0 / z),
+            ZeroStage::Z3 { .. } => p * 16.0 / z,
+        };
+        let act = self.stage_act_bytes(i, j, spec.recompute);
+        // Transient working set under recompute: the largest single
+        // layer's full activations (re-materialized during backward).
+        let working = if spec.recompute {
+            let mut w: f64 = 0.0;
+            for k in i..j {
+                w = w.max(self.act_plain[k + 1] - self.act_plain[k]);
+            }
+            w
+        } else {
+            0.0
+        };
+        static_bytes + act * (1.0 + stash as f64) + working
+    }
+
+    /// Pick the minimal memory spec for stage `[i, j)` that fits
+    /// `capacity`, escalating recompute → ZeRO-1/2/3 exactly as
+    /// `memory::choose_spec` but on the O(1) prefix path.
+    pub fn stage_choose_spec(
+        &self,
+        i: usize,
+        j: usize,
+        stash: usize,
+        capacity: f64,
+        max_degree: usize,
+        recompute: bool,
+    ) -> Option<MemSpec> {
+        // Allocation-free escalation (this runs once per DP transition —
+        // ~10⁷ times per solve; see EXPERIMENTS.md §Perf). Memory terms
+        // are assembled inline from the prefix sums rather than through
+        // a candidate Vec.
+        let p = self.stage_params(i, j);
+        let act = self.stage_act_bytes(i, j, recompute) * (1.0 + stash as f64);
+        let working = if recompute {
+            let mut w: f64 = 0.0;
+            for k in i..j {
+                w = w.max(self.act_plain[k + 1] - self.act_plain[k]);
+            }
+            w
+        } else {
+            0.0
+        };
+        let dynamic = act + working;
+
+        let fits = |static_bytes: f64| static_bytes + dynamic <= capacity;
+        if fits(p * 16.0) {
+            return Some(MemSpec {
+                zero: ZeroStage::None,
+                recompute,
+            });
+        }
+        for kind in 0..3u8 {
+            let mut z = 2usize;
+            while z <= max_degree {
+                let zf = z as f64;
+                let (zero, static_bytes) = match kind {
+                    0 => (ZeroStage::Z1 { degree: z }, p * (4.0 + 12.0 / zf)),
+                    1 => (ZeroStage::Z2 { degree: z }, p * (2.0 + 14.0 / zf)),
+                    _ => (ZeroStage::Z3 { degree: z }, p * 16.0 / zf),
+                };
+                if fits(static_bytes) {
+                    return Some(MemSpec { zero, recompute });
+                }
+                z *= 2;
+            }
+        }
+        None
+    }
+
+    /// The DP's `load_l^{sg}(D \ D', a, s)`: per-microbatch latency of
+    /// stage `[i, j)` given the forward producer at level `recv_level`
+    /// and the consumer at level `send_level` (§4):
+    ///
+    /// * compute: fwd + 2×bwd (+1× fwd again under recomputation),
+    /// * SUB-GRAPH collectives at the group's locality,
+    /// * pipeline p2p: activation fwd + gradient bwd at each boundary,
+    /// * ZeRO-3 weight all-gathers when the memory spec demands them.
+    pub fn stage_load(
+        &self,
+        i: usize,
+        j: usize,
+        recv_level: Option<usize>,
+        send_level: Option<usize>,
+        spec: &MemSpec,
+        cluster: &Cluster,
+    ) -> f64 {
+        debug_assert!(i < j && j <= self.n_layers);
+        let fwd = self.fwd_compute[j] - self.fwd_compute[i];
+        let compute_mult = if spec.recompute { 4.0 } else { 3.0 };
+        let mut t = fwd * compute_mult;
+        t += self.collective[j] - self.collective[i];
+        if let ZeroStage::Z3 { .. } = spec.zero {
+            // All-gather full (unsharded-on-z) weights once per microbatch
+            // for fwd and once for bwd.
+            let weight_bytes = self.stage_params(i, j) * memory::WEIGHT_BYTES;
+            t += 2.0 * (self.z3_alpha + weight_bytes * self.z3_beta);
+        }
+        if let Some(l) = recv_level {
+            // Activation in (fwd) + gradient out (bwd) across the
+            // producer boundary.
+            let b = self.boundary[i.saturating_sub(1).min(self.n_layers - 1)];
+            t += 2.0 * cluster.p2p_time(l, b);
+        }
+        if let Some(l) = send_level {
+            let b = self.boundary[j - 1];
+            t += 2.0 * cluster.p2p_time(l, b);
+        }
+        t
+    }
+
+    /// Cheap lower bound on `stage_load` for `[i, j)`: pure forward+
+    /// backward compute, no communication. Strictly increasing in `j` —
+    /// the DP uses it for exact cut pruning.
+    #[inline]
+    pub fn stage_load_lb(&self, i: usize, j: usize) -> f64 {
+        (self.fwd_compute[j] - self.fwd_compute[i]) * 3.0
+    }
+
+    /// Gradient-sync bytes for stage `[i, j)` (bf16 grads).
+    pub fn stage_grad_bytes(&self, i: usize, j: usize) -> f64 {
+        self.stage_params(i, j) * memory::GRAD_BYTES
+    }
+
+    /// Split the stage's per-microbatch occupancy into forward and
+    /// backward phases for the discrete-event simulator. Collectives and
+    /// ZeRO-3 gathers split evenly; the recomputation re-forward lands in
+    /// the backward phase (where 1F1B executes it). Excludes pipeline p2p
+    /// — the simulator models transfers as dependency edges.
+    pub fn stage_phase_times(
+        &self,
+        i: usize,
+        j: usize,
+        spec: &MemSpec,
+        cluster: &Cluster,
+    ) -> (f64, f64) {
+        let fwd_compute = self.fwd_compute[j] - self.fwd_compute[i];
+        let coll = self.collective[j] - self.collective[i];
+        let z3 = if let ZeroStage::Z3 { .. } = spec.zero {
+            let wb = self.stage_params(i, j) * memory::WEIGHT_BYTES;
+            2.0 * (self.z3_alpha + wb * self.z3_beta)
+        } else {
+            0.0
+        };
+        let _ = cluster;
+        let fwd = fwd_compute + coll / 2.0 + z3 / 2.0;
+        let bwd_mult = if spec.recompute { 3.0 } else { 2.0 };
+        let bwd = fwd_compute * bwd_mult + coll / 2.0 + z3 / 2.0;
+        (fwd, bwd)
+    }
+
+    /// Separate components of a stage's per-microbatch time for
+    /// compute/communication breakdowns (Figure 2).
+    pub fn stage_breakdown(&self, i: usize, j: usize, spec: &MemSpec) -> (f64, f64) {
+        let compute_mult = if spec.recompute { 4.0 } else { 3.0 };
+        let compute = (self.fwd_compute[j] - self.fwd_compute[i]) * compute_mult;
+        let mut comm = self.collective[j] - self.collective[i];
+        if let ZeroStage::Z3 { .. } = spec.zero {
+            let wb = self.stage_params(i, j) * memory::WEIGHT_BYTES;
+            comm += 2.0 * (self.z3_alpha + wb * self.z3_beta);
+        }
+        (compute, comm)
+    }
+
+    /// Boundary bytes crossing after layer `j-1` (for the simulator).
+    pub fn boundary_bytes_after(&self, j: usize) -> f64 {
+        self.boundary[(j - 1).min(self.n_layers - 1)]
+    }
+}
+
+/// Forward wall-clock of one layer on one device: roofline matmul term
+/// plus vector-unit term.
+fn layer_fwd_time(
+    layer: &crate::graph::Layer,
+    tokens: f64,
+    sg: &SgConfig,
+    accel: &Accelerator,
+) -> f64 {
+    let mm = layer.matmul_flops_fwd(tokens, sg);
+    let hbm = layer.hbm_bytes_fwd(tokens, sg);
+    let vec = layer.vector_flops_fwd(tokens, sg);
+    accel.matmul_time(mm, hbm) + vec / accel.vector_peak
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::util::prop;
+
+    fn setup() -> (LayerGraph, Cluster) {
+        (models::gpt3_175b(1), Cluster::fat_tree_tpuv4(64))
+    }
+
+    #[test]
+    fn load_additive_over_cuts() {
+        let (g, c) = setup();
+        let cm = CostModel::new(&g, &c, SgConfig::tp(4));
+        let spec = MemSpec::plain();
+        // Pure compute (no boundaries) is additive: [2,10) = [2,6)+[6,10).
+        let whole = cm.stage_load(2, 10, None, None, &spec, &c);
+        let a = cm.stage_load(2, 6, None, None, &spec, &c);
+        let b = cm.stage_load(6, 10, None, None, &spec, &c);
+        assert!((whole - (a + b)).abs() / whole < 1e-9);
+    }
+
+    #[test]
+    fn boundaries_add_cost_increasing_with_level() {
+        let (g, c) = setup();
+        let cm = CostModel::new(&g, &c, SgConfig::tp(4));
+        let spec = MemSpec::plain();
+        let base = cm.stage_load(4, 8, None, None, &spec, &c);
+        let l0 = cm.stage_load(4, 8, Some(0), None, &spec, &c);
+        let l2 = cm.stage_load(4, 8, Some(2), None, &spec, &c);
+        assert!(base < l0 && l0 < l2);
+    }
+
+    #[test]
+    fn recompute_multiplies_compute() {
+        let (g, c) = setup();
+        let cm = CostModel::new(&g, &c, SgConfig::serial());
+        let plain = cm.stage_load(1, 9, None, None, &MemSpec::plain(), &c);
+        let rc = cm.stage_load(
+            1,
+            9,
+            None,
+            None,
+            &MemSpec {
+                zero: ZeroStage::None,
+                recompute: true,
+            },
+            &c,
+        );
+        // 4/3 compute ratio (collectives unchanged).
+        assert!(rc > plain);
+        assert!(rc / plain < 4.0 / 3.0 + 1e-6);
+    }
+
+    #[test]
+    fn z3_adds_gather_overhead() {
+        let (g, c) = setup();
+        let cm = CostModel::new(&g, &c, SgConfig::serial());
+        let plain = cm.stage_load(1, 9, None, None, &MemSpec::plain(), &c);
+        let z3 = cm.stage_load(
+            1,
+            9,
+            None,
+            None,
+            &MemSpec {
+                zero: ZeroStage::Z3 { degree: 8 },
+                recompute: false,
+            },
+            &c,
+        );
+        assert!(z3 > plain);
+    }
+
+    #[test]
+    fn peak_bytes_matches_memory_module() {
+        let (g, c) = setup();
+        let sg = SgConfig::tp(4);
+        let cm = CostModel::new(&g, &c, sg);
+        let spec = MemSpec::plain();
+        for (i, j, stash) in [(0usize, 5usize, 0usize), (3, 12, 4), (90, 98, 2)] {
+            let fast = cm.stage_peak_bytes(i, j, &spec, stash);
+            let slow =
+                memory::stage_peak_bytes(&g.layers[i..j], g.tokens, &sg, &spec, stash);
+            assert!(
+                (fast - slow).abs() / slow < 1e-9,
+                "[{i},{j}) stash={stash}: {fast} vs {slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn tp_reduces_compute_adds_collectives() {
+        let (g, c) = setup();
+        let serial = CostModel::new(&g, &c, SgConfig::serial());
+        let tp8 = CostModel::new(&g, &c, SgConfig::tp(8));
+        let spec = MemSpec::plain();
+        let t1 = serial.stage_load(1, 9, None, None, &spec, &c);
+        let t8 = tp8.stage_load(1, 9, None, None, &spec, &c);
+        // TP-8 should be meaningfully faster per device but not a full 8×
+        // (collectives + memory-bound terms).
+        assert!(t8 < t1, "tp8 {t8} < serial {t1}");
+        assert!(t1 / t8 < 8.0);
+    }
+
+    #[test]
+    fn prop_load_monotone_in_range() {
+        let (g, c) = setup();
+        let cm = CostModel::new(&g, &c, SgConfig::tp(4));
+        let spec = MemSpec::plain();
+        prop::forall(100, 0xFEED, |rng| {
+            let i = rng.gen_range(cm.n_layers() - 2);
+            let j = i + 2 + rng.gen_range(cm.n_layers() - i - 2);
+            let inner = cm.stage_load(i + 1, j, None, None, &spec, &c);
+            let outer = cm.stage_load(i, j, None, None, &spec, &c);
+            assert!(outer >= inner, "[{i},{j})");
+        });
+    }
+
+    #[test]
+    fn choose_spec_consistent_with_peak() {
+        let g = models::llama3_70b(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let cm = CostModel::new(&g, &c, SgConfig::serial());
+        let cap = c.accel.hbm_capacity;
+        let spec = cm.stage_choose_spec(1, 11, 6, cap, 8, false);
+        if let Some(s) = spec {
+            assert!(cm.stage_peak_bytes(1, 11, &s, 6) <= cap);
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! Model zoo: the workloads of Table 2 (plus the scaled-down variants of
+//! Tables 3 and 5), built from published hyperparameters.
+//!
+//! Each builder takes the microbatch size `mbs` (sequences per
+//! microbatch; the paper sweeps 1–8 in Figures 6/11) and returns a
+//! [`LayerGraph`] with the allowed SUB-GRAPH degrees from Table 2's
+//! "TMP Widths" / "Expert Degree" / "Context Degree" columns.
+
+use super::{Dims, Layer, LayerGraph, LayerKind, MoeCfg};
+
+/// Paper-wide default global batch size (§5.1).
+pub const GLOBAL_BATCH: usize = 4096;
+
+#[allow(clippy::too_many_arguments)]
+fn build(
+    name: &str,
+    n_blocks: usize,
+    hidden: usize,
+    heads: usize,
+    kv_heads: usize,
+    intermediate: usize,
+    seq: usize,
+    vocab: usize,
+    gated_mlp: bool,
+    moe: Option<MoeCfg>,
+    mbs: usize,
+    tp_widths: Vec<usize>,
+    ep_degrees: Vec<usize>,
+    cp_degrees: Vec<usize>,
+) -> LayerGraph {
+    assert!(mbs >= 1, "microbatch size must be >= 1");
+    let dims = Dims {
+        hidden,
+        heads,
+        kv_heads,
+        intermediate,
+        seq,
+        vocab,
+        gated_mlp,
+    };
+    let mut layers = Vec::with_capacity(n_blocks + 2);
+    layers.push(Layer {
+        name: "embedding".into(),
+        kind: LayerKind::Embedding,
+        dims,
+    });
+    for i in 0..n_blocks {
+        layers.push(Layer {
+            name: format!("block{i}"),
+            kind: match moe {
+                Some(m) => LayerKind::MoeBlock(m),
+                None => LayerKind::Block,
+            },
+            dims,
+        });
+    }
+    layers.push(Layer {
+        name: "head".into(),
+        kind: LayerKind::Head,
+        dims,
+    });
+    LayerGraph {
+        model_name: name.into(),
+        layers,
+        mbs,
+        tokens: (mbs * seq) as f64,
+        global_batch: GLOBAL_BATCH,
+        tp_widths,
+        ep_degrees,
+        cp_degrees,
+    }
+}
+
+/// Llama2-7B: 32 layers, 32 heads, h=4096 (Table 2; no TMP evaluated).
+pub fn llama2_7b(mbs: usize) -> LayerGraph {
+    build(
+        "llama2-7b",
+        32,
+        4096,
+        32,
+        32,
+        11008,
+        4096,
+        32000,
+        true,
+        None,
+        mbs,
+        vec![1],
+        vec![1],
+        vec![1],
+    )
+}
+
+/// Llama3-70B: 80 layers, 64 heads (8 KV heads, GQA), h=8192.
+pub fn llama3_70b(mbs: usize) -> LayerGraph {
+    build(
+        "llama3-70b",
+        80,
+        8192,
+        64,
+        8,
+        28672,
+        4096,
+        128256,
+        true,
+        None,
+        mbs,
+        vec![1],
+        vec![1],
+        vec![1],
+    )
+}
+
+/// BertLarge: 24 layers, 16 heads, h=1024, seq 512; TMP widths 1,2,4,8.
+pub fn bert_large(mbs: usize) -> LayerGraph {
+    build(
+        "bertlarge",
+        24,
+        1024,
+        16,
+        16,
+        4096,
+        512,
+        30522,
+        false,
+        None,
+        mbs,
+        vec![1, 2, 4, 8],
+        vec![1],
+        vec![1],
+    )
+}
+
+/// Megatron GPT3-175B: 96 layers, 96 heads, h=12288, seq 2048; TMP 4,8.
+pub fn gpt3_175b(mbs: usize) -> LayerGraph {
+    build(
+        "gpt3-175b",
+        96,
+        12288,
+        96,
+        96,
+        4 * 12288,
+        2048,
+        50257,
+        false,
+        None,
+        mbs,
+        vec![4, 8],
+        vec![1],
+        vec![1, 2, 4],
+    )
+}
+
+/// GPT3-35B (Table 3): the scaled-down variant used for the Mist
+/// comparison in §5.3 (64 layers, h=8192, 64 heads, I=16384, seq 2048).
+pub fn gpt3_35b(mbs: usize) -> LayerGraph {
+    build(
+        "gpt3-35b",
+        64,
+        8192,
+        64,
+        64,
+        16384,
+        2048,
+        50257,
+        false,
+        None,
+        mbs,
+        vec![1, 2, 4, 8],
+        vec![1],
+        vec![1, 2],
+    )
+}
+
+/// Mixtral-8x7B: 32 layers, 32 heads (8 KV), h=4096, I=14336, 8 experts
+/// top-2; expert degrees 1,2,4,8 and context degrees 1,2,4,8 (Table 2).
+pub fn mixtral_8x7b(mbs: usize) -> LayerGraph {
+    build(
+        "mixtral-8x7b",
+        32,
+        4096,
+        32,
+        8,
+        14336,
+        4096,
+        32000,
+        true,
+        Some(MoeCfg {
+            experts: 8,
+            top_k: 2,
+        }),
+        mbs,
+        vec![1],
+        vec![1, 2, 4, 8],
+        vec![1, 2, 4, 8],
+    )
+}
+
+/// Scaled-down Mixtral (Table 5, §5.4): 8 layers, 8 experts, h=1024,
+/// 16 heads, I=3584, seq 1024 — ~790M params, used on the 8/16-device
+/// validation clusters.
+pub fn mixtral_scaled(mbs: usize) -> LayerGraph {
+    build(
+        "mixtral-790m",
+        8,
+        1024,
+        16,
+        16,
+        3584,
+        1024,
+        32000,
+        true,
+        Some(MoeCfg {
+            experts: 8,
+            top_k: 2,
+        }),
+        mbs,
+        vec![1, 2],
+        vec![1, 2, 4, 8],
+        vec![1],
+    )
+}
+
+/// Tiny synthetic transformer used by unit/property tests and the real
+/// pipeline trainer (matches the L2 JAX model's default config).
+pub fn tiny_transformer(n_blocks: usize, hidden: usize, seq: usize, mbs: usize) -> LayerGraph {
+    build(
+        "tiny",
+        n_blocks,
+        hidden,
+        (hidden / 64).max(1),
+        (hidden / 64).max(1),
+        4 * hidden,
+        seq,
+        8192,
+        false,
+        None,
+        mbs,
+        vec![1, 2],
+        vec![1],
+        vec![1],
+    )
+}
+
+/// Look a model up by CLI name.
+pub fn by_name(name: &str, mbs: usize) -> Option<LayerGraph> {
+    match name {
+        "llama2-7b" => Some(llama2_7b(mbs)),
+        "llama3-70b" => Some(llama3_70b(mbs)),
+        "bertlarge" => Some(bert_large(mbs)),
+        "gpt3-175b" => Some(gpt3_175b(mbs)),
+        "gpt3-35b" => Some(gpt3_35b(mbs)),
+        "mixtral-8x7b" => Some(mixtral_8x7b(mbs)),
+        "mixtral-790m" => Some(mixtral_scaled(mbs)),
+        _ => None,
+    }
+}
+
+/// All Table 2 models at a given microbatch size.
+pub fn table2_models(mbs: usize) -> Vec<LayerGraph> {
+    vec![
+        bert_large(mbs),
+        llama2_7b(mbs),
+        llama3_70b(mbs),
+        gpt3_175b(mbs),
+        mixtral_8x7b(mbs),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_names_resolve() {
+        for n in [
+            "llama2-7b",
+            "llama3-70b",
+            "bertlarge",
+            "gpt3-175b",
+            "gpt3-35b",
+            "mixtral-8x7b",
+            "mixtral-790m",
+        ] {
+            let g = by_name(n, 1).unwrap_or_else(|| panic!("{n} missing"));
+            assert_eq!(g.model_name, n);
+            assert!(g.n_layers() >= 3);
+        }
+        assert!(by_name("nope", 1).is_none());
+    }
+
+    #[test]
+    fn layer_counts_match_table2() {
+        assert_eq!(llama2_7b(1).n_layers(), 32 + 2);
+        assert_eq!(llama3_70b(1).n_layers(), 80 + 2);
+        assert_eq!(bert_large(1).n_layers(), 24 + 2);
+        assert_eq!(gpt3_175b(1).n_layers(), 96 + 2);
+        assert_eq!(mixtral_8x7b(1).n_layers(), 32 + 2);
+    }
+
+    #[test]
+    fn mixtral_scaled_is_790m() {
+        let g = mixtral_scaled(1);
+        let p = g.total_params();
+        assert!(
+            (p - 790e6).abs() / 790e6 < 0.20,
+            "scaled mixtral {:.0}M params",
+            p / 1e6
+        );
+    }
+
+    #[test]
+    fn mbs_scales_tokens() {
+        let g1 = gpt3_175b(1);
+        let g4 = gpt3_175b(4);
+        assert!((g4.tokens / g1.tokens - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gpt35b_matches_table3() {
+        let g = gpt3_35b(1);
+        assert_eq!(g.layers[1].dims.hidden, 8192);
+        assert_eq!(g.layers[1].dims.heads, 64);
+        assert_eq!(g.layers[1].dims.intermediate, 16384);
+        assert_eq!(g.layers[1].dims.seq, 2048);
+        let p = g.total_params();
+        assert!((p - 35e9).abs() / 35e9 < 0.25, "{:.1}B", p / 1e9);
+    }
+}

@@ -1,0 +1,294 @@
+//! SUB-GRAPH parallelism configurations (§3.1).
+//!
+//! SUB-GRAPH strategies (tensor, sequence, expert, context parallelism)
+//! transform a layer's internal execution while preserving the chain
+//! dataflow. NEST pre-characterizes their compute/memory/communication
+//! effects offline and composes them analytically inside the DP's
+//! `load(·)` term — this module enumerates the configurations allowed for
+//! a model (Table 2 columns) and derives the collective calls each one
+//! issues per microbatch.
+
+use super::{Layer, LayerKind, DTYPE_BYTES};
+
+/// A SUB-GRAPH parallelism configuration. The per-stage device group size
+/// is `tp · ep · cp`; sequence parallelism reuses the TP group (Table 2:
+/// "sequence-parallel width, if applied, equals tensor model-parallel
+/// width").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SgConfig {
+    /// Tensor model parallel degree.
+    pub tp: usize,
+    /// Sequence parallelism on the TP group (Megatron-SP).
+    pub sp: bool,
+    /// Expert parallel degree (MoE layers only; 1 elsewhere).
+    pub ep: usize,
+    /// Context parallel degree.
+    pub cp: usize,
+}
+
+impl SgConfig {
+    /// The trivial configuration: no intra-layer parallelism.
+    pub fn serial() -> Self {
+        SgConfig {
+            tp: 1,
+            sp: false,
+            ep: 1,
+            cp: 1,
+        }
+    }
+
+    pub fn tp(t: usize) -> Self {
+        SgConfig {
+            tp: t,
+            sp: false,
+            ep: 1,
+            cp: 1,
+        }
+    }
+
+    /// Devices each stage replica occupies.
+    pub fn group_size(&self) -> usize {
+        self.tp * self.ep * self.cp
+    }
+
+    /// Table-2-style rendering `{t, s, (e, c)}` fragments.
+    pub fn describe(&self) -> String {
+        format!(
+            "t={} s={} e={} c={}",
+            self.tp,
+            if self.sp { self.tp } else { 1 },
+            self.ep,
+            self.cp
+        )
+    }
+}
+
+/// The collective operations NEST models (§2, §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    /// Point-to-point send/recv (pipeline boundaries, CP ring steps).
+    SendRecv,
+}
+
+/// One collective issued inside a stage, over a sub-group of the stage's
+/// devices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveCall {
+    pub kind: CollectiveKind,
+    /// Payload bytes per participant.
+    pub bytes: f64,
+    /// Number of participants.
+    pub group: usize,
+}
+
+/// Collective calls a layer issues during forward+backward of one
+/// microbatch under `sg` (per pipeline replica):
+///
+/// * TP (no SP): 2 all-reduces fwd + 2 bwd per block, each of the full
+///   activation tensor.
+/// * TP + SP: the all-reduces become all-gather + reduce-scatter pairs of
+///   the same total volume (4 fwd + 4 bwd), halving redundant activation
+///   memory instead of latency.
+/// * EP: dispatch + combine all-to-alls (2 fwd + 2 bwd), top_k-scaled.
+/// * CP: ring exchange of K/V shards — (cp−1) send/recvs each direction.
+/// * Embedding/head with TP shard the vocab dim: 1 all-reduce of logits /
+///   embedding grads each direction.
+pub fn layer_collectives(layer: &Layer, tokens: f64, sg: &SgConfig) -> Vec<CollectiveCall> {
+    let mut out = Vec::new();
+    let d = &layer.dims;
+    let local_tokens = tokens / sg.cp as f64;
+    let act = DTYPE_BYTES * local_tokens * d.hidden as f64;
+
+    match layer.kind {
+        LayerKind::Embedding | LayerKind::Head => {
+            if sg.tp > 1 {
+                // Vocab-parallel embedding/head: one all-reduce fwd + bwd.
+                for _ in 0..2 {
+                    out.push(CollectiveCall {
+                        kind: CollectiveKind::AllReduce,
+                        bytes: act,
+                        group: sg.tp,
+                    });
+                }
+            }
+        }
+        LayerKind::Block | LayerKind::MoeBlock(_) => {
+            if sg.tp > 1 {
+                if sg.sp {
+                    // 4 (AG+RS) pairs fwd + 4 bwd, sharded volume.
+                    for _ in 0..4 {
+                        out.push(CollectiveCall {
+                            kind: CollectiveKind::AllGather,
+                            bytes: act / sg.tp as f64,
+                            group: sg.tp,
+                        });
+                        out.push(CollectiveCall {
+                            kind: CollectiveKind::ReduceScatter,
+                            bytes: act / sg.tp as f64,
+                            group: sg.tp,
+                        });
+                    }
+                } else {
+                    // 2 all-reduces fwd + 2 bwd.
+                    for _ in 0..4 {
+                        out.push(CollectiveCall {
+                            kind: CollectiveKind::AllReduce,
+                            bytes: act,
+                            group: sg.tp,
+                        });
+                    }
+                }
+            }
+            if let LayerKind::MoeBlock(moe) = layer.kind {
+                let e = sg.ep.min(moe.experts);
+                if e > 1 {
+                    let routed = act * moe.top_k as f64;
+                    // dispatch + combine, forward and backward.
+                    for _ in 0..4 {
+                        out.push(CollectiveCall {
+                            kind: CollectiveKind::AllToAll,
+                            bytes: routed,
+                            group: e,
+                        });
+                    }
+                }
+            }
+            if sg.cp > 1 {
+                // Ring exchange of K/V shards: each CP step moves the
+                // local K/V block to the neighbor, (cp−1) steps, fwd+bwd.
+                let kv = DTYPE_BYTES * local_tokens * d.kv_dim() as f64 * 2.0;
+                for _ in 0..(2 * (sg.cp - 1)) {
+                    out.push(CollectiveCall {
+                        kind: CollectiveKind::SendRecv,
+                        bytes: kv,
+                        group: 2,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Enumerate the SUB-GRAPH configurations allowed for a model
+/// (cross-product of the Table 2 degree columns, with SP tied to TP),
+/// filtered to groups that fit within `max_group` devices.
+pub fn enumerate_sg(
+    tp_widths: &[usize],
+    ep_degrees: &[usize],
+    cp_degrees: &[usize],
+    max_group: usize,
+) -> Vec<SgConfig> {
+    let mut out = Vec::new();
+    for &tp in tp_widths {
+        for &ep in ep_degrees {
+            for &cp in cp_degrees {
+                if tp * ep * cp > max_group {
+                    continue;
+                }
+                // Plain TP and TP+SP are distinct points when tp > 1.
+                out.push(SgConfig {
+                    tp,
+                    sp: false,
+                    ep,
+                    cp,
+                });
+                if tp > 1 {
+                    out.push(SgConfig {
+                        tp,
+                        sp: true,
+                        ep,
+                        cp,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::models;
+    use super::*;
+
+    #[test]
+    fn serial_has_no_collectives() {
+        let g = models::gpt3_175b(1);
+        for l in &g.layers {
+            assert!(layer_collectives(l, g.tokens, &SgConfig::serial()).is_empty());
+        }
+    }
+
+    #[test]
+    fn tp_block_has_four_allreduces() {
+        let g = models::gpt3_175b(1);
+        let calls = layer_collectives(&g.layers[1], g.tokens, &SgConfig::tp(4));
+        assert_eq!(calls.len(), 4);
+        assert!(calls
+            .iter()
+            .all(|c| c.kind == CollectiveKind::AllReduce && c.group == 4));
+    }
+
+    #[test]
+    fn sp_preserves_total_volume() {
+        let g = models::gpt3_175b(1);
+        let tp = layer_collectives(&g.layers[1], g.tokens, &SgConfig::tp(4));
+        let mut sg = SgConfig::tp(4);
+        sg.sp = true;
+        let sp = layer_collectives(&g.layers[1], g.tokens, &sg);
+        // Ring AR of V bytes moves 2·V·(g−1)/g per rank; AG+RS of V/g each
+        // moves the same total. Compare summed payloads: 4·V vs 8·(V/4)=2V
+        // — SP halves the on-wire payload bookkeeping but the *cost model*
+        // (network::collectives) makes AR(V) == AG(V/g)+RS(V/g) in time.
+        let tp_bytes: f64 = tp.iter().map(|c| c.bytes).sum();
+        let sp_bytes: f64 = sp.iter().map(|c| c.bytes).sum();
+        assert!(sp_bytes < tp_bytes);
+        assert_eq!(sp.len(), 8);
+    }
+
+    #[test]
+    fn moe_all_to_all_present() {
+        let g = models::mixtral_8x7b(1);
+        let mut sg = SgConfig::serial();
+        sg.ep = 4;
+        let calls = layer_collectives(&g.layers[1], g.tokens, &sg);
+        let a2a: Vec<_> = calls
+            .iter()
+            .filter(|c| c.kind == CollectiveKind::AllToAll)
+            .collect();
+        assert_eq!(a2a.len(), 4);
+        assert!(a2a.iter().all(|c| c.group == 4));
+    }
+
+    #[test]
+    fn cp_ring_steps_scale() {
+        let g = models::mixtral_8x7b(1);
+        let mut sg = SgConfig::serial();
+        sg.cp = 4;
+        let calls = layer_collectives(&g.layers[1], g.tokens, &sg);
+        let sends = calls
+            .iter()
+            .filter(|c| c.kind == CollectiveKind::SendRecv)
+            .count();
+        assert_eq!(sends, 2 * 3);
+    }
+
+    #[test]
+    fn enumerate_respects_max_group() {
+        let cfgs = enumerate_sg(&[1, 2, 4, 8], &[1, 2], &[1, 2], 8);
+        assert!(cfgs.iter().all(|c| c.group_size() <= 8));
+        assert!(cfgs.contains(&SgConfig::serial()));
+        // SP variants only for tp > 1.
+        assert!(cfgs.iter().filter(|c| c.sp).all(|c| c.tp > 1));
+        // No duplicates.
+        let mut seen = std::collections::HashSet::new();
+        for c in &cfgs {
+            assert!(seen.insert(*c), "dup {c:?}");
+        }
+    }
+}

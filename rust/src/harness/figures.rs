@@ -1,0 +1,428 @@
+//! Figure harnesses: Figures 2, 5, 6, 7, 10, 11.
+
+use super::{geomean_speedup, run_method, run_methods, HarnessOpts, Method};
+use crate::baselines::{build_plan, even_cuts};
+use crate::graph::models;
+use crate::graph::subgraph::SgConfig;
+use crate::network::Cluster;
+use crate::sim::{simulate, Schedule};
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+
+/// Figure 2: impact of communication latency across parallelism
+/// strategies on a 2:2 oversubscribed 64-GPU H100 cluster, with and
+/// without activation recomputation. Prints per-strategy iteration time
+/// and communication share.
+pub fn figure2(opts: &HarnessOpts) {
+    println!("== Figure 2: communication impact across strategies (64×H100, 2:2 oversubscribed) ==");
+    let cluster = Cluster::spine_leaf_h100(64, 2.0);
+    let mut csv = Csv::new(&[
+        "model", "strategy", "recompute", "batch_time_s", "comm_frac",
+    ]);
+    let mut tbl = Table::new(&["model", "strategy", "AR", "batch time", "comm %"]);
+
+    for (model, variants) in [
+        (
+            "gpt3-175b",
+            vec![("TP8-PP8", 8usize, 8usize, 1usize), ("TP4-PP16", 16, 4, 1), ("TP8-DP", 2, 8, 1), ("PP32", 32, 1, 1)],
+        ),
+        (
+            "llama3-70b",
+            vec![("PP80", 80, 1, 1), ("PP40-DP", 40, 1, 1), ("PP16-DP", 16, 1, 1), ("PP8-DP", 8, 1, 1)],
+        ),
+        (
+            "mixtral-8x7b",
+            vec![("EP4-PP8", 8, 1, 4), ("EP8-PP4", 4, 1, 8), ("EP4-PP16", 16, 1, 4), ("PP32", 32, 1, 1)],
+        ),
+    ] {
+        let graph = models::by_name(model, 1).unwrap();
+        for (name, p, t, e) in variants {
+            let sg = SgConfig {
+                tp: t,
+                sp: t > 1,
+                ep: e,
+                cp: 1,
+            };
+            let g = sg.group_size();
+            let p = p.min(graph.n_layers()).min(64 / g);
+            let d = (64 / (p * g)).max(1);
+            for rc in [false, true] {
+                let cuts = even_cuts(graph.n_layers(), p);
+                let Some(plan) = build_plan(&graph, &cluster, "fixed", sg, &cuts, d, rc, 8)
+                else {
+                    tbl.row(vec![
+                        model.into(),
+                        name.into(),
+                        if rc { "yes" } else { "no" }.into(),
+                        "✗ (OOM)".into(),
+                        "-".into(),
+                    ]);
+                    continue;
+                };
+                let sim = simulate(&graph, &cluster, &plan, Schedule::OneFOneB);
+                tbl.row(vec![
+                    model.into(),
+                    name.into(),
+                    if rc { "yes" } else { "no" }.into(),
+                    crate::util::table::fmt_time(sim.batch_time),
+                    format!("{:.1}%", sim.comm_fraction * 100.0),
+                ]);
+                csv.row(vec![
+                    model.into(),
+                    name.into(),
+                    rc.to_string(),
+                    sim.batch_time.to_string(),
+                    sim.comm_fraction.to_string(),
+                ]);
+            }
+        }
+    }
+    println!("{}", tbl.render());
+    let _ = csv.write(format!("{}/figure2.csv", opts.results_dir));
+}
+
+/// Shared scaffolding for the Figure 5 / Figure 7 throughput sweeps.
+fn throughput_sweep(
+    title: &str,
+    csv_name: &str,
+    cluster_of: impl Fn(usize) -> Cluster,
+    sizes: &[usize],
+    model_names: &[&str],
+    methods: &[Method],
+    opts: &HarnessOpts,
+) {
+    println!("== {title} ==");
+    let mut csv = Csv::new(&["model", "devices", "method", "throughput", "relative", "strategy"]);
+    // (nest, baseline) throughput pairs per baseline for the headline
+    // geomean aggregates.
+    let mut pairs: std::collections::BTreeMap<&'static str, Vec<(f64, f64)>> =
+        Default::default();
+
+    for model in model_names {
+        let graph = models::by_name(model, 1).unwrap();
+        let mut header = vec!["devices"];
+        header.extend(methods.iter().map(|m| m.name()));
+        let mut tbl = Table::new(&header);
+        // Normalization: manual baseline's smallest valid result.
+        let mut manual_ref: Option<f64> = None;
+        for &n in sizes {
+            let cluster = cluster_of(n);
+            let results = run_methods(&graph, &cluster, methods, opts);
+            if manual_ref.is_none() {
+                manual_ref = results
+                    .iter()
+                    .find(|r| r.method == Method::Manual && r.throughput() > 0.0)
+                    .map(|r| r.throughput());
+            }
+            let nest_tput = results
+                .iter()
+                .find(|r| r.method == Method::Nest)
+                .map(|r| r.throughput())
+                .unwrap_or(0.0);
+            let mut row = vec![n.to_string()];
+            for r in &results {
+                let rel = manual_ref
+                    .map(|m| r.throughput() / m)
+                    .unwrap_or(0.0);
+                row.push(if r.throughput() > 0.0 {
+                    format!("{rel:.2}x")
+                } else {
+                    "✗".into()
+                });
+                csv.row(vec![
+                    model.to_string(),
+                    n.to_string(),
+                    r.method.name().into(),
+                    r.throughput().to_string(),
+                    rel.to_string(),
+                    r.strategy(),
+                ]);
+                if r.method != Method::Nest && r.throughput() > 0.0 && nest_tput > 0.0 {
+                    pairs
+                        .entry(r.method.name())
+                        .or_default()
+                        .push((nest_tput, r.throughput()));
+                }
+            }
+            tbl.row(row);
+        }
+        println!("-- {model} (relative to manual's smallest valid result) --");
+        println!("{}", tbl.render());
+    }
+    println!("Headline aggregates (geomean NEST speedup):");
+    for (name, ps) in &pairs {
+        println!("  vs {:8} {:.2}x (n={})", name, geomean_speedup(ps), ps.len());
+    }
+    let _ = csv.write(format!("{}/{csv_name}.csv", opts.results_dir));
+}
+
+/// Figure 5: throughput vs baselines on fat-tree TPUv4, 64–1024 devices.
+pub fn figure5(opts: &HarnessOpts, sizes: &[usize]) {
+    throughput_sweep(
+        "Figure 5: fat-tree TPUv4 throughput (relative to manual)",
+        "figure5",
+        Cluster::fat_tree_tpuv4,
+        sizes,
+        &["bertlarge", "llama2-7b", "llama3-70b", "gpt3-175b", "mixtral-8x7b"],
+        &[Method::Manual, Method::Mcmc, Method::Phaze, Method::AlpaE, Method::Nest],
+        opts,
+    );
+}
+
+/// Figure 7: spine-leaf 1024×H100 (2:2 oversubscribed) with Mist.
+pub fn figure7(opts: &HarnessOpts, n_devices: usize) {
+    throughput_sweep(
+        "Figure 7: spine-leaf H100 throughput (relative to manual)",
+        "figure7",
+        |n| Cluster::spine_leaf_h100(n, 2.0),
+        &[n_devices],
+        &[
+            "bertlarge", "llama2-7b", "llama3-70b", "gpt3-35b", "gpt3-175b", "mixtral-8x7b",
+        ],
+        &[Method::Manual, Method::Mcmc, Method::Phaze, Method::Mist, Method::Nest],
+        opts,
+    );
+}
+
+/// Figures 6 / 11: joint microbatch-size exploration at a fixed cluster
+/// size (256 for Fig. 6, 512 for Fig. 11). Throughput relative to the
+/// manual baseline at microbatch size 1.
+pub fn microbatch_sweep(opts: &HarnessOpts, n_devices: usize, csv_name: &str) {
+    println!("== Microbatch sweep on {n_devices} TPUv4 (Figure {}) ==",
+             if n_devices == 256 { "6" } else { "11" });
+    let cluster = Cluster::fat_tree_tpuv4(n_devices);
+    let methods = [Method::Manual, Method::Phaze, Method::AlpaE, Method::Nest];
+    let mut csv = Csv::new(&["model", "mbs", "method", "throughput", "relative", "strategy"]);
+
+    for model in ["bertlarge", "llama2-7b", "llama3-70b"] {
+        let mut header = vec!["mbs"];
+        header.extend(methods.iter().map(|m| m.name()));
+        let mut tbl = Table::new(&header);
+        // Reference: manual at mbs 1.
+        let g1 = models::by_name(model, 1).unwrap();
+        let manual_ref = run_method(&g1, &cluster, Method::Manual, opts).throughput();
+        for mbs in [1usize, 2, 4, 8] {
+            let graph = models::by_name(model, mbs).unwrap();
+            let mut row = vec![mbs.to_string()];
+            for &m in &methods {
+                let r = run_method(&graph, &cluster, m, opts);
+                let rel = if manual_ref > 0.0 {
+                    r.throughput() / manual_ref
+                } else {
+                    0.0
+                };
+                row.push(if r.throughput() > 0.0 {
+                    format!("{rel:.2}x")
+                } else {
+                    "✗".into()
+                });
+                csv.row(vec![
+                    model.to_string(),
+                    mbs.to_string(),
+                    m.name().into(),
+                    r.throughput().to_string(),
+                    rel.to_string(),
+                    r.strategy(),
+                ]);
+            }
+            tbl.row(row);
+        }
+        println!("-- {model} (relative to manual @ mbs 1) --");
+        println!("{}", tbl.render());
+    }
+    let _ = csv.write(format!("{}/{csv_name}.csv", opts.results_dir));
+}
+
+// ---------------------------------------------------------------------------
+// Figure 10: collective-communication model validation.
+// ---------------------------------------------------------------------------
+
+/// Message-level discrete simulation of a hierarchical ring all-reduce —
+/// the referee the α–β closed form (network::collectives) is validated
+/// against (the paper validates against real H100 nodes; Fig. 10 shows
+/// ≤2% error). Unlike the closed form, the DES transfers *quantized
+/// messages*: each ring step ships ⌈payload / MSG_BYTES⌉ wire messages,
+/// each carrying a protocol header, and each step pays the link latency
+/// explicitly. The closed form's error against this referee is the
+/// quantization + header cost it abstracts away — large payloads
+/// converge, small payloads diverge, exactly the regime structure real
+/// collectives show.
+pub fn des_allreduce(cluster: &Cluster, bytes: f64, shape: &[usize]) -> f64 {
+    /// NCCL-like maximum wire-message size.
+    const MSG_BYTES: f64 = 256.0 * 1024.0;
+    /// Per-message protocol/header overhead in byte-equivalents.
+    const HEADER_BYTES: f64 = 512.0;
+
+    let mut t = 0.0f64;
+    let mut shard = bytes;
+    for (i, &gi) in shape.iter().enumerate() {
+        if gi <= 1 {
+            continue;
+        }
+        let tier = i.min(cluster.n_levels() - 1);
+        let lat = cluster.tiers[tier].latency;
+        let bw = cluster.bw_eff(tier);
+        // Per ring step each participant ships shard/gi bytes split into
+        // MSG_BYTES messages (headers repeat per message; payloads are
+        // not padded); reduce-scatter then all-gather.
+        let payload = shard / gi as f64;
+        let n_msgs = (payload / MSG_BYTES).ceil().max(1.0);
+        let wire_bytes = payload + n_msgs * HEADER_BYTES;
+        let step_time = wire_bytes / bw + lat;
+        t += 2.0 * (gi as f64 - 1.0) * step_time;
+        shard /= gi as f64;
+    }
+    t
+}
+
+/// Figure 10: analytical collective estimates vs the chunk-level DES,
+/// plus measured-vs-predicted probe runtimes from the PJRT profiler when
+/// artifacts are present.
+pub fn figure10(opts: &HarnessOpts) {
+    println!("== Figure 10: collective estimate validation ==");
+    let cluster = Cluster::spine_leaf_h100(64, 2.0);
+    let mut tbl = Table::new(&["group", "payload", "analytical", "DES", "error"]);
+    let mut csv = Csv::new(&["group", "bytes", "analytical_s", "des_s", "rel_error"]);
+    let mut worst: f64 = 0.0;
+    for g in [4usize, 8, 16, 32] {
+        let shape = cluster.compact_shape(g);
+        for bytes in [1e6, 1e7, 1e8, 1e9] {
+            let analytical = cluster.allreduce(bytes, &shape);
+            let des = des_allreduce(&cluster, bytes, &shape);
+            let err = (analytical - des).abs() / des;
+            worst = worst.max(err);
+            tbl.row(vec![
+                format!("{g} ({shape:?})"),
+                crate::util::table::fmt_bytes(bytes),
+                crate::util::table::fmt_time(analytical),
+                crate::util::table::fmt_time(des),
+                format!("{:.2}%", err * 100.0),
+            ]);
+            csv.row(vec![
+                g.to_string(),
+                bytes.to_string(),
+                analytical.to_string(),
+                des.to_string(),
+                err.to_string(),
+            ]);
+        }
+    }
+    println!("{}", tbl.render());
+    println!("worst-case analytical-vs-DES error: {:.2}% (paper reports ≤2% vs H100)", worst * 100.0);
+
+    // Part 2: measured PJRT probe runtimes vs the calibrated roofline.
+    if let Some(dir) = crate::runtime::artifacts_dir() {
+        match crate::profiler::calibrate(&dir, 5) {
+            Ok(cal) => {
+                let mut t2 = Table::new(&["probe", "measured", "predicted", "error"]);
+                for p in &cal.probes {
+                    let predicted = p.flops / cal.accel.achieved_matmul();
+                    let err = (predicted - p.median_seconds).abs() / p.median_seconds;
+                    t2.row(vec![
+                        format!("block h={}", p.hidden),
+                        crate::util::table::fmt_time(p.median_seconds),
+                        crate::util::table::fmt_time(predicted),
+                        format!("{:.1}%", err * 100.0),
+                    ]);
+                }
+                println!("-- measured (PJRT CPU) vs calibrated roofline --");
+                println!("{}", t2.render());
+            }
+            Err(e) => eprintln!("probe calibration failed: {e:#}"),
+        }
+    } else {
+        println!("(run `make artifacts` for the measured-probe half of Fig. 10)");
+    }
+    let _ = csv.write(format!("{}/figure10.csv", opts.results_dir));
+}
+
+/// Appendix B.2: torus/mesh evaluation via the level-wise abstraction.
+/// Solves the Table-2 models on a 2D-torus TPU pod and a fat-tree of the
+/// same size, showing the same DP adapts across topology families (the
+/// paper's "topology-agnostic" claim, §4 Key Observation).
+pub fn torus(opts: &HarnessOpts, n_devices: usize) {
+    println!("== Appendix B.2: torus vs fat-tree placement ({n_devices} devices) ==");
+    let side = (n_devices as f64).sqrt() as usize;
+    let torus = Cluster::torus2d(side, n_devices / side, 50.0 * 1e9, 1e-6);
+    let fat = Cluster::fat_tree_tpuv4(n_devices);
+    let mut tbl = Table::new(&[
+        "model", "torus strategy", "torus tput", "fat-tree strategy", "fat-tree tput",
+    ]);
+    let mut csv = Csv::new(&["model", "cluster", "strategy", "throughput"]);
+    for model in ["llama2-7b", "gpt3-175b", "mixtral-8x7b"] {
+        let graph = models::by_name(model, 1).unwrap();
+        let mut cells = Vec::new();
+        for c in [&torus, &fat] {
+            let r = run_method(&graph, c, Method::Nest, opts);
+            csv.row(vec![
+                model.into(),
+                c.name.clone(),
+                r.strategy(),
+                r.throughput().to_string(),
+            ]);
+            cells.push((r.strategy(), r.throughput()));
+        }
+        tbl.row(vec![
+            model.into(),
+            cells[0].0.clone(),
+            format!("{:.1}/s", cells[0].1),
+            cells[1].0.clone(),
+            format!("{:.1}/s", cells[1].1),
+        ]);
+    }
+    println!("{}", tbl.render());
+    let _ = csv.write(format!("{}/torus.csv", opts.results_dir));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn des_allreduce_close_to_analytical_flat() {
+        // Within a node (single tier, no oversubscription) the closed
+        // form must track the message-level referee to within the
+        // header/quantization cost it abstracts (~2%, the paper's Fig.10
+        // tolerance band).
+        let c = Cluster::fat_tree_tpuv4(64);
+        let shape = vec![8usize];
+        for bytes in [1e6, 1e8] {
+            let a = c.allreduce(bytes, &shape);
+            let d = des_allreduce(&c, bytes, &shape);
+            assert!(
+                (a - d).abs() / d < 0.03,
+                "bytes={bytes}: analytical {a} vs DES {d}"
+            );
+            // The closed form is optimistic (no headers): a ≤ d.
+            assert!(a <= d, "closed form should lower-bound the referee");
+        }
+    }
+
+    #[test]
+    fn des_allreduce_hierarchical_within_tolerance() {
+        let c = Cluster::spine_leaf_h100(64, 2.0);
+        for g in [8usize, 32] {
+            let shape = c.compact_shape(g);
+            let a = c.allreduce(1e8, &shape);
+            let d = des_allreduce(&c, 1e8, &shape);
+            assert!(
+                (a - d).abs() / d < 0.10,
+                "g={g}: analytical {a} vs DES {d}"
+            );
+        }
+    }
+
+    #[test]
+    fn figure2_runs_quickly() {
+        // Smoke: the harness completes and writes its CSV.
+        let mut opts = HarnessOpts::quick();
+        opts.results_dir = std::env::temp_dir()
+            .join("nest_fig2")
+            .to_string_lossy()
+            .into_owned();
+        figure2(&opts);
+        assert!(std::path::Path::new(&opts.results_dir)
+            .join("figure2.csv")
+            .exists());
+    }
+}

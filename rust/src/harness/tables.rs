@@ -1,0 +1,443 @@
+//! Table harnesses: Tables 2, 4, 6, 7 and the §5.4 V100 validation.
+
+use super::{run_method, run_methods, HarnessOpts, Method};
+use crate::baselines::mist;
+use crate::graph::models;
+use crate::graph::subgraph::SgConfig;
+use crate::hw::GIB;
+use crate::memory::{MemSpec, ZeroStage};
+use crate::network::Cluster;
+use crate::sim::{simulate, Schedule};
+use crate::solver::exact::{solve_exact, ExactOpts};
+use crate::solver::{solve as nest_solve, SolverOpts};
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+
+/// Table 2: distributed strategies found per method at 512 devices
+/// (fat-tree TPUv4), formatted `{p, d, t, s, (e, c)}`.
+pub fn table2(opts: &HarnessOpts) {
+    println!("== Table 2: strategies at 512 devices (fat-tree TPUv4) ==");
+    let cluster = Cluster::fat_tree_tpuv4(512);
+    let methods = [
+        Method::Manual,
+        Method::Mcmc,
+        Method::AlpaE,
+        Method::Phaze,
+        Method::Nest,
+    ];
+    let mut header = vec!["model"];
+    header.extend(methods.iter().map(|m| m.name()));
+    header.push("recompute");
+    let mut tbl = Table::new(&header);
+    let mut csv = Csv::new(&["model", "method", "strategy", "recompute"]);
+    for model in [
+        "llama2-7b",
+        "llama3-70b",
+        "bertlarge",
+        "gpt3-175b",
+        "mixtral-8x7b",
+    ] {
+        let graph = models::by_name(model, 1).unwrap();
+        let results = run_methods(&graph, &cluster, &methods, opts);
+        let mut row = vec![model.to_string()];
+        let mut nest_rc = String::new();
+        for r in &results {
+            row.push(r.strategy());
+            if r.method == Method::Nest {
+                nest_rc = r
+                    .plan
+                    .as_ref()
+                    .map(|p| {
+                        if p.stages.iter().any(|s| s.mem.recompute) {
+                            "Recomputation".to_string()
+                        } else {
+                            "Stashing".to_string()
+                        }
+                    })
+                    .unwrap_or_default();
+            }
+            csv.row(vec![
+                model.into(),
+                r.method.name().into(),
+                r.strategy(),
+                String::new(),
+            ]);
+        }
+        row.push(nest_rc);
+        tbl.row(row);
+    }
+    println!("{}", tbl.render());
+    let _ = csv.write(format!("{}/table2.csv", opts.results_dir));
+}
+
+/// Table 4: solver runtime, NEST vs Mist (spine-leaf H100). The paper
+/// reports wall-clock minutes on their testbed; shapes — who is faster,
+/// by roughly how much — are the reproduction target.
+pub fn table4(opts: &HarnessOpts, n_devices: usize) {
+    println!("== Table 4: solver runtime comparison (spine-leaf {n_devices}×H100) ==");
+    let cluster = Cluster::spine_leaf_h100(n_devices, 2.0);
+    let mut tbl = Table::new(&["model", "mist", "nest", "reduction"]);
+    let mut csv = Csv::new(&["model", "mist_s", "nest_s", "reduction_pct"]);
+    for model in ["gpt3-35b", "llama3-70b", "llama2-7b", "bertlarge"] {
+        let graph = models::by_name(model, 1).unwrap();
+        let t0 = std::time::Instant::now();
+        let mist_ok = mist::solve(&graph, &cluster).is_some();
+        let mist_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let nest_ok = nest_solve(&graph, &cluster, &opts.solver).is_some();
+        let nest_s = t0.elapsed().as_secs_f64();
+        let reduction = if mist_ok && mist_s > 0.0 {
+            (1.0 - nest_s / mist_s) * 100.0
+        } else {
+            f64::NAN
+        };
+        tbl.row(vec![
+            model.into(),
+            if mist_ok {
+                crate::util::table::fmt_time(mist_s)
+            } else {
+                "✗".into()
+            },
+            if nest_ok {
+                crate::util::table::fmt_time(nest_s)
+            } else {
+                "✗".into()
+            },
+            format!("{reduction:.1}%"),
+        ]);
+        csv.row(vec![
+            model.into(),
+            mist_s.to_string(),
+            nest_s.to_string(),
+            reduction.to_string(),
+        ]);
+    }
+    println!("{}", tbl.render());
+    let _ = csv.write(format!("{}/table4.csv", opts.results_dir));
+}
+
+/// Table 6: per-layer memory estimates. Two validations:
+/// 1. NEST's analytical per-block estimate vs the paper's published
+///    Alpa-compiled-executable measurements (the ≤7% claim).
+/// 2. Exact cross-check against the L2 JAX model: the manifest's true
+///    parameter count vs the Rust graph formula for the same config.
+pub fn table6(opts: &HarnessOpts) {
+    println!("== Table 6: per-layer memory estimation ==");
+    // (model, tp used in the paper's Alpa executables, published GB).
+    let rows = [
+        ("gpt3-175b", 8usize, 10.1),
+        ("llama3-70b", 1, 24.8),
+        ("llama2-7b", 1, 9.8),
+        ("bertlarge", 1, 0.21),
+    ];
+    let mut tbl = Table::new(&["model", "Alpa executables (GB)", "NEST estimate (GB)", "deviation"]);
+    let mut csv = Csv::new(&["model", "published_gb", "estimate_gb", "deviation_pct"]);
+    let mut devs = Vec::new();
+    for (model, tp, published) in rows {
+        let graph = models::by_name(model, 1).unwrap();
+        let block = &graph.layers[1];
+        let sg = SgConfig {
+            tp,
+            sp: tp > 1,
+            ep: 1,
+            cp: 1,
+        };
+        let spec = MemSpec::plain();
+        let bytes = crate::memory::stage_peak_bytes(
+            std::slice::from_ref(block),
+            graph.tokens,
+            &sg,
+            &spec,
+            0,
+        );
+        let gb = bytes / 1e9;
+        let dev = (gb - published).abs() / published * 100.0;
+        devs.push(dev);
+        tbl.row(vec![
+            model.into(),
+            format!("{published}"),
+            format!("{gb:.2}"),
+            format!("{dev:.1}%"),
+        ]);
+        csv.row(vec![
+            model.into(),
+            published.to_string(),
+            gb.to_string(),
+            dev.to_string(),
+        ]);
+    }
+    println!("{}", tbl.render());
+    println!(
+        "mean deviation vs published Alpa executables: {:.1}% (paper: ~7%)",
+        crate::util::stats::mean(&devs)
+    );
+
+    // Exact parameter-count validation against the real L2 model.
+    if let Some(dir) = crate::runtime::artifacts_dir() {
+        if let Ok(man) = crate::runtime::manifest::Manifest::load(dir.join("manifest.json")) {
+            let c = &man.config;
+            let g = models::tiny_transformer(c.n_layers, c.hidden, c.seq, c.mbs);
+            // Rebuild with matching vocab/intermediate for the check.
+            let analytic: f64 = g
+                .layers
+                .iter()
+                .map(|l| match l.kind {
+                    crate::graph::LayerKind::Embedding | crate::graph::LayerKind::Head => {
+                        (c.vocab * c.hidden) as f64
+                    }
+                    _ => {
+                        let h = c.hidden as f64;
+                        4.0 * h * h + 2.0 * h * c.intermediate as f64
+                    }
+                })
+                .sum();
+            let actual = c.param_count as f64;
+            let err = (analytic - actual).abs() / actual * 100.0;
+            println!(
+                "L2 ground truth: manifest params {} vs analytical {:.0} ({err:.2}% — bias/LN terms excluded)",
+                actual, analytic
+            );
+        }
+    }
+    let _ = csv.write(format!("{}/table6.csv", opts.results_dir));
+}
+
+/// Table 7: ZeRO ablation under memory-constrained accelerators
+/// (Llama3-70B at 24 GB, BertLarge at 120 MB). Shows the strategy chosen,
+/// the per-stage ZeRO configuration, and that plain placement (ZeRO
+/// disabled) is infeasible.
+pub fn table7(opts: &HarnessOpts) {
+    println!("== Table 7: ZeRO ablation on resource-constrained accelerators ==");
+    let mut tbl = Table::new(&["model", "HBM", "devices", "strategy", "ZeRO usage", "without ZeRO"]);
+    let mut csv = Csv::new(&["model", "hbm", "strategy", "zero", "feasible_without"]);
+    for (model, cap_bytes, cap_name, devices) in [
+        ("llama3-70b", 24.0 * GIB, "24GB", 1024usize),
+        ("bertlarge", 120e6, "120MB", 1024),
+    ] {
+        let graph = models::by_name(model, 1).unwrap();
+        let mut cluster = Cluster::fat_tree_tpuv4(devices);
+        cluster.accel = cluster.accel.with_capacity(cap_bytes);
+
+        let sol = nest_solve(&graph, &cluster, &opts.solver);
+        let no_zero = nest_solve(
+            &graph,
+            &cluster,
+            &SolverOpts {
+                zero_max_degree: 1,
+                try_recompute: opts.solver.try_recompute,
+                ..opts.solver.clone()
+            },
+        );
+        let (strategy, zero_desc) = match &sol {
+            Some(s) => {
+                let mut zeros: Vec<String> = Vec::new();
+                let mut last: Option<(ZeroStage, usize, usize)> = None;
+                for (k, st) in s.plan.stages.iter().enumerate() {
+                    match &mut last {
+                        Some((z, _, hi)) if *z == st.mem.zero => *hi = k,
+                        _ => {
+                            if let Some((z, lo, hi)) = last.take() {
+                                zeros.push(format!("stages {lo}-{hi}: {}", z.describe()));
+                            }
+                            last = Some((st.mem.zero, k, k));
+                        }
+                    }
+                }
+                if let Some((z, lo, hi)) = last {
+                    zeros.push(format!("stages {lo}-{hi}: {}", z.describe()));
+                }
+                (s.plan.strategy_string(), zeros.join("; "))
+            }
+            None => ("✗".into(), "-".into()),
+        };
+        let without = match &no_zero {
+            Some(s) if s.plan.stages.iter().all(|st| st.mem.zero == ZeroStage::None) => {
+                format!("feasible ({})", s.plan.strategy_string())
+            }
+            Some(s) => format!("needs ZeRO ({})", s.plan.strategy_string()),
+            None => "infeasible".into(),
+        };
+        tbl.row(vec![
+            model.into(),
+            cap_name.into(),
+            sol.as_ref()
+                .map(|s| s.plan.used_devices().to_string())
+                .unwrap_or_default(),
+            strategy.clone(),
+            zero_desc.clone(),
+            without.clone(),
+        ]);
+        csv.row(vec![
+            model.into(),
+            cap_name.into(),
+            strategy,
+            zero_desc,
+            without,
+        ]);
+    }
+    println!("{}", tbl.render());
+    let _ = csv.write(format!("{}/table7.csv", opts.results_dir));
+}
+
+/// §5.4: V100 validation clusters (8 and 16 devices, 2×V100 per node).
+/// Compares the exact NEST solver against Alpa(-O analog) on the scaled
+/// Mixtral, reporting throughput ratio and optimization time (paper:
+/// within 7% at 8 GPUs, 1.8× at 16, 5 min vs 1 h search).
+pub fn v100_validation(opts: &HarnessOpts) {
+    println!("== §5.4: V100 spine-leaf validation (scaled Mixtral-790M) ==");
+    let mut tbl = Table::new(&[
+        "cluster", "method", "strategy", "throughput (samples/s)", "vs alpa", "solve time",
+    ]);
+    let mut csv = Csv::new(&["devices", "method", "strategy", "throughput", "solve_s"]);
+    for n in [8usize, 16] {
+        let graph = models::mixtral_scaled(1);
+        let cluster = Cluster::v100_cluster(n);
+        let alpa = run_method(&graph, &cluster, Method::AlpaE, opts);
+
+        // NEST's exact small-cluster solver (the full Algorithm 1 state
+        // space), replicating pipelines when beneficial.
+        let t0 = std::time::Instant::now();
+        let mut best: Option<crate::solver::Solution> = None;
+        for d in [1usize, 2, 4] {
+            if n % d != 0 {
+                continue;
+            }
+            for rc in [false, true] {
+                let sol = solve_exact(
+                    &graph,
+                    &cluster,
+                    &ExactOpts {
+                        max_stages: 8,
+                        dp_width: d,
+                        recompute: rc,
+                        ..Default::default()
+                    },
+                );
+                if let Some(s) = sol {
+                    if best
+                        .as_ref()
+                        .map(|b| s.plan.batch_time < b.plan.batch_time)
+                        .unwrap_or(true)
+                    {
+                        best = Some(s);
+                    }
+                }
+            }
+        }
+        let nest_time = t0.elapsed().as_secs_f64();
+        let alpa_tput = alpa.throughput();
+        for (name, strategy, tput, solve_s) in [
+            (
+                "alpa-o",
+                alpa.strategy(),
+                alpa_tput,
+                alpa.solve_seconds,
+            ),
+            (
+                "nest",
+                best.as_ref()
+                    .map(|s| s.plan.strategy_string())
+                    .unwrap_or_else(|| "✗".into()),
+                best.as_ref()
+                    .map(|s| {
+                        simulate(&graph, &cluster, &s.plan, Schedule::OneFOneB).throughput
+                    })
+                    .unwrap_or(0.0),
+                nest_time,
+            ),
+        ] {
+            let ratio = if alpa_tput > 0.0 { tput / alpa_tput } else { 0.0 };
+            tbl.row(vec![
+                format!("{n}×V100"),
+                name.into(),
+                strategy.clone(),
+                format!("{tput:.2}"),
+                format!("{ratio:.2}x"),
+                crate::util::table::fmt_time(solve_s),
+            ]);
+            csv.row(vec![
+                n.to_string(),
+                name.into(),
+                strategy,
+                tput.to_string(),
+                solve_s.to_string(),
+            ]);
+        }
+    }
+    println!("{}", tbl.render());
+    let _ = csv.write(format!("{}/v100.csv", opts.results_dir));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_opts(tag: &str) -> HarnessOpts {
+        let mut o = HarnessOpts::quick();
+        o.results_dir = std::env::temp_dir()
+            .join(format!("nest_{tag}"))
+            .to_string_lossy()
+            .into_owned();
+        o
+    }
+
+    #[test]
+    fn table6_runs() {
+        table6(&tmp_opts("t6"));
+    }
+
+    #[test]
+    fn table7_zero_unlocks_constrained_training() {
+        // The core Table-7 claim as an assertion: with 120 MB devices,
+        // BertLarge training is only feasible with ZeRO enabled.
+        let graph = models::bert_large(1);
+        let mut cluster = Cluster::fat_tree_tpuv4(1024);
+        cluster.accel = cluster.accel.with_capacity(120e6);
+        let with = nest_solve(&graph, &cluster, &SolverOpts::default());
+        assert!(with.is_some(), "ZeRO should make 120MB feasible");
+        let plan = &with.unwrap().plan;
+        assert!(
+            plan.stages.iter().any(|s| s.mem.zero != ZeroStage::None),
+            "expected ZeRO stages, got {}",
+            plan.describe()
+        );
+    }
+
+    #[test]
+    fn v100_exact_competitive_with_alpa() {
+        // §5.4: NEST within ~7% of Alpa at 8 devices, ahead at 16.
+        let graph = models::mixtral_scaled(1);
+        let opts = tmp_opts("v100");
+        for (n, min_ratio) in [(8usize, 0.90), (16, 1.0)] {
+            let cluster = Cluster::v100_cluster(n);
+            let alpa = run_method(&graph, &cluster, Method::AlpaE, &opts);
+            let mut best: Option<f64> = None;
+            for d in [1usize, 2, 4] {
+                for rc in [false, true] {
+                    if let Some(s) = solve_exact(
+                        &graph,
+                        &cluster,
+                        &ExactOpts {
+                            max_stages: 8,
+                            dp_width: d,
+                            recompute: rc,
+                            ..Default::default()
+                        },
+                    ) {
+                        let t = simulate(&graph, &cluster, &s.plan, Schedule::OneFOneB)
+                            .throughput;
+                        best = Some(best.map_or(t, |b: f64| b.max(t)));
+                    }
+                }
+            }
+            let nest = best.expect("exact solver found nothing");
+            let alpa_t = alpa.throughput();
+            if alpa_t > 0.0 {
+                assert!(
+                    nest >= alpa_t * min_ratio,
+                    "{n} devices: nest {nest} vs alpa {alpa_t}"
+                );
+            }
+        }
+    }
+}

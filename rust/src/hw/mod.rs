@@ -1,0 +1,155 @@
+//! Accelerator compute models.
+//!
+//! The paper derives operator latencies from hardware-validated estimators
+//! (Sunstone/Tandem for TPUv4-like tensor/vector cores, the PyTorch
+//! profiler for H100/V100, §5.1). We reproduce that with a two-term
+//! roofline per accelerator: matmul-class FLOPs run at
+//! `matmul_peak × matmul_eff` and everything else is bounded by HBM
+//! bandwidth (vector ops on transformer layers are memory-bound). The
+//! `cpu_sim` preset is calibrated at runtime by `profiler::calibrate`
+//! against real PJRT executions of the probe HLOs (see DESIGN.md
+//! §Hardware-Adaptation).
+
+/// An accelerator model: peak rates plus achieved-efficiency factors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Accelerator {
+    pub name: String,
+    /// Peak dense-matmul throughput (FLOP/s) at the training dtype (bf16).
+    pub matmul_peak: f64,
+    /// Achieved fraction of `matmul_peak` for large GEMMs (model FLOPs
+    /// utilization at the operator level).
+    pub matmul_eff: f64,
+    /// Peak vector-unit throughput (FLOP/s); elementwise/softmax/norms.
+    pub vector_peak: f64,
+    /// HBM bandwidth (bytes/s).
+    pub hbm_bw: f64,
+    /// HBM capacity (bytes).
+    pub hbm_capacity: f64,
+}
+
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+pub const GB: f64 = 1e9;
+pub const TFLOPS: f64 = 1e12;
+
+impl Accelerator {
+    /// TPUv4-like accelerator (§5.2): 275 TFLOP/s bf16 MXU, 1.2 TB/s HBM.
+    /// The paper's Table 7 describes these with 64 GB HBM.
+    pub fn tpu_v4() -> Self {
+        Accelerator {
+            name: "tpuv4".into(),
+            matmul_peak: 275.0 * TFLOPS,
+            matmul_eff: 0.55,
+            vector_peak: 4.0 * TFLOPS,
+            hbm_bw: 1200.0 * GB,
+            hbm_capacity: 64.0 * GIB,
+        }
+    }
+
+    /// NVIDIA H100-SXM 80GB (§5.3): 989 TFLOP/s bf16, 3.35 TB/s HBM3.
+    pub fn h100() -> Self {
+        Accelerator {
+            name: "h100".into(),
+            matmul_peak: 989.0 * TFLOPS,
+            matmul_eff: 0.45,
+            vector_peak: 67.0 * TFLOPS,
+            hbm_bw: 3350.0 * GB,
+            hbm_capacity: 80.0 * GIB,
+        }
+    }
+
+    /// NVIDIA V100-SXM2 32GB (§5.4): 125 TFLOP/s fp16 tensor cores.
+    pub fn v100() -> Self {
+        Accelerator {
+            name: "v100".into(),
+            matmul_peak: 125.0 * TFLOPS,
+            matmul_eff: 0.40,
+            vector_peak: 15.7 * TFLOPS,
+            hbm_bw: 900.0 * GB,
+            hbm_capacity: 32.0 * GIB,
+        }
+    }
+
+    /// CPU-thread "device" used by the real pipeline trainer. Defaults are
+    /// rough; `profiler::calibrate` replaces them with measured values.
+    pub fn cpu_sim() -> Self {
+        Accelerator {
+            name: "cpu-sim".into(),
+            matmul_peak: 50e9,
+            matmul_eff: 1.0,
+            vector_peak: 10e9,
+            hbm_bw: 20.0 * GB,
+            hbm_capacity: 4.0 * GIB,
+        }
+    }
+
+    /// Copy with a reduced HBM capacity (Table 7 memory-constrained
+    /// ablations: 24 GB Llama3 run, 120 MB BertLarge run).
+    pub fn with_capacity(&self, bytes: f64) -> Self {
+        let mut a = self.clone();
+        a.hbm_capacity = bytes;
+        a.name = format!("{}-{}", a.name, crate::util::table::fmt_bytes(bytes));
+        a
+    }
+
+    /// Time to execute `flops` of dense matmul work that also moves
+    /// `bytes` through HBM: roofline max of the two terms.
+    pub fn matmul_time(&self, flops: f64, bytes: f64) -> f64 {
+        debug_assert!(flops >= 0.0 && bytes >= 0.0);
+        (flops / (self.matmul_peak * self.matmul_eff)).max(bytes / self.hbm_bw)
+    }
+
+    /// Time for vector-class work (elementwise, softmax, norms): bounded
+    /// by the vector unit or HBM, whichever is slower.
+    pub fn vector_time(&self, flops: f64, bytes: f64) -> f64 {
+        (flops / self.vector_peak).max(bytes / self.hbm_bw)
+    }
+
+    /// Effective achieved matmul FLOP/s.
+    pub fn achieved_matmul(&self) -> f64 {
+        self.matmul_peak * self.matmul_eff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_ordered_by_generation() {
+        let (v, t, h) = (
+            Accelerator::v100(),
+            Accelerator::tpu_v4(),
+            Accelerator::h100(),
+        );
+        assert!(v.achieved_matmul() < t.achieved_matmul());
+        assert!(t.achieved_matmul() < h.achieved_matmul());
+        assert!(h.hbm_bw > t.hbm_bw);
+    }
+
+    #[test]
+    fn roofline_picks_slower_term() {
+        let a = Accelerator::h100();
+        // Compute-bound: 1 PFLOP, tiny bytes.
+        let t1 = a.matmul_time(1e15, 1.0);
+        assert!((t1 - 1e15 / a.achieved_matmul()).abs() / t1 < 1e-12);
+        // Memory-bound: tiny flops, 1 TB.
+        let t2 = a.matmul_time(1.0, 1e12);
+        assert!((t2 - 1e12 / a.hbm_bw).abs() / t2 < 1e-12);
+    }
+
+    #[test]
+    fn with_capacity_changes_only_capacity() {
+        let a = Accelerator::tpu_v4();
+        let b = a.with_capacity(24.0 * GIB);
+        assert_eq!(b.hbm_capacity, 24.0 * GIB);
+        assert_eq!(b.matmul_peak, a.matmul_peak);
+        assert!(b.name.contains("tpuv4"));
+    }
+
+    #[test]
+    fn times_monotone_in_work() {
+        let a = Accelerator::v100();
+        assert!(a.matmul_time(2e12, 1e9) > a.matmul_time(1e12, 1e9));
+        assert!(a.vector_time(1e9, 2e9) > a.vector_time(1e9, 1e9));
+    }
+}

@@ -1,0 +1,32 @@
+//! NEST: network-, compute-, and memory-aware device placement for
+//! distributed deep learning (MLSys 2026) — a from-scratch reproduction.
+//!
+//! The crate is organized bottom-up (see DESIGN.md):
+//!
+//! * substrates: [`hw`] accelerator models, [`graph`] operator graphs +
+//!   model zoo + SUB-GRAPH parallelism, [`network`] topologies with the
+//!   level-wise abstraction and collective cost models, [`memory`] the
+//!   Eq. 1 peak-memory model with ZeRO.
+//! * [`cost`]: the unified `load(·)` term consumed by the solvers.
+//! * [`solver`]: NEST's network-aware dynamic program (Algorithm 1) and
+//!   plan reconstruction/device assignment.
+//! * [`baselines`]: Manual, MCMC (TopoOpt-style), Phaze, Alpa-E, Mist.
+//! * [`sim`]: discrete-event pipeline simulator (the "testbed").
+//! * [`runtime`]: PJRT engine loading AOT HLO artifacts.
+//! * [`profiler`]: calibrates the compute model against real executions.
+//! * [`trainer`]: real pipeline-parallel training over thread-devices.
+//! * [`harness`]: regenerates every paper table and figure.
+
+pub mod baselines;
+pub mod cost;
+pub mod profiler;
+pub mod runtime;
+pub mod trainer;
+pub mod sim;
+pub mod solver;
+pub mod graph;
+pub mod harness;
+pub mod hw;
+pub mod memory;
+pub mod network;
+pub mod util;

@@ -1,0 +1,238 @@
+//! `nest` — CLI for the NEST reproduction.
+//!
+//! Subcommands (see README):
+//!   solve      solve placement for one (model, cluster) and print the plan
+//!   simulate   run the DES on the solved plan and report throughput
+//!   train      real pipeline-parallel training from AOT artifacts
+//!   profile    calibrate the compute model against PJRT probe runs
+//!   figure2|5|6|7|10|11, table2|4|6|7, v100   — paper reproductions
+//!   all        every figure + table (the full evaluation)
+
+use nest::graph::models;
+use nest::harness::{figures, tables, HarnessOpts};
+use nest::network::Cluster;
+use nest::sim::{simulate, Schedule};
+use nest::solver::{solve, SolverOpts};
+use nest::trainer::{train, TrainOpts};
+use nest::util::cli::Args;
+
+fn cluster_by_name(name: &str, devices: usize, oversub: f64) -> Result<Cluster, String> {
+    match name {
+        "fat-tree" | "tpuv4" => Ok(Cluster::fat_tree_tpuv4(devices)),
+        "spine-leaf" | "h100" => Ok(Cluster::spine_leaf_h100(devices, oversub)),
+        "v100" => Ok(Cluster::v100_cluster(devices)),
+        "torus2d" => {
+            let side = (devices as f64).sqrt() as usize;
+            Ok(Cluster::torus2d(side, devices / side, 50.0 * 1e9, 1e-6))
+        }
+        path if path.ends_with(".json") => {
+            let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+            let v = nest::util::json::parse(&text)?;
+            Cluster::from_json(&v)
+        }
+        other => Err(format!(
+            "unknown cluster '{other}' (fat-tree, spine-leaf, v100, torus2d, or a .json file)"
+        )),
+    }
+}
+
+fn main() {
+    let mut args = Args::from_env();
+    let cmd = args
+        .positional()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "help".into());
+
+    // Common options.
+    let model = args.get("model", "llama2-7b");
+    let devices = args.get_usize("devices", 64);
+    let mbs = args.get_usize("mbs", 1);
+    let cluster_name = args.get("cluster", "fat-tree");
+    let oversub = args.get_f64("oversub", 2.0);
+    let quick = args.has_flag("quick");
+    let results_dir = args.get("results", "results");
+
+    let mut hopts = if quick {
+        HarnessOpts::quick()
+    } else {
+        HarnessOpts::default()
+    };
+    hopts.results_dir = results_dir;
+
+    let run = |args: &mut Args| -> Result<(), String> {
+        match cmd.as_str() {
+            "solve" | "simulate" => {
+                let graph = models::by_name(&model, mbs)
+                    .ok_or_else(|| format!("unknown model '{model}'"))?;
+                let cluster = cluster_by_name(&cluster_name, devices, oversub)?;
+                println!("{}", cluster.describe());
+                let sol = solve(&graph, &cluster, &SolverOpts::default())
+                    .ok_or("no feasible placement")?;
+                if let Some(out) = args.get_opt("out") {
+                    std::fs::write(
+                        &out,
+                        nest::util::json::to_pretty(&sol.plan.to_json()),
+                    )
+                    .map_err(|e| e.to_string())?;
+                    println!("plan written to {out}");
+                }
+                println!(
+                    "solved in {} ({} DP states, {} configs)",
+                    nest::util::table::fmt_time(sol.solve_seconds),
+                    sol.dp_states,
+                    sol.configs_tried
+                );
+                println!("{}", sol.plan.describe());
+                if cmd == "simulate" {
+                    let rep = simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB);
+                    println!(
+                        "DES: batch {} | {:.1} samples/s | comm {:.1}% | bubble {:.1}%",
+                        nest::util::table::fmt_time(rep.batch_time),
+                        rep.throughput,
+                        rep.comm_fraction * 100.0,
+                        rep.bubble_fraction * 100.0
+                    );
+                }
+                Ok(())
+            }
+            "train" => {
+                let dir = nest::runtime::artifacts_dir()
+                    .ok_or("artifacts/ missing — run `make artifacts`")?;
+                let opts = TrainOpts {
+                    steps: args.get_usize("steps", 20),
+                    microbatches: args.get_usize("microbatches", 8),
+                    dp_width: args.get_usize("dp", 1),
+                    link_delay: args.get_f64("link-delay", 0.0),
+                    seed: args.get_usize("seed", 42) as u64,
+                    log_every: args.get_usize("log-every", 1),
+                };
+                let rep = train(&dir, &opts).map_err(|e| format!("{e:#}"))?;
+                println!(
+                    "trained {} steps | {:.0} tokens/s | loss {:.4} → {:.4}",
+                    rep.losses.len(),
+                    rep.tokens_per_s,
+                    rep.losses.first().unwrap_or(&0.0),
+                    rep.losses.last().unwrap_or(&0.0)
+                );
+                println!("stage busy fractions: {:?}", rep.stage_busy);
+                Ok(())
+            }
+            "profile" => {
+                let dir = nest::runtime::artifacts_dir()
+                    .ok_or("artifacts/ missing — run `make artifacts`")?;
+                let cal = nest::profiler::calibrate(&dir, args.get_usize("reps", 10))
+                    .map_err(|e| format!("{e:#}"))?;
+                for p in &cal.probes {
+                    println!(
+                        "probe h={:4}: {} median, {:.2} GFLOP/s achieved",
+                        p.hidden,
+                        nest::util::table::fmt_time(p.median_seconds),
+                        p.achieved_flops_per_s / 1e9
+                    );
+                }
+                println!(
+                    "calibrated cpu-sim matmul rate: {:.2} GFLOP/s",
+                    cal.accel.matmul_peak / 1e9
+                );
+                Ok(())
+            }
+            "figure2" => {
+                figures::figure2(&hopts);
+                Ok(())
+            }
+            "figure5" => {
+                let sizes: Vec<usize> = if quick {
+                    vec![64, 256]
+                } else {
+                    vec![64, 128, 256, 512, 1024]
+                };
+                figures::figure5(&hopts, &sizes);
+                Ok(())
+            }
+            "figure6" => {
+                figures::microbatch_sweep(&hopts, 256, "figure6");
+                Ok(())
+            }
+            "figure7" => {
+                figures::figure7(&hopts, if quick { 256 } else { 1024 });
+                Ok(())
+            }
+            "figure10" => {
+                figures::figure10(&hopts);
+                Ok(())
+            }
+            "figure11" => {
+                figures::microbatch_sweep(&hopts, 512, "figure11");
+                Ok(())
+            }
+            "table2" => {
+                tables::table2(&hopts);
+                Ok(())
+            }
+            "table4" => {
+                tables::table4(&hopts, if quick { 256 } else { 1024 });
+                Ok(())
+            }
+            "table6" => {
+                tables::table6(&hopts);
+                Ok(())
+            }
+            "table7" => {
+                tables::table7(&hopts);
+                Ok(())
+            }
+            "v100" => {
+                tables::v100_validation(&hopts);
+                Ok(())
+            }
+            "torus" => {
+                figures::torus(&hopts, if quick { 64 } else { 256 });
+                Ok(())
+            }
+            "all" => {
+                figures::figure2(&hopts);
+                let sizes: Vec<usize> = if quick {
+                    vec![64, 256]
+                } else {
+                    vec![64, 128, 256, 512, 1024]
+                };
+                figures::figure5(&hopts, &sizes);
+                figures::microbatch_sweep(&hopts, 256, "figure6");
+                figures::figure7(&hopts, if quick { 256 } else { 1024 });
+                figures::figure10(&hopts);
+                figures::microbatch_sweep(&hopts, 512, "figure11");
+                tables::table2(&hopts);
+                tables::table4(&hopts, if quick { 256 } else { 1024 });
+                tables::table6(&hopts);
+                tables::table7(&hopts);
+                tables::v100_validation(&hopts);
+                figures::torus(&hopts, if quick { 64 } else { 256 });
+                Ok(())
+            }
+            _ => {
+                println!(
+                    "nest — NEST device-placement reproduction (MLSys 2026)\n\n\
+                     usage: nest <command> [options]\n\n\
+                     commands:\n\
+                     \x20 solve      --model <name> --cluster <fat-tree|spine-leaf|v100|torus2d|file.json> --devices N [--mbs N]\n\
+                     \x20 simulate   same as solve, plus a DES evaluation of the plan\n\
+                     \x20 train      --steps N --microbatches N --dp N   (needs `make artifacts`)\n\
+                     \x20 profile    --reps N\n\
+                     \x20 figure2|figure5|figure6|figure7|figure10|figure11\n\
+                     \x20 table2|table4|table6|table7 | v100 | torus\n\
+                     \x20 all        run the complete evaluation\n\n\
+                     global: --quick (smaller sweeps), --results <dir>\n\n\
+                     models: llama2-7b llama3-70b bertlarge gpt3-175b gpt3-35b mixtral-8x7b mixtral-790m"
+                );
+                Ok(())
+            }
+        }
+    };
+
+    let result = run(&mut args).and_then(|_| args.finish());
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,298 @@
+//! Memory modeling (§3.3, Eq. 1) and ZeRO partitioning.
+//!
+//! Peak memory of a pipeline stage `S` at position `s` from the pipeline
+//! end during 1F1B steady state:
+//!
+//! ```text
+//! Mem(S, s) = Σ_{Lᵢ∈S} (2·weights + opt_states + activations)
+//!             + (s − 1) · stashed_data
+//! ```
+//!
+//! `2·weights` covers bf16 weights + bf16 gradients; `opt_states` is the
+//! fp32 Adam triple (master copy, momentum, variance = 12 bytes/param).
+//! `activations` is the working set of the microbatch in flight and
+//! `stashed_data` the activations held for the additional in-flight
+//! microbatches (s−1 of them under 1F1B; `B/d` under GPipe — callers pass
+//! the stash count). ZeRO stages shard these terms across a degree-`z`
+//! group; activation recomputation trades the stash for recomputed
+//! forward FLOPs. Both are *native* to the solver: memory-infeasible DP
+//! states are repaired by escalating ZeRO / enabling recomputation, not
+//! rejected post hoc (Table 1).
+
+use crate::graph::subgraph::SgConfig;
+use crate::graph::Layer;
+
+/// Bytes per parameter for bf16 weights.
+pub const WEIGHT_BYTES: f64 = 2.0;
+/// Bytes per parameter for bf16 gradients.
+pub const GRAD_BYTES: f64 = 2.0;
+/// Bytes per parameter for fp32 Adam state (master + m + v).
+pub const OPT_BYTES: f64 = 12.0;
+
+/// ZeRO sharding stage and degree (the degree is the size of the
+/// data-parallel sub-group the states are sharded over, Table 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ZeroStage {
+    None,
+    /// Optimizer states sharded.
+    Z1 { degree: usize },
+    /// + gradients sharded.
+    Z2 { degree: usize },
+    /// + parameters sharded (adds per-microbatch all-gathers).
+    Z3 { degree: usize },
+}
+
+impl ZeroStage {
+    pub fn degree(&self) -> usize {
+        match *self {
+            ZeroStage::None => 1,
+            ZeroStage::Z1 { degree } | ZeroStage::Z2 { degree } | ZeroStage::Z3 { degree } => {
+                degree
+            }
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match *self {
+            ZeroStage::None => "None".into(),
+            ZeroStage::Z1 { degree } => format!("ZeRO-1 (degree {degree})"),
+            ZeroStage::Z2 { degree } => format!("ZeRO-2 (degree {degree})"),
+            ZeroStage::Z3 { degree } => format!("ZeRO-3 (degree {degree})"),
+        }
+    }
+}
+
+/// Memory-relevant execution choices for a stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemSpec {
+    pub zero: ZeroStage,
+    /// Activation recomputation: stash only stage-boundary inputs and
+    /// re-materialize intermediates in backward (§3.3 strategy 2).
+    pub recompute: bool,
+}
+
+impl MemSpec {
+    pub fn plain() -> Self {
+        MemSpec {
+            zero: ZeroStage::None,
+            recompute: false,
+        }
+    }
+}
+
+/// Static (batch-independent) bytes for one layer under `sg` and `zero`:
+/// weights + gradients + optimizer states, per device.
+pub fn layer_static_bytes(layer: &Layer, sg: &SgConfig, zero: ZeroStage) -> f64 {
+    let p = layer.param_count_sharded(sg);
+    let z = zero.degree() as f64;
+    match zero {
+        ZeroStage::None => p * (WEIGHT_BYTES + GRAD_BYTES + OPT_BYTES),
+        ZeroStage::Z1 { .. } => p * (WEIGHT_BYTES + GRAD_BYTES + OPT_BYTES / z),
+        ZeroStage::Z2 { .. } => p * (WEIGHT_BYTES + (GRAD_BYTES + OPT_BYTES) / z),
+        ZeroStage::Z3 { .. } => p * (WEIGHT_BYTES + GRAD_BYTES + OPT_BYTES) / z,
+    }
+}
+
+/// Peak bytes of a stage holding `layers`, with `stash_microbatches`
+/// additional in-flight microbatches (Eq. 1's `(s−1)` term under 1F1B).
+pub fn stage_peak_bytes(
+    layers: &[Layer],
+    tokens: f64,
+    sg: &SgConfig,
+    spec: &MemSpec,
+    stash_microbatches: usize,
+) -> f64 {
+    let mut static_bytes = 0.0;
+    let mut act_bytes = 0.0;
+    for l in layers {
+        static_bytes += layer_static_bytes(l, sg, spec.zero);
+        act_bytes += l.act_stash_bytes(tokens, sg, spec.recompute);
+    }
+    // Working activations for the current microbatch + stash for the
+    // others. With recomputation the *working* set still materializes one
+    // layer's full activations transiently; we charge the max of one
+    // layer's full footprint and the reduced stash.
+    let working = if spec.recompute {
+        layers
+            .iter()
+            .map(|l| l.act_stash_bytes(tokens, sg, false))
+            .fold(0.0, f64::max)
+    } else {
+        0.0
+    };
+    static_bytes + act_bytes * (1.0 + stash_microbatches as f64) + working
+}
+
+/// Pick the cheapest memory spec that fits `capacity` bytes, escalating
+/// exactly as the solver does (§4 "Memory-Optimization Co-design"):
+/// plain → recompute → ZeRO-1 → ZeRO-2 → ZeRO-3, each ZeRO stage trying
+/// power-of-two degrees up to `max_degree`. Returns `None` if even
+/// ZeRO-3 at `max_degree` with recomputation does not fit.
+///
+/// `prefer_recompute` pins the recomputation choice when the caller (the
+/// DP) wants to cost both branches explicitly.
+pub fn choose_spec(
+    layers: &[Layer],
+    tokens: f64,
+    sg: &SgConfig,
+    stash_microbatches: usize,
+    capacity: f64,
+    max_degree: usize,
+    prefer_recompute: Option<bool>,
+) -> Option<MemSpec> {
+    let recompute_options: &[bool] = match prefer_recompute {
+        Some(true) => &[true],
+        Some(false) => &[false],
+        None => &[false, true],
+    };
+    for &rc in recompute_options {
+        let mut candidates: Vec<ZeroStage> = vec![ZeroStage::None];
+        let mut z = 2;
+        while z <= max_degree {
+            candidates.push(ZeroStage::Z1 { degree: z });
+            z *= 2;
+        }
+        let mut z = 2;
+        while z <= max_degree {
+            candidates.push(ZeroStage::Z2 { degree: z });
+            z *= 2;
+        }
+        let mut z = 2;
+        while z <= max_degree {
+            candidates.push(ZeroStage::Z3 { degree: z });
+            z *= 2;
+        }
+        for zero in candidates {
+            let spec = MemSpec { zero, recompute: rc };
+            if stage_peak_bytes(layers, tokens, sg, &spec, stash_microbatches) <= capacity {
+                return Some(spec);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::graph::subgraph::SgConfig;
+    use crate::hw::GIB;
+    use crate::util::prop;
+
+    #[test]
+    fn static_bytes_16x_params() {
+        let g = models::gpt3_175b(1);
+        let l = &g.layers[1];
+        let sg = SgConfig::serial();
+        let b = layer_static_bytes(l, &sg, ZeroStage::None);
+        assert!((b / l.param_count() - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_stages_strictly_shrink() {
+        let g = models::llama3_70b(1);
+        let l = &g.layers[1];
+        let sg = SgConfig::serial();
+        let none = layer_static_bytes(l, &sg, ZeroStage::None);
+        let z1 = layer_static_bytes(l, &sg, ZeroStage::Z1 { degree: 8 });
+        let z2 = layer_static_bytes(l, &sg, ZeroStage::Z2 { degree: 8 });
+        let z3 = layer_static_bytes(l, &sg, ZeroStage::Z3 { degree: 8 });
+        assert!(none > z1 && z1 > z2 && z2 > z3);
+        // ZeRO-3 at degree 8 shards everything: 16P/8 = 2P.
+        assert!((z3 / l.param_count() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stash_term_linear_in_position() {
+        let g = models::gpt3_175b(1);
+        let layers = &g.layers[1..7];
+        let sg = SgConfig::serial();
+        let spec = MemSpec::plain();
+        let m1 = stage_peak_bytes(layers, g.tokens, &sg, &spec, 0);
+        let m2 = stage_peak_bytes(layers, g.tokens, &sg, &spec, 1);
+        let m3 = stage_peak_bytes(layers, g.tokens, &sg, &spec, 2);
+        let d1 = m2 - m1;
+        let d2 = m3 - m2;
+        assert!((d1 - d2).abs() / d1 < 1e-9, "linear in stash count");
+        assert!(d1 > 0.0);
+    }
+
+    #[test]
+    fn recompute_reduces_peak() {
+        let g = models::llama2_7b(1);
+        let layers = &g.layers[1..9];
+        let sg = SgConfig::serial();
+        let plain = stage_peak_bytes(layers, g.tokens, &sg, &MemSpec::plain(), 7);
+        let rc = stage_peak_bytes(
+            layers,
+            g.tokens,
+            &sg,
+            &MemSpec {
+                zero: ZeroStage::None,
+                recompute: true,
+            },
+            7,
+        );
+        assert!(rc < plain, "recompute {rc} < plain {plain}");
+    }
+
+    #[test]
+    fn choose_spec_escalates() {
+        let g = models::llama3_70b(1);
+        let layers = &g.layers[1..2]; // one 855M-param block
+        let sg = SgConfig::serial();
+        // Generous capacity → no ZeRO needed.
+        let s = choose_spec(layers, g.tokens, &sg, 0, 64.0 * GIB, 8, Some(false)).unwrap();
+        assert_eq!(s.zero, ZeroStage::None);
+        // Table-7 regime: 24 GB forces ZeRO on a single-layer stage with
+        // deep stash.
+        let s = choose_spec(layers, g.tokens, &sg, 40, 24.0 * GIB, 8, None).unwrap();
+        assert!(s.zero != ZeroStage::None || s.recompute);
+        // Impossible capacity → None.
+        assert!(choose_spec(layers, g.tokens, &sg, 0, 1e6, 8, None).is_none());
+    }
+
+    #[test]
+    fn table7_bertlarge_needs_zero_at_120mb() {
+        // BertLarge layer on a 120 MB device (Table 7): infeasible without
+        // ZeRO, feasible with it.
+        let g = models::bert_large(1);
+        let layers = &g.layers[2..3];
+        let sg = SgConfig::serial();
+        let cap = 120e6;
+        let plain = stage_peak_bytes(layers, g.tokens, &sg, &MemSpec::plain(), 0);
+        assert!(plain > cap, "plain {plain} should exceed 120MB");
+        let spec = choose_spec(layers, g.tokens, &sg, 0, cap, 8, None);
+        assert!(spec.is_some(), "ZeRO should unlock 120MB placement");
+        assert!(spec.unwrap().zero != ZeroStage::None);
+    }
+
+    #[test]
+    fn prop_memory_monotone() {
+        let g = models::gpt3_35b(1);
+        prop::forall(100, 0xBEEF, |rng| {
+            let sg = SgConfig::serial();
+            let a = 1 + rng.gen_range(g.n_layers() - 2);
+            let b = (a + 1 + rng.gen_range(g.n_layers() - a - 1)).min(g.n_layers());
+            let spec = MemSpec::plain();
+            // More layers → more memory.
+            let small = stage_peak_bytes(&g.layers[a..b], g.tokens, &sg, &spec, 2);
+            let big = stage_peak_bytes(&g.layers[a.saturating_sub(1)..b], g.tokens, &sg, &spec, 2);
+            assert!(big >= small);
+            // Bigger ZeRO degree → less memory.
+            let z2 = MemSpec {
+                zero: ZeroStage::Z2 { degree: 2 },
+                recompute: false,
+            };
+            let z8 = MemSpec {
+                zero: ZeroStage::Z2 { degree: 8 },
+                recompute: false,
+            };
+            assert!(
+                stage_peak_bytes(&g.layers[a..b], g.tokens, &sg, &z8, 2)
+                    <= stage_peak_bytes(&g.layers[a..b], g.tokens, &sg, &z2, 2)
+            );
+        });
+    }
+}

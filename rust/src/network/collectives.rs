@@ -1,0 +1,272 @@
+//! Analytical collective-communication cost models.
+//!
+//! The paper estimates collective latencies with AstraSim's analytical
+//! backend (validated within 2% of H100 measurements, Fig. 10). We
+//! implement the same α–β hierarchical decomposition: a collective over a
+//! group shaped `[g0, g1, ...]` across tiers executes phase-wise — ring
+//! reduce-scatter ascending the hierarchy, then ring all-gather
+//! descending — with each tier moving its shard at that tier's effective
+//! bandwidth. This is the standard hierarchical ring schedule used by
+//! NCCL trees/rings and AstraSim's `Ring_AllReduce` per dimension.
+//!
+//! All functions take the *full* payload `bytes` (the tensor size being
+//! reduced/gathered) and return seconds.
+
+use super::Cluster;
+use crate::graph::subgraph::{CollectiveCall, CollectiveKind};
+
+impl Cluster {
+    /// Ring all-reduce of `bytes` over a group shaped `shape` (participants
+    /// per tier, innermost first; product = group size).
+    ///
+    /// Per tier `i` with `gᵢ` participants and per-participant shard
+    /// `Vᵢ = bytes / Π_{j<i} gⱼ`, a ring all-reduce costs
+    /// `2·(gᵢ−1)/gᵢ · Vᵢ / bwᵢ + 2·(gᵢ−1)·αᵢ`.
+    pub fn allreduce(&self, bytes: f64, shape: &[usize]) -> f64 {
+        let mut t = 0.0;
+        let mut shard = bytes;
+        for (i, &gi) in shape.iter().enumerate() {
+            if gi <= 1 {
+                continue;
+            }
+            let g = gi as f64;
+            let tier = self.tier_for(i, shape);
+            t += 2.0 * (g - 1.0) / g * shard / tier_bw(self, tier)
+                + 2.0 * (g - 1.0) * self.tiers[tier].latency;
+            shard /= g;
+        }
+        t
+    }
+
+    /// Ring all-gather: each participant starts with `bytes / g` and ends
+    /// with `bytes`. Cost per tier: `(gᵢ−1)/gᵢ · Bᵢ / bwᵢ` on the gathered
+    /// volume at that tier.
+    pub fn allgather(&self, bytes: f64, shape: &[usize]) -> f64 {
+        let mut t = 0.0;
+        let mut vol = bytes;
+        for (i, &gi) in shape.iter().enumerate() {
+            if gi <= 1 {
+                continue;
+            }
+            let g = gi as f64;
+            let tier = self.tier_for(i, shape);
+            t += (g - 1.0) / g * vol / tier_bw(self, tier)
+                + (g - 1.0) * self.tiers[tier].latency;
+            vol /= g;
+        }
+        t
+    }
+
+    /// Ring reduce-scatter: mirror of all-gather.
+    pub fn reduce_scatter(&self, bytes: f64, shape: &[usize]) -> f64 {
+        self.allgather(bytes, shape)
+    }
+
+    /// All-to-all of `bytes` per participant (each sends `bytes/g` to every
+    /// peer). The bottleneck is the outermost tier each message crosses:
+    /// traffic crossing tier `i` per device is `bytes · fᵢ` where `fᵢ` is
+    /// the fraction of peers outside the tier-`i` subtree. Phases overlap,
+    /// so the cost is the max per-tier term plus latency of the deepest
+    /// tier (matches AstraSim's analytical All2All).
+    pub fn alltoall(&self, bytes: f64, shape: &[usize]) -> f64 {
+        let g_total: usize = shape.iter().product();
+        if g_total <= 1 {
+            return 0.0;
+        }
+        let mut worst: f64 = 0.0;
+        let mut inner: usize = 1;
+        let mut deepest_tier = 0;
+        for (i, &gi) in shape.iter().enumerate() {
+            if gi <= 1 {
+                continue;
+            }
+            let tier = self.tier_for(i, shape);
+            deepest_tier = deepest_tier.max(tier);
+            let below = inner * gi;
+            // Fraction of peers outside the subtree of size `inner` but
+            // inside `below`, crossing tier `tier`:
+            let f = (below - inner) as f64 / g_total as f64;
+            worst = worst.max(bytes * f / tier_bw(self, tier));
+            inner = below;
+        }
+        worst + self.tiers[deepest_tier].latency * (shape.len() as f64)
+    }
+
+    /// Point-to-point send/recv between two compact sub-groups at `level`.
+    pub fn sendrecv(&self, bytes: f64, level: usize) -> f64 {
+        self.p2p_time(level.min(self.n_levels() - 1), bytes)
+    }
+
+    /// Cost of one [`CollectiveCall`] issued by a stage whose `group`
+    /// participants are placed compactly (SUB-GRAPH collectives run within
+    /// a stage's device group, §3.1).
+    pub fn collective_time(&self, call: &CollectiveCall) -> f64 {
+        let shape = self.compact_shape(call.group);
+        match call.kind {
+            CollectiveKind::AllReduce => self.allreduce(call.bytes, &shape),
+            CollectiveKind::AllGather => self.allgather(call.bytes * call.group as f64, &shape),
+            CollectiveKind::ReduceScatter => {
+                self.reduce_scatter(call.bytes * call.group as f64, &shape)
+            }
+            CollectiveKind::AllToAll => self.alltoall(call.bytes, &shape),
+            CollectiveKind::SendRecv => {
+                self.sendrecv(call.bytes, self.level_of_group(call.group))
+            }
+        }
+    }
+
+    /// Gradient all-reduce across `d` data-parallel replicas whose members
+    /// are `stride` devices apart (Algorithm 1 line 25 SyncCost).
+    pub fn dp_allreduce(&self, bytes: f64, d: usize, stride: usize) -> f64 {
+        if d <= 1 {
+            return 0.0;
+        }
+        let shape = self.spread_shape(d, stride);
+        self.allreduce(bytes, &shape)
+    }
+
+    /// Map a shape index to the tier the ring at that index runs over:
+    /// index i rings over the tier at the i-th *used* position, offset by
+    /// leading 1-entries (spread shapes pad inner tiers with 1s).
+    fn tier_for(&self, shape_idx: usize, _shape: &[usize]) -> usize {
+        shape_idx.min(self.n_levels() - 1)
+    }
+}
+
+fn tier_bw(c: &Cluster, tier: usize) -> f64 {
+    // The ring at tier `tier` is bounded by the slowest link on its path,
+    // i.e. the effective p2p bandwidth at that level.
+    c.bw_eff(tier)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::subgraph::{CollectiveCall, CollectiveKind};
+    use crate::hw::{Accelerator, GB};
+    use crate::util::prop;
+
+    fn cluster() -> Cluster {
+        Cluster::fat_tree_tpuv4(1024)
+    }
+
+    #[test]
+    fn allreduce_flat_matches_ring_formula() {
+        let c = Cluster::flat(Accelerator::h100(), 8, 100.0 * GB, 1e-6);
+        let bytes = 1e9;
+        let t = c.allreduce(bytes, &[8]);
+        let expect = 2.0 * 7.0 / 8.0 * bytes / (100.0 * GB) + 2.0 * 7.0 * 1e-6;
+        assert!((t - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn allreduce_intra_node_faster_than_cross_rack() {
+        let c = cluster();
+        let bytes = 1e9;
+        let intra = c.allreduce(bytes, &[8]);
+        let cross = c.allreduce(bytes, &[8, 4]);
+        let far = c.allreduce(bytes, &[8, 4, 4]);
+        assert!(intra < cross);
+        assert!(cross < far);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_over_slow_tier() {
+        // An 8×4 hierarchical all-reduce should beat a flat 32-ring that
+        // crosses the slow tier every hop.
+        let c = cluster();
+        let bytes = 1e9;
+        let hier = c.allreduce(bytes, &[8, 4]);
+        // Flat ring over 32 where every link is leaf-speed:
+        let flat = 2.0 * 31.0 / 32.0 * bytes / c.bw_eff(1) + 2.0 * 31.0 * c.tiers[1].latency;
+        assert!(hier < flat, "hier {hier} flat {flat}");
+    }
+
+    #[test]
+    fn allgather_half_of_allreduce() {
+        let c = cluster();
+        let b = 1e9;
+        let ar = c.allreduce(b, &[8, 4]);
+        let ag = c.allgather(b, &[8, 4]);
+        let rs = c.reduce_scatter(b, &[8, 4]);
+        assert!((ar - (ag + rs)).abs() / ar < 1e-9, "AR = AG + RS");
+    }
+
+    #[test]
+    fn alltoall_grows_with_group_and_crossing() {
+        let c = cluster();
+        let b = 1e8;
+        let small = c.alltoall(b, &[4]);
+        let node = c.alltoall(b, &[8]);
+        let cross = c.alltoall(b, &[8, 4]);
+        assert!(small <= node);
+        assert!(node < cross);
+    }
+
+    #[test]
+    fn dp_allreduce_zero_for_single_replica() {
+        let c = cluster();
+        assert_eq!(c.dp_allreduce(1e9, 1, 32), 0.0);
+        assert!(c.dp_allreduce(1e9, 8, 32) > 0.0);
+    }
+
+    #[test]
+    fn dp_allreduce_spread_uses_slow_tiers() {
+        let c = cluster();
+        let b = 1e9;
+        // 4 replicas inside one rack (stride 8 devices) vs spread across
+        // racks (stride 32): the rack-internal one is cheaper.
+        let near = c.dp_allreduce(b, 4, 8);
+        let far = c.dp_allreduce(b, 4, 32);
+        assert!(near < far, "near {near} far {far}");
+    }
+
+    #[test]
+    fn collective_call_dispatch() {
+        let c = cluster();
+        for kind in [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllToAll,
+            CollectiveKind::SendRecv,
+        ] {
+            let t = c.collective_time(&CollectiveCall {
+                kind,
+                bytes: 1e8,
+                group: 8,
+            });
+            assert!(t > 0.0 && t.is_finite(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn prop_costs_monotone_in_bytes_and_group() {
+        prop::forall(200, 0xC0FFEE, |rng| {
+            let c = cluster();
+            let b1 = 1e6 * (1.0 + rng.gen_f64() * 1e3);
+            let b2 = b1 * (1.0 + rng.gen_f64());
+            let g = [2usize, 4, 8, 16, 32][rng.gen_range(5)];
+            let shape = c.compact_shape(g);
+            assert!(c.allreduce(b2, &shape) >= c.allreduce(b1, &shape));
+            assert!(c.allgather(b2, &shape) >= c.allgather(b1, &shape));
+            assert!(c.alltoall(b2, &shape) >= c.alltoall(b1, &shape));
+            // Larger groups at the same volume never get cheaper for AR.
+            let shape_big = c.compact_shape(g * 2);
+            assert!(c.allreduce(b1, &shape_big) >= c.allreduce(b1, &shape) * 0.99);
+        });
+    }
+
+    #[test]
+    fn sp_equivalence_in_time() {
+        // AG(V/g·g) + RS(V/g·g) over the same group == AR(V): the SP
+        // rewrite must not change modeled time (only memory).
+        let c = cluster();
+        let v = 1e9;
+        let g = 8usize;
+        let shape = c.compact_shape(g);
+        let ar = c.allreduce(v, &shape);
+        let agrs = c.allgather(v, &shape) + c.reduce_scatter(v, &shape);
+        assert!((ar - agrs).abs() / ar < 1e-9);
+    }
+}

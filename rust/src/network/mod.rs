@@ -1,0 +1,514 @@
+//! Network topology modeling and the level-wise abstraction (§4, App. B).
+//!
+//! A [`Cluster`] is an accelerator type plus a stack of [`Tier`]s,
+//! innermost first (devices-per-node, nodes-per-leaf, leaves-per-spine,
+//! ...). *Communication level* `l` means traffic whose lowest common
+//! ancestor is tier `l`: level 0 is intra-node (NVLink/ICI), level 1
+//! crosses the first switch, and so on. This is exactly the paper's
+//! level-wise abstraction: the DP reasons over a handful of levels
+//! instead of all device pairs while the per-level costs retain hierarchy,
+//! asymmetry, and oversubscription.
+//!
+//! Non-hierarchical topologies (torus/mesh, App. B.2) are mapped onto the
+//! same abstraction via hop-distance affinity classes — see
+//! [`Cluster::torus2d`] / [`Cluster::torus3d`].
+
+pub mod collectives;
+
+use crate::hw::{Accelerator, GB};
+use crate::util::json::Json;
+
+/// One tier of the hierarchy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tier {
+    pub name: String,
+    /// Children per group at this tier (8 devices/node, 4 nodes/leaf, ...).
+    pub arity: usize,
+    /// Per-device link bandwidth through this tier (bytes/s).
+    pub link_bw: f64,
+    /// Per-message latency across this tier (seconds).
+    pub latency: f64,
+    /// Oversubscription factor ≥ 1 (2.0 = "2:1"): effective bandwidth
+    /// under load is `link_bw / oversub`.
+    pub oversub: f64,
+}
+
+impl Tier {
+    pub fn effective_bw(&self) -> f64 {
+        self.link_bw / self.oversub
+    }
+}
+
+/// A cluster: accelerators wired into a hierarchical (or hierarchically
+/// abstracted) network.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub name: String,
+    pub accel: Accelerator,
+    /// Innermost tier first. The product of arities is the device count.
+    pub tiers: Vec<Tier>,
+}
+
+impl Cluster {
+    // ----- constructors (paper setups) -----------------------------------
+
+    /// Fat-tree of TPUv4-like accelerators (§5.2, Fig. 8a): 8 accelerators
+    /// per node on an HGX-style 900 GB/s link, 4 nodes per first-level
+    /// switch at 100 GB/s, second-level aggregation at 400 GB/s (4 nodes'
+    /// uplinks → no oversubscription, but lower per-device bandwidth and
+    /// higher latency).
+    pub fn fat_tree_tpuv4(n_devices: usize) -> Self {
+        assert!(n_devices % 32 == 0, "fat-tree built from 32-device pods");
+        let racks = n_devices / 32;
+        Cluster {
+            name: format!("tpuv4-fattree-{n_devices}"),
+            accel: Accelerator::tpu_v4(),
+            tiers: vec![
+                Tier {
+                    name: "node(HGX)".into(),
+                    arity: 8,
+                    link_bw: 900.0 * GB,
+                    latency: 1.0e-6,
+                    oversub: 1.0,
+                },
+                Tier {
+                    name: "leaf".into(),
+                    arity: 4,
+                    link_bw: 100.0 * GB,
+                    latency: 5.0e-6,
+                    oversub: 1.0,
+                },
+                Tier {
+                    name: "agg".into(),
+                    arity: racks,
+                    link_bw: 100.0 * GB,
+                    latency: 10.0e-6,
+                    oversub: 1.0,
+                },
+            ],
+        }
+    }
+
+    /// Spine-leaf H100 cluster (§5.3, Fig. 2 topology): 8×H100 per node
+    /// (NVLink 900 GB/s), 4 nodes per leaf at 12.5 GB/s, two spines with
+    /// 2:2 oversubscription across leaves.
+    pub fn spine_leaf_h100(n_devices: usize, oversub: f64) -> Self {
+        assert!(n_devices % 32 == 0, "spine-leaf built from 32-GPU leaves");
+        let leaves = n_devices / 32;
+        Cluster {
+            name: format!("h100-spineleaf-{n_devices}"),
+            accel: Accelerator::h100(),
+            tiers: vec![
+                Tier {
+                    name: "node(NVLink)".into(),
+                    arity: 8,
+                    link_bw: 900.0 * GB,
+                    latency: 1.0e-6,
+                    oversub: 1.0,
+                },
+                Tier {
+                    name: "leaf".into(),
+                    arity: 4,
+                    link_bw: 12.5 * GB,
+                    latency: 5.0e-6,
+                    oversub: 1.0,
+                },
+                Tier {
+                    name: "spine".into(),
+                    arity: leaves,
+                    link_bw: 12.5 * GB,
+                    latency: 10.0e-6,
+                    oversub,
+                },
+            ],
+        }
+    }
+
+    /// V100 validation cluster (§5.4): 2×V100 per node (NVLink 300 GB/s),
+    /// nodes joined by 12.5 GB/s switches.
+    pub fn v100_cluster(n_devices: usize) -> Self {
+        assert!(n_devices % 2 == 0);
+        Cluster {
+            name: format!("v100-{n_devices}"),
+            accel: Accelerator::v100(),
+            tiers: vec![
+                Tier {
+                    name: "node(NVLink)".into(),
+                    arity: 2,
+                    link_bw: 300.0 * GB,
+                    latency: 1.5e-6,
+                    oversub: 1.0,
+                },
+                Tier {
+                    name: "switch".into(),
+                    arity: n_devices / 2,
+                    link_bw: 12.5 * GB,
+                    latency: 8.0e-6,
+                    oversub: 1.0,
+                },
+            ],
+        }
+    }
+
+    /// 2D torus mapped to levels by hop distance (App. B.2 / Fig. 9):
+    /// level 0 ≈ same tile (4-device tile on full-bandwidth links),
+    /// level 1 ≈ near neighbors, level 2 ≈ remote. Effective bandwidth
+    /// decays with hop-class because paths share links (modeled as the
+    /// per-hop serialization of the ICI link).
+    pub fn torus2d(x: usize, y: usize, link_bw: f64, hop_latency: f64) -> Self {
+        let n = x * y;
+        assert!(n >= 16 && n % 16 == 0, "torus modeled in 16-device tiles");
+        Cluster {
+            name: format!("torus2d-{x}x{y}"),
+            accel: Accelerator::tpu_v4(),
+            tiers: vec![
+                Tier {
+                    name: "tile(1-hop)".into(),
+                    arity: 4,
+                    link_bw,
+                    latency: hop_latency,
+                    oversub: 1.0,
+                },
+                Tier {
+                    name: "near(2-hop)".into(),
+                    arity: 4,
+                    link_bw: link_bw / 2.0,
+                    latency: 2.0 * hop_latency,
+                    oversub: 1.0,
+                },
+                Tier {
+                    name: "remote".into(),
+                    arity: n / 16,
+                    // Remote traffic shares the torus bisection:
+                    // bisection bw per device ≈ 2·link_bw/√n side links.
+                    link_bw: (link_bw * 2.0 * (x.min(y) as f64)) / n as f64,
+                    latency: hop_latency * (x + y) as f64 / 2.0,
+                    oversub: 1.0,
+                },
+            ],
+        }
+    }
+
+    /// 3D torus (TPUv4 pods are 4×4×4-based): same hop-class mapping with
+    /// a larger 1-hop neighborhood and better bisection.
+    pub fn torus3d(x: usize, y: usize, z: usize, link_bw: f64, hop_latency: f64) -> Self {
+        let n = x * y * z;
+        assert!(n >= 64 && n % 64 == 0, "3d torus modeled in 64-device cubes");
+        Cluster {
+            name: format!("torus3d-{x}x{y}x{z}"),
+            accel: Accelerator::tpu_v4(),
+            tiers: vec![
+                Tier {
+                    name: "cube(1-hop)".into(),
+                    arity: 8,
+                    link_bw,
+                    latency: hop_latency,
+                    oversub: 1.0,
+                },
+                Tier {
+                    name: "near".into(),
+                    arity: 8,
+                    link_bw: link_bw / 2.0,
+                    latency: 2.0 * hop_latency,
+                    oversub: 1.0,
+                },
+                Tier {
+                    name: "remote".into(),
+                    arity: n / 64,
+                    link_bw: link_bw * 2.0 * (x * y).min(y * z).min(x * z) as f64 / n as f64,
+                    latency: hop_latency * (x + y + z) as f64 / 2.0,
+                    oversub: 1.0,
+                },
+            ],
+        }
+    }
+
+    /// Flat uniform network (what topology-agnostic baselines assume):
+    /// every pair communicates at `bw`/`lat`.
+    pub fn flat(accel: Accelerator, n_devices: usize, bw: f64, lat: f64) -> Self {
+        Cluster {
+            name: format!("flat-{n_devices}"),
+            accel,
+            tiers: vec![Tier {
+                name: "flat".into(),
+                arity: n_devices,
+                link_bw: bw,
+                latency: lat,
+                oversub: 1.0,
+            }],
+        }
+    }
+
+    /// Parse a cluster from the JSON network-description interface
+    /// (App. B.1: device identifiers, connectivity, per-link bandwidth and
+    /// latency):
+    ///
+    /// ```json
+    /// {"name": "...", "accelerator": "h100",
+    ///  "tiers": [{"name": "node", "arity": 8, "bw_gbps": 900,
+    ///             "latency_us": 1.0, "oversub": 1.0}, ...]}
+    /// ```
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let accel = match v.get("accelerator").as_str().unwrap_or("h100") {
+            "tpuv4" => Accelerator::tpu_v4(),
+            "h100" => Accelerator::h100(),
+            "v100" => Accelerator::v100(),
+            "cpu-sim" => Accelerator::cpu_sim(),
+            other => return Err(format!("unknown accelerator '{other}'")),
+        };
+        let tiers_json = v
+            .get("tiers")
+            .as_arr()
+            .ok_or("missing 'tiers' array")?;
+        if tiers_json.is_empty() {
+            return Err("empty 'tiers'".into());
+        }
+        let mut tiers = Vec::new();
+        for t in tiers_json {
+            tiers.push(Tier {
+                name: t.get("name").as_str().unwrap_or("tier").to_string(),
+                arity: t
+                    .get("arity")
+                    .as_usize()
+                    .ok_or("tier missing 'arity'")?,
+                link_bw: t.get("bw_gbps").as_f64().ok_or("tier missing 'bw_gbps'")?
+                    * GB,
+                latency: t.get("latency_us").as_f64().unwrap_or(1.0) * 1e-6,
+                oversub: t.get("oversub").as_f64().unwrap_or(1.0),
+            });
+        }
+        Ok(Cluster {
+            name: v.get("name").as_str().unwrap_or("custom").to_string(),
+            accel,
+            tiers,
+        })
+    }
+
+    // ----- level-wise queries --------------------------------------------
+
+    pub fn n_devices(&self) -> usize {
+        self.tiers.iter().map(|t| t.arity).product()
+    }
+
+    /// Number of communication levels (= number of tiers).
+    pub fn n_levels(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Devices reachable within level `l` (subtree capacity).
+    pub fn capacity(&self, l: usize) -> usize {
+        self.tiers[..=l].iter().map(|t| t.arity).product()
+    }
+
+    /// Effective point-to-point bandwidth for traffic whose lowest common
+    /// tier is `l`: the min effective bandwidth along the path.
+    pub fn bw_eff(&self, l: usize) -> f64 {
+        self.tiers[..=l]
+            .iter()
+            .map(|t| t.effective_bw())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Cumulative latency to cross up to tier `l`.
+    pub fn lat(&self, l: usize) -> f64 {
+        self.tiers[..=l].iter().map(|t| t.latency).sum()
+    }
+
+    /// Point-to-point transfer time of `bytes` at level `l` (α–β model).
+    pub fn p2p_time(&self, l: usize, bytes: f64) -> f64 {
+        debug_assert!(l < self.n_levels());
+        self.lat(l) + bytes / self.bw_eff(l)
+    }
+
+    /// Smallest level whose subtree holds `g` devices — where a compactly
+    /// placed group of size `g` lives.
+    pub fn level_of_group(&self, g: usize) -> usize {
+        for l in 0..self.n_levels() {
+            if self.capacity(l) >= g {
+                return l;
+            }
+        }
+        self.n_levels() - 1
+    }
+
+    /// Shape of a compactly placed group of `g` devices: participants per
+    /// tier, innermost first (e.g. g=32 on an 8-wide node, 4-wide leaf →
+    /// `[8, 4]`). Product of entries ≥ g (ceil division upward).
+    pub fn compact_shape(&self, g: usize) -> Vec<usize> {
+        let mut shape = Vec::new();
+        let mut rem = g;
+        for t in &self.tiers {
+            if rem == 1 {
+                break;
+            }
+            let here = rem.min(t.arity);
+            shape.push(here);
+            rem = rem.div_ceil(here);
+        }
+        if shape.is_empty() {
+            shape.push(1);
+        }
+        shape
+    }
+
+    /// Shape of a data-parallel group of `d` replicas whose members are
+    /// spaced `stride` devices apart (one per pipeline replica). The group
+    /// occupies the tiers *above* the stride's level.
+    pub fn spread_shape(&self, d: usize, stride: usize) -> Vec<usize> {
+        // All tiers at or below the stride level contribute 1 participant.
+        let base = self.level_of_group(stride.max(1));
+        let mut shape = vec![1usize; base];
+        let mut rem = d;
+        for t in self.tiers.iter().skip(base) {
+            if rem == 1 {
+                break;
+            }
+            let here = rem.min(t.arity);
+            shape.push(here);
+            rem = rem.div_ceil(here);
+        }
+        if shape.iter().all(|&x| x == 1) {
+            shape = vec![d.max(1)];
+        }
+        shape
+    }
+
+    /// Human-readable summary for logs/README.
+    pub fn describe(&self) -> String {
+        let tiers: Vec<String> = self
+            .tiers
+            .iter()
+            .map(|t| {
+                format!(
+                    "{}×{} @{:.1}GB/s{}",
+                    t.arity,
+                    t.name,
+                    t.link_bw / GB,
+                    if t.oversub > 1.0 {
+                        format!(" ({}:1 oversub)", t.oversub)
+                    } else {
+                        String::new()
+                    }
+                )
+            })
+            .collect();
+        format!(
+            "{} [{} devices, {}]: {}",
+            self.name,
+            self.n_devices(),
+            self.accel.name,
+            tiers.join(" → ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn fat_tree_device_count() {
+        for n in [64, 128, 256, 512, 1024] {
+            let c = Cluster::fat_tree_tpuv4(n);
+            assert_eq!(c.n_devices(), n);
+            assert_eq!(c.n_levels(), 3);
+        }
+    }
+
+    #[test]
+    fn bandwidth_decreases_with_level() {
+        let c = Cluster::spine_leaf_h100(1024, 2.0);
+        for l in 1..c.n_levels() {
+            assert!(c.bw_eff(l) <= c.bw_eff(l - 1), "level {l}");
+            assert!(c.lat(l) > c.lat(l - 1));
+        }
+        // 2:2 oversubscription halves spine bandwidth.
+        assert!((c.bw_eff(2) - 12.5 * GB / 2.0).abs() / c.bw_eff(2) < 1e-9);
+    }
+
+    #[test]
+    fn p2p_time_monotone_in_level_and_bytes() {
+        let c = Cluster::fat_tree_tpuv4(64);
+        let b = 1e9;
+        assert!(c.p2p_time(0, b) < c.p2p_time(1, b));
+        assert!(c.p2p_time(1, b) < c.p2p_time(2, b));
+        assert!(c.p2p_time(1, 2.0 * b) > c.p2p_time(1, b));
+    }
+
+    #[test]
+    fn level_of_group_matches_capacities() {
+        let c = Cluster::fat_tree_tpuv4(128);
+        assert_eq!(c.level_of_group(1), 0);
+        assert_eq!(c.level_of_group(8), 0);
+        assert_eq!(c.level_of_group(9), 1);
+        assert_eq!(c.level_of_group(32), 1);
+        assert_eq!(c.level_of_group(33), 2);
+    }
+
+    #[test]
+    fn compact_shape_products_cover_group() {
+        let c = Cluster::fat_tree_tpuv4(1024);
+        for g in [1, 2, 8, 16, 32, 64, 256, 1024] {
+            let s = c.compact_shape(g);
+            let prod: usize = s.iter().product();
+            assert!(prod >= g, "g={g} shape={s:?}");
+            assert!(prod <= g * 2, "shape not overly loose: g={g} {s:?}");
+        }
+        assert_eq!(c.compact_shape(32), vec![8, 4]);
+    }
+
+    #[test]
+    fn spread_shape_skips_inner_tiers() {
+        let c = Cluster::fat_tree_tpuv4(1024);
+        // 8 replicas of 32-device pipelines: the DP group lives at the
+        // agg tier.
+        let s = c.spread_shape(8, 32);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], 1);
+        assert!(s[2] >= 1);
+        let prod: usize = s.iter().product();
+        assert!(prod >= 8);
+    }
+
+    #[test]
+    fn torus_levels_ordered() {
+        let c = Cluster::torus2d(8, 8, 50.0 * GB, 1e-6);
+        assert_eq!(c.n_devices(), 64);
+        assert!(c.bw_eff(0) > c.bw_eff(1));
+        assert!(c.bw_eff(1) > c.bw_eff(2));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let src = r#"{
+            "name": "custom", "accelerator": "v100",
+            "tiers": [
+                {"name": "node", "arity": 2, "bw_gbps": 300, "latency_us": 1.5},
+                {"name": "sw", "arity": 4, "bw_gbps": 12.5, "latency_us": 8, "oversub": 2.0}
+            ]}"#;
+        let c = Cluster::from_json(&json::parse(src).unwrap()).unwrap();
+        assert_eq!(c.n_devices(), 8);
+        assert_eq!(c.accel.name, "v100");
+        assert!((c.tiers[1].oversub - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_rejects_bad_configs() {
+        for bad in [
+            r#"{"accelerator": "quantum", "tiers": [{"arity": 2, "bw_gbps": 1}]}"#,
+            r#"{"accelerator": "h100", "tiers": []}"#,
+            r#"{"accelerator": "h100"}"#,
+            r#"{"accelerator": "h100", "tiers": [{"bw_gbps": 1}]}"#,
+        ] {
+            assert!(Cluster::from_json(&json::parse(bad).unwrap()).is_err());
+        }
+    }
+
+    #[test]
+    fn flat_network_single_level() {
+        let c = Cluster::flat(Accelerator::h100(), 64, 100.0 * GB, 1e-6);
+        assert_eq!(c.n_levels(), 1);
+        assert_eq!(c.level_of_group(64), 0);
+    }
+}

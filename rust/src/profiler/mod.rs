@@ -1,0 +1,143 @@
+//! Operator profiler: calibrate the analytical compute model against
+//! *measured* PJRT executions (§5.1 "Runtime Estimation").
+//!
+//! The paper annotates operator graphs with profiled runtimes (PyTorch
+//! profiler on GPUs, Sunstone/Tandem estimators for TPUv4). Our testbed
+//! is the CPU PJRT backend, so we measure the probe artifacts —
+//! single transformer-block forwards at several widths with known
+//! analytical FLOPs — and fit the `cpu_sim` accelerator's achieved
+//! matmul rate. The calibrated accelerator feeds the same roofline the
+//! large-scale experiments use, closing the loop between the analytical
+//! model and real execution (Table 6 / Figure 10 methodology).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+use crate::hw::Accelerator;
+use crate::runtime::{literal_f32, manifest::Manifest, Engine};
+use crate::util::stats;
+
+/// One probe's measurement.
+#[derive(Debug, Clone)]
+pub struct ProbeResult {
+    pub hidden: usize,
+    pub tokens: usize,
+    pub flops: f64,
+    pub median_seconds: f64,
+    pub achieved_flops_per_s: f64,
+}
+
+/// Calibration outcome.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub probes: Vec<ProbeResult>,
+    /// `cpu_sim` accelerator with the measured matmul rate.
+    pub accel: Accelerator,
+}
+
+impl Calibration {
+    /// Accelerator calibrated for a model of width `hidden`: uses the
+    /// rate of the probe closest in width (small matmuls achieve far
+    /// lower FLOP rates than the asymptotic best probe — using the max
+    /// rate over-predicts small-model throughput).
+    pub fn accel_for_hidden(&self, hidden: usize) -> Accelerator {
+        let probe = self
+            .probes
+            .iter()
+            .min_by_key(|p| p.hidden.abs_diff(hidden))
+            .expect("no probes");
+        let mut a = self.accel.clone();
+        a.matmul_peak = probe.achieved_flops_per_s;
+        a.vector_peak = probe.achieved_flops_per_s / 4.0;
+        a.name = format!("cpu-sim-h{}", probe.hidden);
+        a
+    }
+}
+
+/// Run each probe `reps` times (after one warmup) and fit the achieved
+/// FLOP rate. The fitted rate is the *best* probe's (largest width —
+/// closest to the asymptotic rate the analytical model wants).
+pub fn calibrate(dir: impl AsRef<Path>, reps: usize) -> Result<Calibration> {
+    let dir = dir.as_ref();
+    let man = Manifest::load(dir.join("manifest.json"))?;
+    anyhow::ensure!(!man.probes.is_empty(), "manifest has no probes");
+    let engine = Engine::cpu()?;
+
+    let mut probes = Vec::new();
+    for p in &man.probes {
+        let exe = engine
+            .load(dir.join(&p.file))
+            .with_context(|| format!("loading probe {}", p.file))?;
+        let n: usize = p.x_shape.iter().product();
+        let dims: Vec<i64> = p.x_shape.iter().map(|&d| d as i64).collect();
+        let x = literal_f32(&vec![0.05f32; n], &dims)?;
+        // Warmup (compile caches, allocator).
+        exe.run(std::slice::from_ref(&x))?;
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            exe.run(std::slice::from_ref(&x))?;
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let med = stats::median(&times);
+        probes.push(ProbeResult {
+            hidden: p.hidden,
+            tokens: p.tokens,
+            flops: p.flops,
+            median_seconds: med,
+            achieved_flops_per_s: p.flops / med,
+        });
+    }
+
+    let peak = probes
+        .iter()
+        .map(|p| p.achieved_flops_per_s)
+        .fold(0.0, f64::max);
+    let mut accel = Accelerator::cpu_sim();
+    accel.matmul_peak = peak;
+    accel.matmul_eff = 1.0;
+    // Vector rate: scale with the measured matmul rate conservatively.
+    accel.vector_peak = peak / 4.0;
+    Ok(Calibration { probes, accel })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    #[test]
+    fn calibration_produces_sane_rates() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let cal = calibrate(&dir, 3).unwrap();
+        assert!(!cal.probes.is_empty());
+        for p in &cal.probes {
+            assert!(p.median_seconds > 0.0);
+            // CPU XLA lands between 0.1 GFLOP/s and 2 TFLOP/s.
+            assert!(
+                p.achieved_flops_per_s > 1e8 && p.achieved_flops_per_s < 2e12,
+                "{:e}",
+                p.achieved_flops_per_s
+            );
+        }
+        assert!(cal.accel.matmul_peak >= cal.probes[0].achieved_flops_per_s);
+        // The calibrated accelerator must predict a probe's own runtime
+        // within a loose factor (it *is* the fit).
+        let p = cal
+            .probes
+            .iter()
+            .max_by(|a, b| a.hidden.cmp(&b.hidden))
+            .unwrap();
+        let predicted = p.flops / cal.accel.achieved_matmul();
+        let ratio = predicted / p.median_seconds;
+        assert!(
+            (0.2..=1.5).contains(&ratio),
+            "prediction off: {predicted} vs {} (ratio {ratio})",
+            p.median_seconds
+        );
+    }
+}

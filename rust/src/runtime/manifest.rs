@@ -1,0 +1,235 @@
+//! `artifacts/manifest.json` parser: the contract between the python AOT
+//! pipeline and the Rust trainer/profiler.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+/// Model configuration the artifacts were built with.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub intermediate: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub mbs: usize,
+    pub param_count: usize,
+}
+
+/// One parameter leaf (jit argument order).
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl LeafSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// One pipeline stage's artifacts.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub index: usize,
+    pub first: bool,
+    pub last: bool,
+    pub fwd: String,
+    pub bwd: String,
+    pub update: String,
+    pub params: Vec<LeafSpec>,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: String,
+    pub y_shape: Vec<usize>,
+}
+
+impl StageSpec {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+/// One profiler probe.
+#[derive(Debug, Clone)]
+pub struct ProbeSpec {
+    pub file: String,
+    pub hidden: usize,
+    pub tokens: usize,
+    pub x_shape: Vec<usize>,
+    pub flops: f64,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub cuts: Vec<usize>,
+    pub stages: Vec<StageSpec>,
+    pub probes: Vec<ProbeSpec>,
+    pub train_step: Option<String>,
+}
+
+fn leafs(v: &Json) -> Result<Vec<LeafSpec>> {
+    let arr = v.as_arr().context("params must be an array")?;
+    arr.iter()
+        .map(|p| {
+            Ok(LeafSpec {
+                path: p.get("path").as_str().context("leaf path")?.to_string(),
+                shape: p
+                    .get("shape")
+                    .as_arr()
+                    .context("leaf shape")?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: p.get("dtype").as_str().unwrap_or("f32").to_string(),
+            })
+        })
+        .collect()
+}
+
+fn shape_of(v: &Json) -> Vec<usize> {
+    v.as_arr()
+        .map(|a| a.iter().map(|d| d.as_usize().unwrap_or(0)).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        let c = v.get("config");
+        let config = ModelConfig {
+            n_layers: c.get("n_layers").as_usize().context("n_layers")?,
+            hidden: c.get("hidden").as_usize().context("hidden")?,
+            heads: c.get("heads").as_usize().context("heads")?,
+            intermediate: c.get("intermediate").as_usize().context("intermediate")?,
+            vocab: c.get("vocab").as_usize().context("vocab")?,
+            seq: c.get("seq").as_usize().context("seq")?,
+            mbs: c.get("mbs").as_usize().context("mbs")?,
+            param_count: c.get("param_count").as_usize().unwrap_or(0),
+        };
+        let cuts = v
+            .get("cuts")
+            .as_arr()
+            .context("cuts")?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        let mut stages = Vec::new();
+        for s in v.get("stages").as_arr().context("stages")? {
+            stages.push(StageSpec {
+                index: s.get("index").as_usize().context("stage index")?,
+                first: s.get("first").as_bool().unwrap_or(false),
+                last: s.get("last").as_bool().unwrap_or(false),
+                fwd: s.get("fwd").as_str().context("fwd file")?.to_string(),
+                bwd: s.get("bwd").as_str().context("bwd file")?.to_string(),
+                update: s.get("update").as_str().context("update file")?.to_string(),
+                params: leafs(s.get("params"))?,
+                x_shape: shape_of(s.get("x_shape")),
+                x_dtype: s.get("x_dtype").as_str().unwrap_or("f32").to_string(),
+                y_shape: shape_of(s.get("y_shape")),
+            });
+        }
+        let mut probes = Vec::new();
+        for p in v.get("probes").as_arr().unwrap_or(&[]) {
+            probes.push(ProbeSpec {
+                file: p.get("file").as_str().context("probe file")?.to_string(),
+                hidden: p.get("hidden").as_usize().unwrap_or(0),
+                tokens: p.get("tokens").as_usize().unwrap_or(0),
+                x_shape: shape_of(p.get("x_shape")),
+                flops: p.get("flops").as_f64().unwrap_or(0.0),
+            });
+        }
+        let train_step = v
+            .get("train_step")
+            .get("file")
+            .as_str()
+            .map(|s| s.to_string());
+        anyhow::ensure!(!stages.is_empty(), "manifest has no stages");
+        Ok(Manifest {
+            config,
+            cuts,
+            stages,
+            probes,
+            train_step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"n_layers": 2, "hidden": 64, "heads": 2, "intermediate": 128,
+                 "vocab": 256, "seq": 16, "mbs": 2, "param_count": 123},
+      "cuts": [0, 2, 4],
+      "n_stages": 2,
+      "stages": [
+        {"index": 0, "first": true, "last": false,
+         "fwd": "stage0_fwd.hlo.txt", "bwd": "stage0_bwd.hlo.txt",
+         "update": "stage0_update.hlo.txt",
+         "params": [{"path": "embed", "shape": [256, 64], "dtype": "f32"}],
+         "x_shape": [2, 16], "x_dtype": "i32", "y_shape": [2, 16, 64]},
+        {"index": 1, "first": false, "last": true,
+         "fwd": "f", "bwd": "b", "update": "u",
+         "params": [{"path": "head", "shape": [64, 256], "dtype": "f32"}],
+         "x_shape": [2, 16, 64], "x_dtype": "f32", "y_shape": []}
+      ],
+      "probes": [{"file": "probe_h64.hlo.txt", "hidden": 64, "tokens": 32,
+                  "x_shape": [2, 16, 64], "flops": 1e9}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.hidden, 64);
+        assert_eq!(m.stages.len(), 2);
+        assert!(m.stages[0].first && m.stages[1].last);
+        assert_eq!(m.stages[0].params[0].numel(), 256 * 64);
+        assert_eq!(m.stages[0].params[0].dims_i64(), vec![256, 64]);
+        assert_eq!(m.probes[0].flops, 1e9);
+        assert!(m.train_step.is_none());
+        assert_eq!(m.cuts, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn rejects_empty_stages() {
+        let bad = SAMPLE.replace(
+            r#""stages": ["#,
+            r#""stages_x": ["#,
+        );
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        if let Some(dir) = super::super::artifacts_dir() {
+            let m = Manifest::load(dir.join("manifest.json")).unwrap();
+            assert!(m.stages.len() >= 2);
+            assert!(m.stages[0].first);
+            assert!(m.stages.last().unwrap().last);
+            assert_eq!(m.stages.len(), m.cuts.len() - 1);
+            // Every referenced artifact exists.
+            for s in &m.stages {
+                for f in [&s.fwd, &s.bwd, &s.update] {
+                    assert!(dir.join(f).exists(), "{f}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them (L3 ⇄ L1/L2
+//! bridge).
+//!
+//! Wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. All artifacts are lowered with
+//! `return_tuple=True`, so results come back as one tuple literal that
+//! [`Executable::run`] flattens.
+
+pub mod manifest;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client plus compilation entry points. One engine per thread —
+/// the underlying client is not `Send`.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// CPU PJRT engine (the only backend in this environment).
+    pub fn cpu() -> Result<Self> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact into an executable.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with the given argument literals; returns the flattened
+    /// elements of the result tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(args)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(out.to_tuple().context("untupling result")?)
+    }
+
+    /// Borrowed-argument variant: lets callers hoist argument literals
+    /// (e.g. stage parameters, rebuilt only when they change) out of hot
+    /// loops instead of re-uploading per call.
+    pub fn run_refs(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<&xla::Literal>(args)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(out.to_tuple().context("untupling result")?)
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar i32 literal (Adam step counter).
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Locate the artifacts directory (build-time outputs of `make artifacts`).
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_builders_validate_shape() {
+        assert!(literal_f32(&[1.0, 2.0], &[2]).is_ok());
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn engine_loads_and_runs_probe() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let man = manifest::Manifest::load(dir.join("manifest.json")).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let probe = &man.probes[0];
+        let exe = engine.load(dir.join(&probe.file)).unwrap();
+        let n: usize = probe.x_shape.iter().product();
+        let x = literal_f32(
+            &vec![0.1f32; n],
+            &probe
+                .x_shape
+                .iter()
+                .map(|&d| d as i64)
+                .collect::<Vec<_>>(),
+        )
+        .unwrap();
+        let out = exe.run(&[x]).unwrap();
+        assert_eq!(out.len(), 1);
+        let y: Vec<f32> = out[0].to_vec().unwrap();
+        assert_eq!(y.len(), n);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn stage_fwd_artifact_runs() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let man = manifest::Manifest::load(dir.join("manifest.json")).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let st = &man.stages[0];
+        let exe = engine.load(dir.join(&st.fwd)).unwrap();
+        let mut args = Vec::new();
+        for p in &st.params {
+            let n: usize = p.shape.iter().product();
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            args.push(literal_f32(&vec![0.01f32; n.max(1)], &dims).unwrap());
+        }
+        // Stage 0 takes int32 tokens.
+        let n: usize = st.x_shape.iter().product();
+        let dims: Vec<i64> = st.x_shape.iter().map(|&d| d as i64).collect();
+        args.push(literal_i32(&vec![1i32; n], &dims).unwrap());
+        let out = exe.run(&args).unwrap();
+        assert_eq!(out.len(), 1);
+        let y: Vec<f32> = out[0].to_vec().unwrap();
+        let expect: usize = st.y_shape.iter().product();
+        assert_eq!(y.len(), expect);
+    }
+}

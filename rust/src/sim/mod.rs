@@ -1,0 +1,363 @@
+//! Discrete-event pipeline-training simulator — the "testbed" of this
+//! reproduction (DESIGN.md §Hardware-Adaptation).
+//!
+//! Given a [`PlacementPlan`], the simulator executes one training batch
+//! at microbatch granularity: every stage is a resource processing its
+//! 1F1B (PipeDream-Flush, the schedule the paper fixes for all methods,
+//! §5.1) or GPipe operation sequence in order; inter-stage activation /
+//! gradient transfers are dependency edges weighted by the topology's
+//! level costs; the batch ends with the data-parallel gradient
+//! all-reduce. Unlike the DP's closed form `bottleneck·(m+s−1)+sync`,
+//! the DES tracks per-stage heterogeneity, warmup/drain bubbles, and
+//! transfer latencies event-by-event — it is how we *evaluate* every
+//! method's plan (NEST and baselines share it, like the paper's shared
+//! cost model), and how we validate the DP's bottleneck approximation.
+
+use crate::cost::CostModel;
+use crate::graph::subgraph::SgConfig;
+use crate::graph::LayerGraph;
+use crate::network::Cluster;
+use crate::solver::plan::PlacementPlan;
+
+/// Pipeline schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// PipeDream-Flush / 1F1B (paper default).
+    OneFOneB,
+    /// GPipe: all forwards, then all backwards.
+    GPipe,
+}
+
+/// Simulation result for one training batch.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// End-to-end batch (iteration) time in seconds.
+    pub batch_time: f64,
+    /// Samples per second at the plan's global batch.
+    pub throughput: f64,
+    /// Fraction of the bottleneck stage's makespan spent communicating
+    /// (intra-stage collectives + inter-stage transfers + grad sync).
+    pub comm_fraction: f64,
+    /// Pipeline bubble fraction: idle time of the bottleneck stage.
+    pub bubble_fraction: f64,
+    /// Per-stage busy time.
+    pub stage_busy: Vec<f64>,
+    /// Gradient sync time.
+    pub sync_time: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Fwd(usize), // microbatch id
+    Bwd(usize),
+}
+
+/// Build a stage's operation sequence.
+fn stage_ops(schedule: Schedule, stage: usize, p: usize, m: usize) -> Vec<Op> {
+    match schedule {
+        Schedule::GPipe => {
+            let mut ops: Vec<Op> = (0..m).map(Op::Fwd).collect();
+            ops.extend((0..m).map(Op::Bwd));
+            ops
+        }
+        Schedule::OneFOneB => {
+            // Warmup: p−1−stage forwards, then steady 1F1B, then drain.
+            let warmup = (p - 1 - stage).min(m);
+            let mut ops = Vec::with_capacity(2 * m);
+            for mb in 0..warmup {
+                ops.push(Op::Fwd(mb));
+            }
+            // Steady state: one forward then one backward (Megatron
+            // PipeDream-Flush), draining backwards once forwards run out.
+            let mut next_f = warmup;
+            let mut next_b = 0;
+            while next_b < m {
+                if next_f < m {
+                    ops.push(Op::Fwd(next_f));
+                    next_f += 1;
+                }
+                ops.push(Op::Bwd(next_b));
+                next_b += 1;
+            }
+            ops
+        }
+    }
+}
+
+/// Simulate one training batch of `plan` on `cluster`.
+pub fn simulate(
+    graph: &LayerGraph,
+    cluster: &Cluster,
+    plan: &PlacementPlan,
+    schedule: Schedule,
+) -> SimReport {
+    let p = plan.n_stages();
+    let m = plan.n_microbatches;
+    assert!(p >= 1 && m >= 1);
+
+    // Per-stage cost models (stages may differ in sg).
+    let mut cms: Vec<(SgConfig, CostModel)> = Vec::new();
+    let mut fwd_t = vec![0.0; p];
+    let mut bwd_t = vec![0.0; p];
+    let mut send_t = vec![0.0; p]; // activation transfer to next stage
+    let mut comm_within = vec![0.0; p];
+    for (k, st) in plan.stages.iter().enumerate() {
+        let pos = match cms.iter().position(|(sg, _)| *sg == st.sg) {
+            Some(pos) => pos,
+            None => {
+                cms.push((st.sg, CostModel::new(graph, cluster, st.sg)));
+                cms.len() - 1
+            }
+        };
+        let cm = &cms[pos].1;
+        let (f, b) = cm.stage_phase_times(st.layers.0, st.layers.1, &st.mem, cluster);
+        fwd_t[k] = f;
+        bwd_t[k] = b;
+        let (_, comm) = cm.stage_breakdown(st.layers.0, st.layers.1, &st.mem);
+        comm_within[k] = comm;
+        if let Some(lvl) = st.send_level {
+            let bytes = cm.boundary_bytes_after(st.layers.1);
+            send_t[k] = cluster.p2p_time(lvl, bytes);
+        }
+    }
+
+    // Event-driven execution: each stage runs its op sequence in order;
+    // an op starts when the stage is free AND its dependency is done.
+    let mut fwd_done = vec![vec![f64::INFINITY; m]; p];
+    let mut bwd_done = vec![vec![f64::INFINITY; m]; p];
+    let mut clock = vec![0.0f64; p];
+    let mut busy = vec![0.0f64; p];
+    let mut next_op = vec![0usize; p];
+    let ops: Vec<Vec<Op>> = (0..p).map(|k| stage_ops(schedule, k, p, m)).collect();
+
+    let total_ops: usize = ops.iter().map(|o| o.len()).sum();
+    let mut done = 0usize;
+    while done < total_ops {
+        let mut progressed = false;
+        for k in 0..p {
+            while next_op[k] < ops[k].len() {
+                let op = ops[k][next_op[k]];
+                // Dependency readiness.
+                let ready = match op {
+                    Op::Fwd(mb) => {
+                        if k == 0 {
+                            Some(0.0)
+                        } else {
+                            let dep = fwd_done[k - 1][mb];
+                            if dep.is_finite() {
+                                Some(dep + send_t[k - 1])
+                            } else {
+                                None
+                            }
+                        }
+                    }
+                    Op::Bwd(mb) => {
+                        if k == p - 1 {
+                            let dep = fwd_done[k][mb];
+                            if dep.is_finite() {
+                                Some(dep)
+                            } else {
+                                None
+                            }
+                        } else {
+                            let dep = bwd_done[k + 1][mb];
+                            if dep.is_finite() {
+                                // Gradient flows backward over the same
+                                // boundary (same volume as activations).
+                                Some(dep + send_t[k])
+                            } else {
+                                None
+                            }
+                        }
+                    }
+                };
+                let Some(ready) = ready else { break };
+                let dur = match op {
+                    Op::Fwd(_) => fwd_t[k],
+                    Op::Bwd(_) => bwd_t[k],
+                };
+                let start = clock[k].max(ready);
+                let end = start + dur;
+                clock[k] = end;
+                busy[k] += dur;
+                match op {
+                    Op::Fwd(mb) => fwd_done[k][mb] = end,
+                    Op::Bwd(mb) => bwd_done[k][mb] = end,
+                }
+                next_op[k] += 1;
+                done += 1;
+                progressed = true;
+            }
+        }
+        assert!(progressed, "pipeline deadlock (schedule bug)");
+    }
+
+    // Gradient sync: each stage all-reduces its gradients across the d
+    // replicas after its last backward.
+    let d = plan.dp_width;
+    let stride = plan.devices_per_replica;
+    let mut batch_end: f64 = 0.0;
+    let mut max_sync: f64 = 0.0;
+    for (k, st) in plan.stages.iter().enumerate() {
+        let pos = cms.iter().position(|(sg, _)| *sg == st.sg).unwrap();
+        let cm = &cms[pos].1;
+        let sync = cluster.dp_allreduce(cm.stage_grad_bytes(st.layers.0, st.layers.1), d, stride);
+        batch_end = batch_end.max(clock[k] + sync);
+        max_sync = max_sync.max(sync);
+    }
+
+    // Bottleneck-stage accounting.
+    let (bk, _) = busy
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    let comm_time = comm_within[bk] * m as f64
+        + send_t[bk] * 2.0 * m as f64
+        + max_sync;
+    let comm_fraction = (comm_time / batch_end).min(1.0);
+    let bubble_fraction = 1.0 - busy[bk] / batch_end;
+
+    SimReport {
+        batch_time: batch_end,
+        throughput: graph.global_batch as f64 / batch_end,
+        comm_fraction,
+        bubble_fraction,
+        stage_busy: busy,
+        sync_time: max_sync,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::solver::{solve, SolverOpts};
+
+    fn setup(n_dev: usize) -> (LayerGraph, Cluster, PlacementPlan) {
+        let g = models::llama2_7b(1);
+        let c = Cluster::fat_tree_tpuv4(n_dev);
+        let plan = solve(&g, &c, &SolverOpts::default()).unwrap().plan;
+        (g, c, plan)
+    }
+
+    #[test]
+    fn sim_time_bounded_below_by_work() {
+        let (g, c, plan) = setup(64);
+        let r = simulate(&g, &c, &plan, Schedule::OneFOneB);
+        // The batch can't finish faster than the bottleneck stage's total
+        // work.
+        let min_work: f64 = r
+            .stage_busy
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max);
+        assert!(r.batch_time >= min_work);
+        assert!(r.batch_time.is_finite() && r.batch_time > 0.0);
+    }
+
+    #[test]
+    fn sim_close_to_dp_estimate() {
+        // The DP's closed form bottleneck·(m+s−1)+sync should approximate
+        // the DES within a modest factor (the DES excludes p2p from
+        // occupancy and tracks real bubbles).
+        let (g, c, plan) = setup(64);
+        let r = simulate(&g, &c, &plan, Schedule::OneFOneB);
+        let ratio = r.batch_time / plan.batch_time;
+        assert!(
+            (0.5..1.25).contains(&ratio),
+            "sim {} vs dp {} (ratio {ratio})",
+            r.batch_time,
+            plan.batch_time
+        );
+    }
+
+    #[test]
+    fn gpipe_no_faster_than_1f1b_and_both_finish() {
+        let (g, c, plan) = setup(64);
+        let a = simulate(&g, &c, &plan, Schedule::OneFOneB);
+        let b = simulate(&g, &c, &plan, Schedule::GPipe);
+        // Same total work; GPipe only changes stash/bubbles. Times should
+        // be within a small factor and both positive.
+        assert!(b.batch_time >= a.batch_time * 0.95);
+    }
+
+    #[test]
+    fn deeper_pipeline_has_more_bubble() {
+        let g = models::llama2_7b(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let sol = solve(&g, &c, &SolverOpts::default()).unwrap();
+        let mut plan = sol.plan.clone();
+        let r1 = simulate(&g, &c, &plan, Schedule::OneFOneB);
+        // Artificially reduce microbatch count → more bubble.
+        plan.n_microbatches = plan.n_microbatches.max(8) / 8;
+        let r2 = simulate(&g, &c, &plan, Schedule::OneFOneB);
+        if plan.n_stages() > 1 {
+            assert!(r2.bubble_fraction >= r1.bubble_fraction * 0.99);
+        }
+    }
+
+    #[test]
+    fn comm_fraction_higher_on_oversubscribed() {
+        let g = models::mixtral_8x7b(1);
+        let fat = Cluster::fat_tree_tpuv4(64);
+        let thin = Cluster::spine_leaf_h100(64, 2.0);
+        let p1 = solve(&g, &fat, &SolverOpts::default()).unwrap().plan;
+        let p2 = solve(&g, &thin, &SolverOpts::default()).unwrap().plan;
+        let r1 = simulate(&g, &fat, &p1, Schedule::OneFOneB);
+        let r2 = simulate(&g, &thin, &p2, Schedule::OneFOneB);
+        // §5.3: Mixtral comm share ~10% on constrained network vs ~1% on
+        // fat-tree. Directionally: oversubscribed H100 cluster shows a
+        // higher comm fraction than the fat-tree (H100 compute is also
+        // much faster, compressing compute time).
+        assert!(
+            r2.comm_fraction > r1.comm_fraction,
+            "thin {} <= fat {}",
+            r2.comm_fraction,
+            r1.comm_fraction
+        );
+    }
+
+    #[test]
+    fn single_stage_has_no_bubble() {
+        let g = models::bert_large(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let sol = solve(&g, &c, &SolverOpts::default()).unwrap();
+        if sol.plan.n_stages() == 1 {
+            let r = simulate(&g, &c, &sol.plan, Schedule::OneFOneB);
+            assert!(r.bubble_fraction < 0.05, "bubble {}", r.bubble_fraction);
+        }
+    }
+
+    #[test]
+    fn ops_sequences_well_formed() {
+        for p in 1..=4 {
+            for m in 1..=6 {
+                for k in 0..p {
+                    let ops = stage_ops(Schedule::OneFOneB, k, p, m);
+                    assert_eq!(ops.len(), 2 * m);
+                    // Each microbatch's bwd comes after its fwd.
+                    for mb in 0..m {
+                        let fi = ops.iter().position(|o| *o == Op::Fwd(mb)).unwrap();
+                        let bi = ops.iter().position(|o| *o == Op::Bwd(mb)).unwrap();
+                        assert!(fi < bi, "p={p} m={m} k={k} mb={mb}");
+                    }
+                    // In-flight bound: ≤ p−k microbatches outstanding.
+                    let mut inflight: i32 = 0;
+                    let mut max_inflight: i32 = 0;
+                    for op in &ops {
+                        match op {
+                            Op::Fwd(_) => inflight += 1,
+                            Op::Bwd(_) => inflight -= 1,
+                        }
+                        max_inflight = max_inflight.max(inflight);
+                    }
+                    assert!(
+                        max_inflight as usize <= (p - k).max(1),
+                        "1F1B memory bound violated: p={p} k={k} m={m} inflight={max_inflight}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Concrete device assignment: realizing DP placements on the cluster.
+//!
+//! The uniform-group solver lays each pipeline replica out *compactly and
+//! tail-first*: the last pipeline stage occupies device block `[0, g)`,
+//! the stage `b` blocks from the end occupies `[b·g, (b+1)·g)`, and
+//! replica `r` shifts everything by `r · s_total · g`. Under this layout
+//! the communication level of every stage boundary is a pure function of
+//! its device offset — `boundary_level` — which is what lets the DP know
+//! forward-edge costs exactly while it recurses backward from the last
+//! stage (the paper's "deferred forward cost", §4).
+
+use crate::network::Cluster;
+
+/// Communication level crossed by the boundary between device `offset−1`
+/// and device `offset` under compact packing: the innermost tier whose
+/// group size does *not* divide the offset. Example for tier capacities
+/// `[8, 32, 1024]`: offset 4 → level 0 (intra-node), offset 8 → level 1
+/// (node boundary), offset 32 → level 2 (rack boundary).
+pub fn boundary_level(cluster: &Cluster, offset: usize) -> usize {
+    debug_assert!(offset > 0, "offset 0 is not a boundary");
+    for l in 0..cluster.n_levels() {
+        if offset % cluster.capacity(l) != 0 {
+            return l;
+        }
+    }
+    cluster.n_levels() - 1
+}
+
+/// Device ids of the stage `blocks_from_end` blocks from the pipeline
+/// end, for a group of `g` devices (replica 0).
+pub fn stage_devices(blocks_from_end: usize, g: usize) -> Vec<usize> {
+    let base = blocks_from_end * g;
+    (base..base + g).collect()
+}
+
+/// Minimum realizable send level between a stage and a suffix of
+/// `suffix_stages` stages of `g` devices each: the boundary sits at
+/// offset `suffix_stages · g`.
+pub fn min_send_level(cluster: &Cluster, suffix_stages: usize, g: usize) -> usize {
+    boundary_level(cluster, suffix_stages * g)
+}
+
+/// Communication level between two *arbitrary* device blocks of `g`
+/// devices (block `b` spans `[b·g, (b+1)·g)`): the innermost tier whose
+/// subtree contains both blocks. Used by searches that permute stage
+/// placement (the MCMC baseline explores non-compact layouts).
+pub fn block_pair_level(cluster: &Cluster, b1: usize, b2: usize, g: usize) -> usize {
+    if b1 == b2 {
+        return 0;
+    }
+    let (lo1, hi1) = (b1 * g, (b1 + 1) * g - 1);
+    let (lo2, hi2) = (b2 * g, (b2 + 1) * g - 1);
+    for l in 0..cluster.n_levels() {
+        let cap = cluster.capacity(l);
+        if lo1 / cap == lo2 / cap && hi1 / cap == lo1 / cap && hi2 / cap == lo2 / cap {
+            return l;
+        }
+    }
+    cluster.n_levels() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_levels_fat_tree() {
+        let c = Cluster::fat_tree_tpuv4(1024); // caps [8, 32, 1024]
+        assert_eq!(boundary_level(&c, 1), 0);
+        assert_eq!(boundary_level(&c, 4), 0);
+        assert_eq!(boundary_level(&c, 8), 1);
+        assert_eq!(boundary_level(&c, 16), 1);
+        assert_eq!(boundary_level(&c, 32), 2);
+        assert_eq!(boundary_level(&c, 64), 2);
+        assert_eq!(boundary_level(&c, 40), 1);
+        assert_eq!(boundary_level(&c, 33), 0);
+    }
+
+    #[test]
+    fn node_sized_stages_cross_nodes() {
+        let c = Cluster::fat_tree_tpuv4(64);
+        // Stages of 8 devices: every boundary is at a node edge (level 1)
+        // except rack edges (level 2 at offsets divisible by 32).
+        assert_eq!(min_send_level(&c, 1, 8), 1);
+        assert_eq!(min_send_level(&c, 2, 8), 1);
+        assert_eq!(min_send_level(&c, 4, 8), 2);
+    }
+
+    #[test]
+    fn sub_node_stages_stay_local() {
+        let c = Cluster::fat_tree_tpuv4(64);
+        // Stages of 2 devices: 3 of 4 boundaries are intra-node.
+        assert_eq!(min_send_level(&c, 1, 2), 0);
+        assert_eq!(min_send_level(&c, 2, 2), 0);
+        assert_eq!(min_send_level(&c, 3, 2), 0);
+        assert_eq!(min_send_level(&c, 4, 2), 1);
+    }
+
+    #[test]
+    fn stage_devices_contiguous_disjoint() {
+        let a = stage_devices(0, 4);
+        let b = stage_devices(1, 4);
+        assert_eq!(a, vec![0, 1, 2, 3]);
+        assert_eq!(b, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn block_pair_levels() {
+        let c = Cluster::fat_tree_tpuv4(1024); // caps [8, 32, 1024]
+        // Two 4-device blocks in the same node.
+        assert_eq!(block_pair_level(&c, 0, 1, 4), 0);
+        // Adjacent nodes in a rack (blocks of 8).
+        assert_eq!(block_pair_level(&c, 0, 1, 8), 1);
+        assert_eq!(block_pair_level(&c, 0, 3, 8), 1);
+        // Across racks.
+        assert_eq!(block_pair_level(&c, 0, 4, 8), 2);
+        assert_eq!(block_pair_level(&c, 1, 17, 8), 2);
+        // Same block.
+        assert_eq!(block_pair_level(&c, 5, 5, 8), 0);
+        // Symmetric.
+        assert_eq!(
+            block_pair_level(&c, 2, 9, 8),
+            block_pair_level(&c, 9, 2, 8)
+        );
+    }
+}

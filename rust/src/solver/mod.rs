@@ -1,0 +1,499 @@
+//! NEST's network-, compute-, and memory-aware dynamic program (§4,
+//! Algorithm 1).
+//!
+//! Search structure (DESIGN.md §4):
+//!
+//! * **Outer enumeration** — SUB-GRAPH configuration `sg` (tensor /
+//!   sequence / expert / context degrees, Table 2 columns), activation
+//!   recomputation on/off, and the ZeRO degree cap. Uniform `sg` across
+//!   stages matches the paper's evaluated plans and Megatron practice and
+//!   is what keeps the search scalable past 1,000 devices ("template-based
+//!   parallelism", §5.2.2).
+//! * **DP core** — `dp[i][s]` = minimum bottleneck latency of executing
+//!   the layer suffix `[i, L)` as `s` pipeline stages of `g = |sg|`
+//!   devices each, *including* the forward edge from the yet-unplaced
+//!   producer stage. Because stages are packed compactly tail-first, the
+//!   producer boundary of a suffix with `s` stages sits at device offset
+//!   `s·g`, so its communication level — the paper's deferred-forward-cost
+//!   level `l` — is known exactly (`assign::boundary_level`). Memory
+//!   feasibility (Eq. 1) is evaluated *inside* the transition; infeasible
+//!   stages escalate ZeRO 1→2→3 (adding the collective overhead to the
+//!   load) and are pruned only if nothing fits — never post hoc.
+//! * **Final pass** — Algorithm 1 lines 19–31: the first stage (no
+//!   forward edge) is evaluated separately per total stage count `p`;
+//!   data parallelism replicates the pipeline `d = ⌊K / (p·g)⌋` times
+//!   (partial utilization allowed, §5.2.1) and the batch time is
+//!   `bottleneck · (m + p − 1) + SyncCost`.
+//!
+//! The full per-stage-device-count generalization (the paper's
+//! `dp[l][D][k][s]` with enumerated allocations) is in [`exact`] and is
+//! used for small clusters (§5.4) and as the optimality cross-check.
+
+pub mod assign;
+pub mod exact;
+pub mod plan;
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::cost::CostModel;
+use crate::graph::subgraph::enumerate_sg;
+use crate::graph::LayerGraph;
+use crate::memory::MemSpec;
+use crate::network::Cluster;
+use assign::{boundary_level, stage_devices};
+use plan::{PlacementPlan, StagePlan};
+
+/// Solver options.
+#[derive(Debug, Clone)]
+pub struct SolverOpts {
+    /// Cap on pipeline stages (0 = number of layers).
+    pub max_stages: usize,
+    /// Largest ZeRO sharding degree to consider.
+    pub zero_max_degree: usize,
+    /// Explore the activation-recomputation branch.
+    pub try_recompute: bool,
+    /// Explore the stash-everything branch.
+    pub try_no_recompute: bool,
+}
+
+impl Default for SolverOpts {
+    fn default() -> Self {
+        SolverOpts {
+            max_stages: 0,
+            zero_max_degree: 8,
+            try_recompute: true,
+            try_no_recompute: true,
+        }
+    }
+}
+
+/// Solver outcome: the best plan plus search statistics (Table 4).
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub plan: PlacementPlan,
+    pub solve_seconds: f64,
+    /// DP states materialized across all outer configurations.
+    pub dp_states: u64,
+    /// (sg, recompute, stage-count) combinations evaluated.
+    pub configs_tried: u64,
+}
+
+/// One DP table for a fixed (sg, recompute, zero-cap).
+struct DpTable {
+    n: usize,
+    #[allow(dead_code)]
+    s_max: usize,
+    g: usize,
+    /// cost[s][i] flattened; `f64::INFINITY` = infeasible.
+    cost: Vec<f64>,
+    /// Backpointer: cut `j` for state (i, s).
+    cut: Vec<u32>,
+    /// Memory spec chosen for stage `[i, cut)` at state (i, s).
+    spec: Vec<MemSpec>,
+}
+
+impl DpTable {
+    fn idx(&self, i: usize, s: usize) -> usize {
+        s * (self.n + 1) + i
+    }
+    fn cost_at(&self, i: usize, s: usize) -> f64 {
+        self.cost[self.idx(i, s)]
+    }
+}
+
+/// Run the suffix DP for one (cost model, recompute, zero cap).
+fn run_dp(
+    cm: &CostModel,
+    cluster: &Cluster,
+    recompute: bool,
+    zero_cap: usize,
+    #[allow(dead_code)]
+    s_max: usize,
+    states: &mut u64,
+) -> DpTable {
+    let n = cm.n_layers();
+    let g = cm.group;
+    let cap = cluster.accel.hbm_capacity;
+    let mut t = DpTable {
+        n,
+        s_max,
+        g,
+        cost: vec![f64::INFINITY; (s_max + 1) * (n + 1)],
+        cut: vec![0; (s_max + 1) * (n + 1)],
+        spec: vec![MemSpec::plain(); (s_max + 1) * (n + 1)],
+    };
+
+    for s in 1..=s_max {
+        let l_recv = boundary_level(cluster, s * g);
+        let l_send = if s > 1 {
+            Some(boundary_level(cluster, (s - 1) * g))
+        } else {
+            None
+        };
+        let stash = s - 1;
+        // Suffix [i, n) needs at least s layers.
+        for i in 0..=(n - s) {
+            if s == 1 {
+                // Single stage covering the whole suffix.
+                if let Some(spec) = cm.stage_choose_spec(i, n, stash, cap, zero_cap, recompute)
+                {
+                    let load = cm.stage_load(i, n, Some(l_recv), None, &spec, cluster);
+                    let ix = t.idx(i, 1);
+                    t.cost[ix] = load;
+                    t.cut[ix] = n as u32;
+                    t.spec[ix] = spec;
+                    *states += 1;
+                }
+                continue;
+            }
+            let mut best = f64::INFINITY;
+            let mut best_cut = 0u32;
+            let mut best_spec = MemSpec::plain();
+            // Cut j: this stage is [i, j), the rest [j, n) has s−1 stages.
+            for j in (i + 1)..=(n - (s - 1)) {
+                // Lower bound on load: pure compute, strictly increasing
+                // in j — exact pruning once it exceeds the incumbent.
+                let lb = cm.stage_load_lb(i, j);
+                if lb >= best {
+                    break;
+                }
+                let rest = t.cost_at(j, s - 1);
+                if rest.is_infinite() && lb >= best {
+                    break;
+                }
+                let Some(spec) = cm.stage_choose_spec(i, j, stash, cap, zero_cap, recompute)
+                else {
+                    // Memory grows with j: no larger stage fits either.
+                    break;
+                };
+                let load = cm.stage_load(i, j, Some(l_recv), l_send, &spec, cluster);
+                *states += 1;
+                let cand = load.max(rest);
+                if cand < best {
+                    best = cand;
+                    best_cut = j as u32;
+                    best_spec = spec;
+                }
+            }
+            let ix = t.idx(i, s);
+            t.cost[ix] = best;
+            t.cut[ix] = best_cut;
+            t.spec[ix] = best_spec;
+        }
+    }
+    t
+}
+
+/// Evaluate the first stage + suffix for a total stage count `p`
+/// (Algorithm 1 lines 19–31). Returns (bottleneck, first cut, first spec).
+fn eval_final(
+    cm: &CostModel,
+    cluster: &Cluster,
+    dp: &DpTable,
+    p: usize,
+    recompute: bool,
+    zero_cap: usize,
+) -> Option<(f64, usize, MemSpec)> {
+    let n = cm.n_layers();
+    let cap = cluster.accel.hbm_capacity;
+    let stash = p - 1;
+    if p == 1 {
+        let spec = cm.stage_choose_spec(0, n, 0, cap, zero_cap, recompute)?;
+        let load = cm.stage_load(0, n, None, None, &spec, cluster);
+        return Some((load, n, spec));
+    }
+    let l_send = boundary_level(cluster, (p - 1) * dp.g);
+    let mut best: Option<(f64, usize, MemSpec)> = None;
+    for j in 1..=(n - (p - 1)) {
+        let lb = cm.stage_load_lb(0, j);
+        if let Some((b, _, _)) = best {
+            if lb >= b {
+                break;
+            }
+        }
+        let Some(spec) = cm.stage_choose_spec(0, j, stash, cap, zero_cap, recompute) else {
+            break;
+        };
+        let load = cm.stage_load(0, j, None, Some(l_send), &spec, cluster);
+        let rest = dp.cost_at(j, p - 1);
+        let cand = load.max(rest);
+        if cand.is_finite() && best.map(|(b, _, _)| cand < b).unwrap_or(true) {
+            best = Some((cand, j, spec));
+        }
+    }
+    best
+}
+
+/// Reconstruct the stage list for total stage count `p`.
+fn reconstruct(
+    cm: &CostModel,
+    cluster: &Cluster,
+    dp: &DpTable,
+    p: usize,
+    first_cut: usize,
+    first_spec: MemSpec,
+) -> Vec<StagePlan> {
+    let g = dp.g;
+    let mut stages = Vec::with_capacity(p);
+    let mut push_stage = |i: usize, j: usize, spec: MemSpec, k: usize| {
+        let blocks_from_end = p - 1 - k;
+        let send_level = if k + 1 < p {
+            Some(boundary_level(cluster, (p - 1 - k) * g))
+        } else {
+            None
+        };
+        let recv_level = if k > 0 {
+            Some(boundary_level(cluster, (p - k) * g))
+        } else {
+            None
+        };
+        let load = cm.stage_load(i, j, recv_level, send_level, &spec, cluster);
+        stages.push(StagePlan {
+            layers: (i, j),
+            devices: stage_devices(blocks_from_end, g),
+            sg: cm.sg,
+            mem: spec,
+            send_level,
+            load,
+        });
+    };
+
+    push_stage(0, first_cut, first_spec, 0);
+    let mut i = first_cut;
+    for k in 1..p {
+        let s = p - k; // stages remaining including this one
+        let ix = dp.idx(i, s);
+        let j = dp.cut[ix] as usize;
+        debug_assert!(j > i, "broken backpointer at ({i},{s})");
+        push_stage(i, j, dp.spec[ix], k);
+        i = j;
+    }
+    debug_assert_eq!(i, cm.n_layers());
+    stages
+}
+
+/// Largest power of two ≤ x (≥ 1).
+pub fn pow2_floor(x: usize) -> usize {
+    if x <= 1 {
+        1
+    } else {
+        1 << (usize::BITS - 1 - x.leading_zeros())
+    }
+}
+
+/// Solve placement for `graph` on `cluster` with NEST's DP.
+pub fn solve(graph: &LayerGraph, cluster: &Cluster, opts: &SolverOpts) -> Option<Solution> {
+    let t0 = Instant::now();
+    let k_total = cluster.n_devices();
+    let n = graph.n_layers();
+    let s_cap = if opts.max_stages == 0 {
+        n
+    } else {
+        opts.max_stages.min(n)
+    };
+    let global_batch = graph.global_batch;
+
+    let mut best: Option<(f64, PlacementPlan)> = None;
+    let mut dp_states: u64 = 0;
+    let mut configs: u64 = 0;
+
+    let sgs = enumerate_sg(
+        &graph.tp_widths,
+        &graph.ep_degrees,
+        &graph.cp_degrees,
+        k_total,
+    );
+    let mut rcs = Vec::new();
+    if opts.try_no_recompute {
+        rcs.push(false);
+    }
+    if opts.try_recompute {
+        rcs.push(true);
+    }
+
+    for sg in &sgs {
+        let g = sg.group_size();
+        if g > k_total {
+            continue;
+        }
+        let cm = CostModel::new(graph, cluster, *sg);
+        let s_max = s_cap.min(k_total / g).min(n);
+        for &rc in &rcs {
+            // DP tables cached per ZeRO-degree cap (the cap depends on the
+            // data-parallel width, which varies with the stage count).
+            let mut tables: HashMap<usize, DpTable> = HashMap::new();
+            for p in 1..=s_max {
+                configs += 1;
+                let d = k_total / (g * p);
+                if d == 0 {
+                    break;
+                }
+                let zero_cap = pow2_floor(d).min(opts.zero_max_degree);
+                let dp = tables.entry(zero_cap).or_insert_with(|| {
+                    run_dp(&cm, cluster, rc, zero_cap, s_max, &mut dp_states)
+                });
+                let Some((bottleneck, first_cut, first_spec)) =
+                    eval_final(&cm, cluster, dp, p, rc, zero_cap)
+                else {
+                    continue;
+                };
+                if !bottleneck.is_finite() {
+                    continue;
+                }
+                let m = global_batch.div_ceil(d * graph.mbs);
+                // Gradient sync (Algorithm 1 line 25): priced on the
+                // reconstructed stages' parameter volumes.
+                let stages = reconstruct(&cm, cluster, dp, p, first_cut, first_spec);
+                let stride = p * g;
+                let sync = stages
+                    .iter()
+                    .map(|st| {
+                        cluster.dp_allreduce(
+                            cm.stage_grad_bytes(st.layers.0, st.layers.1),
+                            d,
+                            stride,
+                        )
+                    })
+                    .fold(0.0, f64::max);
+                let batch_time = bottleneck * (m as f64 + p as f64 - 1.0) + sync;
+                if best
+                    .as_ref()
+                    .map(|(bt, _)| batch_time < *bt)
+                    .unwrap_or(true)
+                {
+                    let plan = PlacementPlan {
+                        model_name: graph.model_name.clone(),
+                        method: "nest".into(),
+                        sg: *sg,
+                        stages,
+                        dp_width: d,
+                        mbs: graph.mbs,
+                        n_microbatches: m,
+                        devices_per_replica: stride,
+                        bottleneck,
+                        sync_time: sync,
+                        batch_time,
+                    };
+                    best = Some((batch_time, plan));
+                }
+            }
+        }
+    }
+
+    best.map(|(_, plan)| Solution {
+        plan,
+        solve_seconds: t0.elapsed().as_secs_f64(),
+        dp_states,
+        configs_tried: configs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn solves_tiny_model() {
+        let g = models::tiny_transformer(6, 256, 128, 1);
+        let c = Cluster::v100_cluster(8);
+        let sol = solve(&g, &c, &SolverOpts::default()).expect("solution");
+        sol.plan.validate(&g, &c).unwrap();
+        assert!(sol.plan.batch_time > 0.0);
+        assert!(sol.plan.used_devices() <= 8);
+    }
+
+    #[test]
+    fn solves_bertlarge_fat_tree() {
+        let g = models::bert_large(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let sol = solve(&g, &c, &SolverOpts::default()).expect("solution");
+        sol.plan.validate(&g, &c).unwrap();
+        // BertLarge at small scale should prefer heavy data parallelism
+        // (§5.2: NEST picks {1, 512, 1, 1} at 512 devices).
+        assert!(sol.plan.dp_width >= sol.plan.n_stages());
+    }
+
+    #[test]
+    fn llama3_on_64_needs_memory_tricks() {
+        // 70B params × 16 bytes ≈ 1.1 TB of static state on 64×64 GB
+        // devices → must pipeline deeply, recompute, or ZeRO.
+        let g = models::llama3_70b(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let sol = solve(&g, &c, &SolverOpts::default()).expect("solution");
+        sol.plan.validate(&g, &c).unwrap();
+        let uses_zero = sol
+            .plan
+            .stages
+            .iter()
+            .any(|s| s.mem.zero != crate::memory::ZeroStage::None);
+        let uses_rc = sol.plan.stages.iter().any(|s| s.mem.recompute);
+        assert!(
+            sol.plan.n_stages() >= 4 || uses_zero || uses_rc,
+            "plan: {}",
+            sol.plan.describe()
+        );
+    }
+
+    #[test]
+    fn bigger_cluster_not_slower() {
+        let g = models::llama2_7b(1);
+        let t64 = solve(&g, &Cluster::fat_tree_tpuv4(64), &SolverOpts::default())
+            .unwrap()
+            .plan
+            .batch_time;
+        let t256 = solve(&g, &Cluster::fat_tree_tpuv4(256), &SolverOpts::default())
+            .unwrap()
+            .plan
+            .batch_time;
+        assert!(
+            t256 < t64,
+            "256 devices ({t256}s) should beat 64 ({t64}s)"
+        );
+    }
+
+    #[test]
+    fn gpt3_uses_tensor_parallelism() {
+        let g = models::gpt3_175b(1);
+        let c = Cluster::fat_tree_tpuv4(256);
+        let sol = solve(&g, &c, &SolverOpts::default()).expect("solution");
+        sol.plan.validate(&g, &c).unwrap();
+        // Table 2: GPT-3 175B runs with TP 4 or 8.
+        assert!(sol.plan.sg.tp >= 4, "plan: {}", sol.plan.strategy_string());
+    }
+
+    #[test]
+    fn pow2_floor_values() {
+        assert_eq!(pow2_floor(1), 1);
+        assert_eq!(pow2_floor(2), 2);
+        assert_eq!(pow2_floor(3), 2);
+        assert_eq!(pow2_floor(8), 8);
+        assert_eq!(pow2_floor(1000), 512);
+    }
+
+    #[test]
+    fn respects_max_stages() {
+        let g = models::llama2_7b(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let opts = SolverOpts {
+            max_stages: 2,
+            ..Default::default()
+        };
+        let sol = solve(&g, &c, &opts).unwrap();
+        assert!(sol.plan.n_stages() <= 2);
+    }
+
+    #[test]
+    fn mixtral_uses_expert_parallelism() {
+        let g = models::mixtral_8x7b(1);
+        let c = Cluster::fat_tree_tpuv4(256);
+        let sol = solve(&g, &c, &SolverOpts::default()).expect("solution");
+        sol.plan.validate(&g, &c).unwrap();
+        assert!(
+            sol.plan.sg.ep > 1 || sol.plan.sg.cp > 1,
+            "MoE plan should use EP/CP: {}",
+            sol.plan.strategy_string()
+        );
+    }
+}

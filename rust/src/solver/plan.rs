@@ -1,0 +1,359 @@
+//! Placement plans: the solver's output (§3.2 "The final output is a
+//! parallelism configuration and placement plan").
+
+use crate::cost::CostModel;
+use crate::graph::subgraph::SgConfig;
+use crate::graph::LayerGraph;
+use crate::memory::MemSpec;
+use crate::network::Cluster;
+
+/// One pipeline stage of a plan.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    /// Layer range `[start, end)` into the model's layer chain.
+    pub layers: (usize, usize),
+    /// Devices of replica 0 (replica `r` adds `r · stride` to each id).
+    pub devices: Vec<usize>,
+    /// SUB-GRAPH config of this stage. Uniform across stages for the
+    /// scalable solver; the exact solver and the Alpa baseline may vary
+    /// it per stage.
+    pub sg: SgConfig,
+    /// Memory spec chosen for this stage (ZeRO stage + recompute).
+    pub mem: MemSpec,
+    /// Communication level to the *next* stage (None for the last).
+    pub send_level: Option<usize>,
+    /// Modeled per-microbatch latency (compute + collectives + p2p).
+    pub load: f64,
+}
+
+/// A complete placement plan: SUB-GRAPH config, pipeline stages, and
+/// data-parallel replication.
+#[derive(Debug, Clone)]
+pub struct PlacementPlan {
+    pub model_name: String,
+    /// Which method produced it ("nest", "manual", "mcmc", ...).
+    pub method: String,
+    pub sg: SgConfig,
+    pub stages: Vec<StagePlan>,
+    /// Data-parallel width d (pipeline replicas).
+    pub dp_width: usize,
+    /// Microbatch size (sequences).
+    pub mbs: usize,
+    /// Microbatches per replica per batch: ⌈B / (d · mbs)⌉.
+    pub n_microbatches: usize,
+    /// Devices per pipeline replica.
+    pub devices_per_replica: usize,
+    /// Modeled bottleneck stage latency.
+    pub bottleneck: f64,
+    /// Modeled gradient-sync time (Algorithm 1 line 25).
+    pub sync_time: f64,
+    /// Modeled batch time: bottleneck · (m + s − 1) + sync.
+    pub batch_time: f64,
+}
+
+impl PlacementPlan {
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn used_devices(&self) -> usize {
+        self.dp_width * self.devices_per_replica
+    }
+
+    /// Samples per second at the plan's global batch size.
+    pub fn throughput(&self, global_batch: usize) -> f64 {
+        global_batch as f64 / self.batch_time
+    }
+
+    /// Table-2-style strategy string `{p, d, t, s, (e, c)}`.
+    pub fn strategy_string(&self) -> String {
+        let t = self.sg.tp;
+        let s = if self.sg.sp { self.sg.tp } else { 1 };
+        if self.sg.ep > 1 || self.sg.cp > 1 {
+            format!(
+                "{{{}, {}, {}, {}, ({}, {})}}",
+                self.n_stages(),
+                self.dp_width,
+                t,
+                s,
+                self.sg.ep,
+                self.sg.cp
+            )
+        } else {
+            format!("{{{}, {}, {}, {}}}", self.n_stages(), self.dp_width, t, s)
+        }
+    }
+
+    /// Validate plan invariants against the graph and cluster:
+    /// full layer coverage in order, stage/replica device-disjointness,
+    /// device ids in range, per-stage memory within capacity, and batch
+    /// accounting. Every method's output goes through this in tests.
+    pub fn validate(&self, graph: &LayerGraph, cluster: &Cluster) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err("plan has no stages".into());
+        }
+        // Layer coverage.
+        let mut expect = 0usize;
+        for (k, st) in self.stages.iter().enumerate() {
+            if st.layers.0 != expect {
+                return Err(format!(
+                    "stage {k} starts at layer {} expected {expect}",
+                    st.layers.0
+                ));
+            }
+            if st.layers.1 <= st.layers.0 {
+                return Err(format!("stage {k} empty range {:?}", st.layers));
+            }
+            expect = st.layers.1;
+        }
+        if expect != graph.n_layers() {
+            return Err(format!(
+                "layers covered {expect} != model layers {}",
+                graph.n_layers()
+            ));
+        }
+        // Device disjointness across stages and replicas.
+        let mut seen = std::collections::HashSet::new();
+        let stride = self.devices_per_replica;
+        for r in 0..self.dp_width {
+            for (k, st) in self.stages.iter().enumerate() {
+                if st.devices.len() != st.sg.group_size() {
+                    return Err(format!(
+                        "stage {k} has {} devices, sg group is {}",
+                        st.devices.len(),
+                        st.sg.group_size()
+                    ));
+                }
+                for &d in &st.devices {
+                    let id = d + r * stride;
+                    if id >= cluster.n_devices() {
+                        return Err(format!("device {id} out of range (replica {r})"));
+                    }
+                    if !seen.insert(id) {
+                        return Err(format!("device {id} assigned twice"));
+                    }
+                }
+            }
+        }
+        // Memory feasibility (Eq. 1 with each stage's own sg and spec).
+        let mut cms: Vec<(SgConfig, CostModel)> = Vec::new();
+        let s_total = self.n_stages();
+        for (k, st) in self.stages.iter().enumerate() {
+            let pos = match cms.iter().position(|(sg, _)| *sg == st.sg) {
+                Some(p) => p,
+                None => {
+                    cms.push((st.sg, CostModel::new(graph, cluster, st.sg)));
+                    cms.len() - 1
+                }
+            };
+            let cm = &cms[pos].1;
+            let stash = s_total - 1 - k; // position from pipeline end
+            let peak = cm.stage_peak_bytes(st.layers.0, st.layers.1, &st.mem, stash);
+            if peak > cluster.accel.hbm_capacity * (1.0 + 1e-9) {
+                return Err(format!(
+                    "stage {k} peak {} exceeds capacity {}",
+                    crate::util::table::fmt_bytes(peak),
+                    crate::util::table::fmt_bytes(cluster.accel.hbm_capacity)
+                ));
+            }
+            if st.mem.zero.degree() > self.dp_width {
+                return Err(format!(
+                    "stage {k} ZeRO degree {} exceeds dp width {}",
+                    st.mem.zero.degree(),
+                    self.dp_width
+                ));
+            }
+        }
+        // Batch accounting.
+        if self.used_devices() > cluster.n_devices() {
+            return Err("plan uses more devices than the cluster has".into());
+        }
+        if self.n_microbatches == 0 {
+            return Err("zero microbatches".into());
+        }
+        Ok(())
+    }
+
+    /// Machine-readable plan export (the artifact's "final output is a
+    /// parallelism configuration and placement plan", §3.2) — consumable
+    /// by downstream launchers (Megatron/NeMo-style configs).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let stage_json = |st: &StagePlan| {
+            Json::obj(vec![
+                ("layers", Json::arr(vec![
+                    Json::num(st.layers.0 as f64),
+                    Json::num(st.layers.1 as f64),
+                ])),
+                ("devices", Json::arr(
+                    st.devices.iter().map(|&d| Json::num(d as f64)).collect(),
+                )),
+                ("tp", Json::num(st.sg.tp as f64)),
+                ("sp", Json::Bool(st.sg.sp)),
+                ("ep", Json::num(st.sg.ep as f64)),
+                ("cp", Json::num(st.sg.cp as f64)),
+                ("zero", Json::str(st.mem.zero.describe())),
+                ("zero_degree", Json::num(st.mem.zero.degree() as f64)),
+                ("recompute", Json::Bool(st.mem.recompute)),
+                (
+                    "send_level",
+                    st.send_level
+                        .map(|l| Json::num(l as f64))
+                        .unwrap_or(Json::Null),
+                ),
+                ("load_seconds", Json::num(st.load)),
+            ])
+        };
+        Json::obj(vec![
+            ("model", Json::str(self.model_name.clone())),
+            ("method", Json::str(self.method.clone())),
+            ("strategy", Json::str(self.strategy_string())),
+            ("pipeline_stages", Json::num(self.n_stages() as f64)),
+            ("data_parallel", Json::num(self.dp_width as f64)),
+            ("microbatch_size", Json::num(self.mbs as f64)),
+            ("n_microbatches", Json::num(self.n_microbatches as f64)),
+            ("devices_per_replica", Json::num(self.devices_per_replica as f64)),
+            ("bottleneck_seconds", Json::num(self.bottleneck)),
+            ("sync_seconds", Json::num(self.sync_time)),
+            ("batch_seconds", Json::num(self.batch_time)),
+            ("stages", Json::arr(self.stages.iter().map(stage_json).collect())),
+        ])
+    }
+
+    /// Long-form human-readable description.
+    pub fn describe(&self) -> String {
+        let mut out = format!(
+            "{} on {} [{}]: {} — {} stages × {} devices × d={} ({} of cluster devices used)\n",
+            self.model_name,
+            self.method,
+            self.sg.describe(),
+            self.strategy_string(),
+            self.n_stages(),
+            self.sg.group_size(),
+            self.dp_width,
+            self.used_devices(),
+        );
+        for (k, st) in self.stages.iter().enumerate() {
+            out.push_str(&format!(
+                "  stage {k:3}: layers [{:3}, {:3}) load={} mem={}{} dev[0]={}\n",
+                st.layers.0,
+                st.layers.1,
+                crate::util::table::fmt_time(st.load),
+                st.mem.zero.describe(),
+                if st.mem.recompute { "+AR" } else { "" },
+                st.devices.first().copied().unwrap_or(0),
+            ));
+        }
+        out.push_str(&format!(
+            "  bottleneck={} sync={} batch={}",
+            crate::util::table::fmt_time(self.bottleneck),
+            crate::util::table::fmt_time(self.sync_time),
+            crate::util::table::fmt_time(self.batch_time)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::memory::MemSpec;
+
+    fn mini_plan() -> (LayerGraph, Cluster, PlacementPlan) {
+        let g = models::tiny_transformer(6, 256, 128, 1);
+        let c = Cluster::v100_cluster(8);
+        let plan = PlacementPlan {
+            model_name: g.model_name.clone(),
+            method: "test".into(),
+            sg: SgConfig::serial(),
+            stages: vec![
+                StagePlan {
+                    layers: (0, 4),
+                    devices: vec![1],
+                    sg: SgConfig::serial(),
+                    mem: MemSpec::plain(),
+                    send_level: Some(0),
+                    load: 1.0,
+                },
+                StagePlan {
+                    layers: (4, 8),
+                    devices: vec![0],
+                    sg: SgConfig::serial(),
+                    mem: MemSpec::plain(),
+                    send_level: None,
+                    load: 1.0,
+                },
+            ],
+            dp_width: 2,
+            mbs: 1,
+            n_microbatches: 4,
+            devices_per_replica: 2,
+            bottleneck: 1.0,
+            sync_time: 0.1,
+            batch_time: 1.0 * (4.0 + 1.0) + 0.1,
+        };
+        (g, c, plan)
+    }
+
+    #[test]
+    fn valid_plan_passes() {
+        let (g, c, plan) = mini_plan();
+        plan.validate(&g, &c).unwrap();
+    }
+
+    #[test]
+    fn detects_gap_in_layers() {
+        let (g, c, mut plan) = mini_plan();
+        plan.stages[1].layers = (5, 8);
+        assert!(plan.validate(&g, &c).is_err());
+    }
+
+    #[test]
+    fn detects_device_reuse() {
+        let (g, c, mut plan) = mini_plan();
+        plan.stages[1].devices = vec![1];
+        assert!(plan.validate(&g, &c).is_err());
+    }
+
+    #[test]
+    fn detects_overflow_dp() {
+        let (g, c, mut plan) = mini_plan();
+        plan.dp_width = 8; // 8 replicas × 2 devices > 8 devices
+        assert!(plan.validate(&g, &c).is_err());
+    }
+
+    #[test]
+    fn strategy_string_formats() {
+        let (_, _, mut plan) = mini_plan();
+        assert_eq!(plan.strategy_string(), "{2, 2, 1, 1}");
+        plan.sg.ep = 4;
+        assert_eq!(plan.strategy_string(), "{2, 2, 1, 1, (4, 1)}");
+    }
+
+    #[test]
+    fn throughput_is_batch_over_time() {
+        let (_, _, plan) = mini_plan();
+        let t = plan.throughput(4096);
+        assert!((t - 4096.0 / plan.batch_time).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let (_, _, plan) = mini_plan();
+        let j = plan.to_json();
+        let text = crate::util::json::to_pretty(&j);
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("strategy").as_str().unwrap(), "{2, 2, 1, 1}");
+        assert_eq!(parsed.get("pipeline_stages").as_usize(), Some(2));
+        assert_eq!(parsed.get("stages").as_arr().unwrap().len(), 2);
+        assert_eq!(
+            parsed.get("stages").idx(0).get("layers").idx(1).as_usize(),
+            Some(4)
+        );
+        assert_eq!(
+            parsed.get("stages").idx(1).get("send_level"),
+            &crate::util::json::Json::Null
+        );
+    }
+}

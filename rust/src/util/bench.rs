@@ -1,0 +1,115 @@
+//! Mini-criterion: a self-contained micro-benchmark harness.
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, calibrated iteration counts, mean/stddev/min reporting, and a
+//! machine-readable line (`BENCH <name> mean_ns=<..>`) that the perf pass
+//! in EXPERIMENTS.md greps for.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "BENCH {:40} iters={:<8} mean_ns={:<14.0} stddev_ns={:<12.0} min_ns={:.0}",
+            self.name,
+            self.iters,
+            self.mean.as_nanos() as f64,
+            self.stddev.as_nanos() as f64,
+            self.min.as_nanos() as f64,
+        );
+    }
+}
+
+/// Benchmark `f`, returning timing statistics.
+///
+/// Runs a short warmup, then picks an iteration count targeting ~1s of
+/// total measurement split into 10 samples.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup + calibration: run until 50ms elapsed, counting iterations.
+    let warm_start = Instant::now();
+    let mut warm_iters: u64 = 0;
+    while warm_start.elapsed() < Duration::from_millis(50) {
+        black_box(f());
+        warm_iters += 1;
+    }
+    let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+    // Target ~1s of measurement across 10 samples, ≥1 iter per sample.
+    let samples = 10usize;
+    let iters_per_sample = ((1.0 / samples as f64) / per_iter).max(1.0) as u64;
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters_per_sample {
+            black_box(f());
+        }
+        times.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+    }
+
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: iters_per_sample * samples as u64,
+        mean: Duration::from_secs_f64(stats::mean(&times)),
+        stddev: Duration::from_secs_f64(stats::stddev(&times)),
+        min: Duration::from_secs_f64(
+            times.iter().cloned().fold(f64::INFINITY, f64::min),
+        ),
+    };
+    res.report();
+    res
+}
+
+/// Benchmark a function that is too slow for the 1s-budget loop: runs it
+/// exactly `n` times and reports.
+pub fn bench_n<T>(name: &str, n: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    let mut times = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: n as u64,
+        mean: Duration::from_secs_f64(stats::mean(&times)),
+        stddev: Duration::from_secs_f64(stats::stddev(&times)),
+        min: Duration::from_secs_f64(
+            times.iter().cloned().fold(f64::INFINITY, f64::min),
+        ),
+    };
+    res.report();
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench_n("noop", 5, || 1 + 1);
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.mean || r.mean.as_nanos() == 0);
+    }
+
+    #[test]
+    fn bench_fast_fn() {
+        let r = bench("add", || black_box(3u64) + black_box(4u64));
+        assert!(r.iters >= 10);
+        assert!(r.mean.as_secs_f64() < 0.01);
+    }
+}

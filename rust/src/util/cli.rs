@@ -1,0 +1,146 @@
+//! Minimal command-line flag parsing for the `nest` binary and examples.
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Unknown flags are an error so typos surface immediately.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    /// Flags/options the caller has declared, for unknown-flag detection.
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping the binary name).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(raw: Vec<String>) -> Self {
+        let mut a = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.opts.insert(body.to_string(), v);
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// String option with a default.
+    pub fn get(&mut self, key: &str, default: &str) -> String {
+        self.known.push(key.to_string());
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn get_opt(&mut self, key: &str) -> Option<String> {
+        self.known.push(key.to_string());
+        self.opts.get(key).cloned()
+    }
+
+    /// usize option with a default; panics with a clear message on garbage.
+    pub fn get_usize(&mut self, key: &str, default: usize) -> usize {
+        self.known.push(key.to_string());
+        match self.opts.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// f64 option with a default.
+    pub fn get_f64(&mut self, key: &str, default: f64) -> f64 {
+        self.known.push(key.to_string());
+        match self.opts.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Boolean flag (present or absent).
+    pub fn has_flag(&mut self, key: &str) -> bool {
+        self.known.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Call after all get_* calls: errors on unrecognized flags/options.
+    pub fn finish(&self) -> Result<(), String> {
+        for k in self.opts.keys() {
+            if !self.known.contains(k) {
+                return Err(format!("unknown option --{k}"));
+            }
+        }
+        for f in &self.flags {
+            if !self.known.contains(f) {
+                return Err(format!("unknown flag --{f}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_forms() {
+        let mut a = Args::parse(v(&["solve", "--model=gpt3-175b", "--devices", "512", "--verbose"]));
+        assert_eq!(a.positional(), &["solve".to_string()]);
+        assert_eq!(a.get("model", "x"), "gpt3-175b");
+        assert_eq!(a.get_usize("devices", 64), 512);
+        assert!(a.has_flag("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse(v(&[]));
+        assert_eq!(a.get_usize("devices", 64), 64);
+        assert_eq!(a.get_f64("oversub", 2.0), 2.0);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let mut a = Args::parse(v(&["--bogus", "1"]));
+        let _ = a.get("model", "x");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        let mut a = Args::parse(v(&["--devices", "many"]));
+        a.get_usize("devices", 1);
+    }
+}

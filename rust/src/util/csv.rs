@@ -1,0 +1,94 @@
+//! CSV writer for experiment outputs (`results/*.csv`).
+//!
+//! Quoting follows RFC 4180: fields containing commas, quotes, or newlines
+//! are quoted with embedded quotes doubled.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "CSV row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&join(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&join(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())
+    }
+}
+
+fn join(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| escape(c))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_escapes() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(vec!["1".into(), "x,y".into()]);
+        c.row(vec!["he said \"hi\"".into(), "z".into()]);
+        let s = c.render();
+        assert_eq!(
+            s,
+            "a,b\n1,\"x,y\"\n\"he said \"\"hi\"\"\",z\n"
+        );
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("nest_csv_test");
+        let path = dir.join("out.csv");
+        let mut c = Csv::new(&["k"]);
+        c.row(vec!["v".into()]);
+        c.write(&path).unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "k\nv\n");
+        let _ = fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,23 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline with only the `xla` crate
+//! vendored, so the usual ecosystem crates (serde, rand, clap, criterion,
+//! proptest) are re-implemented here at the scale this project needs:
+//!
+//! * [`json`]   — JSON parser/serializer for configs and artifacts metadata.
+//! * [`rng`]    — deterministic SplitMix64/PCG RNG (MCMC baseline, tests).
+//! * [`cli`]    — flag/option parsing for the `nest` binary and examples.
+//! * [`table`]  — fixed-width table pretty-printer for paper tables.
+//! * [`csv`]    — CSV writer for `results/*.csv`.
+//! * [`stats`]  — mean/median/stddev helpers.
+//! * [`bench`]  — mini-criterion: warmup + timed iterations + report.
+//! * [`prop`]   — tiny property-testing loop driver over seeded RNGs.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,75 @@
+//! Tiny property-testing driver (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, |rng| { ... })` runs a closure over `cases`
+//! independently seeded RNGs; on panic the failing seed is printed so the
+//! case can be replayed with `forall(1, <seed>, ..)`.
+
+use super::rng::Rng;
+
+/// Run `body` for `cases` random cases. Each case gets an `Rng` derived
+/// from `base_seed` and the case index; the failing case's seed is
+/// reported via a wrapping panic message.
+pub fn forall(cases: usize, base_seed: u64, mut body: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {case} (replay: forall(1, {seed}, ..))"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Draw a random subset of `[0, n)` with inclusion probability `p`.
+pub fn random_subset(rng: &mut Rng, n: usize, p: f64) -> Vec<usize> {
+    (0..n).filter(|_| rng.gen_bool(p)).collect()
+}
+
+/// Draw a random power of two in `[lo, hi]` (both inclusive, rounded to
+/// powers of two).
+pub fn random_pow2(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    let lo_exp = (lo.max(1)).next_power_of_two().trailing_zeros();
+    let hi_exp = hi.next_power_of_two().trailing_zeros();
+    let exp = lo_exp + rng.gen_range((hi_exp - lo_exp + 1) as usize) as u32;
+    1usize << exp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(25, 1, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        forall(100, 2, |rng| {
+            let v = random_pow2(rng, 1, 64);
+            assert!(v.is_power_of_two());
+            assert!((1..=64).contains(&v));
+        });
+    }
+
+    #[test]
+    fn subset_bounds() {
+        forall(50, 3, |rng| {
+            let s = random_subset(rng, 20, 0.5);
+            assert!(s.iter().all(|&i| i < 20));
+            // strictly increasing => unique
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! Fixed-width table pretty-printer used by the figure/table harnesses to
+//! print the paper's rows to the terminal.
+
+/// A simple text table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity must match header"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let pad = widths[i] - cells[i].chars().count();
+                s.push(' ');
+                s.push_str(&cells[i]);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+/// Format seconds with an adaptive unit (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2}s", secs)
+    } else {
+        format!("{:.1}min", secs / 60.0)
+    }
+}
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{:.0}{}", v, UNITS[u])
+    } else {
+        format!("{:.2}{}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["model", "tput"]);
+        t.row(vec!["gpt3".into(), "1.59x".into()]);
+        t.row(vec!["llama2-7b".into(), "2x".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(s.contains("llama2-7b"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        Table::new(&["a", "b"]).row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn time_units() {
+        assert_eq!(fmt_time(0.5e-9 * 3.0), "1.5ns");
+        assert_eq!(fmt_time(2.5e-5), "25.0µs");
+        assert_eq!(fmt_time(0.0035), "3.50ms");
+        assert_eq!(fmt_time(3.0), "3.00s");
+        assert_eq!(fmt_time(600.0), "10.0min");
+    }
+
+    #[test]
+    fn byte_units() {
+        assert_eq!(fmt_bytes(512.0), "512B");
+        assert_eq!(fmt_bytes(2048.0), "2.00KiB");
+        assert_eq!(fmt_bytes(80.0 * 1024.0 * 1024.0 * 1024.0), "80.00GiB");
+    }
+}

@@ -1,0 +1,325 @@
+//! Cross-module integration tests: solver ⇄ simulator ⇄ baselines ⇄
+//! memory model over real model/cluster combinations, plus end-to-end
+//! properties the paper's evaluation depends on.
+
+use nest::baselines::{self, build_plan, even_cuts};
+use nest::graph::models;
+use nest::graph::subgraph::SgConfig;
+use nest::harness::{run_method, HarnessOpts, Method};
+use nest::memory::ZeroStage;
+use nest::network::Cluster;
+use nest::sim::{simulate, Schedule};
+use nest::solver::{exact, solve, SolverOpts};
+use nest::util::prop;
+
+/// Every (Table-2 model × paper cluster) cell yields a valid NEST plan.
+#[test]
+fn nest_solves_every_paper_cell() {
+    for model in [
+        "bertlarge",
+        "llama2-7b",
+        "llama3-70b",
+        "gpt3-175b",
+        "gpt3-35b",
+        "mixtral-8x7b",
+    ] {
+        for cluster in [
+            Cluster::fat_tree_tpuv4(64),
+            Cluster::fat_tree_tpuv4(512),
+            Cluster::spine_leaf_h100(64, 2.0),
+            Cluster::spine_leaf_h100(256, 2.0),
+        ] {
+            let graph = models::by_name(model, 1).unwrap();
+            let sol = solve(&graph, &cluster, &SolverOpts::default())
+                .unwrap_or_else(|| panic!("{model} on {} infeasible", cluster.name));
+            sol.plan
+                .validate(&graph, &cluster)
+                .unwrap_or_else(|e| panic!("{model} on {}: {e}", cluster.name));
+            let rep = simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB);
+            assert!(rep.batch_time.is_finite() && rep.batch_time > 0.0);
+        }
+    }
+}
+
+/// Throughput is monotone in cluster size for NEST (near-linear scaling
+/// is the paper's headline; monotonicity is the hard floor).
+#[test]
+fn nest_scales_monotonically() {
+    for model in ["llama2-7b", "gpt3-175b", "mixtral-8x7b"] {
+        let graph = models::by_name(model, 1).unwrap();
+        let mut last = 0.0;
+        for n in [64usize, 128, 256, 512] {
+            let cluster = Cluster::fat_tree_tpuv4(n);
+            let sol = solve(&graph, &cluster, &SolverOpts::default()).unwrap();
+            let t = simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB).throughput;
+            assert!(
+                t >= last * 0.98,
+                "{model}@{n}: {t} < previous {last}"
+            );
+            last = t;
+        }
+    }
+}
+
+/// The DP's closed-form batch time tracks the DES within a bounded
+/// factor across models and scales (the paper's cost model is trusted
+/// for search, the testbed for evaluation — ours must agree).
+#[test]
+fn dp_estimate_tracks_des() {
+    for model in ["bertlarge", "llama2-7b", "gpt3-175b"] {
+        let graph = models::by_name(model, 1).unwrap();
+        for n in [64usize, 256] {
+            let cluster = Cluster::fat_tree_tpuv4(n);
+            let sol = solve(&graph, &cluster, &SolverOpts::default()).unwrap();
+            let des = simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB).batch_time;
+            let ratio = des / sol.plan.batch_time;
+            assert!(
+                (0.4..1.3).contains(&ratio),
+                "{model}@{n}: DES {des} vs DP {} (ratio {ratio})",
+                sol.plan.batch_time
+            );
+        }
+    }
+}
+
+/// NEST dominates every baseline under the shared evaluator (modulo the
+/// DES-vs-DP selection gap), across a grid of cells.
+#[test]
+fn nest_dominates_baselines_grid() {
+    let opts = HarnessOpts::quick();
+    for (model, cluster) in [
+        ("llama2-7b", Cluster::fat_tree_tpuv4(128)),
+        ("gpt3-175b", Cluster::spine_leaf_h100(128, 2.0)),
+        ("mixtral-8x7b", Cluster::fat_tree_tpuv4(128)),
+    ] {
+        let graph = models::by_name(model, 1).unwrap();
+        let nest = run_method(&graph, &cluster, Method::Nest, &opts);
+        assert!(nest.throughput() > 0.0, "{model}: nest failed");
+        for m in [Method::Manual, Method::Mcmc, Method::Phaze, Method::AlpaE] {
+            let r = run_method(&graph, &cluster, m, &opts);
+            if r.throughput() > 0.0 {
+                assert!(
+                    nest.throughput() >= r.throughput() * 0.88,
+                    "{model}: nest {} < {} {}",
+                    nest.throughput(),
+                    m.name(),
+                    r.throughput()
+                );
+            }
+        }
+    }
+}
+
+/// Memory-constrained feasibility (Table 7): ZeRO unlocks placements
+/// that are infeasible without it, and the produced plans respect the
+/// reduced capacity.
+#[test]
+fn zero_unlocks_constrained_placements() {
+    let graph = models::llama3_70b(1);
+    let mut cluster = Cluster::fat_tree_tpuv4(512);
+    cluster.accel = cluster.accel.with_capacity(16.0 * nest::hw::GIB);
+    let without = solve(
+        &graph,
+        &cluster,
+        &SolverOpts {
+            zero_max_degree: 1,
+            try_recompute: false,
+            ..Default::default()
+        },
+    );
+    let with = solve(&graph, &cluster, &SolverOpts::default());
+    assert!(with.is_some(), "ZeRO+AR should fit 16GB");
+    with.as_ref()
+        .unwrap()
+        .plan
+        .validate(&graph, &cluster)
+        .unwrap();
+    if let Some(w) = &without {
+        // If plain fits at all it must not beat the adaptive plan.
+        assert!(w.plan.batch_time >= with.unwrap().plan.batch_time * 0.999);
+    }
+}
+
+/// Property: random valid build_plan inputs always produce plans that
+/// validate, and simulating them never panics.
+#[test]
+fn prop_random_plans_validate_and_simulate() {
+    let graph = models::gpt3_35b(1);
+    let cluster = Cluster::spine_leaf_h100(128, 2.0);
+    prop::forall(60, 0xA11CE, |rng| {
+        let n = graph.n_layers();
+        let tp = [1usize, 2, 4, 8][rng.gen_range(4)];
+        let sg = SgConfig {
+            tp,
+            sp: tp > 1 && rng.gen_bool(0.5),
+            ep: 1,
+            cp: 1,
+        };
+        let g = sg.group_size();
+        let p_max = (128 / g).min(n);
+        let p = 1 + rng.gen_range(p_max.min(16));
+        let d_max = 128 / (p * g);
+        if d_max == 0 {
+            return;
+        }
+        let d = 1 + rng.gen_range(d_max);
+        let cuts = even_cuts(n, p);
+        if let Some(plan) = build_plan(
+            &graph,
+            &cluster,
+            "prop",
+            sg,
+            &cuts,
+            d,
+            rng.gen_bool(0.5),
+            8,
+        ) {
+            plan.validate(&graph, &cluster).expect("invalid plan");
+            let rep = simulate(&graph, &cluster, &plan, Schedule::OneFOneB);
+            assert!(rep.batch_time.is_finite());
+            // DES never beats the impossible bound: bottleneck stage's
+            // compute work alone.
+            let floor = plan
+                .stages
+                .iter()
+                .map(|s| s.load)
+                .fold(0.0, f64::max);
+            assert!(rep.batch_time >= floor * 0.5);
+        }
+    });
+}
+
+/// Exact solver (small clusters) agrees with the uniform solver when
+/// restricted to the uniform space, and both validate.
+#[test]
+fn exact_and_uniform_agree_on_v100() {
+    let graph = models::mixtral_scaled(1);
+    for n in [8usize, 16] {
+        let cluster = Cluster::v100_cluster(n);
+        let uni = solve(&graph, &cluster, &SolverOpts::default()).unwrap();
+        uni.plan.validate(&graph, &cluster).unwrap();
+        let ex = exact::solve_exact(
+            &graph,
+            &cluster,
+            &exact::ExactOpts {
+                max_stages: 8,
+                dp_width: uni.plan.dp_width,
+                recompute: uni.plan.stages[0].mem.recompute,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        ex.plan.validate(&graph, &cluster).unwrap();
+        assert!(ex.plan.batch_time <= uni.plan.batch_time * 1.0001);
+    }
+}
+
+/// Baseline failure modes the paper reports must reproduce:
+/// Mist rejects MoE + hidden>8192; Alpa never replicates pipelines.
+#[test]
+fn baseline_failure_modes() {
+    let c = Cluster::spine_leaf_h100(64, 2.0);
+    assert!(baselines::mist::solve(&models::mixtral_8x7b(1), &c).is_none());
+    assert!(baselines::mist::solve(&models::gpt3_175b(1), &c).is_none());
+    let alpa = baselines::alpa::solve(&models::bert_large(1), &c).unwrap();
+    assert_eq!(alpa.dp_width, 1);
+}
+
+/// Microbatch-size coupling (Figure 6): for Llama2 larger microbatches
+/// change the chosen strategy or improve throughput; for all models the
+/// solver still validates at every mbs.
+#[test]
+fn microbatch_sweep_validates() {
+    let cluster = Cluster::fat_tree_tpuv4(256);
+    for model in ["bertlarge", "llama2-7b"] {
+        let mut tputs = Vec::new();
+        for mbs in [1usize, 2, 4] {
+            let graph = models::by_name(model, mbs).unwrap();
+            let sol = solve(&graph, &cluster, &SolverOpts::default()).unwrap();
+            sol.plan.validate(&graph, &cluster).unwrap();
+            tputs.push(simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB).throughput);
+        }
+        // Throughput shouldn't collapse with microbatch growth.
+        assert!(tputs.iter().all(|t| *t > 0.0), "{model}: {tputs:?}");
+    }
+}
+
+/// ZeRO stages in produced plans never exceed the data-parallel width
+/// (they shard across replicas), across a random sample of solves.
+#[test]
+fn prop_zero_degree_bounded_by_dp() {
+    prop::forall(10, 0x5A5A_F00Du64, |rng| {
+        let model = ["llama3-70b", "gpt3-175b"][rng.gen_range(2)];
+        let n = [64usize, 128, 256][rng.gen_range(3)];
+        let graph = models::by_name(model, 1).unwrap();
+        let mut cluster = Cluster::fat_tree_tpuv4(n);
+        if rng.gen_bool(0.5) {
+            cluster.accel = cluster.accel.with_capacity(24.0 * nest::hw::GIB);
+        }
+        if let Some(sol) = solve(&graph, &cluster, &SolverOpts::default()) {
+            for st in &sol.plan.stages {
+                assert!(st.mem.zero.degree() <= sol.plan.dp_width.max(1));
+                assert!(st.mem.zero == ZeroStage::None || st.mem.zero.degree() >= 2);
+            }
+        }
+    });
+}
+
+/// Shipped topology configs load and solve (the App. B.1 network
+/// interface; configs/ directory).
+#[test]
+fn shipped_configs_solve() {
+    for (file, expect_devices) in [
+        ("configs/dgx_superpod.json", 256usize),
+        ("configs/oversubscribed_4to1.json", 128),
+    ] {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let cluster =
+            Cluster::from_json(&nest::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(cluster.n_devices(), expect_devices, "{file}");
+        let graph = models::llama2_7b(1);
+        let sol = solve(&graph, &cluster, &SolverOpts::default()).unwrap();
+        sol.plan.validate(&graph, &cluster).unwrap();
+    }
+}
+
+/// The solver is deterministic: identical inputs give identical plans.
+#[test]
+fn solver_deterministic() {
+    let graph = models::gpt3_35b(1);
+    let cluster = Cluster::spine_leaf_h100(128, 2.0);
+    let a = solve(&graph, &cluster, &SolverOpts::default()).unwrap();
+    let b = solve(&graph, &cluster, &SolverOpts::default()).unwrap();
+    assert_eq!(a.plan.strategy_string(), b.plan.strategy_string());
+    assert_eq!(a.plan.batch_time, b.plan.batch_time);
+    let cuts_a: Vec<_> = a.plan.stages.iter().map(|s| s.layers).collect();
+    let cuts_b: Vec<_> = b.plan.stages.iter().map(|s| s.layers).collect();
+    assert_eq!(cuts_a, cuts_b);
+}
+
+/// Plan JSON export round-trips through our own parser and carries the
+/// full stage structure.
+#[test]
+fn plan_json_export_complete() {
+    let graph = models::mixtral_8x7b(1);
+    let cluster = Cluster::fat_tree_tpuv4(128);
+    let plan = solve(&graph, &cluster, &SolverOpts::default()).unwrap().plan;
+    let j = nest::util::json::parse(&nest::util::json::to_pretty(&plan.to_json())).unwrap();
+    assert_eq!(
+        j.get("stages").as_arr().unwrap().len(),
+        plan.n_stages()
+    );
+    assert_eq!(
+        j.get("data_parallel").as_usize(),
+        Some(plan.dp_width)
+    );
+    // Stage layer ranges tile the model.
+    let stages = j.get("stages").as_arr().unwrap();
+    let mut expect = 0;
+    for st in stages {
+        assert_eq!(st.get("layers").idx(0).as_usize(), Some(expect));
+        expect = st.get("layers").idx(1).as_usize().unwrap();
+    }
+    assert_eq!(expect, graph.n_layers());
+}
