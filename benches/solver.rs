@@ -8,7 +8,7 @@ use nest::graph::models;
 use nest::network::Cluster;
 use nest::solver::exact::{solve_exact, ExactOpts};
 use nest::solver::{solve, SolverOpts};
-use nest::util::bench::{bench, bench_n};
+use nest::util::bench::{bench, bench_n, report_speedup};
 
 fn main() {
     let opts = SolverOpts::default();
@@ -40,11 +40,19 @@ fn main() {
     bench_n("solve_gpt3_35b_spineleaf_1024", 3, || solve(&g35, &sl, &opts));
     bench_n("mist_gpt3_35b_spineleaf_1024", 3, || mist::solve(&g35, &sl));
 
-    // Exact small-cluster solver (§5.4 regime).
+    // Exact small-cluster solver (§5.4 regime), serial for a stable
+    // baseline comparable across machines.
     let mx = models::mixtral_scaled(1);
     let v = Cluster::v100_cluster(16);
     bench_n("solve_exact_mixtral790m_v100_16", 3, || {
-        solve_exact(&mx, &v, &ExactOpts::default())
+        solve_exact(
+            &mx,
+            &v,
+            &ExactOpts {
+                threads: 1,
+                ..Default::default()
+            },
+        )
     });
 
     // Scaling with cluster size (the paper's 3 min – 1.5 h claim is about
@@ -56,4 +64,55 @@ fn main() {
             solve(&g, &c, &opts)
         });
     }
+
+    // Single- vs multi-thread solve (Table 4 wall-clock target): the
+    // outer (sg, recompute) enumeration fans out over workers with a
+    // shared pruning incumbent; plans are identical, only time differs.
+    let g = models::gpt3_175b(1);
+    let c = Cluster::fat_tree_tpuv4(256);
+    let single = bench_n("solve_gpt3_175b_fattree_256_threads1", 3, || {
+        solve(
+            &g,
+            &c,
+            &SolverOpts {
+                threads: 1,
+                ..Default::default()
+            },
+        )
+    });
+    let multi = bench_n("solve_gpt3_175b_fattree_256_threads4", 3, || {
+        solve(
+            &g,
+            &c,
+            &SolverOpts {
+                threads: 4,
+                ..Default::default()
+            },
+        )
+    });
+    report_speedup("solve_gpt3_175b_256_4t_over_1t", &single, &multi);
+
+    let g35 = models::gpt3_35b(1);
+    let sl = Cluster::spine_leaf_h100(256, 2.0);
+    let single = bench_n("solve_gpt3_35b_spineleaf_256_threads1", 3, || {
+        solve(
+            &g35,
+            &sl,
+            &SolverOpts {
+                threads: 1,
+                ..Default::default()
+            },
+        )
+    });
+    let multi = bench_n("solve_gpt3_35b_spineleaf_256_threads4", 3, || {
+        solve(
+            &g35,
+            &sl,
+            &SolverOpts {
+                threads: 4,
+                ..Default::default()
+            },
+        )
+    });
+    report_speedup("solve_gpt3_35b_256_4t_over_1t", &single, &multi);
 }

@@ -73,6 +73,14 @@ impl HarnessOpts {
             ..Default::default()
         }
     }
+
+    /// Same options with the NEST solver's worker-thread count overridden
+    /// (0 = one per core). Plans are unaffected — the solver is
+    /// thread-count-invariant; only Table 4 wall-clock changes.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.solver.threads = threads;
+        self
+    }
 }
 
 /// One method's outcome on one (model, cluster) cell.

@@ -52,12 +52,16 @@ fn main() {
     let oversub = args.get_f64("oversub", 2.0);
     let quick = args.has_flag("quick");
     let results_dir = args.get("results", "results");
+    // Solver worker threads (0 = one per core); plans are identical for
+    // every thread count — see nest::solver docs.
+    let threads = args.get_usize("threads", 0);
 
     let mut hopts = if quick {
         HarnessOpts::quick()
     } else {
         HarnessOpts::default()
-    };
+    }
+    .with_threads(threads);
     hopts.results_dir = results_dir;
 
     let run = |args: &mut Args| -> Result<(), String> {
@@ -67,8 +71,11 @@ fn main() {
                     .ok_or_else(|| format!("unknown model '{model}'"))?;
                 let cluster = cluster_by_name(&cluster_name, devices, oversub)?;
                 println!("{}", cluster.describe());
-                let sol = solve(&graph, &cluster, &SolverOpts::default())
-                    .ok_or("no feasible placement")?;
+                let sopts = SolverOpts {
+                    threads,
+                    ..Default::default()
+                };
+                let sol = solve(&graph, &cluster, &sopts).ok_or("no feasible placement")?;
                 if let Some(out) = args.get_opt("out") {
                     std::fs::write(
                         &out,
@@ -222,7 +229,7 @@ fn main() {
                      \x20 figure2|figure5|figure6|figure7|figure10|figure11\n\
                      \x20 table2|table4|table6|table7 | v100 | torus\n\
                      \x20 all        run the complete evaluation\n\n\
-                     global: --quick (smaller sweeps), --results <dir>\n\n\
+                     global: --quick (smaller sweeps), --results <dir>, --threads N (solver workers; 0 = all cores)\n\n\
                      models: llama2-7b llama3-70b bertlarge gpt3-175b gpt3-35b mixtral-8x7b mixtral-790m"
                 );
                 Ok(())

@@ -125,10 +125,20 @@ impl Cluster {
         self.allreduce(bytes, &shape)
     }
 
-    /// Map a shape index to the tier the ring at that index runs over:
-    /// index i rings over the tier at the i-th *used* position, offset by
-    /// leading 1-entries (spread shapes pad inner tiers with 1s).
-    fn tier_for(&self, shape_idx: usize, _shape: &[usize]) -> usize {
+    /// Map a shape index to the tier the ring at that index runs over.
+    /// Shapes are tier-aligned: `compact_shape` / `spread_shape` emit
+    /// exactly one entry per tier, innermost first, with 1-entries
+    /// holding the slots of tiers no ring runs over (the inner tiers a
+    /// spread group's stride fully covers — `[1, 1, 4]` is a DP group
+    /// whose members sit one leaf apart, ringing at the aggregation
+    /// tier — or a degenerate arity-1 tier). So entry `i` rings over
+    /// tier `i`, clamped for hand-built shapes deeper than the
+    /// hierarchy.
+    fn tier_for(&self, shape_idx: usize, shape: &[usize]) -> usize {
+        debug_assert!(
+            shape_idx < shape.len() && shape[shape_idx] > 1,
+            "tier_for queried for a non-ringing shape entry"
+        );
         shape_idx.min(self.n_levels() - 1)
     }
 }
@@ -219,6 +229,26 @@ mod tests {
         let near = c.dp_allreduce(b, 4, 8);
         let far = c.dp_allreduce(b, 4, 32);
         assert!(near < far, "near {near} far {far}");
+    }
+
+    #[test]
+    fn spread_shape_allreduce_priced_at_outer_tier() {
+        // Regression for tier_for ignoring its shape argument: a spread
+        // DP-allreduce shape like [1, 1, 4] must ring at the tier past
+        // its leading 1-entries (the aggregation tier here), not at an
+        // inner tier.
+        let c = cluster(); // fat-tree, caps [8, 32, 1024]
+        let b = 1e9;
+        let t = c.allreduce(b, &[1, 1, 4]);
+        let expect = 2.0 * 3.0 / 4.0 * b / c.bw_eff(2) + 2.0 * 3.0 * c.tiers[2].latency;
+        assert!(
+            (t - expect).abs() / expect < 1e-9,
+            "[1,1,4] should price at the agg tier: {t} vs {expect}"
+        );
+        // And dp_allreduce at a one-leaf stride produces exactly that.
+        assert_eq!(c.spread_shape(4, 32), vec![1, 1, 4]);
+        let dp = c.dp_allreduce(b, 4, 32);
+        assert!((dp - expect).abs() / expect < 1e-9, "dp {dp} vs {expect}");
     }
 
     #[test]

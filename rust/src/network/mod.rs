@@ -352,20 +352,34 @@ impl Cluster {
     }
 
     /// Shape of a data-parallel group of `d` replicas whose members are
-    /// spaced `stride` devices apart (one per pipeline replica). The group
-    /// occupies the tiers *above* the stride's level.
+    /// spaced `stride` devices apart (one per pipeline replica). Tiers the
+    /// stride fully spans contribute a 1-entry (no ring runs there — at
+    /// most one member lives in each such subtree); each outer tier's
+    /// entry is the number of members inside its subtree divided by the
+    /// members of the subtree below. Example on capacities `[8, 32, 1024]`:
+    /// `spread_shape(32, 8) = [1, 4, 8]` — a stride-8 group has one member
+    /// per node, rings over 4 members inside each leaf and over 8 leaf
+    /// groups at the aggregation tier. The stride == capacity boundary
+    /// matters: members exactly one node apart ring at the *leaf* tier,
+    /// never over NVLink.
     pub fn spread_shape(&self, d: usize, stride: usize) -> Vec<usize> {
-        // All tiers at or below the stride level contribute 1 participant.
-        let base = self.level_of_group(stride.max(1));
-        let mut shape = vec![1usize; base];
-        let mut rem = d;
-        for t in self.tiers.iter().skip(base) {
-            if rem == 1 {
+        let d = d.max(1);
+        let stride = stride.max(1);
+        let mut shape = Vec::new();
+        let mut cap = 1usize; // cumulative subtree capacity
+        let mut below = 1usize; // members per subtree at the previous tier
+        for t in &self.tiers {
+            cap *= t.arity;
+            // Members land every `stride` devices from offset 0, so a
+            // subtree of `cap` devices holds ⌈cap / stride⌉ of them;
+            // ceil on both divisions (like `compact_shape`) keeps the
+            // shape's product ≥ d for non-divisible strides.
+            let members = cap.div_ceil(stride).clamp(1, d);
+            shape.push(members.div_ceil(below));
+            below = members;
+            if members >= d {
                 break;
             }
-            let here = rem.min(t.arity);
-            shape.push(here);
-            rem = rem.div_ceil(here);
         }
         if shape.iter().all(|&x| x == 1) {
             shape = vec![d.max(1)];
@@ -469,6 +483,20 @@ mod tests {
         assert!(s[2] >= 1);
         let prod: usize = s.iter().product();
         assert!(prod >= 8);
+    }
+
+    #[test]
+    fn spread_shape_strides_past_covered_tiers() {
+        let c = Cluster::fat_tree_tpuv4(1024); // caps [8, 32, 1024]
+        // Members one node apart: the ring runs at the leaf tier, never
+        // over NVLink (regression: the old impl returned [4] here).
+        assert_eq!(c.spread_shape(4, 8), vec![1, 4]);
+        // Members one leaf apart: ring at the aggregation tier.
+        assert_eq!(c.spread_shape(4, 32), vec![1, 1, 4]);
+        // Stride-8 members fill the leaf (4 per leaf) then spill upward.
+        assert_eq!(c.spread_shape(32, 8), vec![1, 4, 8]);
+        // Stride 1 degenerates to compact packing.
+        assert_eq!(c.spread_shape(256, 1), vec![8, 4, 8]);
     }
 
     #[test]

@@ -16,8 +16,16 @@
 //! cross-check against brute-force enumeration on tiny instances,
 //! providing the paper's "provable optimality" evidence for our
 //! implementation.
+//!
+//! Like the scalable solver, the DP is multi-threaded
+//! ([`ExactOpts::threads`], 0 = one per core): within a stage-count
+//! layer `s`, states `(i, k, s)` only read layer `s−1`, so the device
+//! counts `k` fan out over scoped workers whose results merge before the
+//! next layer. States are computed identically regardless of scheduling,
+//! so the result is deterministic and thread-count-invariant.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 use crate::cost::CostModel;
@@ -28,7 +36,7 @@ use crate::network::Cluster;
 
 use super::assign::boundary_level;
 use super::plan::{PlacementPlan, StagePlan};
-use super::Solution;
+use super::{resolve_threads, Solution};
 
 /// Options for the exact solver.
 #[derive(Debug, Clone)]
@@ -39,6 +47,9 @@ pub struct ExactOpts {
     /// Data-parallel replication of the resulting pipeline (1 = use the
     /// whole cluster for one pipeline).
     pub dp_width: usize,
+    /// Worker threads for the per-layer DP fan-out (0 = one per core).
+    /// Deterministic: the plan is identical for every thread count.
+    pub threads: usize,
 }
 
 impl Default for ExactOpts {
@@ -48,6 +59,7 @@ impl Default for ExactOpts {
             zero_max_degree: 8,
             recompute: false,
             dp_width: 1,
+            threads: 0,
         }
     }
 }
@@ -58,6 +70,95 @@ struct Back {
     alloc: u16,
     sg_idx: u16,
     spec: MemSpec,
+}
+
+type DpMap = HashMap<(usize, usize, usize), (f64, Back)>;
+type DpEntry = ((usize, usize, usize), (f64, Back));
+
+/// Compute every layer-`s` state for one device count `k`. Reads only
+/// layer `s−1` of `dp`, so calls for different `k` are independent — the
+/// parallel fan-out below relies on exactly this.
+#[allow(clippy::too_many_arguments)]
+fn layer_states_for_k(
+    n: usize,
+    cluster: &Cluster,
+    cms: &[CostModel],
+    dp: &DpMap,
+    cap: f64,
+    zero_cap: usize,
+    recompute: bool,
+    s: usize,
+    k: usize,
+    states: &mut u64,
+    out: &mut Vec<DpEntry>,
+) {
+    let l_recv = boundary_level(cluster, k);
+    for i in (0..n).rev() {
+        if n - i < s {
+            continue;
+        }
+        let mut best: Option<(f64, Back)> = None;
+        for (ci, cm) in cms.iter().enumerate() {
+            let a = cm.group;
+            // The last stage may leave an idle tail (a < k); middle
+            // stages must leave at least one device per remaining stage.
+            if a > k || (s > 1 && k - a < s - 1) {
+                continue;
+            }
+            let stash = s - 1;
+            let l_send = if s > 1 {
+                Some(boundary_level(cluster, k - a))
+            } else {
+                None
+            };
+            if s == 1 {
+                let Some(spec) = cm.stage_choose_spec(i, n, stash, cap, zero_cap, recompute)
+                else {
+                    continue;
+                };
+                let load = cm.stage_load(i, n, Some(l_recv), None, &spec, cluster);
+                *states += 1;
+                if best.map(|(b, _)| load < b).unwrap_or(true) {
+                    best = Some((
+                        load,
+                        Back {
+                            cut: n as u32,
+                            alloc: a as u16,
+                            sg_idx: ci as u16,
+                            spec,
+                        },
+                    ));
+                }
+                continue;
+            }
+            for j in (i + 1)..=(n - (s - 1)) {
+                let Some(&(rest, _)) = dp.get(&(j, k - a, s - 1)) else {
+                    continue;
+                };
+                let Some(spec) = cm.stage_choose_spec(i, j, stash, cap, zero_cap, recompute)
+                else {
+                    break; // memory monotone in j
+                };
+                let load = cm.stage_load(i, j, Some(l_recv), l_send, &spec, cluster);
+                *states += 1;
+                let cand = load.max(rest);
+                if best.map(|(b, _)| cand < b).unwrap_or(true) {
+                    best = Some((
+                        cand,
+                        Back {
+                            cut: j as u32,
+                            alloc: a as u16,
+                            sg_idx: ci as u16,
+                            spec,
+                        },
+                    ));
+                }
+            }
+        }
+        if let Some(b) = best {
+            out.push(((i, k, s), b));
+        }
+    }
 }
 
 /// Solve with the exact per-stage-allocation DP. `cluster` devices are
@@ -88,82 +189,71 @@ pub fn solve_exact(graph: &LayerGraph, cluster: &Cluster, opts: &ExactOpts) -> O
 
     // dp[(i, k, s)] = min bottleneck for suffix [i, n) on k tail devices
     // in s stages, including the producer edge at boundary_level(k).
-    let mut dp: HashMap<(usize, usize, usize), (f64, Back)> = HashMap::new();
+    // Layer s reads only layer s−1, so each layer's device counts fan out
+    // over scoped workers; entries merge before the next layer starts.
+    let mut dp: DpMap = HashMap::new();
     let mut states: u64 = 0;
+    let recompute = opts.recompute;
 
     for s in 1..=s_max {
-        for k in s..=k_rep {
-            let l_recv = boundary_level(cluster, k);
-            for i in (0..n).rev() {
-                if n - i < s {
-                    continue;
+        let ks: Vec<usize> = (s..=k_rep).collect();
+        let n_threads = if ks.len() >= 4 {
+            resolve_threads(opts.threads).min(ks.len())
+        } else {
+            1
+        };
+        if n_threads <= 1 {
+            let mut entries: Vec<DpEntry> = Vec::new();
+            for &k in &ks {
+                layer_states_for_k(
+                    n, cluster, &cms, &dp, cap, zero_cap, recompute, s, k, &mut states,
+                    &mut entries,
+                );
+            }
+            dp.extend(entries);
+        } else {
+            let next = AtomicUsize::new(0);
+            let mut merged: Vec<(Vec<DpEntry>, u64)> = Vec::with_capacity(n_threads);
+            std::thread::scope(|scope| {
+                let dp_ref = &dp;
+                let cms_ref = &cms;
+                let ks_ref = &ks;
+                let next_ref = &next;
+                let handles: Vec<_> = (0..n_threads)
+                    .map(|_| {
+                        scope.spawn(move || {
+                            let mut local: Vec<DpEntry> = Vec::new();
+                            let mut st = 0u64;
+                            loop {
+                                let idx = next_ref.fetch_add(1, Ordering::Relaxed);
+                                if idx >= ks_ref.len() {
+                                    break;
+                                }
+                                layer_states_for_k(
+                                    n,
+                                    cluster,
+                                    cms_ref,
+                                    dp_ref,
+                                    cap,
+                                    zero_cap,
+                                    recompute,
+                                    s,
+                                    ks_ref[idx],
+                                    &mut st,
+                                    &mut local,
+                                );
+                            }
+                            (local, st)
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    merged.push(h.join().expect("exact solver worker panicked"));
                 }
-                let mut best: Option<(f64, Back)> = None;
-                for (ci, cm) in cms.iter().enumerate() {
-                    let a = cm.group;
-                    if a > k || (s > 1 && k - a < s - 1) || (s == 1 && a != k && a > k) {
-                        continue;
-                    }
-                    if s == 1 && a != k {
-                        // Last stage absorbs all remaining devices only if
-                        // its group matches; allow a < k (idle tail).
-                    }
-                    let stash = s - 1;
-                    let l_send = if s > 1 {
-                        Some(boundary_level(cluster, k - a))
-                    } else {
-                        None
-                    };
-                    if s == 1 {
-                        let Some(spec) =
-                            cm.stage_choose_spec(i, n, stash, cap, zero_cap, opts.recompute)
-                        else {
-                            continue;
-                        };
-                        let load = cm.stage_load(i, n, Some(l_recv), None, &spec, cluster);
-                        states += 1;
-                        if best.map(|(b, _)| load < b).unwrap_or(true) {
-                            best = Some((
-                                load,
-                                Back {
-                                    cut: n as u32,
-                                    alloc: a as u16,
-                                    sg_idx: ci as u16,
-                                    spec,
-                                },
-                            ));
-                        }
-                        continue;
-                    }
-                    for j in (i + 1)..=(n - (s - 1)) {
-                        let Some(&(rest, _)) = dp.get(&(j, k - a, s - 1)) else {
-                            continue;
-                        };
-                        let Some(spec) =
-                            cm.stage_choose_spec(i, j, stash, cap, zero_cap, opts.recompute)
-                        else {
-                            break; // memory monotone in j
-                        };
-                        let load =
-                            cm.stage_load(i, j, Some(l_recv), l_send, &spec, cluster);
-                        states += 1;
-                        let cand = load.max(rest);
-                        if best.map(|(b, _)| cand < b).unwrap_or(true) {
-                            best = Some((
-                                cand,
-                                Back {
-                                    cut: j as u32,
-                                    alloc: a as u16,
-                                    sg_idx: ci as u16,
-                                    spec,
-                                },
-                            ));
-                        }
-                    }
-                }
-                if let Some(b) = best {
-                    dp.insert((i, k, s), b);
-                }
+            });
+            for (entries, st) in merged {
+                states += st;
+                dp.extend(entries);
             }
         }
     }

@@ -8,7 +8,10 @@ use crate::memory::MemSpec;
 use crate::network::Cluster;
 
 /// One pipeline stage of a plan.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is field-for-field (exact float equality) — used by the
+/// solver's thread-count-invariance tests.
+#[derive(Debug, Clone, PartialEq)]
 pub struct StagePlan {
     /// Layer range `[start, end)` into the model's layer chain.
     pub layers: (usize, usize),
@@ -28,7 +31,12 @@ pub struct StagePlan {
 
 /// A complete placement plan: SUB-GRAPH config, pipeline stages, and
 /// data-parallel replication.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares every field exactly (floats included): two plans
+/// are equal only if they encode the same decisions *and* the same
+/// modeled costs. The solver guarantees this equality across thread
+/// counts (see `solver` module docs).
+#[derive(Debug, Clone, PartialEq)]
 pub struct PlacementPlan {
     pub model_name: String,
     /// Which method produced it ("nest", "manual", "mcmc", ...).

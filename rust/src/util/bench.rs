@@ -95,6 +95,23 @@ pub fn bench_n<T>(name: &str, n: usize, mut f: impl FnMut() -> T) -> BenchResult
     res
 }
 
+/// Report the speedup of `fast` over `base` (ratio of mean times) in the
+/// machine-readable BENCH format the perf pass greps for. Returns the
+/// speedup factor.
+pub fn report_speedup(name: &str, base: &BenchResult, fast: &BenchResult) -> f64 {
+    let base_s = base.mean.as_secs_f64();
+    let fast_s = fast.mean.as_secs_f64().max(1e-12);
+    let speedup = base_s / fast_s;
+    println!(
+        "BENCH {:40} speedup={:<8.2} base_ns={:<14.0} fast_ns={:.0}",
+        name,
+        speedup,
+        base.mean.as_nanos() as f64,
+        fast.mean.as_nanos() as f64,
+    );
+    speedup
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,5 +128,18 @@ mod tests {
         let r = bench("add", || black_box(3u64) + black_box(4u64));
         assert!(r.iters >= 10);
         assert!(r.mean.as_secs_f64() < 0.01);
+    }
+
+    #[test]
+    fn speedup_is_base_over_fast() {
+        let mk = |ns: u64| BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_nanos(ns),
+            stddev: Duration::ZERO,
+            min: Duration::from_nanos(ns),
+        };
+        let s = report_speedup("pair", &mk(4000), &mk(1000));
+        assert!((s - 4.0).abs() < 1e-9);
     }
 }

@@ -298,6 +298,51 @@ fn solver_deterministic() {
     assert_eq!(cuts_a, cuts_b);
 }
 
+/// The parallel outer enumeration is thread-count-invariant: 1-thread
+/// and N-thread solves return field-for-field identical plans (the
+/// shared incumbent only prunes candidates strictly worse than the
+/// optimum, and ties break on a total order — see nest::solver docs).
+#[test]
+fn solver_thread_count_invariant() {
+    for (graph, cluster) in [
+        (models::bert_large(1), Cluster::fat_tree_tpuv4(64)),
+        (models::gpt3_35b(1), Cluster::spine_leaf_h100(64, 2.0)),
+        (models::mixtral_scaled(1), Cluster::v100_cluster(8)),
+    ] {
+        let serial = solve(
+            &graph,
+            &cluster,
+            &SolverOpts {
+                threads: 1,
+                ..Default::default()
+            },
+        );
+        let threaded = solve(
+            &graph,
+            &cluster,
+            &SolverOpts {
+                threads: 4,
+                ..Default::default()
+            },
+        );
+        match (serial, threaded) {
+            (Some(a), Some(b)) => assert_eq!(
+                a.plan, b.plan,
+                "{} on {}: plan depends on thread count",
+                graph.model_name, cluster.name
+            ),
+            (None, None) => {}
+            (a, b) => panic!(
+                "{} on {}: feasibility depends on thread count (serial={}, threaded={})",
+                graph.model_name,
+                cluster.name,
+                a.is_some(),
+                b.is_some()
+            ),
+        }
+    }
+}
+
 /// Plan JSON export round-trips through our own parser and carries the
 /// full stage structure.
 #[test]

@@ -1,0 +1,148 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment vendors every dependency (no network, no
+//! registry), so this crate re-implements the subset of anyhow's API the
+//! project uses: [`Error`], [`Result`], the [`Context`] extension trait,
+//! and the `anyhow!` / `ensure!` / `bail!` macros. Error chains are
+//! flattened into a single string eagerly — fine for diagnostics, which
+//! is all this project uses errors for.
+
+use std::fmt;
+
+/// A string-backed error. Like `anyhow::Error` it deliberately does NOT
+/// implement `std::error::Error`, so the blanket
+/// `impl<E: std::error::Error> From<E> for Error` stays coherent with the
+/// reflexive `From<Error> for Error` the standard library provides.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend context, anyhow-style (`context: cause`).
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` prints the whole (flattened) chain in real anyhow; ours
+        // is already flat, so both forms render the same string.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($rest:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($rest)*));
+        }
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($rest:tt)*) => {
+        return Err($crate::anyhow!($($rest)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("base {}", 42))
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: base 42");
+        assert_eq!(format!("{e:#}"), "outer: base 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_and_question_mark() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            let parsed: u32 = "7".parse()?; // std error converts via From
+            Ok(parsed + x)
+        }
+        assert_eq!(f(1).unwrap(), 8);
+        assert!(f(0).is_err());
+    }
+}

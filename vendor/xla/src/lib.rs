@@ -1,0 +1,154 @@
+//! API-compatible stub of the `xla` (PJRT) crate.
+//!
+//! The real crate wraps libxla's PJRT C API and is only present on hosts
+//! with the XLA toolchain installed. This stub exposes the same surface
+//! so the runtime/trainer/profiler modules type-check and the rest of the
+//! workspace builds offline; every entry point that would touch PJRT
+//! returns [`XlaError`] at runtime. Callers already gate real execution
+//! on `artifacts/` being present (see `nest::runtime::artifacts_dir`), so
+//! the error paths are never hit in tests — if artifacts ever appear on a
+//! PJRT-less host, the error message says exactly what is missing.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`: implements `std::error::Error` so
+/// `?` converts it into the caller's error type.
+#[derive(Debug, Clone)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT backend not available in this build (the `xla` crate \
+         is stubbed for offline environments; install libxla and swap in \
+         the real vendored crate to execute artifacts)"
+    ))
+}
+
+/// Host-side literal (tensor) handle. The stub carries no data; literal
+/// construction succeeds (shape validation happens in the caller) and
+/// every data-access method reports the backend as unavailable.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Scalar literal.
+    pub fn scalar<T>(_value: T) -> Literal {
+        Literal
+    }
+
+    /// Reshape to `dims` (stub: shape bookkeeping is the caller's).
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Copy the buffer out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    /// First element of the buffer.
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(unavailable("Literal::get_first_element"))
+    }
+
+    /// Flatten a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer returned by execution.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with owned or borrowed literal arguments (the generic
+    /// mirrors the real crate's `BufferArgument` flexibility).
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU PJRT client — unavailable in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("not available"), "{msg}");
+    }
+
+    #[test]
+    fn literal_construction_succeeds() {
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+        let _ = Literal::scalar(3i32);
+    }
+}
