@@ -1,0 +1,56 @@
+//! Flow-level simulator benchmarks: topology expansion + routing-table
+//! construction, the max-min fair-share engine on a synthetic permutation
+//! load, and an end-to-end plan lowering + replay. The engine sits in the
+//! harness cross-validation path, so routing builds should stay in the
+//! milliseconds and full batch replays in the tens of milliseconds at
+//! 64 devices.
+
+use nest::graph::models;
+use nest::netsim::{self, FlowSpec, LinkGraph, TaskKind, Workload};
+use nest::network::Cluster;
+use nest::sim::Schedule;
+use nest::solver::{solve, SolverOpts};
+use nest::util::bench::{bench, bench_n};
+
+fn main() {
+    // Topology expansion + deterministic routing tables.
+    let fat64 = Cluster::fat_tree_tpuv4(64);
+    let spine128 = Cluster::spine_leaf_h100(128, 4.0);
+    bench("linkgraph_from_cluster_64", || {
+        LinkGraph::from_cluster(&fat64)
+    });
+    bench("linkgraph_from_cluster_128", || {
+        LinkGraph::from_cluster(&spine128)
+    });
+
+    // Fair-share engine: 64-flow cross-spine permutation on a 4:1 trunk
+    // (every flow shares the waist; one rate recomputation per event).
+    let topo = LinkGraph::from_cluster(&spine128);
+    bench("fairshare_64flow_permutation", || {
+        let mut wl = Workload::new();
+        let flows: Vec<FlowSpec> = (0..64)
+            .map(|i| FlowSpec {
+                src: i,
+                dst: 64 + (i + 7) % 64,
+                bytes: 1e8,
+            })
+            .collect();
+        wl.add(
+            TaskKind::Transfer {
+                flows,
+                extra_latency: 0.0,
+            },
+            &[],
+        );
+        netsim::fairshare::run(&topo, &wl)
+    });
+
+    // End-to-end: solve once, then lower + replay a full training batch.
+    let graph = models::llama2_7b(1);
+    let cluster = Cluster::spine_leaf_h100(64, 4.0);
+    let sol = solve(&graph, &cluster, &SolverOpts::default()).expect("feasible");
+    let topo = LinkGraph::from_cluster(&cluster);
+    bench_n("netsim_llama2_batch_64dev", 5, || {
+        netsim::simulate_flows(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB)
+    });
+}

@@ -280,6 +280,25 @@ impl CostModel {
         (fwd, bwd)
     }
 
+    /// Pure-compute phase split for the flow-level simulator
+    /// ([`crate::netsim`]): like [`Self::stage_phase_times`] but
+    /// *excluding* intra-stage collective time, which netsim lowers into
+    /// explicit flows instead of folding into occupancy. ZeRO-3 weight
+    /// gathers stay in the compute term: their sharding-group placement
+    /// is the same ranking-preserving approximation either way (see
+    /// `CostModel::new`).
+    pub fn stage_phase_compute(&self, i: usize, j: usize, spec: &MemSpec) -> (f64, f64) {
+        let fwd_compute = self.fwd_compute[j] - self.fwd_compute[i];
+        let z3 = if let ZeroStage::Z3 { .. } = spec.zero {
+            let wb = self.stage_params(i, j) * memory::WEIGHT_BYTES;
+            2.0 * (self.z3_alpha + wb * self.z3_beta)
+        } else {
+            0.0
+        };
+        let bwd_mult = if spec.recompute { 3.0 } else { 2.0 };
+        (fwd_compute + z3 / 2.0, fwd_compute * bwd_mult + z3 / 2.0)
+    }
+
     /// Separate components of a stage's per-microbatch time for
     /// compute/communication breakdowns (Figure 2).
     pub fn stage_breakdown(&self, i: usize, j: usize, spec: &MemSpec) -> (f64, f64) {

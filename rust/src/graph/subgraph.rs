@@ -70,7 +70,10 @@ pub enum CollectiveKind {
     AllGather,
     ReduceScatter,
     AllToAll,
-    /// Point-to-point send/recv (pipeline boundaries, CP ring steps).
+    /// Point-to-point exchange between two *adjacent* compact blocks of
+    /// `group` devices each (pipeline-style boundaries, CP ring steps
+    /// between neighboring TP blocks). Priced at the level the block
+    /// boundary actually crosses — `Cluster::boundary_level(group)`.
     SendRecv,
 }
 
@@ -160,12 +163,18 @@ pub fn layer_collectives(layer: &Layer, tokens: f64, sg: &SgConfig) -> Vec<Colle
             if sg.cp > 1 {
                 // Ring exchange of K/V shards: each CP step moves the
                 // local K/V block to the neighbor, (cp−1) steps, fwd+bwd.
+                // CP ring neighbors sit one TP block apart inside the
+                // stage group, so the exchange is between two *adjacent*
+                // blocks of `tp` devices — the SendRecv `group`
+                // convention (priced at `boundary_level(tp)`: intra-node
+                // for small TP, across the tier a TP block exactly
+                // fills).
                 let kv = DTYPE_BYTES * local_tokens * d.kv_dim() as f64 * 2.0;
                 for _ in 0..(2 * (sg.cp - 1)) {
                     out.push(CollectiveCall {
                         kind: CollectiveKind::SendRecv,
                         bytes: kv,
-                        group: 2,
+                        group: sg.tp,
                     });
                 }
             }

@@ -8,6 +8,7 @@
 //! model protocol (§5.1).
 
 pub mod figures;
+pub mod netsim;
 pub mod tables;
 
 use crate::baselines::{alpa, manual, mcmc, mist, phaze};

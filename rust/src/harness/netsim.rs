@@ -1,0 +1,188 @@
+//! Netsim cross-validation harness: analytic DES vs flow-level
+//! simulation across topology families.
+//!
+//! For each family the NEST solver produces a plan against the analytic
+//! abstraction, the shared DES evaluates it (`crate::sim`), and the
+//! flow-level simulator replays the same batch on the explicit link
+//! graph (`crate::netsim`). The table reports the batch-time error
+//! between the two — the level-wise model's blind spot under real link
+//! contention. On every *contended* family (oversubscribed trunks,
+//! edge-list bottlenecks) the flow simulation must be at least as slow
+//! as the analytic estimate; the harness prints a ✓/✗ verdict per row
+//! so regressions are visible at a glance.
+
+use crate::graph::models;
+use crate::hw::Accelerator;
+use crate::netsim::{simulate_flows, LinkGraph};
+use crate::network::Cluster;
+use crate::sim::{simulate, Schedule};
+use crate::solver::solve as nest_solve;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+
+use super::HarnessOpts;
+
+/// A shipped edge-list example (embedded so the harness runs from any
+/// working directory; the same file ships under `configs/`).
+pub const EDGELIST_DUMBBELL: &str = include_str!("../../../configs/edgelist_dumbbell.json");
+
+/// One topology family of the cross-validation sweep.
+struct Family {
+    label: &'static str,
+    /// Whether the scenario has link contention the analytic model
+    /// cannot price (oversubscription / shared bottleneck links): there
+    /// the flow simulation must be ≥ the analytic DES.
+    contended: bool,
+    cluster: Cluster,
+    topo: LinkGraph,
+}
+
+fn families(quick: bool) -> Vec<Family> {
+    let n = if quick { 64 } else { 128 };
+    let mut out = Vec::new();
+    let fat = Cluster::fat_tree_tpuv4(n);
+    out.push(Family {
+        label: "fat-tree",
+        contended: false,
+        topo: LinkGraph::from_cluster(&fat),
+        cluster: fat,
+    });
+    let spine = Cluster::spine_leaf_h100(n, 4.0);
+    out.push(Family {
+        label: "spine-leaf 4:1",
+        contended: true,
+        topo: LinkGraph::from_cluster(&spine),
+        cluster: spine,
+    });
+    let torus = Cluster::torus2d(8, if quick { 8 } else { 16 }, 50.0 * crate::hw::GB, 1e-6);
+    out.push(Family {
+        label: "torus2d",
+        contended: false,
+        topo: LinkGraph::from_cluster(&torus),
+        cluster: torus,
+    });
+    let edge = LinkGraph::from_json(
+        &crate::util::json::parse(EDGELIST_DUMBBELL).expect("shipped edge-list parses"),
+    )
+    .expect("shipped edge-list builds");
+    let cluster = edge.approx_cluster(Accelerator::h100());
+    out.push(Family {
+        label: "edge-list dumbbell",
+        contended: true,
+        cluster,
+        topo: edge,
+    });
+    out
+}
+
+/// The cross-validation table: one row per topology family.
+pub fn netsim_xval(opts: &HarnessOpts) {
+    netsim_xval_quick(opts, false);
+}
+
+/// `quick = true` shrinks cluster sizes (used by tests and `--quick`).
+pub fn netsim_xval_quick(opts: &HarnessOpts, quick: bool) -> bool {
+    println!("== netsim cross-validation: analytic DES vs flow-level simulation ==");
+    let mut tbl = Table::new(&[
+        "topology",
+        "model",
+        "devices",
+        "analytic DES",
+        "flow-sim",
+        "error",
+        "max link util",
+        "flows",
+        "contended",
+    ]);
+    let mut csv = Csv::new(&[
+        "topology",
+        "model",
+        "devices",
+        "analytic_s",
+        "flowsim_s",
+        "error_pct",
+        "max_link_util",
+        "n_flows",
+        "contended",
+        "ok",
+    ]);
+    let model = "llama2-7b";
+    let mut all_ok = true;
+    for fam in families(quick) {
+        let graph = models::by_name(model, 1).expect("model exists");
+        let Some(sol) = nest_solve(&graph, &fam.cluster, &opts.solver) else {
+            tbl.row(vec![
+                fam.label.into(),
+                model.into(),
+                fam.cluster.n_devices().to_string(),
+                "✗".into(),
+                "✗".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            all_ok = false;
+            continue;
+        };
+        let ana = simulate(&graph, &fam.cluster, &sol.plan, Schedule::OneFOneB);
+        let flow = simulate_flows(&graph, &fam.cluster, &fam.topo, &sol.plan, Schedule::OneFOneB);
+        let err = (flow.batch_time - ana.batch_time) / ana.batch_time;
+        // Contended scenarios: flow-sim must never be faster than the
+        // analytic estimate (the abstraction can only hide congestion).
+        let ok = !fam.contended || flow.batch_time >= ana.batch_time * (1.0 - 1e-9);
+        all_ok &= ok;
+        tbl.row(vec![
+            fam.label.into(),
+            model.into(),
+            fam.cluster.n_devices().to_string(),
+            crate::util::table::fmt_time(ana.batch_time),
+            crate::util::table::fmt_time(flow.batch_time),
+            format!("{:+.1}%", err * 100.0),
+            format!("{:.0}%", flow.max_link_util * 100.0),
+            flow.n_flows.to_string(),
+            if fam.contended {
+                format!("yes {}", if ok { "✓" } else { "✗" })
+            } else {
+                "no".into()
+            },
+        ]);
+        csv.row(vec![
+            fam.label.into(),
+            model.into(),
+            fam.cluster.n_devices().to_string(),
+            ana.batch_time.to_string(),
+            flow.batch_time.to_string(),
+            (err * 100.0).to_string(),
+            flow.max_link_util.to_string(),
+            flow.n_flows.to_string(),
+            fam.contended.to_string(),
+            ok.to_string(),
+        ]);
+    }
+    println!("{}", tbl.render());
+    println!(
+        "flow-sim ≥ analytic on every contended scenario: {}",
+        if all_ok { "✓" } else { "✗ REGRESSION" }
+    );
+    let _ = csv.write(format!("{}/netsim_xval.csv", opts.results_dir));
+    all_ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xval_table_runs_and_contended_rows_hold() {
+        let mut opts = HarnessOpts::quick();
+        opts.results_dir = std::env::temp_dir()
+            .join("nest_netsim_xval")
+            .to_string_lossy()
+            .into_owned();
+        assert!(
+            netsim_xval_quick(&opts, true),
+            "flow-sim undercut the analytic DES on a contended topology"
+        );
+    }
+}

@@ -82,6 +82,18 @@ impl Accelerator {
         }
     }
 
+    /// Look a preset up by its CLI/config name (the `accelerator` field
+    /// of topology JSON files).
+    pub fn by_name(name: &str) -> Option<Accelerator> {
+        match name {
+            "tpuv4" => Some(Accelerator::tpu_v4()),
+            "h100" => Some(Accelerator::h100()),
+            "v100" => Some(Accelerator::v100()),
+            "cpu-sim" => Some(Accelerator::cpu_sim()),
+            _ => None,
+        }
+    }
+
     /// Copy with a reduced HBM capacity (Table 7 memory-constrained
     /// ablations: 24 GB Llama3 run, 120 MB BertLarge run).
     pub fn with_capacity(&self, bytes: f64) -> Self {

@@ -12,6 +12,9 @@
 //!   plan reconstruction/device assignment.
 //! * [`baselines`]: Manual, MCMC (TopoOpt-style), Phaze, Alpa-E, Mist.
 //! * [`sim`]: discrete-event pipeline simulator (the "testbed").
+//! * [`netsim`]: flow-level contention-aware network simulator —
+//!   explicit link graphs (tier expansion + arbitrary edge-lists),
+//!   plan→flow lowering, max-min fair-share engine.
 //! * [`runtime`]: PJRT engine loading AOT HLO artifacts.
 //! * [`profiler`]: calibrates the compute model against real executions.
 //! * [`trainer`]: real pipeline-parallel training over thread-devices.
@@ -19,6 +22,7 @@
 
 pub mod baselines;
 pub mod cost;
+pub mod netsim;
 pub mod profiler;
 pub mod runtime;
 pub mod trainer;

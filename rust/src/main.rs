@@ -3,6 +3,9 @@
 //! Subcommands (see README):
 //!   solve      solve placement for one (model, cluster) and print the plan
 //!   simulate   run the DES on the solved plan and report throughput
+//!   netsim     flow-level contention cross-check of a plan on an explicit
+//!              link graph (tier stacks or arbitrary edge-list JSON)
+//!   netsim-xval  analytic-vs-flow-sim error table across topology families
 //!   train      real pipeline-parallel training from AOT artifacts
 //!   profile    calibrate the compute model against PJRT probe runs
 //!   figure2|5|6|7|10|11, table2|4|6|7, v100   — paper reproductions
@@ -10,6 +13,7 @@
 
 use nest::graph::models;
 use nest::harness::{figures, tables, HarnessOpts};
+use nest::netsim::{simulate_flows, LinkGraph};
 use nest::network::Cluster;
 use nest::sim::{simulate, Schedule};
 use nest::solver::{solve, SolverOpts};
@@ -33,6 +37,37 @@ fn cluster_by_name(name: &str, devices: usize, oversub: f64) -> Result<Cluster, 
         other => Err(format!(
             "unknown cluster '{other}' (fat-tree, spine-leaf, v100, torus2d, or a .json file)"
         )),
+    }
+}
+
+/// Resolve a `netsim` topology argument: a tier-stack or edge-list JSON
+/// file, or a named preset cluster. Returns the explicit link graph and
+/// the analytic cluster the solver searches on (for edge-lists, the
+/// optimistic flat abstraction — see `LinkGraph::approx_cluster`).
+fn netsim_topology(
+    config: &str,
+    devices: usize,
+    oversub: f64,
+) -> Result<(Cluster, LinkGraph), String> {
+    if config.ends_with(".json") {
+        let text = std::fs::read_to_string(config).map_err(|e| format!("{config}: {e}"))?;
+        let v = nest::util::json::parse(&text)?;
+        if v.get("links").as_arr().is_some() {
+            let topo = LinkGraph::from_json(&v)?;
+            let accel_name = v.get("accelerator").as_str().unwrap_or("h100");
+            let accel = nest::hw::Accelerator::by_name(accel_name)
+                .ok_or_else(|| format!("unknown accelerator '{accel_name}'"))?;
+            let cluster = topo.approx_cluster(accel);
+            Ok((cluster, topo))
+        } else {
+            let cluster = Cluster::from_json(&v)?;
+            let topo = LinkGraph::from_cluster(&cluster);
+            Ok((cluster, topo))
+        }
+    } else {
+        let cluster = cluster_by_name(config, devices, oversub)?;
+        let topo = LinkGraph::from_cluster(&cluster);
+        Ok((cluster, topo))
     }
 }
 
@@ -144,6 +179,51 @@ fn main() {
                 );
                 Ok(())
             }
+            "netsim" => {
+                let graph = models::by_name(&model, mbs)
+                    .ok_or_else(|| format!("unknown model '{model}'"))?;
+                let config = args.get("config", &cluster_name);
+                let (cluster, topo) = netsim_topology(&config, devices, oversub)?;
+                println!("{}", cluster.describe());
+                println!("{}", topo.describe());
+                let sopts = SolverOpts {
+                    threads,
+                    ..Default::default()
+                };
+                let sol = solve(&graph, &cluster, &sopts).ok_or("no feasible placement")?;
+                println!("{}", sol.plan.describe());
+                let ana = simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB);
+                let flow = simulate_flows(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB);
+                let err = (flow.batch_time - ana.batch_time) / ana.batch_time;
+                println!(
+                    "analytic DES: batch {} | {:.1} samples/s",
+                    nest::util::table::fmt_time(ana.batch_time),
+                    ana.throughput,
+                );
+                println!(
+                    "flow-sim:     batch {} | {:.1} samples/s | {} flows, {:.2} GB, {} events | error {:+.1}%",
+                    nest::util::table::fmt_time(flow.batch_time),
+                    graph.global_batch as f64 / flow.batch_time,
+                    flow.n_flows,
+                    flow.total_bytes / 1e9,
+                    flow.events,
+                    err * 100.0,
+                );
+                println!("hottest links (mean utilization over the batch):");
+                for u in flow.link_util.iter().take(8) {
+                    println!("  {:>6.1}%  {}", u.utilization * 100.0, u.name);
+                }
+                Ok(())
+            }
+            "netsim-xval" => {
+                if nest::harness::netsim::netsim_xval_quick(&hopts, quick) {
+                    Ok(())
+                } else {
+                    Err("netsim cross-validation regression: flow-sim undercut \
+                         the analytic DES on a contended topology"
+                        .into())
+                }
+            }
             "figure2" => {
                 figures::figure2(&hopts);
                 Ok(())
@@ -215,7 +295,13 @@ fn main() {
                 tables::table7(&hopts);
                 tables::v100_validation(&hopts);
                 figures::torus(&hopts, if quick { 64 } else { 256 });
-                Ok(())
+                if nest::harness::netsim::netsim_xval_quick(&hopts, quick) {
+                    Ok(())
+                } else {
+                    Err("netsim cross-validation regression: flow-sim undercut \
+                         the analytic DES on a contended topology"
+                        .into())
+                }
             }
             _ => {
                 println!(
@@ -224,6 +310,9 @@ fn main() {
                      commands:\n\
                      \x20 solve      --model <name> --cluster <fat-tree|spine-leaf|v100|torus2d|file.json> --devices N [--mbs N]\n\
                      \x20 simulate   same as solve, plus a DES evaluation of the plan\n\
+                     \x20 netsim     --config <tier-or-edge-list.json | cluster name>: solve, then cross-check the plan\n\
+                     \x20            under flow-level link contention (reports batch-time error + per-link utilization)\n\
+                     \x20 netsim-xval  analytic-vs-flow-sim table across topology families (fat-tree, 4:1 spine, torus, edge-list)\n\
                      \x20 train      --steps N --microbatches N --dp N   (needs `make artifacts`)\n\
                      \x20 profile    --reps N\n\
                      \x20 figure2|figure5|figure6|figure7|figure10|figure11\n\

@@ -1,0 +1,702 @@
+//! Max-min fair-share flow engine (progressive filling), in the style of
+//! Parsimon/flowSim: instead of packet- or message-level simulation, the
+//! engine tracks *flows* and recomputes every active flow's bottleneck
+//! rate whenever a flow arrives or completes. Between events rates are
+//! constant, so completions resolve in closed form — the whole batch
+//! simulates in milliseconds while still exposing link contention the
+//! level-wise analytic model cannot see.
+//!
+//! The input is a [`Workload`]: a DAG of [`TaskKind::Compute`] tasks
+//! (fixed duration, one per pipeline op) and [`TaskKind::Transfer`] tasks
+//! (a set of concurrent flows; the task completes when the last flow
+//! drains, plus path latency and any modeled serialization extras).
+//! Everything is single-threaded and iteration-order-stable, so reports
+//! are bit-identical across runs and `--threads` settings.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::topo::LinkGraph;
+
+/// One flow: `bytes` from device `src` to device `dst` along the
+/// topology's deterministic route.
+#[derive(Debug, Clone)]
+pub struct FlowSpec {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+}
+
+/// A schedulable unit of the lowered workload.
+#[derive(Debug, Clone)]
+pub enum TaskKind {
+    /// Occupies its stage for a fixed duration (compute, and cost terms
+    /// the lowering keeps analytic).
+    Compute { seconds: f64 },
+    /// A set of flows launched together; completes when all have
+    /// drained, plus the slowest flow's path latency, plus
+    /// `extra_latency` (serialization of coalesced ring steps /
+    /// per-message α terms the analytic model charges — see
+    /// `netsim::flows`).
+    Transfer {
+        flows: Vec<FlowSpec>,
+        extra_latency: f64,
+    },
+}
+
+/// A DAG of tasks. Dependencies are by task id (the value returned by
+/// [`Workload::add`]); a task starts the instant its last prerequisite
+/// completes.
+#[derive(Debug, Default)]
+pub struct Workload {
+    tasks: Vec<TaskKind>,
+    /// Prerequisites per task.
+    deps: Vec<Vec<u32>>,
+}
+
+impl Workload {
+    pub fn new() -> Self {
+        Workload::default()
+    }
+
+    /// Add a task depending on `deps`; returns its id.
+    pub fn add(&mut self, kind: TaskKind, deps: &[u32]) -> u32 {
+        let id = self.tasks.len() as u32;
+        self.tasks.push(kind);
+        self.deps.push(deps.to_vec());
+        id
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+}
+
+/// Per-link utilization over the simulated batch.
+#[derive(Debug, Clone)]
+pub struct LinkUtil {
+    /// Link id into `LinkGraph::links`.
+    pub link: usize,
+    /// "src→dst" display name.
+    pub name: String,
+    /// Mean utilization: transferred bytes / (capacity · makespan).
+    pub utilization: f64,
+}
+
+/// Flow-simulation outcome for one workload.
+#[derive(Debug, Clone)]
+pub struct NetsimReport {
+    /// Makespan: completion time of the last task (seconds).
+    pub batch_time: f64,
+    /// Flows that actually crossed the network.
+    pub n_flows: usize,
+    /// Bytes moved across all flows.
+    pub total_bytes: f64,
+    /// Engine events processed (rate recomputations).
+    pub events: usize,
+    /// Per-link mean utilization, hottest first (zero-traffic links
+    /// omitted).
+    pub link_util: Vec<LinkUtil>,
+    /// Hottest link's mean utilization.
+    pub max_link_util: f64,
+}
+
+/// Event-queue time key with a total order (times are finite).
+#[derive(Debug, Clone, Copy)]
+struct TimeKey(f64);
+impl PartialEq for TimeKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0).is_eq()
+    }
+}
+impl Eq for TimeKey {}
+impl PartialOrd for TimeKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimeKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[derive(Debug)]
+struct ActiveFlow {
+    task: u32,
+    remaining: f64,
+    rate: f64,
+    /// Per-flow ceiling (min flow_cap along the path).
+    cap: f64,
+    links: Vec<usize>,
+    path_latency: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+struct TaskState {
+    remaining_deps: u32,
+    /// Network flows still draining (Transfer only).
+    pending_flows: u32,
+    /// Max over completed flows of (drain time + path latency).
+    latency_end: f64,
+    started: bool,
+    done: bool,
+}
+
+/// Run `wl` on `topo` and return the contention-aware report.
+///
+/// Panics if the workload DAG is cyclic (a lowering bug, mirroring the
+/// analytic simulator's deadlock assert).
+pub fn run(topo: &LinkGraph, wl: &Workload) -> NetsimReport {
+    let nt = wl.tasks.len();
+    let mut st: Vec<TaskState> = vec![TaskState::default(); nt];
+    let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); nt];
+    for (i, deps) in wl.deps.iter().enumerate() {
+        st[i].remaining_deps = deps.len() as u32;
+        for &d in deps {
+            dependents[d as usize].push(i as u32);
+        }
+    }
+
+    // Completion-event heap: (time, seq, task). `seq` keeps pops stable
+    // under exact time ties.
+    let mut heap: BinaryHeap<Reverse<(TimeKey, u64, u32)>> = BinaryHeap::new();
+    let mut seq: u64 = 0;
+    let mut active: Vec<ActiveFlow> = Vec::new();
+    let mut busy_bytes: Vec<f64> = vec![0.0; topo.links.len()];
+    let mut n_flows = 0usize;
+    let mut total_bytes = 0.0f64;
+    let mut events = 0usize;
+    let mut done_count = 0usize;
+
+    // Start a task at time `t`: schedule its completion (Compute) or
+    // materialize its flows (Transfer).
+    macro_rules! start_task {
+        ($i:expr, $t:expr) => {{
+            let i: u32 = $i;
+            let t: f64 = $t;
+            let s = &mut st[i as usize];
+            debug_assert!(!s.started);
+            s.started = true;
+            s.latency_end = t;
+            match &wl.tasks[i as usize] {
+                TaskKind::Compute { seconds } => {
+                    seq += 1;
+                    heap.push(Reverse((TimeKey(t + seconds), seq, i)));
+                }
+                TaskKind::Transfer {
+                    flows,
+                    extra_latency,
+                } => {
+                    let mut pending = 0u32;
+                    for f in flows {
+                        if f.src == f.dst || f.bytes <= 0.5 {
+                            continue; // no network crossing
+                        }
+                        let p = topo.path(f.src, f.dst);
+                        n_flows += 1;
+                        total_bytes += f.bytes;
+                        active.push(ActiveFlow {
+                            task: i,
+                            remaining: f.bytes,
+                            rate: 0.0,
+                            cap: p.flow_cap,
+                            links: p.links,
+                            path_latency: p.latency,
+                        });
+                        pending += 1;
+                    }
+                    st[i as usize].pending_flows = pending;
+                    if pending == 0 {
+                        seq += 1;
+                        heap.push(Reverse((TimeKey(t + extra_latency), seq, i)));
+                    }
+                }
+            }
+        }};
+    }
+
+    let mut t = 0.0f64;
+    let mut ready: Vec<u32> = Vec::new();
+    for i in 0..nt as u32 {
+        if st[i as usize].remaining_deps == 0 {
+            ready.push(i);
+        }
+    }
+    for i in ready {
+        start_task!(i, t);
+    }
+    recompute_rates(topo, &mut active);
+
+    loop {
+        // Next flow drain under current (constant) rates.
+        let mut t_drain = f64::INFINITY;
+        for f in &active {
+            if f.rate > 0.0 {
+                t_drain = t_drain.min(t + f.remaining / f.rate);
+            }
+        }
+        let t_event = heap
+            .peek()
+            .map(|Reverse((k, _, _))| k.0)
+            .unwrap_or(f64::INFINITY);
+        let t_next = t_drain.min(t_event);
+        if t_next.is_infinite() {
+            break;
+        }
+        events += 1;
+
+        // Advance: drain bytes, accumulate per-link transferred volume.
+        let dt = (t_next - t).max(0.0);
+        if dt > 0.0 {
+            for f in &mut active {
+                let moved = f.rate * dt;
+                f.remaining -= moved;
+                for &l in &f.links {
+                    busy_bytes[l] += moved;
+                }
+            }
+        }
+        t = t_next;
+
+        let mut changed = false;
+        // Flow completions (≤ half a byte left counts as drained).
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].remaining <= 0.5 {
+                let f = active.swap_remove(i);
+                let s = &mut st[f.task as usize];
+                s.latency_end = s.latency_end.max(t + f.path_latency);
+                s.pending_flows -= 1;
+                if s.pending_flows == 0 {
+                    let extra = match &wl.tasks[f.task as usize] {
+                        TaskKind::Transfer { extra_latency, .. } => *extra_latency,
+                        TaskKind::Compute { .. } => 0.0,
+                    };
+                    seq += 1;
+                    heap.push(Reverse((TimeKey(s.latency_end + extra), seq, f.task)));
+                }
+                changed = true;
+            } else {
+                i += 1;
+            }
+        }
+        // Task completions due now (and any cascade of 0-cost starts).
+        while let Some(&Reverse((k, _, _))) = heap.peek() {
+            if k.0 > t {
+                break;
+            }
+            let Reverse((_, _, task)) = heap.pop().unwrap();
+            let s = &mut st[task as usize];
+            if s.done {
+                continue;
+            }
+            s.done = true;
+            done_count += 1;
+            for &dep in &dependents[task as usize] {
+                let ds = &mut st[dep as usize];
+                ds.remaining_deps -= 1;
+                if ds.remaining_deps == 0 {
+                    start_task!(dep, t);
+                }
+            }
+            changed = true;
+        }
+        if changed {
+            recompute_rates(topo, &mut active);
+        }
+    }
+
+    assert_eq!(
+        done_count, nt,
+        "flow workload deadlock: {done_count}/{nt} tasks completed (cyclic lowering?)"
+    );
+
+    // Utilization report, hottest first, ties by link id.
+    let mut link_util: Vec<LinkUtil> = busy_bytes
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b > 0.0)
+        .map(|(l, &b)| LinkUtil {
+            link: l,
+            name: topo.link_name(l),
+            utilization: if t > 0.0 {
+                b / (topo.links[l].capacity * t)
+            } else {
+                0.0
+            },
+        })
+        .collect();
+    link_util.sort_by(|a, b| {
+        b.utilization
+            .total_cmp(&a.utilization)
+            .then(a.link.cmp(&b.link))
+    });
+    let max_link_util = link_util.first().map(|u| u.utilization).unwrap_or(0.0);
+
+    NetsimReport {
+        batch_time: t,
+        n_flows,
+        total_bytes,
+        events,
+        link_util,
+        max_link_util,
+    }
+}
+
+/// Progressive filling: raise every unfrozen flow's rate uniformly;
+/// freeze a flow when it hits its per-flow ceiling or a link on its path
+/// saturates. The result is the max-min fair allocation with rate caps.
+/// Deterministic: pure arithmetic over the active set in index order.
+fn recompute_rates(topo: &LinkGraph, active: &mut [ActiveFlow]) {
+    if active.is_empty() {
+        return;
+    }
+    let nl = topo.links.len();
+    // Only links that carry at least one active flow participate.
+    let mut n_unfrozen: Vec<u32> = vec![0; nl];
+    let mut used: Vec<f64> = vec![0.0; nl];
+    let mut touched: Vec<usize> = Vec::new();
+    for f in active.iter() {
+        for &l in &f.links {
+            if n_unfrozen[l] == 0 {
+                touched.push(l);
+            }
+            n_unfrozen[l] += 1;
+        }
+    }
+    touched.sort_unstable();
+    touched.dedup();
+
+    let mut frozen: Vec<bool> = vec![false; active.len()];
+    let mut left = active.len();
+    let mut fill = 0.0f64;
+    while left > 0 {
+        // Largest uniform increment before a constraint binds. Track the
+        // arg-min so progress is guaranteed even when epsilon tests miss.
+        let mut delta = f64::INFINITY;
+        let mut bind_link: Option<usize> = None;
+        let mut bind_flow: Option<usize> = None;
+        for &l in &touched {
+            if n_unfrozen[l] > 0 {
+                let slack = topo.links[l].capacity - used[l] - n_unfrozen[l] as f64 * fill;
+                let d = slack / n_unfrozen[l] as f64;
+                if d < delta {
+                    delta = d;
+                    bind_link = Some(l);
+                    bind_flow = None;
+                }
+            }
+        }
+        for (i, f) in active.iter().enumerate() {
+            if !frozen[i] {
+                let d = f.cap - fill;
+                if d < delta {
+                    delta = d;
+                    bind_flow = Some(i);
+                    bind_link = None;
+                }
+            }
+        }
+        fill += delta.max(0.0);
+
+        // Freeze everything the new fill level saturates.
+        let mut froze_any = false;
+        for (i, f) in active.iter_mut().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            let at_cap = fill >= f.cap * (1.0 - 1e-12);
+            let on_saturated = f.links.iter().any(|&l| {
+                let slack = topo.links[l].capacity - used[l] - n_unfrozen[l] as f64 * fill;
+                slack <= topo.links[l].capacity * 1e-12
+            });
+            let forced = bind_flow == Some(i)
+                || bind_link.is_some_and(|bl| f.links.contains(&bl));
+            if at_cap || on_saturated || forced {
+                frozen[i] = true;
+                f.rate = fill;
+                left -= 1;
+                froze_any = true;
+                for &l in &f.links {
+                    n_unfrozen[l] -= 1;
+                    used[l] += fill;
+                }
+            }
+        }
+        debug_assert!(froze_any, "progressive filling stalled");
+        if !froze_any {
+            // Defensive fallback: freeze everything at the current fill.
+            for (i, f) in active.iter_mut().enumerate() {
+                if !frozen[i] {
+                    frozen[i] = true;
+                    f.rate = fill;
+                    left -= 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::GB;
+    use crate::network::Cluster;
+    use crate::util::prop;
+
+    fn single_flow(topo: &LinkGraph, src: usize, dst: usize, bytes: f64) -> NetsimReport {
+        let mut wl = Workload::new();
+        wl.add(
+            TaskKind::Transfer {
+                flows: vec![FlowSpec { src, dst, bytes }],
+                extra_latency: 0.0,
+            },
+            &[],
+        );
+        run(topo, &wl)
+    }
+
+    #[test]
+    fn prop_single_flow_reproduces_p2p_time() {
+        // Satellite requirement: on a contention-free workload the
+        // fair-share engine reproduces Cluster::p2p_time within 1e-9.
+        for c in [
+            Cluster::fat_tree_tpuv4(64),
+            Cluster::spine_leaf_h100(64, 2.0),
+            Cluster::v100_cluster(16),
+            Cluster::torus2d(8, 8, 50.0 * GB, 1e-6),
+        ] {
+            let topo = LinkGraph::from_cluster(&c);
+            prop::forall(40, 0xF1075, |rng| {
+                let a = rng.gen_range(c.n_devices());
+                let mut b = rng.gen_range(c.n_devices());
+                if a == b {
+                    b = (b + 1) % c.n_devices();
+                }
+                let bytes = 1e6 * (1.0 + rng.gen_f64() * 1e3);
+                let mut lca = c.n_levels() - 1;
+                for l in 0..c.n_levels() {
+                    if a / c.capacity(l) == b / c.capacity(l) {
+                        lca = l;
+                        break;
+                    }
+                }
+                let expect = c.p2p_time(lca, bytes);
+                let got = single_flow(&topo, a, b, bytes).batch_time;
+                assert!(
+                    (got - expect).abs() / expect < 1e-9,
+                    "{}: {a}->{b} {bytes}B: flow-sim {got} vs p2p {expect}",
+                    c.name
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn two_flows_share_a_bottleneck_fairly() {
+        // Two cross flows on a dumbbell share the 25 GB/s waist: each
+        // gets 12.5 GB/s under max-min fairness.
+        let src = r#"{"name": "mini-dumbbell",
+            "nodes": ["a", "b", "c", "d",
+                      {"id": "s0", "kind": "switch"}, {"id": "s1", "kind": "switch"}],
+            "links": [
+              {"src": "a", "dst": "s0", "bw_gbps": 100, "latency_us": 1},
+              {"src": "b", "dst": "s0", "bw_gbps": 100, "latency_us": 1},
+              {"src": "c", "dst": "s1", "bw_gbps": 100, "latency_us": 1},
+              {"src": "d", "dst": "s1", "bw_gbps": 100, "latency_us": 1},
+              {"src": "s0", "dst": "s1", "bw_gbps": 25, "latency_us": 5}
+            ]}"#;
+        let topo =
+            LinkGraph::from_json(&crate::util::json::parse(src).unwrap()).unwrap();
+        let bytes = 1e9;
+        // Devices in listing order: a=0, b=1, c=2, d=3.
+        let solo = single_flow(&topo, 0, 2, bytes).batch_time;
+        let expect_solo = 7e-6 + bytes / (25.0 * GB);
+        assert!((solo - expect_solo).abs() / expect_solo < 1e-9);
+        let mut wl = Workload::new();
+        wl.add(
+            TaskKind::Transfer {
+                flows: vec![
+                    FlowSpec { src: 0, dst: 2, bytes },
+                    FlowSpec { src: 1, dst: 3, bytes },
+                ],
+                extra_latency: 0.0,
+            },
+            &[],
+        );
+        let both = run(&topo, &wl).batch_time;
+        let expect_both = 7e-6 + bytes / (12.5 * GB);
+        assert!(
+            (both - expect_both).abs() / expect_both < 1e-9,
+            "shared waist: {both} vs {expect_both}"
+        );
+    }
+
+    #[test]
+    fn capped_flow_frees_bandwidth_for_others() {
+        // On a spine-leaf, a cross-spine flow is capped at the spine
+        // lane rate; an NVLink flow running concurrently (no shared
+        // links) must still run at the full NVLink rate.
+        let c = Cluster::spine_leaf_h100(64, 2.0);
+        let topo = LinkGraph::from_cluster(&c);
+        let mut wl = Workload::new();
+        let nv = 1e9;
+        wl.add(
+            TaskKind::Transfer {
+                flows: vec![
+                    FlowSpec { src: 0, dst: 32, bytes: 1e6 }, // cross-spine, slow lane
+                    FlowSpec { src: 1, dst: 2, bytes: nv },   // NVLink pair
+                ],
+                extra_latency: 0.0,
+            },
+            &[],
+        );
+        let rep = run(&topo, &wl);
+        // The long NVLink flow sets the makespan, at its solo speed.
+        let nv_solo = c.p2p_time(0, nv);
+        assert!(
+            (rep.batch_time - nv_solo).abs() / nv_solo < 1e-9,
+            "NVLink flow throttled: {} vs solo {}",
+            rep.batch_time,
+            nv_solo
+        );
+    }
+
+    #[test]
+    fn dag_orders_compute_and_transfers() {
+        let c = Cluster::fat_tree_tpuv4(64);
+        let topo = LinkGraph::from_cluster(&c);
+        let mut wl = Workload::new();
+        let a = wl.add(TaskKind::Compute { seconds: 1.0 }, &[]);
+        let x = wl.add(
+            TaskKind::Transfer {
+                flows: vec![FlowSpec { src: 0, dst: 8, bytes: 1e9 }],
+                extra_latency: 0.0,
+            },
+            &[a],
+        );
+        let _b = wl.add(TaskKind::Compute { seconds: 0.5 }, &[x]);
+        let rep = run(&topo, &wl);
+        let expect = 1.0 + c.p2p_time(1, 1e9) + 0.5;
+        assert!(
+            (rep.batch_time - expect).abs() / expect < 1e-9,
+            "{} vs {}",
+            rep.batch_time,
+            expect
+        );
+        assert_eq!(rep.n_flows, 1);
+    }
+
+    #[test]
+    fn extra_latency_and_degenerate_flows() {
+        let c = Cluster::fat_tree_tpuv4(64);
+        let topo = LinkGraph::from_cluster(&c);
+        let mut wl = Workload::new();
+        // All flows degenerate (self-loop / zero bytes): pure latency.
+        wl.add(
+            TaskKind::Transfer {
+                flows: vec![
+                    FlowSpec { src: 3, dst: 3, bytes: 1e9 },
+                    FlowSpec { src: 0, dst: 1, bytes: 0.0 },
+                ],
+                extra_latency: 2.5e-6,
+            },
+            &[],
+        );
+        let rep = run(&topo, &wl);
+        assert!((rep.batch_time - 2.5e-6).abs() < 1e-15);
+        assert_eq!(rep.n_flows, 0);
+    }
+
+    #[test]
+    fn utilization_reported_on_contended_trunk() {
+        // Overload the oversubscribed spine trunk: 64 concurrent cross
+        // flows from 32 sources share a 32-lane (÷2 oversub) trunk, so
+        // each runs below its lane rate and the trunk saturates.
+        let c = Cluster::spine_leaf_h100(64, 2.0);
+        let topo = LinkGraph::from_cluster(&c);
+        let mut wl = Workload::new();
+        let mut flows: Vec<FlowSpec> = Vec::new();
+        for i in 0..32usize {
+            flows.push(FlowSpec {
+                src: i,
+                dst: 32 + i,
+                bytes: 1e9,
+            });
+            flows.push(FlowSpec {
+                src: i,
+                dst: 32 + (i + 1) % 32,
+                bytes: 1e9,
+            });
+        }
+        wl.add(
+            TaskKind::Transfer {
+                flows,
+                extra_latency: 0.0,
+            },
+            &[],
+        );
+        let rep = run(&topo, &wl);
+        assert_eq!(rep.n_flows, 64);
+        // The leaf→spine trunk should be (near) fully utilized.
+        assert!(
+            rep.max_link_util > 0.9,
+            "max util {}",
+            rep.max_link_util
+        );
+        // And the run is strictly slower than a lone cross flow of the
+        // same size (which moves at one uncontended lane's rate).
+        let solo = single_flow(&topo, 0, 32, 1e9).batch_time;
+        assert!(rep.batch_time > solo * 1.5, "{} vs {solo}", rep.batch_time);
+    }
+
+    #[test]
+    fn reports_are_bit_identical() {
+        let c = Cluster::spine_leaf_h100(64, 2.0);
+        let topo = LinkGraph::from_cluster(&c);
+        let build = || {
+            let mut wl = Workload::new();
+            let mut prev: Option<u32> = None;
+            for i in 0..8u32 {
+                let deps: Vec<u32> = match prev {
+                    Some(p) => vec![p],
+                    None => Vec::new(),
+                };
+                let cmp = wl.add(TaskKind::Compute { seconds: 1e-4 }, &deps);
+                let xfer = wl.add(
+                    TaskKind::Transfer {
+                        flows: vec![
+                            FlowSpec { src: i as usize, dst: 32 + i as usize, bytes: 1e8 },
+                            FlowSpec { src: 32 + i as usize, dst: i as usize, bytes: 5e7 },
+                        ],
+                        extra_latency: 1e-6,
+                    },
+                    &[cmp],
+                );
+                prev = Some(xfer);
+            }
+            wl
+        };
+        let a = run(&topo, &build());
+        let b = run(&topo, &build());
+        assert_eq!(a.batch_time.to_bits(), b.batch_time.to_bits());
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.link_util.len(), b.link_util.len());
+        for (x, y) in a.link_util.iter().zip(&b.link_util) {
+            assert_eq!(x.utilization.to_bits(), y.utilization.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn cyclic_workload_panics() {
+        let c = Cluster::fat_tree_tpuv4(64);
+        let topo = LinkGraph::from_cluster(&c);
+        let mut wl = Workload::new();
+        // 0 depends on 1, 1 depends on 0 (added via manual dep edit).
+        let a = wl.add(TaskKind::Compute { seconds: 1.0 }, &[1]);
+        let _b = wl.add(TaskKind::Compute { seconds: 1.0 }, &[a]);
+        run(&topo, &wl);
+    }
+}

@@ -1,0 +1,621 @@
+//! Explicit link-graph topologies for the flow-level simulator.
+//!
+//! Where [`crate::network::Cluster`] abstracts a network into per-level
+//! effective bandwidths (the representation the DP searches over), a
+//! [`LinkGraph`] keeps every node, switch, and directed link explicit so
+//! concurrent flows can *share* links. Graphs come from two sources:
+//!
+//! * [`LinkGraph::from_cluster`] expands any tier stack into its physical
+//!   tree — one switch per subtree per tier, per-device access links at
+//!   the innermost tier, aggregate trunks above (an oversubscription
+//!   factor shrinks the trunk, which is exactly where contention lives).
+//! * [`LinkGraph::from_json`] parses the arbitrary edge-list interface
+//!   (App. B.1's "device identifiers, connectivity, per-link bandwidth
+//!   and latency"):
+//!
+//! ```json
+//! {"name": "dumbbell", "accelerator": "h100",
+//!  "nodes": [{"id": "d0", "kind": "device"}, {"id": "s0", "kind": "switch"}],
+//!  "links": [{"src": "d0", "dst": "s0", "bw_gbps": 100, "latency_us": 1.0}]}
+//! ```
+//!
+//! Routing is deterministic shortest-path (hop count, then latency, with
+//! a fixed tie-break), which degenerates to classic up-down routing on
+//! the tree expansions. Every run routes identically — the flow
+//! simulator's reports are bit-reproducible.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, BTreeMap};
+
+use crate::hw::GB;
+use crate::network::Cluster;
+use crate::util::json::Json;
+
+/// What a graph node is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// An accelerator endpoint (flows start and end here).
+    Device,
+    /// A switch/router (forwards only).
+    Switch,
+}
+
+/// One node of the graph.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub kind: NodeKind,
+}
+
+/// One directed link.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub src: usize,
+    pub dst: usize,
+    /// Aggregate capacity shared by all flows on the link (bytes/s).
+    pub capacity: f64,
+    /// One-way traversal latency (seconds).
+    pub latency: f64,
+    /// Ceiling on any single flow's rate through this link (bytes/s):
+    /// the per-device lane speed of the tier a trunk aggregates. A lone
+    /// flow on an idle 32-lane trunk still moves at one lane's rate.
+    /// `f64::INFINITY` when one flow can fill the link (edge-lists).
+    pub flow_cap: f64,
+}
+
+/// A directed link-graph topology with deterministic routing tables.
+#[derive(Debug, Clone)]
+pub struct LinkGraph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub links: Vec<Link>,
+    /// Device index (the id space plans use) → node id.
+    devices: Vec<usize>,
+    /// `next_hop[d][n]` = link id of the first hop from node `n` toward
+    /// device `d` (`u32::MAX` = unreachable / arrived).
+    next_hop: Vec<Vec<u32>>,
+    /// Cumulative subtree capacities for cluster-expanded graphs
+    /// (e.g. `[8, 32, 1024]`); empty for edge-lists, which ring flat.
+    caps: Vec<usize>,
+}
+
+/// A resolved route between two devices.
+#[derive(Debug, Clone)]
+pub struct PathInfo {
+    /// Link ids in traversal order (empty when src == dst).
+    pub links: Vec<usize>,
+    /// Total one-way latency along the path.
+    pub latency: f64,
+    /// Min per-flow ceiling along the path (the rate a lone flow gets).
+    pub flow_cap: f64,
+}
+
+impl LinkGraph {
+    // ----- constructors --------------------------------------------------
+
+    /// Expand a tier stack into its explicit tree: devices at the leaves,
+    /// one switch per subtree per tier. The innermost tier contributes
+    /// per-device access links at that tier's effective bandwidth; tier
+    /// `t > 0` contributes one trunk per child subtree with aggregate
+    /// capacity `(devices below) · link_bw / oversub` but a per-flow
+    /// ceiling of one lane (`link_bw / oversub`), so a single flow
+    /// reproduces `Cluster::p2p_time` exactly while concurrent flows
+    /// share the trunk. Each tier's latency splits evenly over its up
+    /// and down hop.
+    pub fn from_cluster(cluster: &Cluster) -> Self {
+        let n = cluster.n_devices();
+        let mut nodes: Vec<Node> = (0..n)
+            .map(|d| Node {
+                name: format!("dev{d}"),
+                kind: NodeKind::Device,
+            })
+            .collect();
+        let devices: Vec<usize> = (0..n).collect();
+        let mut links: Vec<Link> = Vec::new();
+        let mut caps: Vec<usize> = Vec::new();
+
+        // Entities of the level below, innermost first (devices at t=0).
+        let mut prev_ids: Vec<usize> = (0..n).collect();
+        let mut cap = 1usize;
+        for tier in &cluster.tiers {
+            let sub = cap; // devices per child entity
+            cap *= tier.arity;
+            caps.push(cap);
+            let n_sw = n.div_ceil(cap);
+            let sw_base = nodes.len();
+            for s in 0..n_sw {
+                nodes.push(Node {
+                    name: format!("{}[{s}]", tier.name),
+                    kind: NodeKind::Switch,
+                });
+            }
+            let lane = tier.effective_bw();
+            let trunk = sub as f64 * lane;
+            for (i, &child) in prev_ids.iter().enumerate() {
+                let sw = sw_base + (i / tier.arity).min(n_sw - 1);
+                for (a, b) in [(child, sw), (sw, child)] {
+                    links.push(Link {
+                        src: a,
+                        dst: b,
+                        capacity: trunk,
+                        latency: tier.latency / 2.0,
+                        flow_cap: lane,
+                    });
+                }
+            }
+            prev_ids = (sw_base..sw_base + n_sw).collect();
+        }
+        Self::build(cluster.name.clone(), nodes, links, devices, caps)
+            .expect("cluster expansion is always connected")
+    }
+
+    /// Parse the arbitrary edge-list JSON format. Node entries are
+    /// objects `{"id": ..., "kind": "device"|"switch"}` (kind defaults
+    /// to `"device"`) or bare strings (devices). Device indices follow
+    /// listing order. Links default to full-duplex (`"bidir": false`
+    /// for a one-way link); a lone flow may fill a link (`flow_cap` =
+    /// capacity) unless `"flow_cap_gbps"` says otherwise.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let name = v.get("name").as_str().unwrap_or("edgelist").to_string();
+        let nodes_json = v.get("nodes").as_arr().ok_or("missing 'nodes' array")?;
+        let mut nodes: Vec<Node> = Vec::new();
+        let mut ids: BTreeMap<String, usize> = BTreeMap::new();
+        let mut devices: Vec<usize> = Vec::new();
+        for nj in nodes_json {
+            let (id, kind) = match nj {
+                Json::Str(s) => (s.clone(), NodeKind::Device),
+                _ => {
+                    let id = nj
+                        .get("id")
+                        .as_str()
+                        .ok_or("node entry missing 'id'")?
+                        .to_string();
+                    let kind = match nj.get("kind").as_str().unwrap_or("device") {
+                        "device" | "host" | "gpu" => NodeKind::Device,
+                        "switch" | "router" => NodeKind::Switch,
+                        other => return Err(format!("unknown node kind '{other}'")),
+                    };
+                    (id, kind)
+                }
+            };
+            if ids.insert(id.clone(), nodes.len()).is_some() {
+                return Err(format!("duplicate node id '{id}'"));
+            }
+            if kind == NodeKind::Device {
+                devices.push(nodes.len());
+            }
+            nodes.push(Node { name: id, kind });
+        }
+        if devices.is_empty() {
+            return Err("edge-list has no device nodes".into());
+        }
+        let links_json = v.get("links").as_arr().ok_or("missing 'links' array")?;
+        if links_json.is_empty() {
+            return Err("empty 'links'".into());
+        }
+        let mut links: Vec<Link> = Vec::new();
+        for lj in links_json {
+            let src_id = lj.get("src").as_str().ok_or("link missing 'src'")?;
+            let dst_id = lj.get("dst").as_str().ok_or("link missing 'dst'")?;
+            let src = *ids
+                .get(src_id)
+                .ok_or_else(|| format!("link src '{src_id}' is not a node"))?;
+            let dst = *ids
+                .get(dst_id)
+                .ok_or_else(|| format!("link dst '{dst_id}' is not a node"))?;
+            if src == dst {
+                return Err(format!("self-link on '{src_id}'"));
+            }
+            let bw = lj
+                .get("bw_gbps")
+                .as_f64()
+                .ok_or("link missing 'bw_gbps'")?
+                * GB;
+            if bw.is_nan() || bw <= 0.0 {
+                return Err(format!("link {src_id}→{dst_id} has non-positive bandwidth"));
+            }
+            let latency = lj.get("latency_us").as_f64().unwrap_or(1.0) * 1e-6;
+            let flow_cap = match lj.get("flow_cap_gbps").as_f64() {
+                Some(fc) => fc * GB,
+                None => bw,
+            };
+            let bidir = lj.get("bidir").as_bool().unwrap_or(true);
+            links.push(Link {
+                src,
+                dst,
+                capacity: bw,
+                latency,
+                flow_cap,
+            });
+            if bidir {
+                links.push(Link {
+                    src: dst,
+                    dst: src,
+                    capacity: bw,
+                    latency,
+                    flow_cap,
+                });
+            }
+        }
+        Self::build(name, nodes, links, devices, Vec::new())
+    }
+
+    /// Shared constructor: computes routing tables and checks that every
+    /// device can reach every other.
+    fn build(
+        name: String,
+        nodes: Vec<Node>,
+        links: Vec<Link>,
+        devices: Vec<usize>,
+        caps: Vec<usize>,
+    ) -> Result<Self, String> {
+        let nn = nodes.len();
+        // Links INTO each node, for the reverse Dijkstra.
+        let mut in_links: Vec<Vec<usize>> = vec![Vec::new(); nn];
+        for (ei, e) in links.iter().enumerate() {
+            in_links[e.dst].push(ei);
+        }
+        let mut next_hop: Vec<Vec<u32>> = Vec::with_capacity(devices.len());
+        for &dn in &devices {
+            next_hop.push(route_toward(nn, &links, &in_links, dn));
+        }
+        // Reachability: every device pair must route.
+        for (di, nh) in next_hop.iter().enumerate() {
+            for (dj, &nj) in devices.iter().enumerate() {
+                if di != dj && nh[nj] == u32::MAX {
+                    return Err(format!(
+                        "graph '{name}': device {dj} cannot reach device {di}"
+                    ));
+                }
+            }
+        }
+        Ok(LinkGraph {
+            name,
+            nodes,
+            links,
+            devices,
+            next_hop,
+            caps,
+        })
+    }
+
+    // ----- queries -------------------------------------------------------
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Node id of device `dev`.
+    pub fn device_node(&self, dev: usize) -> usize {
+        self.devices[dev]
+    }
+
+    /// Resolve the deterministic route between two devices.
+    pub fn path(&self, src_dev: usize, dst_dev: usize) -> PathInfo {
+        let dn = self.devices[dst_dev];
+        let mut cur = self.devices[src_dev];
+        let mut out = PathInfo {
+            links: Vec::new(),
+            latency: 0.0,
+            flow_cap: f64::INFINITY,
+        };
+        let mut guard = 0usize;
+        while cur != dn {
+            let e = self.next_hop[dst_dev][cur];
+            assert!(
+                e != u32::MAX,
+                "no route from device {src_dev} to {dst_dev}"
+            );
+            let link = &self.links[e as usize];
+            out.links.push(e as usize);
+            out.latency += link.latency;
+            out.flow_cap = out.flow_cap.min(link.flow_cap);
+            cur = link.dst;
+            guard += 1;
+            assert!(guard <= self.nodes.len(), "routing loop");
+        }
+        out
+    }
+
+    /// Number of hierarchical ring levels collective lowering should
+    /// use: the tier count for cluster expansions, 1 (one flat ring)
+    /// for arbitrary edge-lists.
+    pub fn n_ring_levels(&self) -> usize {
+        self.caps.len().max(1)
+    }
+
+    /// Grouping key of device `dev` at ring level `level`: devices with
+    /// equal keys share a subtree there (everything shares the single
+    /// level on edge-lists).
+    pub fn ring_group(&self, dev: usize, level: usize) -> usize {
+        match self.caps.get(level) {
+            Some(&c) => dev / c,
+            None => 0,
+        }
+    }
+
+    /// The optimistic flat abstraction of this graph — what a
+    /// topology-agnostic analytic model assumes: every pair talks at
+    /// the best pairwise bottleneck bandwidth with the smallest
+    /// pairwise latency. It gives the level-wise DP *something* to
+    /// search on for arbitrary edge-lists; the flow simulator then
+    /// reveals what the abstraction hid (and is therefore never faster
+    /// than it).
+    pub fn approx_cluster(&self, accel: crate::hw::Accelerator) -> Cluster {
+        let n = self.n_devices();
+        let mut best_bw: f64 = 0.0;
+        let mut best_lat = f64::INFINITY;
+        for a in 0..n {
+            for b in 0..n {
+                if a == b {
+                    continue;
+                }
+                let p = self.path(a, b);
+                let mut bottleneck = p.flow_cap;
+                for &l in &p.links {
+                    bottleneck = bottleneck.min(self.links[l].capacity);
+                }
+                best_bw = best_bw.max(bottleneck);
+                best_lat = best_lat.min(p.latency);
+            }
+        }
+        let mut c = Cluster::flat(accel, n, best_bw, best_lat);
+        c.name = format!("{}-flat-abstraction", self.name);
+        c
+    }
+
+    /// Human-readable summary for logs.
+    pub fn describe(&self) -> String {
+        let switches = self
+            .nodes
+            .iter()
+            .filter(|n| n.kind == NodeKind::Switch)
+            .count();
+        let (mut bw_lo, mut bw_hi) = (f64::INFINITY, 0.0f64);
+        for l in &self.links {
+            bw_lo = bw_lo.min(l.capacity);
+            bw_hi = bw_hi.max(l.capacity);
+        }
+        format!(
+            "{} [graph: {} devices, {} switches, {} directed links, {:.1}–{:.1} GB/s]",
+            self.name,
+            self.n_devices(),
+            switches,
+            self.links.len(),
+            bw_lo / GB,
+            bw_hi / GB,
+        )
+    }
+
+    /// Display name of link `l` ("src→dst").
+    pub fn link_name(&self, l: usize) -> String {
+        let e = &self.links[l];
+        format!("{}→{}", self.nodes[e.src].name, self.nodes[e.dst].name)
+    }
+}
+
+/// Latency key with a total order (latencies are finite, never NaN).
+#[derive(Debug, Clone, Copy)]
+struct LatKey(f64);
+impl PartialEq for LatKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0).is_eq()
+    }
+}
+impl Eq for LatKey {}
+impl PartialOrd for LatKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for LatKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Reverse Dijkstra toward destination node `dn`: returns, per node, the
+/// id of the first link on the best path to `dn` (`u32::MAX` when
+/// unreachable or already there). Paths minimize (hop count, latency)
+/// lexicographically; exact ties resolve by deterministic heap order
+/// (smaller node id settles first), so routing is identical on every
+/// run — no ECMP randomness.
+fn route_toward(nn: usize, links: &[Link], in_links: &[Vec<usize>], dn: usize) -> Vec<u32> {
+    let mut hops: Vec<u32> = vec![u32::MAX; nn];
+    let mut lat: Vec<f64> = vec![f64::INFINITY; nn];
+    let mut hop_link: Vec<u32> = vec![u32::MAX; nn];
+    let mut heap: BinaryHeap<Reverse<(u32, LatKey, usize)>> = BinaryHeap::new();
+    hops[dn] = 0;
+    lat[dn] = 0.0;
+    heap.push(Reverse((0, LatKey(0.0), dn)));
+    while let Some(Reverse((h, LatKey(l), u))) = heap.pop() {
+        if h != hops[u] || l != lat[u] {
+            continue; // stale entry
+        }
+        for &ei in &in_links[u] {
+            let e = &links[ei];
+            let v = e.src;
+            let nh = h + 1;
+            let nl = l + e.latency;
+            let better = nh < hops[v] || (nh == hops[v] && nl < lat[v]);
+            if better {
+                hops[v] = nh;
+                lat[v] = nl;
+                hop_link[v] = ei as u32;
+                heap.push(Reverse((nh, LatKey(nl), v)));
+            }
+        }
+    }
+    hop_link
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{json, prop};
+
+    #[test]
+    fn fat_tree_expansion_counts() {
+        let c = Cluster::fat_tree_tpuv4(64); // tiers 8 × 4 × 2
+        let g = LinkGraph::from_cluster(&c);
+        // 64 devices + 8 node switches + 2 leaf switches + 1 agg switch.
+        assert_eq!(g.n_devices(), 64);
+        assert_eq!(g.nodes.len(), 64 + 8 + 2 + 1);
+        // Every child entity gets an up and a down link per tier.
+        assert_eq!(g.links.len(), (64 + 8 + 2) * 2);
+    }
+
+    #[test]
+    fn paths_match_levelwise_abstraction() {
+        // Single-path properties: latency = Cluster::lat(lca) and lone
+        // flow rate = Cluster::bw_eff(lca), for every preset and many
+        // random pairs.
+        for c in [
+            Cluster::fat_tree_tpuv4(64),
+            Cluster::spine_leaf_h100(128, 2.0),
+            Cluster::v100_cluster(8),
+            Cluster::torus2d(8, 8, 50.0 * GB, 1e-6),
+        ] {
+            let g = LinkGraph::from_cluster(&c);
+            prop::forall(50, 0xD1CE, |rng| {
+                let a = rng.gen_range(c.n_devices());
+                let mut b = rng.gen_range(c.n_devices());
+                if a == b {
+                    b = (b + 1) % c.n_devices();
+                }
+                // LCA level: innermost tier whose subtree holds both.
+                let mut lca = c.n_levels() - 1;
+                for l in 0..c.n_levels() {
+                    if a / c.capacity(l) == b / c.capacity(l) {
+                        lca = l;
+                        break;
+                    }
+                }
+                let p = g.path(a, b);
+                assert_eq!(p.links.len(), 2 * (lca + 1), "{a}->{b}");
+                let lat = c.lat(lca);
+                assert!(
+                    (p.latency - lat).abs() <= 1e-12 + 1e-9 * lat,
+                    "{a}->{b}: {} vs {}",
+                    p.latency,
+                    lat
+                );
+                assert_eq!(p.flow_cap, c.bw_eff(lca), "{a}->{b}");
+            });
+        }
+    }
+
+    #[test]
+    fn trunk_capacity_aggregates_and_oversubscribes() {
+        let c = Cluster::spine_leaf_h100(64, 2.0);
+        let g = LinkGraph::from_cluster(&c);
+        // A leaf→spine trunk aggregates 32 devices at 12.5/2 GB/s lanes.
+        let trunk = g
+            .links
+            .iter()
+            .find(|l| {
+                g.nodes[l.src].name.starts_with("leaf")
+                    && g.nodes[l.dst].name.starts_with("spine")
+            })
+            .expect("leaf→spine trunk exists");
+        assert!((trunk.capacity - 32.0 * 12.5 * GB / 2.0).abs() < 1.0);
+        assert!((trunk.flow_cap - 12.5 * GB / 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn routing_is_deterministic() {
+        let c = Cluster::spine_leaf_h100(64, 2.0);
+        let a = LinkGraph::from_cluster(&c);
+        let b = LinkGraph::from_cluster(&c);
+        for d in 0..a.n_devices() {
+            assert_eq!(a.next_hop[d], b.next_hop[d]);
+        }
+    }
+
+    fn dumbbell_json() -> String {
+        let mut nodes = String::new();
+        for d in 0..8 {
+            nodes.push_str(&format!("{{\"id\": \"d{d}\", \"kind\": \"device\"}},"));
+        }
+        format!(
+            r#"{{"name": "dumbbell-8", "accelerator": "h100",
+                "nodes": [{nodes}
+                          {{"id": "s0", "kind": "switch"}},
+                          {{"id": "s1", "kind": "switch"}}],
+                "links": [
+                  {{"src": "d0", "dst": "s0", "bw_gbps": 100, "latency_us": 1}},
+                  {{"src": "d1", "dst": "s0", "bw_gbps": 100, "latency_us": 1}},
+                  {{"src": "d2", "dst": "s0", "bw_gbps": 100, "latency_us": 1}},
+                  {{"src": "d3", "dst": "s0", "bw_gbps": 100, "latency_us": 1}},
+                  {{"src": "d4", "dst": "s1", "bw_gbps": 100, "latency_us": 1}},
+                  {{"src": "d5", "dst": "s1", "bw_gbps": 100, "latency_us": 1}},
+                  {{"src": "d6", "dst": "s1", "bw_gbps": 100, "latency_us": 1}},
+                  {{"src": "d7", "dst": "s1", "bw_gbps": 100, "latency_us": 1}},
+                  {{"src": "s0", "dst": "s1", "bw_gbps": 25, "latency_us": 5}}
+                ]}}"#
+        )
+    }
+
+    #[test]
+    fn edge_list_parses_and_routes() {
+        let g = LinkGraph::from_json(&json::parse(&dumbbell_json()).unwrap()).unwrap();
+        assert_eq!(g.n_devices(), 8);
+        // Same-side pair: 2 hops through s0.
+        let p = g.path(0, 1);
+        assert_eq!(p.links.len(), 2);
+        assert!((p.flow_cap - 100.0 * GB).abs() < 1.0);
+        // Cross pair: 3 hops through the 25 GB/s waist.
+        let p = g.path(0, 4);
+        assert_eq!(p.links.len(), 3);
+        assert!((p.flow_cap - 25.0 * GB).abs() < 1.0);
+        assert!((p.latency - 7e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edge_list_rejects_bad_inputs() {
+        for bad in [
+            // No devices.
+            r#"{"nodes": [{"id": "s", "kind": "switch"}],
+                "links": [{"src": "s", "dst": "s", "bw_gbps": 1}]}"#,
+            // Unknown endpoint.
+            r#"{"nodes": ["a", "b"],
+                "links": [{"src": "a", "dst": "zzz", "bw_gbps": 1}]}"#,
+            // Duplicate id.
+            r#"{"nodes": ["a", "a"], "links": [{"src": "a", "dst": "a", "bw_gbps": 1}]}"#,
+            // Disconnected devices.
+            r#"{"nodes": ["a", "b", "c"],
+                "links": [{"src": "a", "dst": "b", "bw_gbps": 1}]}"#,
+            // Missing bandwidth.
+            r#"{"nodes": ["a", "b"], "links": [{"src": "a", "dst": "b"}]}"#,
+        ] {
+            assert!(
+                LinkGraph::from_json(&json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn approx_cluster_is_optimistic() {
+        let g = LinkGraph::from_json(&json::parse(&dumbbell_json()).unwrap()).unwrap();
+        let c = g.approx_cluster(crate::hw::Accelerator::h100());
+        assert_eq!(c.n_devices(), 8);
+        // Best pairwise bottleneck is a same-side pair at 100 GB/s with
+        // 2 µs of latency — faster than anything crossing the waist.
+        assert!((c.bw_eff(0) - 100.0 * GB).abs() < 1.0);
+        assert!((c.lat(0) - 2e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_levels_flat_for_edge_lists() {
+        let g = LinkGraph::from_json(&json::parse(&dumbbell_json()).unwrap()).unwrap();
+        assert_eq!(g.n_ring_levels(), 1);
+        assert_eq!(g.ring_group(0, 0), g.ring_group(7, 0));
+        let c = Cluster::fat_tree_tpuv4(64);
+        let t = LinkGraph::from_cluster(&c);
+        assert_eq!(t.n_ring_levels(), 3);
+        assert_eq!(t.ring_group(0, 0), 0);
+        assert_eq!(t.ring_group(9, 0), 1);
+        assert_eq!(t.ring_group(9, 1), 0);
+    }
+}

@@ -76,10 +76,12 @@ impl Cluster {
         let mut worst: f64 = 0.0;
         let mut inner: usize = 1;
         let mut deepest_tier = 0;
+        let mut active_phases = 0usize;
         for (i, &gi) in shape.iter().enumerate() {
             if gi <= 1 {
                 continue;
             }
+            active_phases += 1;
             let tier = self.tier_for(i, shape);
             deepest_tier = deepest_tier.max(tier);
             let below = inner * gi;
@@ -89,7 +91,9 @@ impl Cluster {
             worst = worst.max(bytes * f / tier_bw(self, tier));
             inner = below;
         }
-        worst + self.tiers[deepest_tier].latency * (shape.len() as f64)
+        // Latency is paid once per phase that actually exchanges data:
+        // 1-entries in the shape (tiers no ring runs over) cost nothing.
+        worst + self.tiers[deepest_tier].latency * (active_phases as f64)
     }
 
     /// Point-to-point send/recv between two compact sub-groups at `level`.
@@ -110,7 +114,14 @@ impl Cluster {
             }
             CollectiveKind::AllToAll => self.alltoall(call.bytes, &shape),
             CollectiveKind::SendRecv => {
-                self.sendrecv(call.bytes, self.level_of_group(call.group))
+                // A SendRecv call is the exchange between two *adjacent*
+                // compact blocks of `group` devices (pipeline-style
+                // neighbors). Two blocks that each exactly fill a
+                // level-`l` subtree talk across the tier above —
+                // `boundary_level`, not `level_of_group`, which answers
+                // the different question of where one block *lives* (and
+                // under-priced the exactly-filling case at level `l`).
+                self.sendrecv(call.bytes, self.boundary_level(call.group.max(1)))
             }
         }
     }
@@ -285,6 +296,87 @@ mod tests {
             let shape_big = c.compact_shape(g * 2);
             assert!(c.allreduce(b1, &shape_big) >= c.allreduce(b1, &shape) * 0.99);
         });
+    }
+
+    #[test]
+    fn sendrecv_adjacent_full_subtree_crosses_next_tier() {
+        // Mirror of the PR-1 spread_shape stride bug, on the p2p path:
+        // two adjacent stage groups of 8 devices each exactly fill a
+        // fat-tree node (capacities [8, 32, 1024]), so their boundary
+        // transfer must be priced at the leaf tier, never over NVLink.
+        let c = cluster();
+        let b = 1e8;
+        let t8 = c.collective_time(&CollectiveCall {
+            kind: CollectiveKind::SendRecv,
+            bytes: b,
+            group: 8,
+        });
+        let expect = c.p2p_time(1, b);
+        assert!(
+            (t8 - expect).abs() / expect < 1e-12,
+            "node-filling groups must talk at level 1: {t8} vs {expect}"
+        );
+        // Rack-filling groups (32 = leaf capacity) cross the agg tier.
+        let t32 = c.collective_time(&CollectiveCall {
+            kind: CollectiveKind::SendRecv,
+            bytes: b,
+            group: 32,
+        });
+        let expect32 = c.p2p_time(2, b);
+        assert!((t32 - expect32).abs() / expect32 < 1e-12);
+        // Non-filling groups still talk inside the shared subtree.
+        let t4 = c.collective_time(&CollectiveCall {
+            kind: CollectiveKind::SendRecv,
+            bytes: b,
+            group: 4,
+        });
+        let expect4 = c.p2p_time(0, b);
+        assert!((t4 - expect4).abs() / expect4 < 1e-12);
+        // The underlying level queries.
+        assert_eq!(c.boundary_level(4), 0);
+        assert_eq!(c.boundary_level(8), 1);
+        assert_eq!(c.boundary_level(12), 0);
+        assert_eq!(c.boundary_level(32), 2);
+        assert_eq!(c.boundary_level(40), 1);
+    }
+
+    #[test]
+    fn cp_pair_exchange_stays_intra_node_on_arity2_nodes() {
+        // CP with tp=1 emits SendRecv group=1 (two adjacent 1-blocks):
+        // on a V100 cluster (2-wide NVLink nodes) the pair {0,1} is
+        // genuinely intra-node and must price at NVLink, not the
+        // switch tier — `boundary_level(1)` is 0 on every topology.
+        let c = Cluster::v100_cluster(8);
+        let b = 1e8;
+        let t = c.collective_time(&CollectiveCall {
+            kind: CollectiveKind::SendRecv,
+            bytes: b,
+            group: 1,
+        });
+        let expect = c.p2p_time(0, b);
+        assert!(
+            (t - expect).abs() / expect < 1e-12,
+            "tp=1 CP pair must stay intra-node: {t} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn alltoall_latency_counts_only_active_phases() {
+        // A shape with a 1-entry ([8, 1, 4]: node rings + agg rings, no
+        // leaf phase) pays latency for 2 phases, not shape.len() = 3.
+        let c = cluster(); // fat-tree, caps [8, 32, 1024]
+        let b = 1e8;
+        let t = c.alltoall(b, &[8, 1, 4]);
+        let g_total = 32.0;
+        let worst = (b * (7.0 / g_total) / c.bw_eff(0))
+            .max(b * (24.0 / g_total) / c.bw_eff(2));
+        let expect = worst + c.tiers[2].latency * 2.0;
+        assert!(
+            (t - expect).abs() / expect < 1e-12,
+            "[8,1,4] latency must count 2 active phases: {t} vs {expect}"
+        );
+        // Degenerate all-ones shape moves nothing and costs nothing.
+        assert_eq!(c.alltoall(b, &[1, 1, 1]), 0.0);
     }
 
     #[test]

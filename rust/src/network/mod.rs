@@ -249,13 +249,9 @@ impl Cluster {
     ///             "latency_us": 1.0, "oversub": 1.0}, ...]}
     /// ```
     pub fn from_json(v: &Json) -> Result<Self, String> {
-        let accel = match v.get("accelerator").as_str().unwrap_or("h100") {
-            "tpuv4" => Accelerator::tpu_v4(),
-            "h100" => Accelerator::h100(),
-            "v100" => Accelerator::v100(),
-            "cpu-sim" => Accelerator::cpu_sim(),
-            other => return Err(format!("unknown accelerator '{other}'")),
-        };
+        let accel_name = v.get("accelerator").as_str().unwrap_or("h100");
+        let accel = Accelerator::by_name(accel_name)
+            .ok_or_else(|| format!("unknown accelerator '{accel_name}'"))?;
         let tiers_json = v
             .get("tiers")
             .as_arr()
@@ -318,6 +314,26 @@ impl Cluster {
     pub fn p2p_time(&self, l: usize, bytes: f64) -> f64 {
         debug_assert!(l < self.n_levels());
         self.lat(l) + bytes / self.bw_eff(l)
+    }
+
+    /// Communication level crossed by the boundary between device
+    /// `offset−1` and device `offset` under compact packing: the innermost
+    /// tier whose subtree capacity does *not* divide the offset. This is
+    /// the level at which two *adjacent* compact blocks of `offset`
+    /// devices talk: a block that exactly fills a level-`l` subtree must
+    /// reach its neighbor through the tier above (`capacity(l) | offset`
+    /// pushes the answer past `l`), while a non-filling block shares a
+    /// subtree with its neighbor. Example for capacities `[8, 32, 1024]`:
+    /// offset 4 → level 0 (intra-node), offset 8 → level 1 (node edge),
+    /// offset 32 → level 2 (rack edge), offset 12 → level 0.
+    pub fn boundary_level(&self, offset: usize) -> usize {
+        debug_assert!(offset > 0, "offset 0 is not a boundary");
+        for l in 0..self.n_levels() {
+            if offset % self.capacity(l) != 0 {
+                return l;
+            }
+        }
+        self.n_levels() - 1
     }
 
     /// Smallest level whose subtree holds `g` devices — where a compactly

@@ -46,14 +46,19 @@ pub struct SimReport {
     pub sync_time: f64,
 }
 
+/// One operation in a stage's schedule order. Public so [`crate::netsim`]
+/// lowers the exact same op sequences into flow workloads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Op {
-    Fwd(usize), // microbatch id
+pub enum Op {
+    /// Forward of a microbatch (by id).
+    Fwd(usize),
+    /// Backward of a microbatch (by id).
     Bwd(usize),
 }
 
-/// Build a stage's operation sequence.
-fn stage_ops(schedule: Schedule, stage: usize, p: usize, m: usize) -> Vec<Op> {
+/// Build a stage's operation sequence under `schedule` for a `p`-stage
+/// pipeline running `m` microbatches.
+pub fn stage_ops(schedule: Schedule, stage: usize, p: usize, m: usize) -> Vec<Op> {
     match schedule {
         Schedule::GPipe => {
             let mut ops: Vec<Op> = (0..m).map(Op::Fwd).collect();

@@ -17,13 +17,7 @@ use crate::network::Cluster;
 /// `[8, 32, 1024]`: offset 4 → level 0 (intra-node), offset 8 → level 1
 /// (node boundary), offset 32 → level 2 (rack boundary).
 pub fn boundary_level(cluster: &Cluster, offset: usize) -> usize {
-    debug_assert!(offset > 0, "offset 0 is not a boundary");
-    for l in 0..cluster.n_levels() {
-        if offset % cluster.capacity(l) != 0 {
-            return l;
-        }
-    }
-    cluster.n_levels() - 1
+    cluster.boundary_level(offset)
 }
 
 /// Device ids of the stage `blocks_from_end` blocks from the pipeline

@@ -7,10 +7,17 @@ use nest::graph::models;
 use nest::graph::subgraph::SgConfig;
 use nest::harness::{run_method, HarnessOpts, Method};
 use nest::memory::ZeroStage;
+use nest::netsim::{simulate_flows, LinkGraph};
 use nest::network::Cluster;
 use nest::sim::{simulate, Schedule};
 use nest::solver::{exact, solve, SolverOpts};
 use nest::util::prop;
+
+fn load_cluster(file: &str) -> Cluster {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
+    let text = std::fs::read_to_string(&path).unwrap();
+    Cluster::from_json(&nest::util::json::parse(&text).unwrap()).unwrap()
+}
 
 /// Every (Table-2 model × paper cluster) cell yields a valid NEST plan.
 #[test]
@@ -281,6 +288,116 @@ fn shipped_configs_solve() {
         let graph = models::llama2_7b(1);
         let sol = solve(&graph, &cluster, &SolverOpts::default()).unwrap();
         sol.plan.validate(&graph, &cluster).unwrap();
+    }
+}
+
+/// Satellite invariant for the flow-level simulator: the shipped
+/// oversubscribed spine (4:1 agg tier) yields strictly higher flow-sim
+/// batch time than its 1:1 twin for the *same* placement plan — the
+/// contention netsim exists to expose.
+#[test]
+fn netsim_oversubscribed_spine_strictly_slower_than_twin() {
+    let c_1to1 = load_cluster("configs/oversubscribed_1to1.json");
+    let c_4to1 = load_cluster("configs/oversubscribed_4to1.json");
+    assert_eq!(c_1to1.n_devices(), c_4to1.n_devices());
+    let graph = models::llama2_7b(1);
+    // One plan, solved against the clean twin, replayed on both fabrics.
+    let plan = solve(&graph, &c_1to1, &SolverOpts::default()).unwrap().plan;
+    plan.validate(&graph, &c_1to1).unwrap();
+    let clean = simulate_flows(
+        &graph,
+        &c_1to1,
+        &LinkGraph::from_cluster(&c_1to1),
+        &plan,
+        Schedule::OneFOneB,
+    );
+    let congested = simulate_flows(
+        &graph,
+        &c_1to1, // same analytic cost view: only the fabric differs
+        &LinkGraph::from_cluster(&c_4to1),
+        &plan,
+        Schedule::OneFOneB,
+    );
+    assert!(
+        congested.batch_time > clean.batch_time,
+        "4:1 {} must be strictly slower than 1:1 {}",
+        congested.batch_time,
+        clean.batch_time
+    );
+    // And the congested run must also never beat the analytic DES.
+    let ana = simulate(&graph, &c_1to1, &plan, Schedule::OneFOneB);
+    assert!(congested.batch_time >= ana.batch_time * (1.0 - 1e-9));
+}
+
+/// Flow-sim determinism across solver thread counts: plans are
+/// thread-invariant (PR 1) and the engine is single-threaded, so the
+/// reports must be bit-identical.
+#[test]
+fn netsim_reports_bit_identical_across_threads() {
+    let graph = models::bert_large(1);
+    let cluster = Cluster::spine_leaf_h100(64, 2.0);
+    let topo = LinkGraph::from_cluster(&cluster);
+    let mut reports = Vec::new();
+    for threads in [1usize, 4] {
+        let sol = solve(
+            &graph,
+            &cluster,
+            &SolverOpts {
+                threads,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        reports.push(simulate_flows(
+            &graph,
+            &cluster,
+            &topo,
+            &sol.plan,
+            Schedule::OneFOneB,
+        ));
+    }
+    assert_eq!(
+        reports[0].batch_time.to_bits(),
+        reports[1].batch_time.to_bits(),
+        "flow-sim result depends on --threads"
+    );
+    assert_eq!(reports[0].n_flows, reports[1].n_flows);
+    assert_eq!(reports[0].events, reports[1].events);
+    assert_eq!(
+        reports[0].total_bytes.to_bits(),
+        reports[1].total_bytes.to_bits()
+    );
+}
+
+/// The shipped edge-list topologies parse, route, and carry a full
+/// netsim run end to end (the `nest netsim --config` path).
+#[test]
+fn shipped_edge_lists_run_netsim() {
+    for (file, expect_devices) in [
+        ("configs/edgelist_dumbbell.json", 8usize),
+        ("configs/edgelist_spineleaf_4to1.json", 16),
+    ] {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let topo = LinkGraph::from_json(&nest::util::json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert_eq!(topo.n_devices(), expect_devices, "{file}");
+        let cluster = topo.approx_cluster(nest::hw::Accelerator::h100());
+        let graph = models::bert_large(1);
+        let sol = solve(&graph, &cluster, &SolverOpts::default())
+            .unwrap_or_else(|| panic!("{file}: infeasible"));
+        let rep = simulate_flows(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB);
+        assert!(rep.batch_time.is_finite() && rep.batch_time > 0.0, "{file}");
+        assert!(rep.n_flows > 0, "{file}");
+        // The flat abstraction is optimistic by construction: the real
+        // fabric can only be slower.
+        let ana = simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB);
+        assert!(
+            rep.batch_time >= ana.batch_time * (1.0 - 1e-9),
+            "{file}: flow {} < analytic {}",
+            rep.batch_time,
+            ana.batch_time
+        );
     }
 }
 
