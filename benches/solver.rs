@@ -5,9 +5,11 @@
 
 use nest::baselines::mist;
 use nest::graph::models;
+use nest::harness::netsim::dumbbell_topology;
 use nest::network::Cluster;
 use nest::solver::exact::{solve_exact, ExactOpts};
-use nest::solver::{solve, SolverOpts};
+use nest::solver::refine::refine;
+use nest::solver::{solve, solve_topk, SolverOpts};
 use nest::util::bench::{bench, bench_n, report_speedup};
 
 fn main() {
@@ -115,4 +117,25 @@ fn main() {
         )
     });
     report_speedup("solve_gpt3_35b_256_4t_over_1t", &single, &multi);
+
+    // K-best enumeration overhead: retaining the top-8 shortlist keeps a
+    // looser pruning incumbent (the K-th, not the 1st), so this tracks
+    // how much search the refinement loop's shortlist really costs over
+    // the single-winner solve.
+    let g = models::llama2_7b(1);
+    let c = Cluster::fat_tree_tpuv4(256);
+    let top1 = bench_n("solve_llama2_7b_fattree_256_top1", 3, || {
+        solve_topk(&g, &c, &opts, 1)
+    });
+    let top8 = bench_n("solve_llama2_7b_fattree_256_top8", 3, || {
+        solve_topk(&g, &c, &opts, 8)
+    });
+    report_speedup("solve_llama2_7b_256_top1_over_top8", &top8, &top1);
+
+    // End-to-end refinement loop on the shipped dumbbell edge-list:
+    // shortlist solve + K flow-level replays + re-rank.
+    let (ec, edge) = dumbbell_topology();
+    bench_n("refine_top4_llama2_7b_dumbbell", 3, || {
+        refine(&g, &ec, &edge, &opts, 4)
+    });
 }

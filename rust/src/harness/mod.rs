@@ -9,6 +9,8 @@
 
 pub mod figures;
 pub mod netsim;
+pub mod perf;
+pub mod refine;
 pub mod tables;
 
 use crate::baselines::{alpa, manual, mcmc, mist, phaze};

@@ -26,6 +26,19 @@ use super::HarnessOpts;
 /// working directory; the same file ships under `configs/`).
 pub const EDGELIST_DUMBBELL: &str = include_str!("../../../configs/edgelist_dumbbell.json");
 
+/// The dumbbell edge-list as (optimistic analytic cluster, explicit
+/// link graph) — the construction every dumbbell consumer (harness
+/// tables, perf smoke, refine benches/tests) must share so they all
+/// measure the same fabric.
+pub fn dumbbell_topology() -> (Cluster, LinkGraph) {
+    let topo = LinkGraph::from_json(
+        &crate::util::json::parse(EDGELIST_DUMBBELL).expect("shipped edge-list parses"),
+    )
+    .expect("shipped edge-list builds");
+    let cluster = topo.approx_cluster(Accelerator::h100());
+    (cluster, topo)
+}
+
 /// One topology family of the cross-validation sweep.
 struct Family {
     label: &'static str,
@@ -61,11 +74,7 @@ fn families(quick: bool) -> Vec<Family> {
         topo: LinkGraph::from_cluster(&torus),
         cluster: torus,
     });
-    let edge = LinkGraph::from_json(
-        &crate::util::json::parse(EDGELIST_DUMBBELL).expect("shipped edge-list parses"),
-    )
-    .expect("shipped edge-list builds");
-    let cluster = edge.approx_cluster(Accelerator::h100());
+    let (cluster, edge) = dumbbell_topology();
     out.push(Family {
         label: "edge-list dumbbell",
         contended: true,

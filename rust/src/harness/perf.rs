@@ -1,0 +1,279 @@
+//! Deterministic perf smoke for the CI bench-regression gate.
+//!
+//! `nest bench-smoke` runs a small, fixed set of wall-clock metrics —
+//! the placement solve at 1 and 4 worker threads on a mid-size model,
+//! and the flow-level fair-share simulation on the shipped dumbbell
+//! edge-list — writes them as `BENCH_PR.json`, and (with `--baseline`)
+//! fails if any metric regressed more than the tolerance against the
+//! committed `BENCH_BASELINE.json`. Each metric is the **minimum** over
+//! its repetitions, the standard noise-robust statistic for regression
+//! gating. Refresh the baseline with one line:
+//!
+//! ```text
+//! cargo run --release -- bench-smoke --out BENCH_BASELINE.json
+//! ```
+
+use crate::graph::models;
+use crate::netsim::simulate_flows;
+use crate::network::Cluster;
+use crate::sim::Schedule;
+use crate::solver::{solve, SolverOpts};
+use crate::util::bench::{bench_n, report_speedup};
+use crate::util::json::Json;
+
+use super::netsim::dumbbell_topology;
+
+/// One gated wall-clock metric.
+#[derive(Debug, Clone)]
+pub struct PerfMetric {
+    pub name: String,
+    /// Minimum wall-clock seconds over the metric's repetitions.
+    pub seconds: f64,
+}
+
+/// The smoke's full metric set.
+#[derive(Debug, Clone)]
+pub struct PerfSmoke {
+    /// `"full"` (what CI gates) or `"quick"` (shrunk sizes/reps for
+    /// tests). [`gate`] refuses to compare across modes — the workloads
+    /// differ, so cross-mode deltas are meaningless.
+    pub mode: &'static str,
+    pub metrics: Vec<PerfMetric>,
+}
+
+impl PerfSmoke {
+    /// Serialize to the `BENCH_PR.json` / `BENCH_BASELINE.json` schema.
+    pub fn to_json(&self) -> Json {
+        let metrics = Json::Obj(
+            self.metrics
+                .iter()
+                .map(|m| (m.name.clone(), Json::num(m.seconds)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::str("nest-bench-smoke-v1")),
+            ("mode", Json::str(self.mode)),
+            (
+                "refresh",
+                Json::str("cargo run --release -- bench-smoke --out BENCH_BASELINE.json"),
+            ),
+            ("metrics", metrics),
+        ])
+    }
+
+    fn get(&self, name: &str) -> Option<f64> {
+        self.metrics
+            .iter()
+            .find(|m| m.name == name)
+            .map(|m| m.seconds)
+    }
+}
+
+/// Solver options pinned to `threads` (everything else default, like the
+/// benches — the smoke must measure the same code path CI users run).
+fn sopts(threads: usize) -> SolverOpts {
+    SolverOpts {
+        threads,
+        ..Default::default()
+    }
+}
+
+/// Run the perf smoke. `quick` shrinks sizes and repetitions for unit
+/// tests; CI runs the full set.
+pub fn run_smoke(quick: bool) -> PerfSmoke {
+    let mut metrics = Vec::new();
+    let reps = if quick { 1 } else { 3 };
+    let devices = if quick { 64 } else { 128 };
+
+    // Solver wall clock, single- and multi-thread, mid-size model: the
+    // shared-incumbent fan-out is perf-critical and both paths must stay
+    // fast (the 4t run also guards the parallel path against lock
+    // contention creep).
+    let graph = models::llama2_7b(1);
+    let cluster = Cluster::fat_tree_tpuv4(devices);
+    let single = bench_n("bench_smoke_solve_llama2_7b_1t", reps, || {
+        solve(&graph, &cluster, &sopts(1))
+    });
+    metrics.push(PerfMetric {
+        name: "solve_llama2_7b_fattree_1t".into(),
+        seconds: single.min.as_secs_f64(),
+    });
+    let multi = bench_n("bench_smoke_solve_llama2_7b_4t", reps, || {
+        solve(&graph, &cluster, &sopts(4))
+    });
+    metrics.push(PerfMetric {
+        name: "solve_llama2_7b_fattree_4t".into(),
+        seconds: multi.min.as_secs_f64(),
+    });
+    report_speedup("bench_smoke_solve_4t_over_1t", &single, &multi);
+
+    // Flow-level fair-share engine on the shipped dumbbell edge-list:
+    // the netsim hot path (plan solved once, untimed).
+    let (ecluster, topo) = dumbbell_topology();
+    let sol = solve(&graph, &ecluster, &sopts(0)).expect("dumbbell placement feasible");
+    let net = bench_n(
+        "bench_smoke_netsim_fairshare_dumbbell",
+        if quick { 1 } else { 5 },
+        || simulate_flows(&graph, &ecluster, &topo, &sol.plan, Schedule::OneFOneB),
+    );
+    metrics.push(PerfMetric {
+        name: "netsim_fairshare_dumbbell".into(),
+        seconds: net.min.as_secs_f64(),
+    });
+
+    PerfSmoke {
+        mode: if quick { "quick" } else { "full" },
+        metrics,
+    }
+}
+
+/// Gate `pr` against a parsed baseline document: every baseline metric
+/// must exist in `pr` and must not exceed `baseline · (1 + tolerance)`.
+/// `Err` carries the full list of violations.
+pub fn gate(pr: &PerfSmoke, baseline: &Json, tolerance: f64) -> Result<(), String> {
+    // A missing mode field (pre-mode baselines) is treated as "full".
+    let base_mode = baseline.get("mode").as_str().unwrap_or("full");
+    if base_mode != pr.mode {
+        return Err(format!(
+            "bench mode mismatch: this run is `{}` but the baseline is `{base_mode}` — \
+             the workloads differ, so the comparison is meaningless (refresh the \
+             baseline without --quick)",
+            pr.mode
+        ));
+    }
+    let Some(base_metrics) = baseline.get("metrics").as_obj() else {
+        return Err("baseline has no `metrics` object — refresh it with \
+                    `cargo run --release -- bench-smoke --out BENCH_BASELINE.json`"
+            .into());
+    };
+    let mut violations = Vec::new();
+    for (name, v) in base_metrics {
+        let Some(base) = v.as_f64() else {
+            violations.push(format!("baseline metric `{name}` is not a number"));
+            continue;
+        };
+        match pr.get(name) {
+            None => violations.push(format!("metric `{name}` missing from this run")),
+            Some(got) if got > base * (1.0 + tolerance) => violations.push(format!(
+                "{name}: {:.3}s vs baseline {:.3}s ({:+.0}% > {:.0}% tolerance)",
+                got,
+                base,
+                (got / base - 1.0) * 100.0,
+                tolerance * 100.0
+            )),
+            Some(got) => println!(
+                "BENCH-GATE ok {name}: {:.3}s vs baseline {:.3}s ({:+.0}%)",
+                got,
+                base,
+                (got / base - 1.0) * 100.0
+            ),
+        }
+    }
+    // The inverse gap: a metric this run produced that the baseline
+    // doesn't know about is NOT gated — make that visible so new
+    // run_smoke metrics get a baseline refresh instead of silent
+    // non-coverage.
+    for m in &pr.metrics {
+        if !base_metrics.contains_key(&m.name) {
+            println!(
+                "BENCH-GATE warn {}: not in the baseline — ungated until it is \
+                 refreshed ({:.3}s this run)",
+                m.name, m.seconds
+            );
+        }
+    }
+    if violations.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            "bench regression gate failed:\n  {}",
+            violations.join("\n  ")
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn smoke(pairs: &[(&str, f64)]) -> PerfSmoke {
+        PerfSmoke {
+            mode: "full",
+            metrics: pairs
+                .iter()
+                .map(|(n, s)| PerfMetric {
+                    name: n.to_string(),
+                    seconds: *s,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        let base = parse(r#"{"metrics": {"a": 1.0, "b": 0.5}}"#).unwrap();
+        let pr = smoke(&[("a", 1.2), ("b", 0.4), ("extra", 9.0)]);
+        assert!(gate(&pr, &base, 0.25).is_ok());
+    }
+
+    #[test]
+    fn gate_fails_on_regression() {
+        let base = parse(r#"{"metrics": {"a": 1.0}}"#).unwrap();
+        let pr = smoke(&[("a", 1.3)]);
+        let err = gate(&pr, &base, 0.25).unwrap_err();
+        assert!(err.contains("a:"), "unexpected message: {err}");
+    }
+
+    #[test]
+    fn gate_fails_on_missing_metric() {
+        let base = parse(r#"{"metrics": {"a": 1.0, "gone": 1.0}}"#).unwrap();
+        let pr = smoke(&[("a", 1.0)]);
+        assert!(gate(&pr, &base, 0.25).is_err());
+    }
+
+    #[test]
+    fn gate_rejects_baseline_without_metrics() {
+        let base = parse(r#"{"oops": true}"#).unwrap();
+        assert!(gate(&smoke(&[]), &base, 0.25).is_err());
+    }
+
+    #[test]
+    fn gate_refuses_cross_mode_comparison() {
+        // quick-vs-full numbers come from different workloads; comparing
+        // them must be a clear error, not a bogus pass/fail.
+        let base = parse(r#"{"mode": "full", "metrics": {"a": 1.0}}"#).unwrap();
+        let mut pr = smoke(&[("a", 0.1)]);
+        pr.mode = "quick";
+        let err = gate(&pr, &base, 0.25).unwrap_err();
+        assert!(err.contains("mode mismatch"), "unexpected message: {err}");
+        // A baseline without a mode field is treated as full.
+        let legacy = parse(r#"{"metrics": {"a": 1.0}}"#).unwrap();
+        assert!(gate(&smoke(&[("a", 1.0)]), &legacy, 0.25).is_ok());
+    }
+
+    #[test]
+    fn smoke_json_roundtrips() {
+        let s = smoke(&[("a", 1.5)]);
+        let text = crate::util::json::to_pretty(&s.to_json());
+        let v = parse(&text).unwrap();
+        assert_eq!(v.get("metrics").get("a").as_f64(), Some(1.5));
+        assert_eq!(v.get("schema").as_str(), Some("nest-bench-smoke-v1"));
+        assert_eq!(v.get("mode").as_str(), Some("full"));
+        // The committed baseline stays refreshable with one command.
+        assert!(v.get("refresh").as_str().unwrap().contains("bench-smoke"));
+    }
+
+    #[test]
+    fn quick_smoke_produces_all_gated_metrics() {
+        let s = run_smoke(true);
+        assert_eq!(s.mode, "quick");
+        for name in [
+            "solve_llama2_7b_fattree_1t",
+            "solve_llama2_7b_fattree_4t",
+            "netsim_fairshare_dumbbell",
+        ] {
+            assert!(s.get(name).unwrap() > 0.0, "missing metric {name}");
+        }
+    }
+}

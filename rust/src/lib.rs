@@ -8,8 +8,10 @@
 //!   level-wise abstraction and collective cost models, [`memory`] the
 //!   Eq. 1 peak-memory model with ZeRO.
 //! * [`cost`]: the unified `load(·)` term consumed by the solvers.
-//! * [`solver`]: NEST's network-aware dynamic program (Algorithm 1) and
-//!   plan reconstruction/device assignment.
+//! * [`solver`]: NEST's network-aware dynamic program (Algorithm 1),
+//!   plan reconstruction/device assignment, the K-best shortlist
+//!   enumeration, and the contention-aware refinement loop
+//!   (`solver::refine`: shortlist × flow-sim re-rank).
 //! * [`baselines`]: Manual, MCMC (TopoOpt-style), Phaze, Alpa-E, Mist.
 //! * [`sim`]: discrete-event pipeline simulator (the "testbed").
 //! * [`netsim`]: flow-level contention-aware network simulator —

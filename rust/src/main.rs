@@ -6,6 +6,9 @@
 //!   netsim     flow-level contention cross-check of a plan on an explicit
 //!              link graph (tier stacks or arbitrary edge-list JSON)
 //!   netsim-xval  analytic-vs-flow-sim error table across topology families
+//!   refine     top-K analytic shortlist re-ranked by the flow simulator
+//!   refine-xval  cross-topology refinement table (where the ranking flips)
+//!   bench-smoke  deterministic perf smoke + CI bench-regression gate
 //!   train      real pipeline-parallel training from AOT artifacts
 //!   profile    calibrate the compute model against PJRT probe runs
 //!   figure2|5|6|7|10|11, table2|4|6|7, v100   — paper reproductions
@@ -16,6 +19,7 @@ use nest::harness::{figures, tables, HarnessOpts};
 use nest::netsim::{simulate_flows, LinkGraph};
 use nest::network::Cluster;
 use nest::sim::{simulate, Schedule};
+use nest::solver::refine::refine;
 use nest::solver::{solve, SolverOpts};
 use nest::trainer::{train, TrainOpts};
 use nest::util::cli::Args;
@@ -87,9 +91,15 @@ fn main() {
     let oversub = args.get_f64("oversub", 2.0);
     let quick = args.has_flag("quick");
     let results_dir = args.get("results", "results");
-    // Solver worker threads (0 = one per core); plans are identical for
-    // every thread count — see nest::solver docs.
-    let threads = args.get_usize("threads", 0);
+    // Solver worker threads (omit for one per core); plans are identical
+    // for every thread count — see nest::solver docs. An explicit
+    // `--threads 0` is a clean error, not a silent hang.
+    let threads = args.get_usize_nonzero("threads", 0);
+    // Fail fast on malformed common flags before any solve starts.
+    if let Err(e) = args.check() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
 
     let mut hopts = if quick {
         HarnessOpts::quick()
@@ -149,6 +159,7 @@ fn main() {
                     seed: args.get_usize("seed", 42) as u64,
                     log_every: args.get_usize("log-every", 1),
                 };
+                args.check()?;
                 let rep = train(&dir, &opts).map_err(|e| format!("{e:#}"))?;
                 println!(
                     "trained {} steps | {:.0} tokens/s | loss {:.4} → {:.4}",
@@ -163,8 +174,9 @@ fn main() {
             "profile" => {
                 let dir = nest::runtime::artifacts_dir()
                     .ok_or("artifacts/ missing — run `make artifacts`")?;
-                let cal = nest::profiler::calibrate(&dir, args.get_usize("reps", 10))
-                    .map_err(|e| format!("{e:#}"))?;
+                let reps = args.get_usize("reps", 10);
+                args.check()?;
+                let cal = nest::profiler::calibrate(&dir, reps).map_err(|e| format!("{e:#}"))?;
                 for p in &cal.probes {
                     println!(
                         "probe h={:4}: {} median, {:.2} GFLOP/s achieved",
@@ -223,6 +235,90 @@ fn main() {
                          the analytic DES on a contended topology"
                         .into())
                 }
+            }
+            "refine" => {
+                let graph = models::by_name(&model, mbs)
+                    .ok_or_else(|| format!("unknown model '{model}'"))?;
+                let config = args.get("config", &cluster_name);
+                let topk = args.get_usize_nonzero("topk", 4);
+                args.check()?;
+                let (cluster, topo) = netsim_topology(&config, devices, oversub)?;
+                println!("{}", cluster.describe());
+                println!("{}", topo.describe());
+                let sopts = SolverOpts {
+                    threads,
+                    ..Default::default()
+                };
+                let report = refine(&graph, &cluster, &topo, &sopts, topk)
+                    .ok_or("no feasible placement")?;
+                println!(
+                    "shortlist of {} solved in {} ({} DP states, {} configs)",
+                    report.ranked.len(),
+                    nest::util::table::fmt_time(report.solve_seconds),
+                    report.dp_states,
+                    report.configs_tried
+                );
+                println!("{}", report.render_table());
+                // Consistency cross-check (CI smoke): the shortlist's
+                // analytic rank-1 plan must be exactly what plain
+                // `solve` returns, at any K.
+                let direct = solve(&graph, &cluster, &sopts).ok_or("no feasible placement")?;
+                if report.analytic_winner().plan != direct.plan {
+                    return Err(
+                        "refine shortlist disagrees with solve(): the analytic rank-1 \
+                         plan differs from the plain solver's winner"
+                            .into(),
+                    );
+                }
+                if report.winner_changed() {
+                    println!(
+                        "re-ranked winner: {} (dp rank {}) — {:.1}% faster than the \
+                         analytic winner under link contention",
+                        report.winner().plan.strategy_string(),
+                        report.winner().analytic_rank + 1,
+                        report.sim_improvement() * 100.0
+                    );
+                } else {
+                    println!(
+                        "re-ranking confirms the analytic winner: {}",
+                        report.winner().plan.strategy_string()
+                    );
+                }
+                println!("{}", report.winner().plan.describe());
+                Ok(())
+            }
+            "refine-xval" => {
+                let topk = args.get_usize_nonzero("topk", 4);
+                args.check()?;
+                if nest::harness::refine::refine_table(&hopts, topk, quick) {
+                    Ok(())
+                } else {
+                    Err("refinement regression: a shortlisted plan's flow sim undercut \
+                         its analytic DES on a contended family (or a family was \
+                         infeasible)"
+                        .into())
+                }
+            }
+            "bench-smoke" => {
+                let out = args.get("out", "BENCH_PR.json");
+                let baseline = args.get_opt("baseline");
+                let tolerance = args.get_f64("tolerance", 0.25);
+                args.check()?;
+                let smoke = nest::harness::perf::run_smoke(quick);
+                std::fs::write(&out, nest::util::json::to_pretty(&smoke.to_json()))
+                    .map_err(|e| format!("{out}: {e}"))?;
+                println!("bench report written to {out}");
+                if let Some(path) = baseline {
+                    let text =
+                        std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
+                    let base = nest::util::json::parse(&text)?;
+                    nest::harness::perf::gate(&smoke, &base, tolerance)?;
+                    println!(
+                        "bench gate passed against {path} (tolerance {:.0}%)",
+                        tolerance * 100.0
+                    );
+                }
+                Ok(())
             }
             "figure2" => {
                 figures::figure2(&hopts);
@@ -295,13 +391,18 @@ fn main() {
                 tables::table7(&hopts);
                 tables::v100_validation(&hopts);
                 figures::torus(&hopts, if quick { 64 } else { 256 });
-                if nest::harness::netsim::netsim_xval_quick(&hopts, quick) {
-                    Ok(())
-                } else {
-                    Err("netsim cross-validation regression: flow-sim undercut \
+                if !nest::harness::netsim::netsim_xval_quick(&hopts, quick) {
+                    return Err("netsim cross-validation regression: flow-sim undercut \
                          the analytic DES on a contended topology"
-                        .into())
+                        .into());
                 }
+                if !nest::harness::refine::refine_table(&hopts, 4, quick) {
+                    return Err("refinement regression: a shortlisted plan's flow sim \
+                         undercut its analytic DES on a contended family (or a \
+                         family was infeasible)"
+                        .into());
+                }
+                Ok(())
             }
             _ => {
                 println!(
@@ -313,12 +414,17 @@ fn main() {
                      \x20 netsim     --config <tier-or-edge-list.json | cluster name>: solve, then cross-check the plan\n\
                      \x20            under flow-level link contention (reports batch-time error + per-link utilization)\n\
                      \x20 netsim-xval  analytic-vs-flow-sim table across topology families (fat-tree, 4:1 spine, torus, edge-list)\n\
+                     \x20 refine     --config <topo> --model <m> --topk K: solve the analytic top-K shortlist, replay each\n\
+                     \x20            plan under flow-level contention, and re-rank (exits nonzero if the K=1 shortlist\n\
+                     \x20            ever disagrees with plain solve)\n\
+                     \x20 refine-xval  cross-topology refinement table: where the re-ranked winner flips (--topk K)\n\
+                     \x20 bench-smoke  perf smoke --out BENCH_PR.json [--baseline BENCH_BASELINE.json --tolerance 0.25]\n\
                      \x20 train      --steps N --microbatches N --dp N   (needs `make artifacts`)\n\
                      \x20 profile    --reps N\n\
                      \x20 figure2|figure5|figure6|figure7|figure10|figure11\n\
                      \x20 table2|table4|table6|table7 | v100 | torus\n\
                      \x20 all        run the complete evaluation\n\n\
-                     global: --quick (smaller sweeps), --results <dir>, --threads N (solver workers; 0 = all cores)\n\n\
+                     global: --quick (smaller sweeps), --results <dir>, --threads N (solver workers, N ≥ 1; omit for all cores)\n\n\
                      models: llama2-7b llama3-70b bertlarge gpt3-175b gpt3-35b mixtral-8x7b mixtral-790m"
                 );
                 Ok(())

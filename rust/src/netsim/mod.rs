@@ -26,7 +26,10 @@
 //! Entry points: [`simulate_flows`] for one plan on one topology, the
 //! `nest netsim` / `nest netsim-xval` CLI subcommands, and
 //! [`crate::harness::netsim::netsim_xval`] for the cross-validation
-//! table over topology families.
+//! table over topology families. Since the refinement loop
+//! ([`crate::solver::refine`], `nest refine`) landed, the simulator is
+//! also a *decision-maker*: it re-ranks the DP's analytic top-K
+//! shortlist under contention.
 
 pub mod fairshare;
 pub mod flows;

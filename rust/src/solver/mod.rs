@@ -51,6 +51,24 @@
 //! tests). Only the [`Solution`] search statistics (`dp_states`,
 //! `configs_tried`) vary with pruning luck.
 //!
+//! # K-best enumeration
+//!
+//! [`solve_topk`] generalizes the search to the **K best distinct
+//! `(sg, recompute, stage count)` solutions** under the same total
+//! order, feeding the contention-aware re-ranking loop in [`refine`].
+//! The shared incumbent becomes the **K-th smallest achieved batch
+//! time** ([`Incumbent`]): a candidate strictly worse than the K-th
+//! incumbent cannot appear in the final top-K (K achieved candidates
+//! with strictly smaller batch time precede it in the total order), so
+//! every prune site — the config-level compute bound, [`run_dp`]'s
+//! state bound, and [`eval_final`]'s cut scan — stays exact by reading
+//! the K-th value instead of the 1st. Pruning remains strict
+//! (bound-tying candidates survive), the enumeration assigns each
+//! `(sg, recompute, p)` triple to exactly one worker, and the final
+//! merge re-sorts by the total order, so **the K-best set is
+//! field-for-field identical for every thread count**. `solve` is the
+//! `K = 1` special case and its behavior is unchanged.
+//!
 //! The full per-stage-device-count generalization (the paper's
 //! `dp[l][D][k][s]` with enumerated allocations) is in [`exact`] and is
 //! used for small clusters (§5.4) and as the optimality cross-check.
@@ -58,9 +76,11 @@
 pub mod assign;
 pub mod exact;
 pub mod plan;
+pub mod refine;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cost::CostModel;
@@ -124,19 +144,51 @@ pub(crate) fn resolve_threads(requested: usize) -> usize {
     }
 }
 
-/// Lower the shared incumbent to `v` if it improves it.
-fn incumbent_offer(cell: &AtomicU64, v: f64) {
-    let mut cur = cell.load(Ordering::Relaxed);
-    while v < f64::from_bits(cur) {
-        match cell.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
-            Ok(_) => break,
-            Err(seen) => cur = seen,
-        }
-    }
+/// Shared K-best incumbent: the pruning bound is the K-th smallest
+/// *achieved* batch time offered so far (`f64::INFINITY` until K
+/// candidates exist). For `k == 1` this degenerates to the original
+/// single-incumbent behavior. The K-th value is cached in an atomic so
+/// the hot pruning paths never take the lock; `offer` is called once
+/// per evaluated `(sg, recompute, p)` combination, which is cold.
+struct Incumbent {
+    k: usize,
+    /// Cached K-th best value (bits), monotonically nonincreasing.
+    kth: AtomicU64,
+    /// The up-to-K smallest achieved batch times, sorted ascending.
+    times: Mutex<Vec<f64>>,
 }
 
-fn incumbent_read(cell: &AtomicU64) -> f64 {
-    f64::from_bits(cell.load(Ordering::Relaxed))
+impl Incumbent {
+    fn new(k: usize) -> Self {
+        Incumbent {
+            k,
+            kth: AtomicU64::new(f64::INFINITY.to_bits()),
+            times: Mutex::new(Vec::with_capacity(k)),
+        }
+    }
+
+    /// Current pruning bound: the K-th smallest achieved batch time.
+    fn bound(&self) -> f64 {
+        f64::from_bits(self.kth.load(Ordering::Relaxed))
+    }
+
+    /// Record an achieved batch time. Values that cannot enter the
+    /// current top-K (≥ the K-th with the list full) are rejected
+    /// without locking; ties at the K-th value leave the bound
+    /// unchanged, so pruning against `bound()` stays strict.
+    fn offer(&self, v: f64) {
+        if v >= self.bound() {
+            return;
+        }
+        let mut ts = self.times.lock().expect("incumbent poisoned");
+        let pos = ts.partition_point(|&t| t <= v);
+        ts.insert(pos, v);
+        ts.truncate(self.k);
+        if ts.len() == self.k {
+            self.kth
+                .fetch_min(ts[self.k - 1].to_bits(), Ordering::Relaxed);
+        }
+    }
 }
 
 /// One DP table for a fixed (sg, recompute, zero-cap).
@@ -400,15 +452,30 @@ fn candidate_before(a: &Candidate, b: &Candidate) -> bool {
     a.p < b.p
 }
 
+/// Insert `cand` into a list kept sorted by [`candidate_before`],
+/// bounded to the `k` best. The order is strict and total over distinct
+/// `(sg, recompute, p)` triples, so the resulting list is independent of
+/// insertion order.
+fn kbest_insert(list: &mut Vec<Candidate>, cand: Candidate, k: usize) {
+    let pos = list.partition_point(|c| candidate_before(c, &cand));
+    if pos >= k {
+        return;
+    }
+    list.insert(pos, cand);
+    list.truncate(k);
+}
+
 /// Per-(sg, recompute) work-item outcome.
 struct ConfigOutcome {
-    best: Option<Candidate>,
+    /// The item's up-to-K best candidates in total order.
+    kbest: Vec<Candidate>,
     dp_states: u64,
     configs: u64,
 }
 
 /// Evaluate every stage count for one (sg, recompute) configuration,
-/// pruning against (and offering improvements to) the shared incumbent.
+/// pruning against (and offering improvements to) the shared K-th
+/// incumbent.
 #[allow(clippy::too_many_arguments)]
 fn eval_config(
     graph: &LayerGraph,
@@ -418,10 +485,11 @@ fn eval_config(
     sg: SgConfig,
     rc: bool,
     s_cap: usize,
-    incumbent: &AtomicU64,
+    k: usize,
+    incumbent: &Incumbent,
 ) -> ConfigOutcome {
     let mut out = ConfigOutcome {
-        best: None,
+        kbest: Vec::new(),
         dp_states: 0,
         configs: 0,
     };
@@ -455,8 +523,8 @@ fn eval_config(
         let m = global_batch.div_ceil(d * graph.mbs);
         let mult = m as f64 + p as f64 - 1.0;
         // Config-level prune (strict): even a perfectly balanced,
-        // communication-free pipeline cannot beat the incumbent here.
-        if (total_lb / p as f64).max(max_layer_lb) * mult > incumbent_read(incumbent) {
+        // communication-free pipeline cannot enter the top-K here.
+        if (total_lb / p as f64).max(max_layer_lb) * mult > incumbent.bound() {
             continue;
         }
         let zero_cap = pow2_floor(d).min(opts.zero_max_degree);
@@ -464,7 +532,7 @@ fn eval_config(
             // The table is shared by all stage counts p' ≥ p mapping to
             // this zero cap; their multipliers only grow, so this p's
             // bound is the loosest — safe for every later reader.
-            let table_bound = incumbent_read(incumbent) / mult;
+            let table_bound = incumbent.bound() / mult;
             run_dp(
                 &cm,
                 cluster,
@@ -475,7 +543,7 @@ fn eval_config(
                 table_bound,
             )
         });
-        let bound = incumbent_read(incumbent) / mult;
+        let bound = incumbent.bound() / mult;
         let Some((bottleneck, first_cut, first_spec)) =
             eval_final(&cm, cluster, dp, p, rc, zero_cap, bound)
         else {
@@ -495,7 +563,7 @@ fn eval_config(
             })
             .fold(0.0, f64::max);
         let batch_time = bottleneck * mult + sync;
-        incumbent_offer(incumbent, batch_time);
+        incumbent.offer(batch_time);
         let cand = Candidate {
             batch_time,
             sg_idx,
@@ -515,16 +583,24 @@ fn eval_config(
                 batch_time,
             },
         };
-        if out
-            .best
-            .as_ref()
-            .map(|b| candidate_before(&cand, b))
-            .unwrap_or(true)
-        {
-            out.best = Some(cand);
-        }
+        kbest_insert(&mut out.kbest, cand, k);
     }
     out
+}
+
+/// K-best solver outcome: the analytic shortlist plus search statistics.
+#[derive(Debug, Clone)]
+pub struct TopKSolution {
+    /// The K best distinct `(sg, recompute, stage count)` plans in the
+    /// solver's total order (index 0 = the plan [`solve`] returns).
+    /// Fewer than K entries when the search space is smaller; empty when
+    /// no feasible placement exists.
+    pub plans: Vec<PlacementPlan>,
+    pub solve_seconds: f64,
+    /// See [`Solution::dp_states`].
+    pub dp_states: u64,
+    /// See [`Solution::configs_tried`].
+    pub configs_tried: u64,
 }
 
 /// Solve placement for `graph` on `cluster` with NEST's DP.
@@ -533,6 +609,30 @@ fn eval_config(
 /// every `opts.threads` value (see the module docs); only the search
 /// statistics in [`Solution`] depend on scheduling.
 pub fn solve(graph: &LayerGraph, cluster: &Cluster, opts: &SolverOpts) -> Option<Solution> {
+    let top = solve_topk(graph, cluster, opts, 1);
+    let plan = top.plans.into_iter().next()?;
+    Some(Solution {
+        plan,
+        solve_seconds: top.solve_seconds,
+        dp_states: top.dp_states,
+        configs_tried: top.configs_tried,
+    })
+}
+
+/// Solve placement, retaining the `k` best distinct
+/// `(sg, recompute, stage count)` solutions under the solver's total
+/// order (module docs, "K-best enumeration"). `k` is clamped to ≥ 1.
+///
+/// Deterministic: the returned shortlist is field-for-field identical
+/// for every `opts.threads` value. `solve_topk(…, 1)` selects exactly
+/// the plan [`solve`] returns.
+pub fn solve_topk(
+    graph: &LayerGraph,
+    cluster: &Cluster,
+    opts: &SolverOpts,
+    k: usize,
+) -> TopKSolution {
+    let k = k.max(1);
     let t0 = Instant::now();
     let k_total = cluster.n_devices();
     let n = graph.n_layers();
@@ -564,37 +664,31 @@ pub fn solve(graph: &LayerGraph, cluster: &Cluster, opts: &SolverOpts) -> Option
         }
     }
 
-    let incumbent = AtomicU64::new(f64::INFINITY.to_bits());
+    let incumbent = Incumbent::new(k);
     let next = AtomicUsize::new(0);
     let dp_states = AtomicU64::new(0);
     let configs = AtomicU64::new(0);
 
-    let worker = |local_best: &mut Option<Candidate>| {
+    let worker = |local_kbest: &mut Vec<Candidate>| {
         loop {
             let idx = next.fetch_add(1, Ordering::Relaxed);
             if idx >= items.len() {
                 break;
             }
             let (sg_idx, sg, rc) = items[idx];
-            let out = eval_config(graph, cluster, opts, sg_idx, sg, rc, s_cap, &incumbent);
+            let out = eval_config(graph, cluster, opts, sg_idx, sg, rc, s_cap, k, &incumbent);
             dp_states.fetch_add(out.dp_states, Ordering::Relaxed);
             configs.fetch_add(out.configs, Ordering::Relaxed);
-            if let Some(cand) = out.best {
-                if local_best
-                    .as_ref()
-                    .map(|b| candidate_before(&cand, b))
-                    .unwrap_or(true)
-                {
-                    *local_best = Some(cand);
-                }
+            for cand in out.kbest {
+                kbest_insert(local_kbest, cand, k);
             }
         }
     };
 
     let n_threads = resolve_threads(opts.threads).min(items.len().max(1));
-    let mut per_worker: Vec<Option<Candidate>> = Vec::with_capacity(n_threads);
+    let mut per_worker: Vec<Vec<Candidate>> = Vec::with_capacity(n_threads);
     if n_threads <= 1 {
-        let mut best = None;
+        let mut best = Vec::new();
         worker(&mut best);
         per_worker.push(best);
     } else {
@@ -602,7 +696,7 @@ pub fn solve(graph: &LayerGraph, cluster: &Cluster, opts: &SolverOpts) -> Option
             let handles: Vec<_> = (0..n_threads)
                 .map(|_| {
                     scope.spawn(|| {
-                        let mut best = None;
+                        let mut best = Vec::new();
                         worker(&mut best);
                         best
                     })
@@ -614,24 +708,21 @@ pub fn solve(graph: &LayerGraph, cluster: &Cluster, opts: &SolverOpts) -> Option
         });
     }
 
-    // Deterministic reduce: total order over every worker's best.
-    let mut best: Option<Candidate> = None;
+    // Deterministic reduce: merge every worker's K-best under the total
+    // order. Work items partition the (sg, recompute, p) space, so the
+    // merged candidates are distinct and the result is the global top-K
+    // regardless of how items were scheduled.
+    let mut best: Vec<Candidate> = Vec::new();
     for cand in per_worker.into_iter().flatten() {
-        if best
-            .as_ref()
-            .map(|b| candidate_before(&cand, b))
-            .unwrap_or(true)
-        {
-            best = Some(cand);
-        }
+        kbest_insert(&mut best, cand, k);
     }
 
-    best.map(|c| Solution {
-        plan: c.plan,
+    TopKSolution {
+        plans: best.into_iter().map(|c| c.plan).collect(),
         solve_seconds: t0.elapsed().as_secs_f64(),
         dp_states: dp_states.load(Ordering::Relaxed),
         configs_tried: configs.load(Ordering::Relaxed),
-    })
+    }
 }
 
 #[cfg(test)]
@@ -795,6 +886,143 @@ mod tests {
                     b.is_some()
                 ),
             }
+        });
+    }
+
+    #[test]
+    fn topk1_matches_solve_field_for_field() {
+        let g = models::bert_large(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let sol = solve(&g, &c, &SolverOpts::default()).expect("solution");
+        let top = solve_topk(&g, &c, &SolverOpts::default(), 1);
+        assert_eq!(top.plans.len(), 1);
+        assert_eq!(top.plans[0], sol.plan);
+    }
+
+    #[test]
+    fn topk_zero_clamps_to_one() {
+        let g = models::tiny_transformer(6, 256, 128, 1);
+        let c = Cluster::v100_cluster(8);
+        let top = solve_topk(&g, &c, &SolverOpts::default(), 0);
+        assert_eq!(top.plans.len(), 1);
+    }
+
+    #[test]
+    fn topk_sorted_distinct_and_headed_by_winner() {
+        let g = models::mixtral_scaled(1);
+        let c = Cluster::v100_cluster(16);
+        let sol = solve(&g, &c, &SolverOpts::default()).expect("solution");
+        let top = solve_topk(&g, &c, &SolverOpts::default(), 5);
+        assert!(!top.plans.is_empty() && top.plans.len() <= 5);
+        assert_eq!(top.plans[0], sol.plan, "rank 1 must be solve()'s plan");
+        for w in top.plans.windows(2) {
+            assert!(
+                w[0].batch_time <= w[1].batch_time,
+                "shortlist out of order: {} then {}",
+                w[0].batch_time,
+                w[1].batch_time
+            );
+            assert_ne!(w[0], w[1], "duplicate plan in shortlist");
+        }
+        // Distinct (sg, recompute, stage count) triples by construction.
+        let keys: Vec<_> = top
+            .plans
+            .iter()
+            .map(|p| {
+                (
+                    p.sg,
+                    p.stages.iter().any(|s| s.mem.recompute),
+                    p.n_stages(),
+                )
+            })
+            .collect();
+        for a in 0..keys.len() {
+            for b in (a + 1)..keys.len() {
+                assert!(keys[a] != keys[b], "shortlist triples not distinct");
+            }
+        }
+        for p in &top.plans {
+            p.validate(&g, &c).unwrap();
+        }
+    }
+
+    #[test]
+    fn topk_set_bit_identical_across_threads() {
+        // The K-th-incumbent pruning must never change which K plans
+        // survive, no matter how workers race.
+        let g = models::mixtral_scaled(1);
+        let c = Cluster::v100_cluster(16);
+        for k in [2usize, 4, 8] {
+            let a = solve_topk(
+                &g,
+                &c,
+                &SolverOpts {
+                    threads: 1,
+                    ..Default::default()
+                },
+                k,
+            );
+            let b = solve_topk(
+                &g,
+                &c,
+                &SolverOpts {
+                    threads: 4,
+                    ..Default::default()
+                },
+                k,
+            );
+            assert_eq!(a.plans, b.plans, "k={k}: 1-thread vs 4-thread shortlists diverge");
+            for (x, y) in a.plans.iter().zip(&b.plans) {
+                assert_eq!(
+                    x.batch_time.to_bits(),
+                    y.batch_time.to_bits(),
+                    "k={k}: batch times not bit-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_topk_thread_count_invariant() {
+        // K-best determinism as a property across random tiny models:
+        // topk(1) ≡ solve, and the K-best set matches across thread
+        // counts, ties resolved by (batch_time, sg, recompute, stages).
+        prop::forall(6, 0x70D07EA5, |rng| {
+            let n_blocks = 2 + rng.gen_range(5);
+            let hidden = 128 * (1 + rng.gen_range(3));
+            let seq = 64 * (1 + rng.gen_range(2));
+            let g = models::tiny_transformer(n_blocks, hidden, seq, 1);
+            let devices = [4usize, 8, 16][rng.gen_range(3)];
+            let c = Cluster::v100_cluster(devices);
+            let k = 1 + rng.gen_range(4);
+            let serial = solve_topk(
+                &g,
+                &c,
+                &SolverOpts {
+                    threads: 1,
+                    ..Default::default()
+                },
+                k,
+            );
+            let threaded = solve_topk(
+                &g,
+                &c,
+                &SolverOpts {
+                    threads: 4,
+                    ..Default::default()
+                },
+                k,
+            );
+            assert_eq!(
+                serial.plans, threaded.plans,
+                "k={k} shortlists diverge on {n_blocks} blocks / h={hidden} / {devices} devices"
+            );
+            let direct = solve(&g, &c, &SolverOpts::default());
+            assert_eq!(
+                serial.plans.first(),
+                direct.as_ref().map(|s| &s.plan),
+                "topk rank-1 disagrees with solve()"
+            );
         });
     }
 

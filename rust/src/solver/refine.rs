@@ -1,0 +1,258 @@
+//! Contention-aware plan refinement: the DP's analytic shortlist,
+//! re-ranked by the flow-level network simulator.
+//!
+//! NEST's DP prices communication with closed-form per-level costs, so
+//! on oversubscribed fabrics the analytically-best plan is not always
+//! the best plan on the real network (the blind spot
+//! [`crate::harness::netsim`] measures). The refinement loop closes
+//! that gap without PHAZE-style joint search or learned-placement
+//! rollouts:
+//!
+//! 1. [`crate::solver::solve_topk`] enumerates the K best distinct
+//!    `(sg, recompute, stage count)` plans under the analytic total
+//!    order — a shortlist the DP produces nearly for free;
+//! 2. every shortlisted plan is lowered through [`crate::netsim::flows`]
+//!    onto the explicit link graph and re-scored by the max-min
+//!    fair-share engine ([`crate::netsim::fairshare`]);
+//! 3. the shortlist is re-ranked by simulated batch time, ties broken
+//!    by analytic rank.
+//!
+//! Because the analytic winner is always in the shortlist, the
+//! re-ranked winner's simulated batch time is never worse than the
+//! analytic winner's — when the ranking flips, it flips to a strictly
+//! faster plan under contention. Everything downstream of the solver is
+//! single-threaded and bit-deterministic, so the report is
+//! field-for-field identical for every `threads` setting.
+//!
+//! Entry points: [`refine`], the `nest refine` CLI subcommand, and the
+//! cross-topology table in [`crate::harness::refine`].
+
+use crate::graph::LayerGraph;
+use crate::netsim::{simulate_flows, LinkGraph};
+use crate::network::Cluster;
+use crate::sim::Schedule;
+use crate::util::table::{fmt_time, Table};
+
+use super::plan::PlacementPlan;
+use super::{solve_topk, SolverOpts};
+
+/// One shortlisted plan scored both ways.
+#[derive(Debug, Clone)]
+pub struct RefinedPlan {
+    /// Position in the analytic shortlist (0 = the plan [`super::solve`]
+    /// returns).
+    pub analytic_rank: usize,
+    /// The DP's analytic batch time the shortlist was ranked by
+    /// (`plan.batch_time`).
+    pub analytic_batch: f64,
+    /// Contention-aware flow-simulated batch time.
+    pub sim_batch: f64,
+    /// Relative analytic→simulated delta:
+    /// `(sim_batch − analytic_batch) / analytic_batch`.
+    pub delta: f64,
+    /// Hottest link's mean utilization under the flow simulation.
+    pub max_link_util: f64,
+    /// Flows the plan's training batch lowered into.
+    pub n_flows: usize,
+    pub plan: PlacementPlan,
+}
+
+/// Refinement outcome: the shortlist in *simulated* order.
+#[derive(Debug, Clone)]
+pub struct RefineReport {
+    /// Shortlisted plans sorted by `(sim_batch, analytic_rank)` —
+    /// index 0 is the re-ranked winner.
+    pub ranked: Vec<RefinedPlan>,
+    pub solve_seconds: f64,
+    pub dp_states: u64,
+    pub configs_tried: u64,
+}
+
+impl RefineReport {
+    /// The re-ranked (contention-aware) winner.
+    pub fn winner(&self) -> &RefinedPlan {
+        &self.ranked[0]
+    }
+
+    /// The analytic winner (the plan plain `solve` returns), wherever
+    /// the re-ranking left it.
+    pub fn analytic_winner(&self) -> &RefinedPlan {
+        self.ranked
+            .iter()
+            .find(|r| r.analytic_rank == 0)
+            .expect("shortlist always contains the analytic winner")
+    }
+
+    /// Did the flow-level re-ranking pick a different plan than the DP?
+    pub fn winner_changed(&self) -> bool {
+        self.winner().analytic_rank != 0
+    }
+
+    /// Fraction of simulated batch time the re-ranked winner saves over
+    /// the analytic winner (0.0 when the ranking did not change;
+    /// strictly positive when it did — ties re-rank by analytic order).
+    pub fn sim_improvement(&self) -> f64 {
+        let ana = self.analytic_winner().sim_batch;
+        (ana - self.winner().sim_batch) / ana
+    }
+
+    /// Render the shortlist as a per-plan table (sim order).
+    pub fn render_table(&self) -> String {
+        let mut tbl = Table::new(&[
+            "sim rank",
+            "dp rank",
+            "strategy",
+            "stages",
+            "analytic",
+            "flow-sim",
+            "delta",
+            "max link util",
+        ]);
+        for (i, r) in self.ranked.iter().enumerate() {
+            tbl.row(vec![
+                (i + 1).to_string(),
+                (r.analytic_rank + 1).to_string(),
+                r.plan.strategy_string(),
+                r.plan.n_stages().to_string(),
+                fmt_time(r.analytic_batch),
+                fmt_time(r.sim_batch),
+                format!("{:+.1}%", r.delta * 100.0),
+                format!("{:.0}%", r.max_link_util * 100.0),
+            ]);
+        }
+        tbl.render()
+    }
+}
+
+/// Solve the analytic top-K shortlist for `graph` on `cluster`, replay
+/// every shortlisted plan's training batch on the explicit `topo` link
+/// graph, and re-rank by contention-aware batch time. Returns `None`
+/// when no feasible placement exists.
+///
+/// Deterministic: the report is field-for-field identical for every
+/// `opts.threads` value, and `topk = 1` reproduces plain
+/// [`super::solve`] (the single-entry shortlist *is* its plan).
+pub fn refine(
+    graph: &LayerGraph,
+    cluster: &Cluster,
+    topo: &LinkGraph,
+    opts: &SolverOpts,
+    topk: usize,
+) -> Option<RefineReport> {
+    let top = solve_topk(graph, cluster, opts, topk);
+    if top.plans.is_empty() {
+        return None;
+    }
+    let mut ranked: Vec<RefinedPlan> = top
+        .plans
+        .into_iter()
+        .enumerate()
+        .map(|(rank, plan)| {
+            let rep = simulate_flows(graph, cluster, topo, &plan, Schedule::OneFOneB);
+            let delta = (rep.batch_time - plan.batch_time) / plan.batch_time;
+            RefinedPlan {
+                analytic_rank: rank,
+                analytic_batch: plan.batch_time,
+                sim_batch: rep.batch_time,
+                delta,
+                max_link_util: rep.max_link_util,
+                n_flows: rep.n_flows,
+                plan,
+            }
+        })
+        .collect();
+    ranked.sort_by(|a, b| {
+        a.sim_batch
+            .total_cmp(&b.sim_batch)
+            .then(a.analytic_rank.cmp(&b.analytic_rank))
+    });
+    Some(RefineReport {
+        ranked,
+        solve_seconds: top.solve_seconds,
+        dp_states: top.dp_states,
+        configs_tried: top.configs_tried,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::harness::netsim::dumbbell_topology as dumbbell;
+    use crate::solver::solve;
+
+    fn opts(threads: usize) -> SolverOpts {
+        SolverOpts {
+            threads,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn topk1_reproduces_solve_exactly() {
+        let g = models::llama2_7b(1);
+        let (c, topo) = dumbbell();
+        let direct = solve(&g, &c, &opts(1)).expect("feasible");
+        for threads in [1usize, 4] {
+            let rep = refine(&g, &c, &topo, &opts(threads), 1).expect("feasible");
+            assert_eq!(rep.ranked.len(), 1);
+            assert_eq!(
+                rep.winner().plan,
+                direct.plan,
+                "threads={threads}: K=1 refinement diverged from solve()"
+            );
+            assert!(!rep.winner_changed());
+            assert_eq!(rep.sim_improvement(), 0.0);
+        }
+    }
+
+    #[test]
+    fn report_deterministic_across_threads_and_runs() {
+        let g = models::llama2_7b(1);
+        let (c, topo) = dumbbell();
+        let a = refine(&g, &c, &topo, &opts(1), 4).expect("feasible");
+        let b = refine(&g, &c, &topo, &opts(4), 4).expect("feasible");
+        assert_eq!(a.ranked.len(), b.ranked.len());
+        for (x, y) in a.ranked.iter().zip(&b.ranked) {
+            assert_eq!(x.plan, y.plan);
+            assert_eq!(x.analytic_rank, y.analytic_rank);
+            assert_eq!(x.sim_batch.to_bits(), y.sim_batch.to_bits());
+        }
+        let c2 = refine(&g, &c, &topo, &opts(4), 4).expect("feasible");
+        for (x, y) in b.ranked.iter().zip(&c2.ranked) {
+            assert_eq!(x.sim_batch.to_bits(), y.sim_batch.to_bits());
+        }
+    }
+
+    #[test]
+    fn rerank_winner_never_worse_in_sim() {
+        let g = models::llama2_7b(1);
+        let (c, topo) = dumbbell();
+        let rep = refine(&g, &c, &topo, &opts(0), 4).expect("feasible");
+        assert!(
+            rep.winner().sim_batch <= rep.analytic_winner().sim_batch,
+            "re-ranked winner slower than the analytic winner under the flow sim"
+        );
+        if rep.winner_changed() {
+            // Ties break toward the analytic order, so a flip is always
+            // a strict simulated improvement.
+            assert!(rep.winner().sim_batch < rep.analytic_winner().sim_batch);
+            assert!(rep.sim_improvement() > 0.0);
+        }
+        // Ranked order is by simulated batch time.
+        for w in rep.ranked.windows(2) {
+            assert!(w[0].sim_batch <= w[1].sim_batch);
+        }
+    }
+
+    #[test]
+    fn render_table_lists_every_plan() {
+        let g = models::llama2_7b(1);
+        let (c, topo) = dumbbell();
+        let rep = refine(&g, &c, &topo, &opts(0), 3).expect("feasible");
+        let table = rep.render_table();
+        for r in &rep.ranked {
+            assert!(table.contains(&r.plan.strategy_string()));
+        }
+    }
+}

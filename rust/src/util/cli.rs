@@ -2,6 +2,9 @@
 //!
 //! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
 //! arguments. Unknown flags are an error so typos surface immediately.
+//! Malformed numeric values are *clean errors*, not panics: `get_usize` /
+//! `get_f64` record the problem and return the default, and the first
+//! recorded error surfaces through [`Args::check`] / [`Args::finish`].
 
 use std::collections::BTreeMap;
 
@@ -12,6 +15,8 @@ pub struct Args {
     positional: Vec<String>,
     /// Flags/options the caller has declared, for unknown-flag detection.
     known: Vec<String>,
+    /// Validation problems recorded by the get_* accessors.
+    errors: Vec<String>,
 }
 
 impl Args {
@@ -60,25 +65,52 @@ impl Args {
         self.opts.get(key).cloned()
     }
 
-    /// usize option with a default; panics with a clear message on garbage.
+    /// usize option with a default; garbage records a clean error (see
+    /// [`Args::check`]) and returns the default.
     pub fn get_usize(&mut self, key: &str, default: usize) -> usize {
         self.known.push(key.to_string());
         match self.opts.get(key) {
             None => default,
-            Some(v) => v
-                .parse()
-                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+            Some(v) => match v.parse() {
+                Ok(n) => n,
+                Err(_) => {
+                    self.errors
+                        .push(format!("--{key} expects an integer, got '{v}'"));
+                    default
+                }
+            },
         }
     }
 
-    /// f64 option with a default.
+    /// Like [`Args::get_usize`], but an *explicitly supplied* 0 is a
+    /// clean error (the default itself may be 0, e.g. `--threads`'s
+    /// "one worker per core" sentinel). Returns `max(default, 1)` on
+    /// rejection so callers stay well-defined until the error surfaces.
+    pub fn get_usize_nonzero(&mut self, key: &str, default: usize) -> usize {
+        let v = self.get_usize(key, default);
+        if v == 0 && self.opts.contains_key(key) {
+            self.errors.push(format!(
+                "--{key} must be ≥ 1 (omit the flag for the default)"
+            ));
+            return default.max(1);
+        }
+        v
+    }
+
+    /// f64 option with a default; garbage records a clean error (see
+    /// [`Args::check`]) and returns the default.
     pub fn get_f64(&mut self, key: &str, default: f64) -> f64 {
         self.known.push(key.to_string());
         match self.opts.get(key) {
             None => default,
-            Some(v) => v
-                .parse()
-                .unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")),
+            Some(v) => match v.parse() {
+                Ok(n) => n,
+                Err(_) => {
+                    self.errors
+                        .push(format!("--{key} expects a number, got '{v}'"));
+                    default
+                }
+            },
         }
     }
 
@@ -88,8 +120,21 @@ impl Args {
         self.flags.iter().any(|f| f == key)
     }
 
-    /// Call after all get_* calls: errors on unrecognized flags/options.
+    /// First validation error recorded so far by the get_* accessors.
+    /// Call right after reading a command's numeric options to fail
+    /// *before* doing any expensive work ([`Args::finish`] would only
+    /// surface it afterwards).
+    pub fn check(&self) -> Result<(), String> {
+        match self.errors.first() {
+            Some(e) => Err(e.clone()),
+            None => Ok(()),
+        }
+    }
+
+    /// Call after all get_* calls: surfaces recorded validation errors,
+    /// then errors on unrecognized flags/options.
     pub fn finish(&self) -> Result<(), String> {
+        self.check()?;
         for k in self.opts.keys() {
             if !self.known.contains(k) {
                 return Err(format!("unknown option --{k}"));
@@ -138,9 +183,49 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn bad_int_panics() {
+    fn bad_int_is_clean_error_not_panic() {
         let mut a = Args::parse(v(&["--devices", "many"]));
-        a.get_usize("devices", 1);
+        assert_eq!(a.get_usize("devices", 1), 1);
+        let err = a.check().unwrap_err();
+        assert!(err.contains("--devices"), "unexpected message: {err}");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_float_is_clean_error_not_panic() {
+        let mut a = Args::parse(v(&["--oversub", "wide"]));
+        assert_eq!(a.get_f64("oversub", 2.0), 2.0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn explicit_zero_rejected_by_nonzero() {
+        // --threads 0 / --topk 0 must be clean errors, not silent hangs.
+        for key in ["threads", "topk"] {
+            let mut a = Args::parse(v(&[&format!("--{key}"), "0"]));
+            let got = a.get_usize_nonzero(key, 0);
+            assert!(got >= 1, "--{key} 0 returned {got}");
+            let err = a.check().unwrap_err();
+            assert!(err.contains("≥ 1"), "unexpected message: {err}");
+        }
+    }
+
+    #[test]
+    fn nonzero_allows_zero_default_and_positive_values() {
+        // Absent flag: a 0 default (threads' "all cores" sentinel) is fine.
+        let mut a = Args::parse(v(&[]));
+        assert_eq!(a.get_usize_nonzero("threads", 0), 0);
+        assert!(a.check().is_ok());
+        // Explicit positive value passes through.
+        let mut a = Args::parse(v(&["--topk", "4"]));
+        assert_eq!(a.get_usize_nonzero("topk", 1), 4);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn check_fails_before_finish_on_garbage() {
+        let mut a = Args::parse(v(&["--topk", "four"]));
+        let _ = a.get_usize_nonzero("topk", 4);
+        assert!(a.check().is_err());
     }
 }

@@ -10,7 +10,8 @@ use nest::memory::ZeroStage;
 use nest::netsim::{simulate_flows, LinkGraph};
 use nest::network::Cluster;
 use nest::sim::{simulate, Schedule};
-use nest::solver::{exact, solve, SolverOpts};
+use nest::solver::refine::refine;
+use nest::solver::{exact, solve, solve_topk, SolverOpts};
 use nest::util::prop;
 
 fn load_cluster(file: &str) -> Cluster {
@@ -457,6 +458,107 @@ fn solver_thread_count_invariant() {
                 b.is_some()
             ),
         }
+    }
+}
+
+fn threaded(threads: usize) -> SolverOpts {
+    SolverOpts {
+        threads,
+        ..Default::default()
+    }
+}
+
+/// Load an edge-list from the `configs/` file itself — not the embedded
+/// copy `harness::netsim::dumbbell_topology` uses — so the shipped
+/// artifact is what these tests pin.
+fn load_edgelist(file: &str) -> (Cluster, LinkGraph) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let topo = LinkGraph::from_json(&nest::util::json::parse(&text).unwrap())
+        .unwrap_or_else(|e| panic!("{file}: {e}"));
+    let cluster = topo.approx_cluster(nest::hw::Accelerator::h100());
+    (cluster, topo)
+}
+
+/// The CI smoke's invariant as a test: `refine` with `topk = 1` on the
+/// shipped dumbbell edge-list reproduces plain `solve` field-for-field
+/// at every thread count.
+#[test]
+fn refine_topk1_identical_to_solve_on_shipped_edgelist() {
+    let (cluster, topo) = load_edgelist("configs/edgelist_dumbbell.json");
+    let graph = models::by_name("llama2-7b", 1).unwrap();
+    let direct = solve(&graph, &cluster, &threaded(1)).expect("feasible");
+    for threads in [1usize, 4] {
+        let rep = refine(&graph, &cluster, &topo, &threaded(threads), 1).expect("feasible");
+        assert_eq!(rep.ranked.len(), 1, "threads={threads}");
+        assert_eq!(
+            rep.winner().plan,
+            direct.plan,
+            "threads={threads}: K=1 shortlist disagrees with solve()"
+        );
+        assert_eq!(
+            rep.winner().analytic_batch.to_bits(),
+            direct.plan.batch_time.to_bits(),
+            "threads={threads}"
+        );
+    }
+}
+
+/// The K-best shortlist is bit-identical across thread counts on a
+/// contended paper topology, every entry is a valid plan, and rank 1 is
+/// exactly the single-winner solve.
+#[test]
+fn topk_shortlist_thread_invariant_on_spine_leaf() {
+    let graph = models::gpt3_35b(1);
+    let cluster = Cluster::spine_leaf_h100(64, 4.0);
+    let a = solve_topk(&graph, &cluster, &threaded(1), 6);
+    let b = solve_topk(&graph, &cluster, &threaded(4), 6);
+    assert_eq!(a.plans, b.plans, "1-thread vs 4-thread shortlists diverge");
+    for (x, y) in a.plans.iter().zip(&b.plans) {
+        assert_eq!(x.batch_time.to_bits(), y.batch_time.to_bits());
+    }
+    assert!(!a.plans.is_empty());
+    let direct = solve(&graph, &cluster, &SolverOpts::default()).unwrap();
+    assert_eq!(a.plans[0], direct.plan);
+    for p in &a.plans {
+        p.validate(&graph, &cluster).unwrap();
+    }
+}
+
+/// End-to-end refinement on the shipped dumbbell: deterministic across
+/// runs/threads, ranked by simulated batch time, and the re-ranked
+/// winner is never slower than the analytic winner under the flow sim
+/// (strictly faster whenever the ranking flips).
+#[test]
+fn refine_rerank_consistent_on_shipped_dumbbell() {
+    let (cluster, topo) = load_edgelist("configs/edgelist_dumbbell.json");
+    let graph = models::by_name("llama2-7b", 1).unwrap();
+    let a = refine(&graph, &cluster, &topo, &threaded(1), 4).expect("feasible");
+    let b = refine(&graph, &cluster, &topo, &threaded(4), 4).expect("feasible");
+    assert_eq!(a.ranked.len(), b.ranked.len());
+    for (x, y) in a.ranked.iter().zip(&b.ranked) {
+        assert_eq!(x.plan, y.plan, "re-rank depends on thread count");
+        assert_eq!(x.sim_batch.to_bits(), y.sim_batch.to_bits());
+    }
+    for w in a.ranked.windows(2) {
+        assert!(w[0].sim_batch <= w[1].sim_batch, "not sorted by sim time");
+    }
+    assert!(a.winner().sim_batch <= a.analytic_winner().sim_batch);
+    if a.winner_changed() {
+        assert!(a.winner().sim_batch < a.analytic_winner().sim_batch);
+    }
+    // Every shortlisted plan is valid and the flow sim never undercuts
+    // the analytic DES on this contended fabric.
+    for r in &a.ranked {
+        r.plan.validate(&graph, &cluster).unwrap();
+        let ana = simulate(&graph, &cluster, &r.plan, Schedule::OneFOneB);
+        assert!(
+            r.sim_batch >= ana.batch_time * (1.0 - 1e-9),
+            "flow {} < analytic DES {} for dp-rank {}",
+            r.sim_batch,
+            ana.batch_time,
+            r.analytic_rank
+        );
     }
 }
 
