@@ -57,6 +57,18 @@ fn main() {
         )
     });
 
+    // Heterogeneous pool: the mixed H100+V100 solve rebuilds its DP
+    // tables per (stage count, dp width), so its overhead vs the
+    // homogeneous fast path (the all-V100 twin on identical tiers) is
+    // the number to watch.
+    let g7 = models::llama2_7b(1);
+    let hx = Cluster::hetero_pool(64);
+    let hv = hx.with_uniform_accel(nest::hw::Accelerator::v100());
+    bench_n("solve_llama2_7b_hetero_64", 3, || solve(&g7, &hx, &opts));
+    bench_n("solve_llama2_7b_hetero_64_as_v100", 3, || {
+        solve(&g7, &hv, &opts)
+    });
+
     // Scaling with cluster size (the paper's 3 min – 1.5 h claim is about
     // growth with devices; ours must stay sub-minute).
     for n in [64usize, 256, 1024] {

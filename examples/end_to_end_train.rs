@@ -67,7 +67,7 @@ fn main() {
     let p = man.stages.len();
     let cluster = Cluster {
         name: format!("cpu-threads-{}", p * dp),
-        accel: cal.accel_for_hidden(cfg.hidden),
+        pool: nest::hw::DevicePool::uniform(cal.accel_for_hidden(cfg.hidden), p * dp),
         tiers: vec![Tier {
             name: "shm".into(),
             arity: p * dp,

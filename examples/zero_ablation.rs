@@ -26,7 +26,7 @@ fn main() {
 
     for cap_gb in [80.0f64, 48.0, 24.0, 16.0] {
         let mut cluster = Cluster::fat_tree_tpuv4(1024);
-        cluster.accel = cluster.accel.with_capacity(cap_gb * GIB);
+        cluster.shrink_capacity(cap_gb * GIB);
 
         let plain = solve(
             &graph,

@@ -41,12 +41,14 @@ fn averaged_twin(cluster: &Cluster) -> Cluster {
         bw_sum += cluster.bw_eff(l);
     }
     let avg = bw_sum / cluster.n_levels() as f64;
-    Cluster::flat(
-        cluster.accel.clone(),
+    let mut flat = Cluster::flat(
+        cluster.accel().clone(),
         cluster.n_devices(),
         avg.max(1.0 * GB),
         cluster.lat(cluster.n_levels() - 1) / 2.0,
-    )
+    );
+    flat.pool = cluster.pool.clone();
+    flat
 }
 
 /// Search statistics (Table 4 compares solver runtimes).
@@ -92,7 +94,7 @@ pub fn solve_with_stats(
             .map(|i| {
                 let t = cm.stage_load(i, i + 1, None, None, &MemSpec::plain(), &twin);
                 let m = cm.stage_peak_bytes(i, i + 1, &MemSpec::plain(), 0);
-                t * (1.0 + 0.1 * m / cluster.accel.hbm_capacity)
+                t * (1.0 + 0.1 * m / cluster.pool.min_capacity_all())
             })
             .collect();
         let mut p = 1;

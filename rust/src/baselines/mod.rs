@@ -82,8 +82,8 @@ pub fn build_plan_ordered(
         return None;
     }
     let cm = CostModel::new(graph, cluster, sg);
-    let cap = cluster.accel.hbm_capacity;
     let zero_cap = zero_max_degree.min(crate::solver::pow2_floor(d));
+    let stride = p * g;
 
     let mut stages = Vec::with_capacity(p);
     let mut bottleneck: f64 = 0.0;
@@ -93,6 +93,14 @@ pub fn build_plan_ordered(
             return None;
         }
         let stash = p - 1 - k;
+        // Lockstep pricing and memory bound on the accelerator classes
+        // this stage's block (and its replicas) actually covers.
+        let (lo, hi) = (blocks[k] * g, (blocks[k] + 1) * g);
+        if hi + (d - 1) * stride > cluster.n_devices() {
+            return None; // block index out of the replicated range
+        }
+        let mask = cluster.pool.replicated_mask(lo, hi, d, stride);
+        let cap = cluster.pool.min_capacity(mask);
         let spec = cm.stage_choose_spec(i, j, stash, cap, zero_cap.min(d), recompute)?;
         let send_level = if k + 1 < p {
             Some(crate::solver::assign::block_pair_level(
@@ -114,7 +122,7 @@ pub fn build_plan_ordered(
         } else {
             None
         };
-        let load = cm.stage_load(i, j, recv_level, send_level, &spec, cluster);
+        let load = cm.stage_load_on(mask, i, j, recv_level, send_level, &spec, cluster);
         bottleneck = bottleneck.max(load);
         stages.push(StagePlan {
             layers: (i, j),
@@ -123,11 +131,11 @@ pub fn build_plan_ordered(
             mem: spec,
             send_level,
             load,
+            accel_class: cluster.pool.class_names(mask),
         });
     }
 
     let m = graph.global_batch.div_ceil(d * graph.mbs);
-    let stride = p * g;
     let sync = stages
         .iter()
         .map(|st| cluster.dp_allreduce(cm.stage_grad_bytes(st.layers.0, st.layers.1), d, stride))

@@ -17,15 +17,19 @@ use crate::network::Cluster;
 use crate::solver::plan::PlacementPlan;
 use crate::solver::{solve as nest_solve, SolverOpts};
 
-/// Flat twin: same accelerators and device count, one tier at the
-/// innermost (fastest) bandwidth — the uniform network Phaze assumes.
+/// Flat twin: same accelerators (the full device pool) and device
+/// count, one tier at the innermost (fastest) bandwidth — the uniform
+/// network Phaze assumes. Network-unaware, not device-unaware: the
+/// pool's per-device classes carry over.
 pub fn flat_twin(cluster: &Cluster) -> Cluster {
-    Cluster::flat(
-        cluster.accel.clone(),
+    let mut flat = Cluster::flat(
+        cluster.accel().clone(),
         cluster.n_devices(),
         cluster.tiers[0].link_bw,
         cluster.tiers[0].latency,
-    )
+    );
+    flat.pool = cluster.pool.clone();
+    flat
 }
 
 /// Run Phaze: solve on the flat twin, realize on the real cluster.
@@ -93,6 +97,7 @@ mod tests {
         let f = flat_twin(&c);
         assert_eq!(f.n_devices(), 128);
         assert_eq!(f.n_levels(), 1);
-        assert_eq!(f.accel.name, c.accel.name);
+        assert_eq!(f.accel().name, c.accel().name);
+        assert_eq!(f.pool, c.pool);
     }
 }

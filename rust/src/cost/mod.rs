@@ -12,11 +12,19 @@
 
 use crate::graph::subgraph::{layer_collectives, SgConfig};
 use crate::graph::LayerGraph;
-use crate::hw::Accelerator;
+use crate::hw::{Accelerator, ClassMask};
 use crate::memory::{self, MemSpec, ZeroStage};
 use crate::network::Cluster;
 
 /// Pre-computed per-layer costs with prefix sums for O(1) range queries.
+///
+/// Compute prefixes are kept **per accelerator class** of the cluster's
+/// [`crate::hw::DevicePool`]: a stage placed on a device range covering
+/// classes `mask` runs TP/DP lockstep, so its compute time is the *max*
+/// over the covered classes ([`CostModel::stage_load_on`] and friends).
+/// The mask-free methods price against the pool-wide worst case (every
+/// class), which on homogeneous clusters — a single class — is exactly
+/// the old behavior.
 #[derive(Debug, Clone)]
 pub struct CostModel {
     pub sg: SgConfig,
@@ -26,9 +34,13 @@ pub struct CostModel {
     /// lives; SUB-GRAPH collectives price at this locality.
     pub group_level: usize,
     n_layers: usize,
-    /// prefix[i] = Σ_{k<i} fwd compute seconds of layer k (per microbatch,
-    /// per device). Backward is 2×; recompute adds another 1×.
-    fwd_compute: Vec<f64>,
+    /// Per accelerator class `c` (pool class order):
+    /// `fwd_compute[c][i]` = Σ_{k<i} fwd compute seconds of layer k on
+    /// class `c` (per microbatch, per device). Backward is 2×;
+    /// recompute adds another 1×.
+    fwd_compute: Vec<Vec<f64>>,
+    /// Mask with every pool class set.
+    full_mask: ClassMask,
     /// prefix of per-layer fwd+bwd collective seconds.
     collective: Vec<f64>,
     /// prefix of per-device sharded param counts.
@@ -49,12 +61,12 @@ pub struct CostModel {
 impl CostModel {
     pub fn new(graph: &LayerGraph, cluster: &Cluster, sg: SgConfig) -> Self {
         let n = graph.n_layers();
-        let accel = &cluster.accel;
+        let classes = cluster.pool.classes();
         let group = sg.group_size();
         let group_level = cluster.level_of_group(group);
         let tokens = graph.tokens;
 
-        let mut fwd_compute = vec![0.0; n + 1];
+        let mut fwd_compute: Vec<Vec<f64>> = classes.iter().map(|_| vec![0.0; n + 1]).collect();
         let mut collective = vec![0.0; n + 1];
         let mut params_sharded = vec![0.0; n + 1];
         let mut act_plain = vec![0.0; n + 1];
@@ -62,7 +74,10 @@ impl CostModel {
         let mut boundary = vec![0.0; n];
 
         for (k, layer) in graph.layers.iter().enumerate() {
-            fwd_compute[k + 1] = fwd_compute[k] + layer_fwd_time(layer, tokens, &sg, accel);
+            for (c, accel) in classes.iter().enumerate() {
+                fwd_compute[c][k + 1] =
+                    fwd_compute[c][k] + layer_fwd_time(layer, tokens, &sg, accel);
+            }
             let coll: f64 = layer_collectives(layer, tokens, &sg)
                 .iter()
                 .map(|c| cluster.collective_time(c))
@@ -90,6 +105,7 @@ impl CostModel {
             group_level,
             n_layers: n,
             fwd_compute,
+            full_mask: cluster.pool.full_mask(),
             collective,
             params_sharded,
             act_plain,
@@ -103,6 +119,35 @@ impl CostModel {
 
     pub fn n_layers(&self) -> usize {
         self.n_layers
+    }
+
+    /// Lockstep forward-compute seconds of layers `[i, j)` on a device
+    /// group covering `mask`: the slowest covered class sets the pace.
+    #[inline]
+    fn fwd_range_on(&self, mask: ClassMask, i: usize, j: usize) -> f64 {
+        let mut m = mask & self.full_mask;
+        debug_assert!(m != 0, "empty accelerator-class mask");
+        let mut worst = 0.0f64;
+        while m != 0 {
+            let c = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let v = self.fwd_compute[c][j] - self.fwd_compute[c][i];
+            if v > worst {
+                worst = v;
+            }
+        }
+        worst
+    }
+
+    /// Fastest-class forward compute of `[i, j)` — a valid lower bound
+    /// for *any* placement of the stage (config-level pruning).
+    #[inline]
+    fn fwd_range_best(&self, i: usize, j: usize) -> f64 {
+        let mut best = f64::INFINITY;
+        for pfx in &self.fwd_compute {
+            best = best.min(pfx[j] - pfx[i]);
+        }
+        best
     }
 
     /// Per-device sharded parameter count of stage `[i, j)`.
@@ -216,8 +261,25 @@ impl CostModel {
         spec: &MemSpec,
         cluster: &Cluster,
     ) -> f64 {
+        self.stage_load_on(self.full_mask, i, j, recv_level, send_level, spec, cluster)
+    }
+
+    /// [`Self::stage_load`] for a stage whose lockstep device group
+    /// covers accelerator classes `mask` (the solver passes the classes
+    /// of the block the stage actually occupies, replicas included).
+    #[allow(clippy::too_many_arguments)]
+    pub fn stage_load_on(
+        &self,
+        mask: ClassMask,
+        i: usize,
+        j: usize,
+        recv_level: Option<usize>,
+        send_level: Option<usize>,
+        spec: &MemSpec,
+        cluster: &Cluster,
+    ) -> f64 {
         debug_assert!(i < j && j <= self.n_layers);
-        let fwd = self.fwd_compute[j] - self.fwd_compute[i];
+        let fwd = self.fwd_range_on(mask, i, j);
         let compute_mult = if spec.recompute { 4.0 } else { 3.0 };
         let mut t = fwd * compute_mult;
         t += self.collective[j] - self.collective[i];
@@ -242,10 +304,26 @@ impl CostModel {
 
     /// Cheap lower bound on `stage_load` for `[i, j)`: pure forward+
     /// backward compute, no communication. Strictly increasing in `j` —
-    /// the DP uses it for exact cut pruning.
+    /// the DP uses it for exact cut pruning. The mask-free form prices
+    /// the pool-wide worst case; use [`Self::stage_load_lb_on`] when the
+    /// stage's block is known and [`Self::stage_load_lb_best`] when it
+    /// is not (placement-independent bound).
     #[inline]
     pub fn stage_load_lb(&self, i: usize, j: usize) -> f64 {
-        (self.fwd_compute[j] - self.fwd_compute[i]) * 3.0
+        self.stage_load_lb_on(self.full_mask, i, j)
+    }
+
+    /// Lower bound on [`Self::stage_load_on`] for a known class mask.
+    #[inline]
+    pub fn stage_load_lb_on(&self, mask: ClassMask, i: usize, j: usize) -> f64 {
+        self.fwd_range_on(mask, i, j) * 3.0
+    }
+
+    /// Placement-independent lower bound: even on the pool's fastest
+    /// class the stage cannot run faster than this.
+    #[inline]
+    pub fn stage_load_lb_best(&self, i: usize, j: usize) -> f64 {
+        self.fwd_range_best(i, j) * 3.0
     }
 
     /// Gradient-sync bytes for stage `[i, j)` (bf16 grads).
@@ -265,7 +343,19 @@ impl CostModel {
         spec: &MemSpec,
         cluster: &Cluster,
     ) -> (f64, f64) {
-        let fwd_compute = self.fwd_compute[j] - self.fwd_compute[i];
+        self.stage_phase_times_on(self.full_mask, i, j, spec, cluster)
+    }
+
+    /// [`Self::stage_phase_times`] on a known lockstep class mask.
+    pub fn stage_phase_times_on(
+        &self,
+        mask: ClassMask,
+        i: usize,
+        j: usize,
+        spec: &MemSpec,
+        cluster: &Cluster,
+    ) -> (f64, f64) {
+        let fwd_compute = self.fwd_range_on(mask, i, j);
         let coll = self.collective[j] - self.collective[i];
         let z3 = if let ZeroStage::Z3 { .. } = spec.zero {
             let wb = self.stage_params(i, j) * memory::WEIGHT_BYTES;
@@ -288,7 +378,18 @@ impl CostModel {
     /// is the same ranking-preserving approximation either way (see
     /// `CostModel::new`).
     pub fn stage_phase_compute(&self, i: usize, j: usize, spec: &MemSpec) -> (f64, f64) {
-        let fwd_compute = self.fwd_compute[j] - self.fwd_compute[i];
+        self.stage_phase_compute_on(self.full_mask, i, j, spec)
+    }
+
+    /// [`Self::stage_phase_compute`] on a known lockstep class mask.
+    pub fn stage_phase_compute_on(
+        &self,
+        mask: ClassMask,
+        i: usize,
+        j: usize,
+        spec: &MemSpec,
+    ) -> (f64, f64) {
+        let fwd_compute = self.fwd_range_on(mask, i, j);
         let z3 = if let ZeroStage::Z3 { .. } = spec.zero {
             let wb = self.stage_params(i, j) * memory::WEIGHT_BYTES;
             2.0 * (self.z3_alpha + wb * self.z3_beta)
@@ -302,8 +403,19 @@ impl CostModel {
     /// Separate components of a stage's per-microbatch time for
     /// compute/communication breakdowns (Figure 2).
     pub fn stage_breakdown(&self, i: usize, j: usize, spec: &MemSpec) -> (f64, f64) {
+        self.stage_breakdown_on(self.full_mask, i, j, spec)
+    }
+
+    /// [`Self::stage_breakdown`] on a known lockstep class mask.
+    pub fn stage_breakdown_on(
+        &self,
+        mask: ClassMask,
+        i: usize,
+        j: usize,
+        spec: &MemSpec,
+    ) -> (f64, f64) {
         let compute_mult = if spec.recompute { 4.0 } else { 3.0 };
-        let compute = (self.fwd_compute[j] - self.fwd_compute[i]) * compute_mult;
+        let compute = self.fwd_range_on(mask, i, j) * compute_mult;
         let mut comm = self.collective[j] - self.collective[i];
         if let ZeroStage::Z3 { .. } = spec.zero {
             let wb = self.stage_params(i, j) * memory::WEIGHT_BYTES;
@@ -451,11 +563,45 @@ mod tests {
     }
 
     #[test]
+    fn hetero_lockstep_prices_slowest_class() {
+        let g = models::llama2_7b(1);
+        let hetero = Cluster::hetero_pool(64); // class 0 = h100, 1 = v100
+        let h_only = hetero.with_uniform_accel(crate::hw::Accelerator::h100());
+        let v_only = hetero.with_uniform_accel(crate::hw::Accelerator::v100());
+        let cm = CostModel::new(&g, &hetero, SgConfig::serial());
+        let spec = MemSpec::plain();
+        let h = cm.stage_load_on(0b01, 1, 9, None, None, &spec, &hetero);
+        let v = cm.stage_load_on(0b10, 1, 9, None, None, &spec, &hetero);
+        let both = cm.stage_load_on(0b11, 1, 9, None, None, &spec, &hetero);
+        assert!(h < v, "H100 range must be faster than V100 range");
+        assert_eq!(both.to_bits(), v.to_bits(), "lockstep = slowest class");
+        // Single-class masks agree bit-for-bit with uniform twins.
+        let cm_h = CostModel::new(&g, &h_only, SgConfig::serial());
+        let cm_v = CostModel::new(&g, &v_only, SgConfig::serial());
+        assert_eq!(
+            h.to_bits(),
+            cm_h.stage_load(1, 9, None, None, &spec, &h_only).to_bits()
+        );
+        assert_eq!(
+            v.to_bits(),
+            cm_v.stage_load(1, 9, None, None, &spec, &v_only).to_bits()
+        );
+        // Mask-free methods price the pool-wide worst case.
+        assert_eq!(
+            cm.stage_load(1, 9, None, None, &spec, &hetero).to_bits(),
+            both.to_bits()
+        );
+        // Lower bounds bracket the truth.
+        assert!(cm.stage_load_lb_best(1, 9) <= cm.stage_load_lb_on(0b01, 1, 9));
+        assert!(cm.stage_load_lb_on(0b01, 1, 9) <= cm.stage_load_lb(1, 9));
+    }
+
+    #[test]
     fn choose_spec_consistent_with_peak() {
         let g = models::llama3_70b(1);
         let c = Cluster::fat_tree_tpuv4(64);
         let cm = CostModel::new(&g, &c, SgConfig::serial());
-        let cap = c.accel.hbm_capacity;
+        let cap = c.accel().hbm_capacity;
         let spec = cm.stage_choose_spec(1, 11, 6, cap, 8, false);
         if let Some(s) = spec {
             assert!(cm.stage_peak_bytes(1, 11, &s, 6) <= cap);

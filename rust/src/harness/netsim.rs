@@ -39,6 +39,48 @@ pub fn dumbbell_topology() -> (Cluster, LinkGraph) {
     (cluster, topo)
 }
 
+/// Deterministic cross-validation snapshot of the shipped dumbbell
+/// edge-list (llama2-7b, serial solver): the golden-file suite pins
+/// this rendered table to catch silent report-field drift. Every cell
+/// is a pure function of the inputs — no wall-clock, no thread count
+/// (the solver is forced serial; the flow engine is single-threaded
+/// and bit-deterministic).
+pub fn dumbbell_xval_snapshot() -> String {
+    let (cluster, topo) = dumbbell_topology();
+    let graph = models::by_name("llama2-7b", 1).expect("model exists");
+    let opts = crate::solver::SolverOpts {
+        threads: 1,
+        ..Default::default()
+    };
+    let sol = nest_solve(&graph, &cluster, &opts).expect("dumbbell solvable");
+    let ana = simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB);
+    let flow = simulate_flows(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB);
+    let err = (flow.batch_time - ana.batch_time) / ana.batch_time;
+    let mut tbl = Table::new(&[
+        "topology",
+        "model",
+        "devices",
+        "strategy",
+        "analytic DES",
+        "flow-sim",
+        "error",
+        "max link util",
+        "flows",
+    ]);
+    tbl.row(vec![
+        "edge-list dumbbell".into(),
+        "llama2-7b".into(),
+        cluster.n_devices().to_string(),
+        sol.plan.strategy_string(),
+        crate::util::table::fmt_time(ana.batch_time),
+        crate::util::table::fmt_time(flow.batch_time),
+        format!("{:+.2}%", err * 100.0),
+        format!("{:.1}%", flow.max_link_util * 100.0),
+        flow.n_flows.to_string(),
+    ]);
+    tbl.render()
+}
+
 /// One topology family of the cross-validation sweep.
 struct Family {
     label: &'static str,

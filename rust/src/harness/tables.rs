@@ -254,7 +254,7 @@ pub fn table7(opts: &HarnessOpts) {
     ] {
         let graph = models::by_name(model, 1).unwrap();
         let mut cluster = Cluster::fat_tree_tpuv4(devices);
-        cluster.accel = cluster.accel.with_capacity(cap_bytes);
+        cluster.shrink_capacity(cap_bytes);
 
         let sol = nest_solve(&graph, &cluster, &opts.solver);
         let no_zero = nest_solve(
@@ -407,6 +407,109 @@ pub fn v100_validation(opts: &HarnessOpts) {
     let _ = csv.write(format!("{}/v100.csv", opts.results_dir));
 }
 
+/// Heterogeneous-pool table: NEST on a mixed H100+V100 pool versus the
+/// same fabric with every device constrained to a single class. The
+/// mixed-pool solve must be strictly faster (analytic batch time) than
+/// the all-V100-constrained solve — the fast island must buy something
+/// — and can of course not beat all-H100. Prints where the layers
+/// landed per accelerator class; returns `false` on a regression.
+pub fn hetero(opts: &HarnessOpts) -> bool {
+    println!("== Heterogeneous pool: mixed H100+V100 vs single-class twins ==");
+    let mixed = Cluster::hetero_pool(64);
+    let model = "llama2-7b";
+    let graph = models::by_name(model, 1).unwrap();
+    let variants: Vec<(&str, Cluster)> = vec![
+        ("mixed h100+v100", mixed.clone()),
+        (
+            "all v100",
+            mixed.with_uniform_accel(crate::hw::Accelerator::v100()),
+        ),
+        (
+            "all h100",
+            mixed.with_uniform_accel(crate::hw::Accelerator::h100()),
+        ),
+    ];
+    let mut tbl = Table::new(&[
+        "pool",
+        "strategy",
+        "batch",
+        "vs all-v100",
+        "layers on h100",
+        "layers on v100",
+    ]);
+    let mut csv = Csv::new(&[
+        "pool",
+        "strategy",
+        "batch_s",
+        "speedup_vs_v100",
+        "layers_h100",
+        "layers_v100",
+    ]);
+    let sols: Vec<_> = variants
+        .iter()
+        .map(|(label, cluster)| {
+            let sol = nest_solve(&graph, cluster, &opts.solver);
+            if let Some(s) = &sol {
+                s.plan
+                    .validate(&graph, cluster)
+                    .unwrap_or_else(|e| panic!("{label}: invalid plan: {e}"));
+            }
+            sol
+        })
+        .collect();
+    let v100_batch = sols[1].as_ref().map(|s| s.plan.batch_time);
+    for ((label, _), sol) in variants.iter().zip(&sols) {
+        let Some(sol) = sol else {
+            tbl.row(vec!["✗".into(); 6]);
+            continue;
+        };
+        // Layers per class: a stage counts toward every class its
+        // lockstep device group covers (mixed stages count to both).
+        let mut on_h100 = 0usize;
+        let mut on_v100 = 0usize;
+        for st in &sol.plan.stages {
+            let layers = st.layers.1 - st.layers.0;
+            if st.accel_class.contains("h100") {
+                on_h100 += layers;
+            }
+            if st.accel_class.contains("v100") {
+                on_v100 += layers;
+            }
+        }
+        let speedup = match v100_batch {
+            Some(v) if v > 0.0 => format!("{:.2}×", v / sol.plan.batch_time),
+            _ => "-".into(),
+        };
+        tbl.row(vec![
+            label.to_string(),
+            sol.plan.strategy_string(),
+            crate::util::table::fmt_time(sol.plan.batch_time),
+            speedup.clone(),
+            on_h100.to_string(),
+            on_v100.to_string(),
+        ]);
+        csv.row(vec![
+            label.to_string(),
+            sol.plan.strategy_string(),
+            sol.plan.batch_time.to_string(),
+            speedup,
+            on_h100.to_string(),
+            on_v100.to_string(),
+        ]);
+    }
+    println!("{}", tbl.render());
+    let _ = csv.write(format!("{}/hetero.csv", opts.results_dir));
+    let ok = match (&sols[0], v100_batch) {
+        (Some(mixed_sol), Some(v100_t)) => mixed_sol.plan.batch_time < v100_t,
+        _ => false,
+    };
+    println!(
+        "mixed pool strictly faster than the all-V100 constraint: {}",
+        if ok { "✓" } else { "✗ REGRESSION" }
+    );
+    ok
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -426,12 +529,22 @@ mod tests {
     }
 
     #[test]
+    fn hetero_table_mixed_beats_v100_twin() {
+        // The heterogeneous acceptance invariant: on the mixed pool the
+        // solver strictly beats the all-V100-constrained solve.
+        assert!(
+            hetero(&tmp_opts("hetero")),
+            "mixed pool not strictly faster than the all-V100 twin"
+        );
+    }
+
+    #[test]
     fn table7_zero_unlocks_constrained_training() {
         // The core Table-7 claim as an assertion: with 120 MB devices,
         // BertLarge training is only feasible with ZeRO enabled.
         let graph = models::bert_large(1);
         let mut cluster = Cluster::fat_tree_tpuv4(1024);
-        cluster.accel = cluster.accel.with_capacity(120e6);
+        cluster.shrink_capacity(120e6);
         let with = nest_solve(&graph, &cluster, &SolverOpts::default());
         assert!(with.is_some(), "ZeRO should make 120MB feasible");
         let plan = &with.unwrap().plan;

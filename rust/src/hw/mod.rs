@@ -10,6 +10,10 @@
 //! against real PJRT executions of the probe HLOs (see DESIGN.md
 //! §Hardware-Adaptation).
 
+pub mod pool;
+
+pub use pool::{ClassMask, DevicePool, DeviceRun};
+
 /// An accelerator model: peak rates plus achieved-efficiency factors.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Accelerator {

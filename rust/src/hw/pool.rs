@@ -1,0 +1,348 @@
+//! Per-device accelerator profiles: the [`DevicePool`].
+//!
+//! Real datacenter pools mix generations — a V100 island next to an H100
+//! island behind the same spine (the setting hardware/placement
+//! co-search works like *Integrated Hardware Architecture and Device
+//! Placement Search* optimize over). A [`DevicePool`] maps runs of
+//! `(Accelerator, count)` onto contiguous device-id ranges, so every
+//! layer that prices compute or memory can ask "which accelerator
+//! classes does this device range cover?" and apply TP/DP **lockstep
+//! semantics**: a group advances at its slowest member, and a stage is
+//! memory-feasible only on its smallest-HBM member.
+//!
+//! Class coverage is expressed as a [`ClassMask`] — a bitmask over the
+//! pool's *distinct* accelerator profiles — so the solver's hot loops
+//! stay allocation-free.
+
+use super::Accelerator;
+
+/// Bitmask over a pool's distinct accelerator classes (bit `c` set ⇔
+/// class `c` is present in the queried device range). Pools are capped
+/// at 64 distinct classes, far beyond any real deployment.
+pub type ClassMask = u64;
+
+/// One contiguous run of identical accelerators.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceRun {
+    pub accel: Accelerator,
+    pub count: usize,
+    /// Optional per-run access-link bandwidth (bytes/s) for the
+    /// innermost tier — e.g. V100 NVLink at 300 GB/s inside a pool
+    /// whose H100 nodes run 900 GB/s. `None` = use the tier's
+    /// configured bandwidth. Only the explicit link-graph expansion
+    /// ([`crate::netsim::topo`]) sees this; the level-wise analytic
+    /// model keeps one (optimistic) bandwidth per tier, which is
+    /// exactly the blind spot the flow simulator exposes.
+    pub access_bw: Option<f64>,
+}
+
+/// Per-device accelerator profiles: runs of `(Accelerator, count)`
+/// mapped to contiguous device ranges (run 0 owns devices
+/// `[0, count₀)`, run 1 the next `count₁` ids, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DevicePool {
+    runs: Vec<DeviceRun>,
+    /// `starts[i]` = first device id of run `i`; `starts[len]` = total.
+    starts: Vec<usize>,
+    /// Distinct accelerator profiles (classes), in first-seen run order.
+    classes: Vec<Accelerator>,
+    /// Run index → class index.
+    run_class: Vec<usize>,
+}
+
+impl DevicePool {
+    /// A homogeneous pool of `n` identical accelerators — the former
+    /// single-`accel` cluster, expressed in the new vocabulary.
+    pub fn uniform(accel: Accelerator, n: usize) -> Self {
+        Self::from_runs(vec![DeviceRun {
+            accel,
+            count: n,
+            access_bw: None,
+        }])
+    }
+
+    /// Build a pool from explicit runs. Zero-count runs are dropped;
+    /// identical adjacent profiles stay separate runs (harmless).
+    pub fn from_runs(runs: Vec<DeviceRun>) -> Self {
+        let runs: Vec<DeviceRun> = runs.into_iter().filter(|r| r.count > 0).collect();
+        assert!(!runs.is_empty(), "device pool has no devices");
+        let mut starts = Vec::with_capacity(runs.len() + 1);
+        let mut classes: Vec<Accelerator> = Vec::new();
+        let mut run_class = Vec::with_capacity(runs.len());
+        let mut total = 0usize;
+        for r in &runs {
+            starts.push(total);
+            total += r.count;
+            let c = match classes.iter().position(|a| *a == r.accel) {
+                Some(c) => c,
+                None => {
+                    classes.push(r.accel.clone());
+                    classes.len() - 1
+                }
+            };
+            run_class.push(c);
+        }
+        starts.push(total);
+        assert!(
+            classes.len() <= 64,
+            "device pool has more than 64 distinct accelerator classes"
+        );
+        DevicePool {
+            runs,
+            starts,
+            classes,
+            run_class,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    pub fn runs(&self) -> &[DeviceRun] {
+        &self.runs
+    }
+
+    /// Distinct accelerator profiles, indexed by class id (= mask bit).
+    pub fn classes(&self) -> &[Accelerator] {
+        &self.classes
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// One accelerator class everywhere — the solver's homogeneous fast
+    /// path (shared DP tables, forced data-parallel width).
+    pub fn is_homogeneous(&self) -> bool {
+        self.classes.len() == 1
+    }
+
+    /// Mask with every class bit set.
+    pub fn full_mask(&self) -> ClassMask {
+        if self.classes.len() >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.classes.len()) - 1
+        }
+    }
+
+    /// Run index owning device `dev`.
+    fn run_of(&self, dev: usize) -> usize {
+        debug_assert!(dev < self.n_devices(), "device {dev} out of pool");
+        // partition_point: first run whose start exceeds dev, minus one.
+        self.starts.partition_point(|&s| s <= dev) - 1
+    }
+
+    /// Accelerator of device `dev`.
+    pub fn accel_of(&self, dev: usize) -> &Accelerator {
+        &self.runs[self.run_of(dev)].accel
+    }
+
+    /// Class index of device `dev`.
+    pub fn class_of(&self, dev: usize) -> usize {
+        self.run_class[self.run_of(dev)]
+    }
+
+    /// Access-link bandwidth override of device `dev` (innermost tier).
+    pub fn access_bw_of(&self, dev: usize) -> Option<f64> {
+        self.runs[self.run_of(dev)].access_bw
+    }
+
+    /// Classes covering the contiguous device range `[lo, hi)`.
+    pub fn block_mask(&self, lo: usize, hi: usize) -> ClassMask {
+        debug_assert!(lo < hi && hi <= self.n_devices(), "bad range [{lo},{hi})");
+        let mut mask = 0u64;
+        for ri in self.run_of(lo)..self.runs.len() {
+            if self.starts[ri] >= hi {
+                break;
+            }
+            mask |= 1u64 << self.run_class[ri];
+        }
+        mask
+    }
+
+    /// Classes covering the block `[lo, hi)` and its `d` data-parallel
+    /// replicas spaced `stride` devices apart (replica `r` covers
+    /// `[lo + r·stride, hi + r·stride)`) — the full lockstep group of a
+    /// replicated pipeline stage.
+    pub fn replicated_mask(&self, lo: usize, hi: usize, d: usize, stride: usize) -> ClassMask {
+        let mut mask = 0u64;
+        for r in 0..d.max(1) {
+            mask |= self.block_mask(lo + r * stride, hi + r * stride);
+        }
+        mask
+    }
+
+    /// Classes covering an explicit device list and its replicas.
+    pub fn devices_mask(&self, devices: &[usize], d: usize, stride: usize) -> ClassMask {
+        let mut mask = 0u64;
+        for &dev in devices {
+            for r in 0..d.max(1) {
+                mask |= 1u64 << self.class_of(dev + r * stride);
+            }
+        }
+        mask
+    }
+
+    /// Smallest HBM capacity among the classes in `mask` — the memory
+    /// bound a lockstep group must fit (Eq. 1 on the weakest member).
+    pub fn min_capacity(&self, mask: ClassMask) -> f64 {
+        let mut cap = f64::INFINITY;
+        let mut m = mask & self.full_mask();
+        debug_assert!(m != 0, "min_capacity of empty mask");
+        while m != 0 {
+            let c = m.trailing_zeros() as usize;
+            m &= m - 1;
+            cap = cap.min(self.classes[c].hbm_capacity);
+        }
+        cap
+    }
+
+    /// Smallest HBM capacity across the whole pool.
+    pub fn min_capacity_all(&self) -> f64 {
+        self.min_capacity(self.full_mask())
+    }
+
+    /// Human-readable class set of `mask`, run order, "+"-joined
+    /// (e.g. `"h100+v100"`); the per-stage device-class record plans
+    /// carry.
+    pub fn class_names(&self, mask: ClassMask) -> String {
+        let mut names: Vec<&str> = Vec::new();
+        let mut m = mask & self.full_mask();
+        while m != 0 {
+            let c = m.trailing_zeros() as usize;
+            m &= m - 1;
+            names.push(&self.classes[c].name);
+        }
+        names.join("+")
+    }
+
+    /// Map every run's accelerator (capacity ablations: Table 7 shrinks
+    /// all devices alike).
+    pub fn map_accels(&self, mut f: impl FnMut(&Accelerator) -> Accelerator) -> Self {
+        Self::from_runs(
+            self.runs
+                .iter()
+                .map(|r| DeviceRun {
+                    accel: f(&r.accel),
+                    count: r.count,
+                    access_bw: r.access_bw,
+                })
+                .collect(),
+        )
+    }
+
+    /// Short pool summary: `"64×h100"` or `"32×h100 + 32×v100"`.
+    pub fn describe(&self) -> String {
+        self.runs
+            .iter()
+            .map(|r| format!("{}×{}", r.count, r.accel.name))
+            .collect::<Vec<_>>()
+            .join(" + ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::GIB;
+
+    fn mixed() -> DevicePool {
+        DevicePool::from_runs(vec![
+            DeviceRun {
+                accel: Accelerator::h100(),
+                count: 32,
+                access_bw: None,
+            },
+            DeviceRun {
+                accel: Accelerator::v100(),
+                count: 32,
+                access_bw: Some(300.0e9),
+            },
+        ])
+    }
+
+    #[test]
+    fn uniform_pool_single_class() {
+        let p = DevicePool::uniform(Accelerator::tpu_v4(), 64);
+        assert_eq!(p.n_devices(), 64);
+        assert!(p.is_homogeneous());
+        assert_eq!(p.full_mask(), 1);
+        assert_eq!(p.block_mask(0, 64), 1);
+        assert_eq!(p.accel_of(63).name, "tpuv4");
+        assert_eq!(p.class_names(1), "tpuv4");
+    }
+
+    #[test]
+    fn mixed_pool_maps_ranges_to_classes() {
+        let p = mixed();
+        assert_eq!(p.n_devices(), 64);
+        assert_eq!(p.n_classes(), 2);
+        assert!(!p.is_homogeneous());
+        assert_eq!(p.class_of(0), 0);
+        assert_eq!(p.class_of(31), 0);
+        assert_eq!(p.class_of(32), 1);
+        assert_eq!(p.accel_of(40).name, "v100");
+        assert_eq!(p.block_mask(0, 32), 0b01);
+        assert_eq!(p.block_mask(32, 64), 0b10);
+        assert_eq!(p.block_mask(16, 48), 0b11);
+        assert_eq!(p.class_names(0b11), "h100+v100");
+        assert_eq!(p.access_bw_of(0), None);
+        assert_eq!(p.access_bw_of(33), Some(300.0e9));
+    }
+
+    #[test]
+    fn replicated_mask_unions_replica_coverage() {
+        let p = mixed();
+        // Block [0, 8) replicated 2× at stride 32: replica 1 sits on
+        // V100s.
+        assert_eq!(p.replicated_mask(0, 8, 2, 32), 0b11);
+        assert_eq!(p.replicated_mask(0, 8, 1, 32), 0b01);
+        assert_eq!(p.devices_mask(&[0, 1, 2], 2, 32), 0b11);
+        assert_eq!(p.devices_mask(&[0, 1, 2], 1, 32), 0b01);
+    }
+
+    #[test]
+    fn min_capacity_takes_weakest_member() {
+        let p = mixed();
+        assert_eq!(p.min_capacity(0b01), 80.0 * GIB);
+        assert_eq!(p.min_capacity(0b10), 32.0 * GIB);
+        assert_eq!(p.min_capacity(0b11), 32.0 * GIB);
+        assert_eq!(p.min_capacity_all(), 32.0 * GIB);
+    }
+
+    #[test]
+    fn map_accels_preserves_layout() {
+        let p = mixed().map_accels(|a| a.with_capacity(16.0 * GIB));
+        assert_eq!(p.n_devices(), 64);
+        assert_eq!(p.n_classes(), 2);
+        assert_eq!(p.min_capacity_all(), 16.0 * GIB);
+        assert_eq!(p.access_bw_of(33), Some(300.0e9));
+    }
+
+    #[test]
+    fn duplicate_profiles_share_a_class() {
+        let p = DevicePool::from_runs(vec![
+            DeviceRun {
+                accel: Accelerator::v100(),
+                count: 8,
+                access_bw: None,
+            },
+            DeviceRun {
+                accel: Accelerator::h100(),
+                count: 8,
+                access_bw: None,
+            },
+            DeviceRun {
+                accel: Accelerator::v100(),
+                count: 8,
+                access_bw: None,
+            },
+        ]);
+        assert_eq!(p.n_classes(), 2);
+        assert_eq!(p.class_of(0), p.class_of(20));
+        assert_eq!(p.block_mask(8, 16), 0b10);
+        assert_eq!(p.block_mask(0, 24), 0b11);
+    }
+}

@@ -29,6 +29,7 @@ fn cluster_by_name(name: &str, devices: usize, oversub: f64) -> Result<Cluster, 
         "fat-tree" | "tpuv4" => Ok(Cluster::fat_tree_tpuv4(devices)),
         "spine-leaf" | "h100" => Ok(Cluster::spine_leaf_h100(devices, oversub)),
         "v100" => Ok(Cluster::v100_cluster(devices)),
+        "hetero" => Ok(Cluster::hetero_pool(devices)),
         "torus2d" => {
             let side = (devices as f64).sqrt() as usize;
             Ok(Cluster::torus2d(side, devices / side, 50.0 * 1e9, 1e-6))
@@ -39,7 +40,7 @@ fn cluster_by_name(name: &str, devices: usize, oversub: f64) -> Result<Cluster, 
             Cluster::from_json(&v)
         }
         other => Err(format!(
-            "unknown cluster '{other}' (fat-tree, spine-leaf, v100, torus2d, or a .json file)"
+            "unknown cluster '{other}' (fat-tree, spine-leaf, v100, hetero, torus2d, or a .json file)"
         )),
     }
 }
@@ -369,6 +370,15 @@ fn main() {
                 tables::v100_validation(&hopts);
                 Ok(())
             }
+            "hetero" => {
+                if tables::hetero(&hopts) {
+                    Ok(())
+                } else {
+                    Err("heterogeneous-pool regression: the mixed-pool solve is not \
+                         strictly faster than the all-V100-constrained solve"
+                        .into())
+                }
+            }
             "torus" => {
                 figures::torus(&hopts, if quick { 64 } else { 256 });
                 Ok(())
@@ -391,6 +401,11 @@ fn main() {
                 tables::table7(&hopts);
                 tables::v100_validation(&hopts);
                 figures::torus(&hopts, if quick { 64 } else { 256 });
+                if !tables::hetero(&hopts) {
+                    return Err("heterogeneous-pool regression: the mixed-pool solve is \
+                         not strictly faster than the all-V100-constrained solve"
+                        .into());
+                }
                 if !nest::harness::netsim::netsim_xval_quick(&hopts, quick) {
                     return Err("netsim cross-validation regression: flow-sim undercut \
                          the analytic DES on a contended topology"
@@ -409,7 +424,7 @@ fn main() {
                     "nest — NEST device-placement reproduction (MLSys 2026)\n\n\
                      usage: nest <command> [options]\n\n\
                      commands:\n\
-                     \x20 solve      --model <name> --cluster <fat-tree|spine-leaf|v100|torus2d|file.json> --devices N [--mbs N]\n\
+                     \x20 solve      --model <name> --cluster <fat-tree|spine-leaf|v100|hetero|torus2d|file.json> --devices N [--mbs N]\n\
                      \x20 simulate   same as solve, plus a DES evaluation of the plan\n\
                      \x20 netsim     --config <tier-or-edge-list.json | cluster name>: solve, then cross-check the plan\n\
                      \x20            under flow-level link contention (reports batch-time error + per-link utilization)\n\
@@ -423,6 +438,8 @@ fn main() {
                      \x20 profile    --reps N\n\
                      \x20 figure2|figure5|figure6|figure7|figure10|figure11\n\
                      \x20 table2|table4|table6|table7 | v100 | torus\n\
+                     \x20 hetero     mixed H100+V100 pool vs single-class twins (exits nonzero if the\n\
+                     \x20            mixed solve is not strictly faster than the all-V100 constraint)\n\
                      \x20 all        run the complete evaluation\n\n\
                      global: --quick (smaller sweeps), --results <dir>, --threads N (solver workers, N ≥ 1; omit for all cores)\n\n\
                      models: llama2-7b llama3-70b bertlarge gpt3-175b gpt3-35b mixtral-8x7b mixtral-790m"

@@ -129,6 +129,11 @@ pub fn stage_peak_bytes(
 /// power-of-two degrees up to `max_degree`. Returns `None` if even
 /// ZeRO-3 at `max_degree` with recomputation does not fit.
 ///
+/// On heterogeneous pools `capacity` must be the *minimum* HBM across
+/// the lockstep group the stage occupies — replicas included
+/// (`DevicePool::min_capacity`); every solver/baseline call site passes
+/// exactly that, so a spec that "fits" fits the weakest device.
+///
 /// `prefer_recompute` pins the recomputation choice when the caller (the
 /// DP) wants to cost both branches explicitly.
 pub fn choose_spec(

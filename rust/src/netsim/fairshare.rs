@@ -90,8 +90,12 @@ pub struct NetsimReport {
     pub batch_time: f64,
     /// Flows that actually crossed the network.
     pub n_flows: usize,
-    /// Bytes moved across all flows.
+    /// Bytes injected across all flows.
     pub total_bytes: f64,
+    /// Bytes actually drained through links (Σ rate·dt per flow). Equal
+    /// to `total_bytes` up to the engine's half-byte completion
+    /// tolerance — the conservation invariant the fuzz suite checks.
+    pub delivered_bytes: f64,
     /// Engine events processed (rate recomputations).
     pub events: usize,
     /// Per-link mean utilization, hottest first (zero-traffic links
@@ -124,6 +128,7 @@ impl Ord for TimeKey {
 #[derive(Debug)]
 struct ActiveFlow {
     task: u32,
+    bytes: f64,
     remaining: f64,
     rate: f64,
     /// Per-flow ceiling (min flow_cap along the path).
@@ -166,6 +171,7 @@ pub fn run(topo: &LinkGraph, wl: &Workload) -> NetsimReport {
     let mut busy_bytes: Vec<f64> = vec![0.0; topo.links.len()];
     let mut n_flows = 0usize;
     let mut total_bytes = 0.0f64;
+    let mut delivered_bytes = 0.0f64;
     let mut events = 0usize;
     let mut done_count = 0usize;
 
@@ -198,6 +204,7 @@ pub fn run(topo: &LinkGraph, wl: &Workload) -> NetsimReport {
                         total_bytes += f.bytes;
                         active.push(ActiveFlow {
                             task: i,
+                            bytes: f.bytes,
                             remaining: f.bytes,
                             rate: 0.0,
                             cap: p.flow_cap,
@@ -265,6 +272,7 @@ pub fn run(topo: &LinkGraph, wl: &Workload) -> NetsimReport {
         while i < active.len() {
             if active[i].remaining <= 0.5 {
                 let f = active.swap_remove(i);
+                delivered_bytes += f.bytes - f.remaining.max(0.0);
                 let s = &mut st[f.task as usize];
                 s.latency_end = s.latency_end.max(t + f.path_latency);
                 s.pending_flows -= 1;
@@ -338,6 +346,7 @@ pub fn run(topo: &LinkGraph, wl: &Workload) -> NetsimReport {
         batch_time: t,
         n_flows,
         total_bytes,
+        delivered_bytes,
         events,
         link_util,
         max_link_util,

@@ -353,7 +353,10 @@ pub fn lower(
     let mut grad_bytes = vec![0.0; p];
     for (k, st) in plan.stages.iter().enumerate() {
         let cm = &cms[cm_idx[k]].1;
-        let (f, b) = cm.stage_phase_compute(st.layers.0, st.layers.1, &st.mem);
+        // Lockstep on the slowest accelerator class the stage's devices
+        // (all replicas) cover — mirrors the analytic DES.
+        let mask = crate::solver::assign::stage_class_mask(cluster, &st.devices, d, stride);
+        let (f, b) = cm.stage_phase_compute_on(mask, st.layers.0, st.layers.1, &st.mem);
         fwd_s[k] = f;
         bwd_s[k] = b;
         if k + 1 < p {
@@ -592,6 +595,7 @@ mod tests {
                     mem: MemSpec::plain(),
                     send_level: Some(0),
                     load: 1.0,
+                    accel_class: "v100".into(),
                 },
                 StagePlan {
                     layers: (4, 8),
@@ -600,6 +604,7 @@ mod tests {
                     mem: MemSpec::plain(),
                     send_level: None,
                     load: 1.0,
+                    accel_class: "v100".into(),
                 },
             ],
             dp_width: 2,
@@ -679,6 +684,7 @@ mod tests {
                     mem: MemSpec::plain(),
                     send_level: Some(2),
                     load: 1.0,
+                    accel_class: "h100".into(),
                 },
                 StagePlan {
                     layers: (4, 8),
@@ -687,6 +693,7 @@ mod tests {
                     mem: MemSpec::plain(),
                     send_level: None,
                     load: 1.0,
+                    accel_class: "h100".into(),
                 },
             ],
             dp_width: 4,

@@ -102,6 +102,13 @@ impl LinkGraph {
     /// reproduces `Cluster::p2p_time` exactly while concurrent flows
     /// share the trunk. Each tier's latency splits evenly over its up
     /// and down hop.
+    ///
+    /// Heterogeneous pools: a device whose [`crate::hw::DeviceRun`]
+    /// carries an `access_bw` override gets *its own* (slower) access
+    /// link at the innermost tier — e.g. V100 nodes at 300 GB/s inside
+    /// an H100 fabric. The analytic tier keeps the fast bandwidth (it
+    /// is validated as an upper bound at parse time), so the flow
+    /// simulator is where the slow island's links become visible.
     pub fn from_cluster(cluster: &Cluster) -> Self {
         let n = cluster.n_devices();
         let mut nodes: Vec<Node> = (0..n)
@@ -117,7 +124,7 @@ impl LinkGraph {
         // Entities of the level below, innermost first (devices at t=0).
         let mut prev_ids: Vec<usize> = (0..n).collect();
         let mut cap = 1usize;
-        for tier in &cluster.tiers {
+        for (t, tier) in cluster.tiers.iter().enumerate() {
             let sub = cap; // devices per child entity
             cap *= tier.arity;
             caps.push(cap);
@@ -129,9 +136,20 @@ impl LinkGraph {
                     kind: NodeKind::Switch,
                 });
             }
-            let lane = tier.effective_bw();
-            let trunk = sub as f64 * lane;
+            let tier_lane = tier.effective_bw();
             for (i, &child) in prev_ids.iter().enumerate() {
+                // Innermost tier: the child IS a device — honor its
+                // pool run's access-bandwidth override.
+                let lane = if t == 0 {
+                    cluster
+                        .pool
+                        .access_bw_of(child)
+                        .map(|bw| bw / tier.oversub)
+                        .unwrap_or(tier_lane)
+                } else {
+                    tier_lane
+                };
+                let trunk = sub as f64 * lane;
                 let sw = sw_base + (i / tier.arity).min(n_sw - 1);
                 for (a, b) in [(child, sw), (sw, child)] {
                     links.push(Link {
@@ -520,6 +538,24 @@ mod tests {
             .expect("leaf→spine trunk exists");
         assert!((trunk.capacity - 32.0 * 12.5 * GB / 2.0).abs() < 1.0);
         assert!((trunk.flow_cap - 12.5 * GB / 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn hetero_pool_access_links_use_run_overrides() {
+        let c = Cluster::hetero_pool(64); // H100 on [0,32), V100 on [32,64)
+        let g = LinkGraph::from_cluster(&c);
+        let fast = g.links.iter().find(|l| l.src == 0).expect("access link");
+        let slow = g.links.iter().find(|l| l.src == 40).expect("access link");
+        assert!((fast.flow_cap - 900.0 * GB).abs() < 1.0, "{}", fast.flow_cap);
+        assert!((slow.flow_cap - 300.0 * GB).abs() < 1.0, "{}", slow.flow_cap);
+        // A lone V100-island intra-node flow moves at the slow lane —
+        // strictly below the analytic tier's (optimistic) estimate.
+        let p = g.path(40, 41);
+        assert_eq!(p.flow_cap, 300.0 * GB);
+        assert!(p.flow_cap < c.bw_eff(0));
+        // H100-island flows still reproduce the analytic tier exactly.
+        let p = g.path(0, 1);
+        assert_eq!(p.flow_cap, c.bw_eff(0));
     }
 
     #[test]

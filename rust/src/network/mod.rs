@@ -15,7 +15,7 @@
 
 pub mod collectives;
 
-use crate::hw::{Accelerator, GB};
+use crate::hw::{Accelerator, DevicePool, DeviceRun, GB};
 use crate::util::json::Json;
 
 /// One tier of the hierarchy.
@@ -41,10 +41,19 @@ impl Tier {
 
 /// A cluster: accelerators wired into a hierarchical (or hierarchically
 /// abstracted) network.
+///
+/// Devices need not be identical: `pool` maps runs of
+/// `(Accelerator, count)` onto contiguous device-id ranges (a V100
+/// island next to an H100 island). Homogeneous clusters are the
+/// single-run special case, and every constructor below builds one;
+/// [`Cluster::hetero_pool`] and the JSON `"pool"` extension build mixed
+/// pools.
 #[derive(Debug, Clone)]
 pub struct Cluster {
     pub name: String,
-    pub accel: Accelerator,
+    /// Per-device accelerator profiles (replaces the former single
+    /// `accel` field — use [`Cluster::accel`] for the reference class).
+    pub pool: DevicePool,
     /// Innermost tier first. The product of arities is the device count.
     pub tiers: Vec<Tier>,
 }
@@ -62,7 +71,7 @@ impl Cluster {
         let racks = n_devices / 32;
         Cluster {
             name: format!("tpuv4-fattree-{n_devices}"),
-            accel: Accelerator::tpu_v4(),
+            pool: DevicePool::uniform(Accelerator::tpu_v4(), n_devices),
             tiers: vec![
                 Tier {
                     name: "node(HGX)".into(),
@@ -97,7 +106,7 @@ impl Cluster {
         let leaves = n_devices / 32;
         Cluster {
             name: format!("h100-spineleaf-{n_devices}"),
-            accel: Accelerator::h100(),
+            pool: DevicePool::uniform(Accelerator::h100(), n_devices),
             tiers: vec![
                 Tier {
                     name: "node(NVLink)".into(),
@@ -130,7 +139,7 @@ impl Cluster {
         assert!(n_devices % 2 == 0);
         Cluster {
             name: format!("v100-{n_devices}"),
-            accel: Accelerator::v100(),
+            pool: DevicePool::uniform(Accelerator::v100(), n_devices),
             tiers: vec![
                 Tier {
                     name: "node(NVLink)".into(),
@@ -150,6 +159,63 @@ impl Cluster {
         }
     }
 
+    /// Mixed-generation pool: the first half of the devices are
+    /// H100-SXM nodes (NVLink 900 GB/s), the second half V100 nodes
+    /// whose intra-node fabric tops out at 300 GB/s — the
+    /// heterogeneous-datacenter setting hardware/placement co-search
+    /// works optimize over. Uniform 8-wide nodes behind a 25 GB/s leaf
+    /// and a 2:1-oversubscribed spine; the analytic tier keeps the
+    /// fastest (H100) intra-node bandwidth, so the level-wise model
+    /// stays optimistic and the flow simulator exposes the V100 nodes'
+    /// slower access links. The H100 island occupies the *low* device
+    /// ids: the solver packs pipelines tail-first from device 0, so
+    /// partially-utilizing plans concentrate on the fast island.
+    pub fn hetero_pool(n_devices: usize) -> Self {
+        assert!(
+            n_devices >= 32 && n_devices % 32 == 0,
+            "hetero pool needs whole 32-device leaf groups (n ≥ 32, n % 32 == 0)"
+        );
+        let half = n_devices / 2;
+        Cluster {
+            name: format!("hetero-h100-v100-{n_devices}"),
+            pool: DevicePool::from_runs(vec![
+                DeviceRun {
+                    accel: Accelerator::h100(),
+                    count: half,
+                    access_bw: None,
+                },
+                DeviceRun {
+                    accel: Accelerator::v100(),
+                    count: half,
+                    access_bw: Some(300.0 * GB),
+                },
+            ]),
+            tiers: vec![
+                Tier {
+                    name: "node(NVLink)".into(),
+                    arity: 8,
+                    link_bw: 900.0 * GB,
+                    latency: 1.0e-6,
+                    oversub: 1.0,
+                },
+                Tier {
+                    name: "leaf".into(),
+                    arity: 4,
+                    link_bw: 25.0 * GB,
+                    latency: 5.0e-6,
+                    oversub: 1.0,
+                },
+                Tier {
+                    name: "spine".into(),
+                    arity: n_devices / 32,
+                    link_bw: 25.0 * GB,
+                    latency: 10.0e-6,
+                    oversub: 2.0,
+                },
+            ],
+        }
+    }
+
     /// 2D torus mapped to levels by hop distance (App. B.2 / Fig. 9):
     /// level 0 ≈ same tile (4-device tile on full-bandwidth links),
     /// level 1 ≈ near neighbors, level 2 ≈ remote. Effective bandwidth
@@ -160,7 +226,7 @@ impl Cluster {
         assert!(n >= 16 && n % 16 == 0, "torus modeled in 16-device tiles");
         Cluster {
             name: format!("torus2d-{x}x{y}"),
-            accel: Accelerator::tpu_v4(),
+            pool: DevicePool::uniform(Accelerator::tpu_v4(), n),
             tiers: vec![
                 Tier {
                     name: "tile(1-hop)".into(),
@@ -196,7 +262,7 @@ impl Cluster {
         assert!(n >= 64 && n % 64 == 0, "3d torus modeled in 64-device cubes");
         Cluster {
             name: format!("torus3d-{x}x{y}x{z}"),
-            accel: Accelerator::tpu_v4(),
+            pool: DevicePool::uniform(Accelerator::tpu_v4(), n),
             tiers: vec![
                 Tier {
                     name: "cube(1-hop)".into(),
@@ -228,7 +294,7 @@ impl Cluster {
     pub fn flat(accel: Accelerator, n_devices: usize, bw: f64, lat: f64) -> Self {
         Cluster {
             name: format!("flat-{n_devices}"),
-            accel,
+            pool: DevicePool::uniform(accel, n_devices),
             tiers: vec![Tier {
                 name: "flat".into(),
                 arity: n_devices,
@@ -248,10 +314,25 @@ impl Cluster {
     ///  "tiers": [{"name": "node", "arity": 8, "bw_gbps": 900,
     ///             "latency_us": 1.0, "oversub": 1.0}, ...]}
     /// ```
+    ///
+    /// Heterogeneous pools extend the schema with a `"pool"` array of
+    /// `(accelerator, count)` runs mapped to contiguous device ranges
+    /// (fully backward compatible — without `"pool"` the single
+    /// `"accelerator"` covers every device):
+    ///
+    /// ```json
+    /// {"name": "...",
+    ///  "pool": [{"accelerator": "h100", "count": 32},
+    ///           {"accelerator": "v100", "count": 32, "access_bw_gbps": 300}],
+    ///  "tiers": [...]}
+    /// ```
+    ///
+    /// Run counts must sum to the tier product; a run's optional
+    /// `access_bw_gbps` (its devices' innermost-tier link speed, seen
+    /// by the flow-level simulator) must not exceed the innermost
+    /// tier's bandwidth, so the level-wise analytic model stays
+    /// optimistic.
     pub fn from_json(v: &Json) -> Result<Self, String> {
-        let accel_name = v.get("accelerator").as_str().unwrap_or("h100");
-        let accel = Accelerator::by_name(accel_name)
-            .ok_or_else(|| format!("unknown accelerator '{accel_name}'"))?;
         let tiers_json = v
             .get("tiers")
             .as_arr()
@@ -273,11 +354,88 @@ impl Cluster {
                 oversub: t.get("oversub").as_f64().unwrap_or(1.0),
             });
         }
+        let n_devices: usize = tiers.iter().map(|t| t.arity).product();
+        let pool = match v.get("pool").as_arr() {
+            None => {
+                let accel_name = v.get("accelerator").as_str().unwrap_or("h100");
+                let accel = Accelerator::by_name(accel_name)
+                    .ok_or_else(|| format!("unknown accelerator '{accel_name}'"))?;
+                DevicePool::uniform(accel, n_devices)
+            }
+            Some(runs_json) => {
+                if runs_json.is_empty() {
+                    return Err("empty 'pool'".into());
+                }
+                let mut runs = Vec::with_capacity(runs_json.len());
+                for r in runs_json {
+                    let accel_name = r
+                        .get("accelerator")
+                        .as_str()
+                        .ok_or("pool run missing 'accelerator'")?;
+                    let accel = Accelerator::by_name(accel_name)
+                        .ok_or_else(|| format!("unknown accelerator '{accel_name}'"))?;
+                    let count = r
+                        .get("count")
+                        .as_usize()
+                        .ok_or("pool run missing 'count'")?;
+                    let access_bw = r.get("access_bw_gbps").as_f64().map(|b| b * GB);
+                    if let Some(bw) = access_bw {
+                        if bw <= 0.0 {
+                            return Err(format!(
+                                "pool run '{accel_name}': non-positive access_bw_gbps"
+                            ));
+                        }
+                        if bw > tiers[0].link_bw * (1.0 + 1e-9) {
+                            return Err(format!(
+                                "pool run '{accel_name}': access_bw_gbps exceeds the \
+                                 innermost tier's bw_gbps (the analytic tier must stay \
+                                 the optimistic upper bound)"
+                            ));
+                        }
+                    }
+                    runs.push(DeviceRun {
+                        accel,
+                        count,
+                        access_bw,
+                    });
+                }
+                let total: usize = runs.iter().map(|r| r.count).sum();
+                if total != n_devices {
+                    return Err(format!(
+                        "pool covers {total} devices but the tiers define {n_devices}"
+                    ));
+                }
+                DevicePool::from_runs(runs)
+            }
+        };
         Ok(Cluster {
             name: v.get("name").as_str().unwrap_or("custom").to_string(),
-            accel,
+            pool,
             tiers,
         })
+    }
+
+    // ----- pool queries --------------------------------------------------
+
+    /// The pool's reference accelerator (first run) — the one
+    /// homogeneous call sites mean by "the cluster's accelerator".
+    pub fn accel(&self) -> &Accelerator {
+        self.pool.accel_of(0)
+    }
+
+    /// Clone with every device replaced by `accel` (uniform twin; e.g.
+    /// the "treat everything as a V100" constrained baseline).
+    pub fn with_uniform_accel(&self, accel: Accelerator) -> Cluster {
+        let mut c = self.clone();
+        c.name = format!("{}-as-{}", self.name, accel.name);
+        c.pool = DevicePool::uniform(accel, self.n_devices());
+        c
+    }
+
+    /// Shrink every device's HBM capacity (Table 7 memory-constrained
+    /// ablations).
+    pub fn shrink_capacity(&mut self, bytes: f64) {
+        self.pool = self.pool.map_accels(|a| a.with_capacity(bytes));
     }
 
     // ----- level-wise queries --------------------------------------------
@@ -426,7 +584,7 @@ impl Cluster {
             "{} [{} devices, {}]: {}",
             self.name,
             self.n_devices(),
-            self.accel.name,
+            self.pool.describe(),
             tiers.join(" → ")
         )
     }
@@ -533,8 +691,77 @@ mod tests {
             ]}"#;
         let c = Cluster::from_json(&json::parse(src).unwrap()).unwrap();
         assert_eq!(c.n_devices(), 8);
-        assert_eq!(c.accel.name, "v100");
+        assert_eq!(c.accel().name, "v100");
+        assert!(c.pool.is_homogeneous());
         assert!((c.tiers[1].oversub - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_pool_extension_parses() {
+        let src = r#"{
+            "name": "mixed", "tiers": [
+                {"name": "node", "arity": 8, "bw_gbps": 900, "latency_us": 1},
+                {"name": "sw", "arity": 8, "bw_gbps": 25, "latency_us": 8}
+            ],
+            "pool": [
+                {"accelerator": "h100", "count": 32},
+                {"accelerator": "v100", "count": 32, "access_bw_gbps": 300}
+            ]}"#;
+        let c = Cluster::from_json(&json::parse(src).unwrap()).unwrap();
+        assert_eq!(c.n_devices(), 64);
+        assert_eq!(c.pool.n_classes(), 2);
+        assert_eq!(c.pool.accel_of(0).name, "h100");
+        assert_eq!(c.pool.accel_of(63).name, "v100");
+        assert_eq!(c.pool.access_bw_of(40), Some(300.0 * GB));
+        assert_eq!(c.accel().name, "h100");
+    }
+
+    #[test]
+    fn json_pool_rejects_bad_runs() {
+        for (bad, why) in [
+            (
+                r#"{"tiers": [{"arity": 8, "bw_gbps": 900}],
+                    "pool": [{"accelerator": "h100", "count": 4}]}"#,
+                "count mismatch",
+            ),
+            (
+                r#"{"tiers": [{"arity": 8, "bw_gbps": 900}],
+                    "pool": [{"accelerator": "quantum", "count": 8}]}"#,
+                "unknown accelerator",
+            ),
+            (
+                r#"{"tiers": [{"arity": 8, "bw_gbps": 300}],
+                    "pool": [{"accelerator": "h100", "count": 8,
+                              "access_bw_gbps": 900}]}"#,
+                "access bw above tier bw",
+            ),
+            (
+                r#"{"tiers": [{"arity": 8, "bw_gbps": 900}], "pool": []}"#,
+                "empty pool",
+            ),
+        ] {
+            assert!(
+                Cluster::from_json(&json::parse(bad).unwrap()).is_err(),
+                "{why}"
+            );
+        }
+    }
+
+    #[test]
+    fn hetero_pool_constructor_layout() {
+        let c = Cluster::hetero_pool(64);
+        assert_eq!(c.n_devices(), 64);
+        assert_eq!(c.pool.n_classes(), 2);
+        // H100 island on the low ids (tail-first packing lands there).
+        assert_eq!(c.pool.accel_of(0).name, "h100");
+        assert_eq!(c.pool.accel_of(32).name, "v100");
+        assert_eq!(c.pool.access_bw_of(32), Some(300.0 * GB));
+        assert!(c.pool.access_bw_of(0).is_none());
+        // The v100 twin treats every device as the slow class.
+        let twin = c.with_uniform_accel(crate::hw::Accelerator::v100());
+        assert!(twin.pool.is_homogeneous());
+        assert_eq!(twin.n_devices(), 64);
+        assert_eq!(twin.tiers, c.tiers);
     }
 
     #[test]

@@ -115,10 +115,19 @@ pub fn simulate(
             }
         };
         let cm = &cms[pos].1;
-        let (f, b) = cm.stage_phase_times(st.layers.0, st.layers.1, &st.mem, cluster);
+        // Lockstep class coverage of the stage's devices across every
+        // data-parallel replica: heterogeneous stages run at their
+        // slowest covered accelerator.
+        let mask = crate::solver::assign::stage_class_mask(
+            cluster,
+            &st.devices,
+            plan.dp_width,
+            plan.devices_per_replica,
+        );
+        let (f, b) = cm.stage_phase_times_on(mask, st.layers.0, st.layers.1, &st.mem, cluster);
         fwd_t[k] = f;
         bwd_t[k] = b;
-        let (_, comm) = cm.stage_breakdown(st.layers.0, st.layers.1, &st.mem);
+        let (_, comm) = cm.stage_breakdown_on(mask, st.layers.0, st.layers.1, &st.mem);
         comm_within[k] = comm;
         if let Some(lvl) = st.send_level {
             let bytes = cm.boundary_bytes_after(st.layers.1);

@@ -9,7 +9,21 @@
 //! forward-edge costs exactly while it recurses backward from the last
 //! stage (the paper's "deferred forward cost", §4).
 
+use crate::hw::ClassMask;
 use crate::network::Cluster;
+
+/// Accelerator classes covered by a realized stage: its device list
+/// plus every data-parallel replica (`replica r` adds `r·stride`).
+/// This is the lockstep group the cost model prices — the simulators
+/// and plan validation all derive per-stage classes through here.
+pub fn stage_class_mask(
+    cluster: &Cluster,
+    devices: &[usize],
+    d: usize,
+    stride: usize,
+) -> ClassMask {
+    cluster.pool.devices_mask(devices, d.max(1), stride)
+}
 
 /// Communication level crossed by the boundary between device `offset−1`
 /// and device `offset` under compact packing: the innermost tier whose
@@ -88,6 +102,19 @@ mod tests {
         assert_eq!(min_send_level(&c, 2, 2), 0);
         assert_eq!(min_send_level(&c, 3, 2), 0);
         assert_eq!(min_send_level(&c, 4, 2), 1);
+    }
+
+    #[test]
+    fn stage_class_masks_cover_replicas() {
+        let c = Cluster::hetero_pool(64); // h100 on [0,32), v100 on [32,64)
+        assert_eq!(stage_class_mask(&c, &[0, 1], 1, 0), 0b01);
+        assert_eq!(stage_class_mask(&c, &[40], 1, 0), 0b10);
+        // Replica 1 at stride 32 drags the lockstep group onto the
+        // V100 island.
+        assert_eq!(stage_class_mask(&c, &[0, 1], 2, 32), 0b11);
+        // Homogeneous clusters collapse to the single class.
+        let v = Cluster::v100_cluster(8);
+        assert_eq!(stage_class_mask(&v, &[0, 5], 2, 2), 0b01);
     }
 
     #[test]

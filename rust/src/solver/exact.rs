@@ -78,13 +78,21 @@ type DpEntry = ((usize, usize, usize), (f64, Back));
 /// Compute every layer-`s` state for one device count `k`. Reads only
 /// layer `s−1` of `dp`, so calls for different `k` are independent — the
 /// parallel fan-out below relies on exactly this.
+///
+/// `d`/`stride` describe the data-parallel replication of the replica
+/// being solved (replica `r` shifts every device by `r·stride`): the
+/// stage occupying `[k−a, k)` prices compute on the slowest accelerator
+/// class its replicated coverage touches and checks memory against the
+/// smallest covered HBM (heterogeneous pools; single-class pools see
+/// the old behavior).
 #[allow(clippy::too_many_arguments)]
 fn layer_states_for_k(
     n: usize,
     cluster: &Cluster,
     cms: &[CostModel],
     dp: &DpMap,
-    cap: f64,
+    d: usize,
+    stride: usize,
     zero_cap: usize,
     recompute: bool,
     s: usize,
@@ -93,6 +101,19 @@ fn layer_states_for_k(
     out: &mut Vec<DpEntry>,
 ) {
     let l_recv = boundary_level(cluster, k);
+    // Per SUB-GRAPH config: the block [k−a, k)'s class coverage and
+    // memory bound (invariant over the layer loop).
+    let ctxs: Vec<Option<(crate::hw::ClassMask, f64)>> = cms
+        .iter()
+        .map(|cm| {
+            let a = cm.group;
+            if a > k {
+                return None;
+            }
+            let mask = cluster.pool.replicated_mask(k - a, k, d, stride);
+            Some((mask, cluster.pool.min_capacity(mask)))
+        })
+        .collect();
     for i in (0..n).rev() {
         if n - i < s {
             continue;
@@ -105,6 +126,7 @@ fn layer_states_for_k(
             if a > k || (s > 1 && k - a < s - 1) {
                 continue;
             }
+            let (mask, cap) = ctxs[ci].expect("ctx exists when a <= k");
             let stash = s - 1;
             let l_send = if s > 1 {
                 Some(boundary_level(cluster, k - a))
@@ -116,7 +138,7 @@ fn layer_states_for_k(
                 else {
                     continue;
                 };
-                let load = cm.stage_load(i, n, Some(l_recv), None, &spec, cluster);
+                let load = cm.stage_load_on(mask, i, n, Some(l_recv), None, &spec, cluster);
                 *states += 1;
                 if best.map(|(b, _)| load < b).unwrap_or(true) {
                     best = Some((
@@ -139,7 +161,7 @@ fn layer_states_for_k(
                 else {
                     break; // memory monotone in j
                 };
-                let load = cm.stage_load(i, j, Some(l_recv), l_send, &spec, cluster);
+                let load = cm.stage_load_on(mask, i, j, Some(l_recv), l_send, &spec, cluster);
                 *states += 1;
                 let cand = load.max(rest);
                 if best.map(|(b, _)| cand < b).unwrap_or(true) {
@@ -172,7 +194,7 @@ pub fn solve_exact(graph: &LayerGraph, cluster: &Cluster, opts: &ExactOpts) -> O
     );
     let n = graph.n_layers();
     let s_max = opts.max_stages.min(n).min(k_rep);
-    let cap = cluster.accel.hbm_capacity;
+    let d = opts.dp_width.max(1);
     let zero_cap = super::pow2_floor(opts.dp_width).min(opts.zero_max_degree);
 
     // Candidate SUB-GRAPH configs and their cost models.
@@ -206,7 +228,7 @@ pub fn solve_exact(graph: &LayerGraph, cluster: &Cluster, opts: &ExactOpts) -> O
             let mut entries: Vec<DpEntry> = Vec::new();
             for &k in &ks {
                 layer_states_for_k(
-                    n, cluster, &cms, &dp, cap, zero_cap, recompute, s, k, &mut states,
+                    n, cluster, &cms, &dp, d, k_rep, zero_cap, recompute, s, k, &mut states,
                     &mut entries,
                 );
             }
@@ -234,7 +256,8 @@ pub fn solve_exact(graph: &LayerGraph, cluster: &Cluster, opts: &ExactOpts) -> O
                                     cluster,
                                     cms_ref,
                                     dp_ref,
-                                    cap,
+                                    d,
+                                    k_rep,
                                     zero_cap,
                                     recompute,
                                     s,
@@ -273,10 +296,13 @@ pub fn solve_exact(graph: &LayerGraph, cluster: &Cluster, opts: &ExactOpts) -> O
                 } else {
                     None
                 };
+                // The first stage occupies the top block [k−a, k).
+                let mask = cluster.pool.replicated_mask(k - a, k, d, k_rep);
+                let fcap = cluster.pool.min_capacity(mask);
                 let eval = |j: usize, rest: f64| -> Option<(f64, Back)> {
                     let spec =
-                        cm.stage_choose_spec(0, j, stash, cap, zero_cap, opts.recompute)?;
-                    let load = cm.stage_load(0, j, None, l_send, &spec, cluster);
+                        cm.stage_choose_spec(0, j, stash, fcap, zero_cap, opts.recompute)?;
+                    let load = cm.stage_load_on(mask, 0, j, None, l_send, &spec, cluster);
                     Some((
                         load.max(rest),
                         Back {
@@ -298,7 +324,6 @@ pub fn solve_exact(graph: &LayerGraph, cluster: &Cluster, opts: &ExactOpts) -> O
                         .collect()
                 };
                 for (bottleneck, back) in candidates {
-                    let d = opts.dp_width;
                     let m = graph.global_batch.div_ceil(d * graph.mbs);
                     let sync_stride = k_rep;
                     let sync = cluster.dp_allreduce(
@@ -342,7 +367,8 @@ pub fn solve_exact(graph: &LayerGraph, cluster: &Cluster, opts: &ExactOpts) -> O
         } else {
             None
         };
-        let load = cm.stage_load(i, j, recv_level, send_level, &back.spec, cluster);
+        let mask = cluster.pool.replicated_mask(k - a, k, d, k_rep);
+        let load = cm.stage_load_on(mask, i, j, recv_level, send_level, &back.spec, cluster);
         stages.push(StagePlan {
             layers: (i, j),
             devices,
@@ -350,6 +376,7 @@ pub fn solve_exact(graph: &LayerGraph, cluster: &Cluster, opts: &ExactOpts) -> O
             mem: back.spec,
             send_level,
             load,
+            accel_class: cluster.pool.class_names(mask),
         });
         k -= a;
         i = j;
@@ -362,7 +389,6 @@ pub fn solve_exact(graph: &LayerGraph, cluster: &Cluster, opts: &ExactOpts) -> O
     }
 
     let bottleneck = stages.iter().map(|s| s.load).fold(0.0, f64::max);
-    let d = opts.dp_width;
     let m = graph.global_batch.div_ceil(d * graph.mbs);
     let sync = batch_time - bottleneck * (m as f64 + p as f64 - 1.0);
     let plan = PlacementPlan {
@@ -401,7 +427,7 @@ pub fn brute_force_batch_time(
     let k_rep = cluster.n_devices() / opts.dp_width.max(1);
     let n = graph.n_layers();
     assert!(n <= 10 && k_rep <= 8, "brute force is exponential");
-    let cap = cluster.accel.hbm_capacity;
+    let d = opts.dp_width.max(1);
     let zero_cap = super::pow2_floor(opts.dp_width).min(opts.zero_max_degree);
     let sgs = enumerate_sg(
         &graph.tp_widths,
@@ -446,6 +472,14 @@ pub fn brute_force_batch_time(
                     let cm = &cms[sg_choice[idx]];
                     let (i, j) = (cuts[idx], cuts[idx + 1]);
                     let stash = p - 1 - idx;
+                    // Stage idx occupies [offsets[idx+1], offsets[idx]).
+                    let mask = cluster.pool.replicated_mask(
+                        offsets[idx + 1],
+                        offsets[idx],
+                        d,
+                        k_rep,
+                    );
+                    let cap = cluster.pool.min_capacity(mask);
                     let Some(spec) =
                         cm.stage_choose_spec(i, j, stash, cap, zero_cap, opts.recompute)
                     else {
@@ -462,8 +496,8 @@ pub fn brute_force_batch_time(
                     } else {
                         None
                     };
-                    bottleneck =
-                        bottleneck.max(cm.stage_load(i, j, recv, send, &spec, cluster));
+                    bottleneck = bottleneck
+                        .max(cm.stage_load_on(mask, i, j, recv, send, &spec, cluster));
                     if idx == 0 {
                         sync = cluster.dp_allreduce(
                             cm.stage_grad_bytes(i, j),

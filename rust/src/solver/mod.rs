@@ -69,6 +69,23 @@
 //! field-for-field identical for every thread count**. `solve` is the
 //! `K = 1` special case and its behavior is unchanged.
 //!
+//! # Heterogeneous device pools
+//!
+//! When the cluster's [`crate::hw::DevicePool`] mixes accelerator
+//! classes, every DP state is scored with the profile of the devices
+//! its block *actually covers* (replicas included): compute runs
+//! lockstep at the slowest covered class, memory must fit the smallest
+//! covered HBM ([`StageCtx`]). Because a block's replica coverage
+//! depends on the stride `p·g` and width `d`, tables are rebuilt per
+//! `(p, d)` instead of shared — and `d` itself is enumerated
+//! (`⌊K/(p·g)⌋` plus every power of two below it) rather than forced,
+//! so the solver can trade replication width for keeping stages off
+//! the slow island. All pruning bounds stay exact: config-level lower
+//! bounds use the *fastest* class anywhere
+//! ([`CostModel::stage_load_lb_best`]), per-state bounds the block's
+//! own classes. Homogeneous pools take the original shared-table,
+//! forced-width fast path, bit-identically.
+//!
 //! The full per-stage-device-count generalization (the paper's
 //! `dp[l][D][k][s]` with enumerated allocations) is in [`exact`] and is
 //! used for small clusters (§5.4) and as the optimality cross-check.
@@ -86,6 +103,7 @@ use std::time::Instant;
 use crate::cost::CostModel;
 use crate::graph::subgraph::{enumerate_sg, SgConfig};
 use crate::graph::LayerGraph;
+use crate::hw::ClassMask;
 use crate::memory::MemSpec;
 use crate::network::Cluster;
 use assign::{boundary_level, stage_devices};
@@ -191,6 +209,41 @@ impl Incumbent {
     }
 }
 
+/// Pool context of one DP state's stage block: which accelerator
+/// classes the block (and its data-parallel replicas) covers, and the
+/// smallest HBM capacity among them. Index `s` (stages remaining,
+/// 1-based) corresponds to the block `s − 1` blocks from the pipeline
+/// end — devices `[(s−1)·g, s·g)` under compact tail-first packing —
+/// so the DP prices every candidate stage with the accelerator profile
+/// of the devices it actually covers (TP/DP lockstep semantics).
+#[derive(Debug, Clone, Copy)]
+struct StageCtx {
+    mask: ClassMask,
+    cap: f64,
+}
+
+/// Contexts for stage blocks `0..count` of `g` devices, replicated `d`
+/// times at `stride`. `out[s]` is the context of the state with `s`
+/// stages remaining (`out[0]` is a pool-wide placeholder). On a
+/// homogeneous pool every context is identical, which is what lets DP
+/// tables be shared across stage counts there.
+fn stage_ctxs(cluster: &Cluster, g: usize, count: usize, d: usize, stride: usize) -> Vec<StageCtx> {
+    let pool = &cluster.pool;
+    let mut out = Vec::with_capacity(count + 1);
+    out.push(StageCtx {
+        mask: pool.full_mask(),
+        cap: pool.min_capacity_all(),
+    });
+    for s in 1..=count {
+        let mask = pool.replicated_mask((s - 1) * g, s * g, d, stride);
+        out.push(StageCtx {
+            mask,
+            cap: pool.min_capacity(mask),
+        });
+    }
+    out
+}
+
 /// One DP table for a fixed (sg, recompute, zero-cap).
 struct DpTable {
     n: usize,
@@ -220,6 +273,12 @@ impl DpTable {
 /// cost provably exceeds it are stored as infeasible. Pruning is strict —
 /// states with cost equal to the bound survive — so the optimal plan's
 /// backpointer chain is never cut (module docs).
+///
+/// `ctxs[s]` carries the accelerator-class coverage and memory capacity
+/// of the device block the state with `s` stages remaining occupies
+/// (see [`stage_ctxs`]); compute prices lockstep on the slowest covered
+/// class and memory checks against the smallest covered HBM.
+#[allow(clippy::too_many_arguments)]
 fn run_dp(
     cm: &CostModel,
     cluster: &Cluster,
@@ -228,10 +287,10 @@ fn run_dp(
     s_max: usize,
     states: &mut u64,
     bound: f64,
+    ctxs: &[StageCtx],
 ) -> DpTable {
     let n = cm.n_layers();
     let g = cm.group;
-    let cap = cluster.accel.hbm_capacity;
     let mut t = DpTable {
         n,
         g,
@@ -241,6 +300,7 @@ fn run_dp(
     };
 
     for s in 1..=s_max {
+        let StageCtx { mask, cap } = ctxs[s];
         let l_recv = boundary_level(cluster, s * g);
         let l_send = if s > 1 {
             Some(boundary_level(cluster, (s - 1) * g))
@@ -255,12 +315,13 @@ fn run_dp(
                 // strictly exceeds the compute lower bound here (the
                 // producer edge pays latency), so `lb >= bound` implies
                 // the state is strictly worse than the incumbent.
-                if cm.stage_load_lb(i, n) >= bound {
+                if cm.stage_load_lb_on(mask, i, n) >= bound {
                     continue;
                 }
                 if let Some(spec) = cm.stage_choose_spec(i, n, stash, cap, zero_cap, recompute)
                 {
-                    let load = cm.stage_load(i, n, Some(l_recv), None, &spec, cluster);
+                    let load =
+                        cm.stage_load_on(mask, i, n, Some(l_recv), None, &spec, cluster);
                     *states += 1;
                     if load <= bound {
                         let ix = t.idx(i, 1);
@@ -280,7 +341,7 @@ fn run_dp(
                 // in j — exact pruning once it exceeds the incumbent or
                 // the local best (stage_load > lb strictly, so no
                 // bound-tying candidate is ever lost to this break).
-                let lb = cm.stage_load_lb(i, j);
+                let lb = cm.stage_load_lb_on(mask, i, j);
                 if lb >= best.min(bound) {
                     break;
                 }
@@ -297,7 +358,7 @@ fn run_dp(
                     // Memory grows with j: no larger stage fits either.
                     break;
                 };
-                let load = cm.stage_load(i, j, Some(l_recv), l_send, &spec, cluster);
+                let load = cm.stage_load_on(mask, i, j, Some(l_recv), l_send, &spec, cluster);
                 *states += 1;
                 let cand = load.max(rest);
                 if cand < best {
@@ -323,6 +384,7 @@ fn run_dp(
 /// `bound` is the bottleneck-level incumbent bound for this `p`; the cut
 /// scan stops once the compute lower bound crosses it (strictly safe for
 /// the same reason as in [`run_dp`]).
+#[allow(clippy::too_many_arguments)]
 fn eval_final(
     cm: &CostModel,
     cluster: &Cluster,
@@ -331,13 +393,14 @@ fn eval_final(
     recompute: bool,
     zero_cap: usize,
     bound: f64,
+    first: StageCtx,
 ) -> Option<(f64, usize, MemSpec)> {
     let n = cm.n_layers();
-    let cap = cluster.accel.hbm_capacity;
+    let StageCtx { mask, cap } = first;
     let stash = p - 1;
     if p == 1 {
         let spec = cm.stage_choose_spec(0, n, 0, cap, zero_cap, recompute)?;
-        let load = cm.stage_load(0, n, None, None, &spec, cluster);
+        let load = cm.stage_load_on(mask, 0, n, None, None, &spec, cluster);
         if load > bound {
             return None;
         }
@@ -346,7 +409,7 @@ fn eval_final(
     let l_send = boundary_level(cluster, (p - 1) * dp.g);
     let mut best: Option<(f64, usize, MemSpec)> = None;
     for j in 1..=(n - (p - 1)) {
-        let lb = cm.stage_load_lb(0, j);
+        let lb = cm.stage_load_lb_on(mask, 0, j);
         let mut cutoff = bound;
         if let Some((b, _, _)) = best {
             cutoff = cutoff.min(b);
@@ -357,7 +420,7 @@ fn eval_final(
         let Some(spec) = cm.stage_choose_spec(0, j, stash, cap, zero_cap, recompute) else {
             break;
         };
-        let load = cm.stage_load(0, j, None, Some(l_send), &spec, cluster);
+        let load = cm.stage_load_on(mask, 0, j, None, Some(l_send), &spec, cluster);
         let rest = dp.cost_at(j, p - 1);
         let cand = load.max(rest);
         if cand.is_finite() && best.map(|(b, _, _)| cand < b).unwrap_or(true) {
@@ -367,7 +430,10 @@ fn eval_final(
     best
 }
 
-/// Reconstruct the stage list for total stage count `p`.
+/// Reconstruct the stage list for total stage count `p`. `ctxs[s]` must
+/// cover states `s ∈ 1..=p` (the same contexts the table was built
+/// with), so the recorded loads and device classes match what the DP
+/// scored.
 fn reconstruct(
     cm: &CostModel,
     cluster: &Cluster,
@@ -375,11 +441,13 @@ fn reconstruct(
     p: usize,
     first_cut: usize,
     first_spec: MemSpec,
+    ctxs: &[StageCtx],
 ) -> Vec<StagePlan> {
     let g = dp.g;
     let mut stages = Vec::with_capacity(p);
     let mut push_stage = |i: usize, j: usize, spec: MemSpec, k: usize| {
         let blocks_from_end = p - 1 - k;
+        let ctx = ctxs[p - k];
         let send_level = if k + 1 < p {
             Some(boundary_level(cluster, (p - 1 - k) * g))
         } else {
@@ -390,7 +458,7 @@ fn reconstruct(
         } else {
             None
         };
-        let load = cm.stage_load(i, j, recv_level, send_level, &spec, cluster);
+        let load = cm.stage_load_on(ctx.mask, i, j, recv_level, send_level, &spec, cluster);
         stages.push(StagePlan {
             layers: (i, j),
             devices: stage_devices(blocks_from_end, g),
@@ -398,6 +466,7 @@ fn reconstruct(
             mem: spec,
             send_level,
             load,
+            accel_class: cluster.pool.class_names(ctx.mask),
         });
     };
 
@@ -430,15 +499,20 @@ struct Candidate {
     batch_time: f64,
     sg_idx: usize,
     p: usize,
+    /// Data-parallel width. Forced to `⌊K/(p·g)⌋` on homogeneous pools;
+    /// enumerated on heterogeneous ones (a narrower replication can
+    /// keep a stage off the slow island).
+    d: usize,
     rc: bool,
     plan: PlacementPlan,
 }
 
 /// Strict total order on candidates: batch time, then SUB-GRAPH config
-/// index, then the stash-everything branch, then stage count — the
-/// pre-parallel serial enumeration order (sg outer, recompute middle,
-/// p inner, first strict improvement kept), so results are identical
-/// for every thread count.
+/// index, then the stash-everything branch, then stage count, then the
+/// wider data-parallel width — the pre-parallel serial enumeration
+/// order (sg outer, recompute middle, p inner, first strict improvement
+/// kept), so results are identical for every thread count. On
+/// homogeneous pools `d` is a function of `p` and the last key is inert.
 fn candidate_before(a: &Candidate, b: &Candidate) -> bool {
     if a.batch_time != b.batch_time {
         return a.batch_time < b.batch_time;
@@ -449,7 +523,10 @@ fn candidate_before(a: &Candidate, b: &Candidate) -> bool {
     if a.rc != b.rc {
         return !a.rc;
     }
-    a.p < b.p
+    if a.p != b.p {
+        return a.p < b.p;
+    }
+    a.d > b.d
 }
 
 /// Insert `cand` into a list kept sorted by [`candidate_before`],
@@ -502,88 +579,137 @@ fn eval_config(
     let cm = CostModel::new(graph, cluster, sg);
     let s_max = s_cap.min(k_total / g).min(n);
     let global_batch = graph.global_batch;
+    let hetero = !cluster.pool.is_homogeneous();
 
     // Compute-only bounds for config-level pruning: any p-stage pipeline's
     // bottleneck is at least the balanced share of the total compute and
-    // at least the heaviest single layer.
-    let total_lb = cm.stage_load_lb(0, n);
+    // at least the heaviest single layer — on the pool's *fastest* class,
+    // so the bound holds wherever the stages land.
+    let total_lb = cm.stage_load_lb_best(0, n);
     let max_layer_lb = (0..n)
-        .map(|k| cm.stage_load_lb(k, k + 1))
+        .map(|k| cm.stage_load_lb_best(k, k + 1))
         .fold(0.0, f64::max);
 
-    // DP tables cached per ZeRO-degree cap (the cap depends on the
-    // data-parallel width, which varies with the stage count).
+    // Homogeneous pools: every stage block has the same (single-class)
+    // context, so DP tables are cached per ZeRO-degree cap (the cap
+    // depends on the data-parallel width, which varies with the stage
+    // count). Heterogeneous pools rebuild per (p, d) below — a block's
+    // replica coverage depends on the stride p·g and width d.
+    let uniform_ctxs = stage_ctxs(cluster, g, s_max, 1, 0);
     let mut tables: HashMap<usize, DpTable> = HashMap::new();
     for p in 1..=s_max {
-        out.configs += 1;
-        let d = k_total / (g * p);
-        if d == 0 {
+        let d_max = k_total / (g * p);
+        if d_max == 0 {
             break;
         }
-        let m = global_batch.div_ceil(d * graph.mbs);
-        let mult = m as f64 + p as f64 - 1.0;
-        // Config-level prune (strict): even a perfectly balanced,
-        // communication-free pipeline cannot enter the top-K here.
-        if (total_lb / p as f64).max(max_layer_lb) * mult > incumbent.bound() {
-            continue;
+        // Homogeneous pools replicate as widely as possible (the paper's
+        // d = ⌊K/(p·g)⌋). On a mixed pool the forced width can drag every
+        // replica group across the slow island, so the data-parallel
+        // width is enumerated: d_max plus every power of two below it
+        // (descending — full utilization first).
+        let mut d_options: Vec<usize> = vec![d_max];
+        if hetero {
+            let mut dd = pow2_floor(d_max);
+            while dd >= 1 {
+                if dd != d_max {
+                    d_options.push(dd);
+                }
+                dd /= 2;
+            }
         }
-        let zero_cap = pow2_floor(d).min(opts.zero_max_degree);
-        let dp = tables.entry(zero_cap).or_insert_with(|| {
-            // The table is shared by all stage counts p' ≥ p mapping to
-            // this zero cap; their multipliers only grow, so this p's
-            // bound is the loosest — safe for every later reader.
-            let table_bound = incumbent.bound() / mult;
-            run_dp(
-                &cm,
-                cluster,
-                rc,
-                zero_cap,
-                s_max,
-                &mut out.dp_states,
-                table_bound,
-            )
-        });
-        let bound = incumbent.bound() / mult;
-        let Some((bottleneck, first_cut, first_spec)) =
-            eval_final(&cm, cluster, dp, p, rc, zero_cap, bound)
-        else {
-            continue;
-        };
-        if !bottleneck.is_finite() {
-            continue;
-        }
-        // Gradient sync (Algorithm 1 line 25): priced on the
-        // reconstructed stages' parameter volumes.
-        let stages = reconstruct(&cm, cluster, dp, p, first_cut, first_spec);
-        let stride = p * g;
-        let sync = stages
-            .iter()
-            .map(|st| {
-                cluster.dp_allreduce(cm.stage_grad_bytes(st.layers.0, st.layers.1), d, stride)
-            })
-            .fold(0.0, f64::max);
-        let batch_time = bottleneck * mult + sync;
-        incumbent.offer(batch_time);
-        let cand = Candidate {
-            batch_time,
-            sg_idx,
-            p,
-            rc,
-            plan: PlacementPlan {
-                model_name: graph.model_name.clone(),
-                method: "nest".into(),
-                sg,
-                stages,
-                dp_width: d,
-                mbs: graph.mbs,
-                n_microbatches: m,
-                devices_per_replica: stride,
-                bottleneck,
-                sync_time: sync,
+        for d in d_options {
+            out.configs += 1;
+            let m = global_batch.div_ceil(d * graph.mbs);
+            let mult = m as f64 + p as f64 - 1.0;
+            // Config-level prune (strict): even a perfectly balanced,
+            // communication-free pipeline on the fastest class cannot
+            // enter the top-K here.
+            if (total_lb / p as f64).max(max_layer_lb) * mult > incumbent.bound() {
+                continue;
+            }
+            let zero_cap = pow2_floor(d).min(opts.zero_max_degree);
+            let bound = incumbent.bound() / mult;
+            let stride = p * g;
+            let hetero_state; // per-(p, d) contexts + table (mixed pools)
+            let (dp, ctxs): (&DpTable, &[StageCtx]) = if hetero {
+                let ctxs = stage_ctxs(cluster, g, p, d, stride);
+                let table = run_dp(
+                    &cm,
+                    cluster,
+                    rc,
+                    zero_cap,
+                    p - 1,
+                    &mut out.dp_states,
+                    bound,
+                    &ctxs,
+                );
+                hetero_state = (table, ctxs);
+                (&hetero_state.0, hetero_state.1.as_slice())
+            } else {
+                let dp = tables.entry(zero_cap).or_insert_with(|| {
+                    // The table is shared by all stage counts p' ≥ p
+                    // mapping to this zero cap; their multipliers only
+                    // grow, so this p's bound is the loosest — safe for
+                    // every later reader.
+                    run_dp(
+                        &cm,
+                        cluster,
+                        rc,
+                        zero_cap,
+                        s_max,
+                        &mut out.dp_states,
+                        bound,
+                        &uniform_ctxs,
+                    )
+                });
+                (&*dp, &uniform_ctxs[..])
+            };
+            let first_ctx = ctxs[p];
+            let Some((bottleneck, first_cut, first_spec)) =
+                eval_final(&cm, cluster, dp, p, rc, zero_cap, bound, first_ctx)
+            else {
+                continue;
+            };
+            if !bottleneck.is_finite() {
+                continue;
+            }
+            // Gradient sync (Algorithm 1 line 25): priced on the
+            // reconstructed stages' parameter volumes.
+            let stages = reconstruct(&cm, cluster, dp, p, first_cut, first_spec, ctxs);
+            let sync = stages
+                .iter()
+                .map(|st| {
+                    cluster.dp_allreduce(
+                        cm.stage_grad_bytes(st.layers.0, st.layers.1),
+                        d,
+                        stride,
+                    )
+                })
+                .fold(0.0, f64::max);
+            let batch_time = bottleneck * mult + sync;
+            incumbent.offer(batch_time);
+            let cand = Candidate {
                 batch_time,
-            },
-        };
-        kbest_insert(&mut out.kbest, cand, k);
+                sg_idx,
+                p,
+                d,
+                rc,
+                plan: PlacementPlan {
+                    model_name: graph.model_name.clone(),
+                    method: "nest".into(),
+                    sg,
+                    stages,
+                    dp_width: d,
+                    mbs: graph.mbs,
+                    n_microbatches: m,
+                    devices_per_replica: stride,
+                    bottleneck,
+                    sync_time: sync,
+                    batch_time,
+                },
+            };
+            kbest_insert(&mut out.kbest, cand, k);
+        }
     }
     out
 }
@@ -887,6 +1013,68 @@ mod tests {
                 ),
             }
         });
+    }
+
+    #[test]
+    fn hetero_pool_strictly_beats_v100_constrained_twin() {
+        // A mixed H100+V100 pool must solve, validate, and strictly
+        // beat the same fabric with every device forced to V100: the
+        // search space weakly dominates (lockstep pricing of any plan
+        // is ≤ its all-V100 price), and the H100 island buys a strict
+        // win via narrower replication / migrated stages.
+        let g = models::tiny_transformer(6, 256, 128, 1);
+        let mixed = Cluster::hetero_pool(32);
+        let v100 = mixed.with_uniform_accel(crate::hw::Accelerator::v100());
+        let a = solve(&g, &mixed, &SolverOpts::default()).expect("mixed feasible");
+        a.plan.validate(&g, &mixed).unwrap();
+        let b = solve(&g, &v100, &SolverOpts::default()).expect("twin feasible");
+        assert!(
+            a.plan.batch_time < b.plan.batch_time,
+            "mixed {} not strictly faster than all-V100 {}",
+            a.plan.batch_time,
+            b.plan.batch_time
+        );
+        // Every stage records the classes it covers.
+        for st in &a.plan.stages {
+            assert!(!st.accel_class.is_empty());
+            assert!(
+                ["h100", "v100", "h100+v100"].contains(&st.accel_class.as_str()),
+                "unexpected class record '{}'",
+                st.accel_class
+            );
+        }
+    }
+
+    #[test]
+    fn hetero_thread_count_invariant() {
+        // The per-(p, d) table rebuilds and the d enumeration must not
+        // disturb the determinism guarantee.
+        let g = models::tiny_transformer(6, 256, 128, 1);
+        let c = Cluster::hetero_pool(32);
+        let a = solve_with_threads(&g, &c, 1).expect("serial");
+        let b = solve_with_threads(&g, &c, 4).expect("threaded");
+        assert_eq!(a.plan, b.plan, "hetero plans diverge across threads");
+        for k in [2usize, 4] {
+            let s = solve_topk(
+                &g,
+                &c,
+                &SolverOpts {
+                    threads: 1,
+                    ..Default::default()
+                },
+                k,
+            );
+            let t = solve_topk(
+                &g,
+                &c,
+                &SolverOpts {
+                    threads: 4,
+                    ..Default::default()
+                },
+                k,
+            );
+            assert_eq!(s.plans, t.plans, "hetero k={k} shortlists diverge");
+        }
     }
 
     #[test]

@@ -27,6 +27,11 @@ pub struct StagePlan {
     pub send_level: Option<usize>,
     /// Modeled per-microbatch latency (compute + collectives + p2p).
     pub load: f64,
+    /// Accelerator classes the stage's devices (all replicas) cover,
+    /// "+"-joined (e.g. `"h100"` or `"h100+v100"`): the device-class
+    /// record of the heterogeneous-pool solver. Lockstep semantics mean
+    /// a multi-class stage runs at its slowest listed class.
+    pub accel_class: String,
 }
 
 /// A complete placement plan: SUB-GRAPH config, pipeline stages, and
@@ -121,6 +126,9 @@ impl PlacementPlan {
             ));
         }
         // Device disjointness across stages and replicas.
+        if self.dp_width == 0 {
+            return Err("zero data-parallel width".into());
+        }
         let mut seen = std::collections::HashSet::new();
         let stride = self.devices_per_replica;
         for r in 0..self.dp_width {
@@ -157,11 +165,19 @@ impl PlacementPlan {
             let cm = &cms[pos].1;
             let stash = s_total - 1 - k; // position from pipeline end
             let peak = cm.stage_peak_bytes(st.layers.0, st.layers.1, &st.mem, stash);
-            if peak > cluster.accel.hbm_capacity * (1.0 + 1e-9) {
+            // Memory-feasible on *every* device the stage uses, replicas
+            // included: heterogeneous pools bound each stage by its
+            // smallest covered HBM.
+            let mask =
+                super::assign::stage_class_mask(cluster, &st.devices, self.dp_width, stride);
+            let capacity = cluster.pool.min_capacity(mask);
+            if peak > capacity * (1.0 + 1e-9) {
                 return Err(format!(
-                    "stage {k} peak {} exceeds capacity {}",
+                    "stage {k} peak {} exceeds capacity {} of its weakest device \
+                     (classes {})",
                     crate::util::table::fmt_bytes(peak),
-                    crate::util::table::fmt_bytes(cluster.accel.hbm_capacity)
+                    crate::util::table::fmt_bytes(capacity),
+                    cluster.pool.class_names(mask)
                 ));
             }
             if st.mem.zero.degree() > self.dp_width {
@@ -203,6 +219,7 @@ impl PlacementPlan {
                 ("zero", Json::str(st.mem.zero.describe())),
                 ("zero_degree", Json::num(st.mem.zero.degree() as f64)),
                 ("recompute", Json::Bool(st.mem.recompute)),
+                ("accel_class", Json::str(st.accel_class.clone())),
                 (
                     "send_level",
                     st.send_level
@@ -243,13 +260,14 @@ impl PlacementPlan {
         );
         for (k, st) in self.stages.iter().enumerate() {
             out.push_str(&format!(
-                "  stage {k:3}: layers [{:3}, {:3}) load={} mem={}{} dev[0]={}\n",
+                "  stage {k:3}: layers [{:3}, {:3}) load={} mem={}{} dev[0]={} [{}]\n",
                 st.layers.0,
                 st.layers.1,
                 crate::util::table::fmt_time(st.load),
                 st.mem.zero.describe(),
                 if st.mem.recompute { "+AR" } else { "" },
                 st.devices.first().copied().unwrap_or(0),
+                st.accel_class,
             ));
         }
         out.push_str(&format!(
@@ -283,6 +301,7 @@ mod tests {
                     mem: MemSpec::plain(),
                     send_level: Some(0),
                     load: 1.0,
+                    accel_class: "v100".into(),
                 },
                 StagePlan {
                     layers: (4, 8),
@@ -291,6 +310,7 @@ mod tests {
                     mem: MemSpec::plain(),
                     send_level: None,
                     load: 1.0,
+                    accel_class: "v100".into(),
                 },
             ],
             dp_width: 2,

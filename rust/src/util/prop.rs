@@ -41,6 +41,81 @@ pub fn random_pow2(rng: &mut Rng, lo: usize, hi: usize) -> usize {
     1usize << exp
 }
 
+/// Draw a random hierarchical cluster for the scenario suite: 1–3 tiers
+/// with power-of-two arities (8-wide max innermost, 4-wide outer),
+/// bandwidth shrinking and latency growing outward, occasional outer
+/// oversubscription — and, half the time, a *heterogeneous* two-run
+/// device pool (two distinct accelerator classes split at a random
+/// power-of-two boundary), exercising the mixed-pool solver paths.
+pub fn random_cluster(rng: &mut Rng) -> crate::network::Cluster {
+    use crate::hw::{Accelerator, DevicePool, DeviceRun, GB};
+    use crate::network::{Cluster, Tier};
+    let n_tiers = 1 + rng.gen_range(3);
+    let mut tiers = Vec::new();
+    let mut bw = (100.0 + 800.0 * rng.gen_f64()) * GB;
+    let mut lat = 1e-6;
+    for t in 0..n_tiers {
+        let arity = if t == 0 {
+            random_pow2(rng, 2, 8)
+        } else {
+            random_pow2(rng, 2, 4)
+        };
+        let outermost = t + 1 == n_tiers;
+        tiers.push(Tier {
+            name: format!("t{t}"),
+            arity,
+            link_bw: bw,
+            latency: lat,
+            oversub: if outermost && t > 0 && rng.gen_bool(0.5) {
+                2.0
+            } else {
+                1.0
+            },
+        });
+        bw /= 2.0 + 6.0 * rng.gen_f64();
+        lat *= 2.0;
+    }
+    let n: usize = tiers.iter().map(|t| t.arity).product();
+    let accels = [Accelerator::v100(), Accelerator::tpu_v4(), Accelerator::h100()];
+    let pool = if n >= 4 && rng.gen_bool(0.5) {
+        let a = rng.gen_range(3);
+        let mut b = rng.gen_range(3);
+        if b == a {
+            b = (b + 1) % 3;
+        }
+        let split = random_pow2(rng, 1, n / 2).min(n - 1);
+        DevicePool::from_runs(vec![
+            DeviceRun {
+                accel: accels[a].clone(),
+                count: split,
+                access_bw: None,
+            },
+            DeviceRun {
+                accel: accels[b].clone(),
+                count: n - split,
+                access_bw: None,
+            },
+        ])
+    } else {
+        DevicePool::uniform(accels[rng.gen_range(3)].clone(), n)
+    };
+    Cluster {
+        name: format!("rand-{n_tiers}t-{n}d"),
+        pool,
+        tiers,
+    }
+}
+
+/// Draw a random tiny transformer for the scenario suite: 2–6 blocks
+/// (plus embedding/head), small hidden/seq so a solve stays in the
+/// microsecond-to-millisecond range.
+pub fn random_tiny_graph(rng: &mut Rng) -> crate::graph::LayerGraph {
+    let n_blocks = 2 + rng.gen_range(5);
+    let hidden = 128 * (1 + rng.gen_range(3));
+    let seq = 64 * (1 + rng.gen_range(2));
+    crate::graph::models::tiny_transformer(n_blocks, hidden, seq, 1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -60,6 +135,34 @@ mod tests {
             let v = random_pow2(rng, 1, 64);
             assert!(v.is_power_of_two());
             assert!((1..=64).contains(&v));
+        });
+    }
+
+    #[test]
+    fn random_clusters_well_formed() {
+        forall(60, 4, |rng| {
+            let c = random_cluster(rng);
+            let n = c.n_devices();
+            assert!(n >= 2, "{}", c.name);
+            assert_eq!(c.pool.n_devices(), n);
+            assert!((1..=3).contains(&c.n_levels()));
+            assert!(c.pool.n_classes() <= 2);
+            for t in &c.tiers {
+                assert!(t.arity.is_power_of_two());
+                assert!(t.link_bw > 0.0 && t.latency > 0.0);
+            }
+            // Level-wise queries hold together on the random stack.
+            assert!(c.bw_eff(c.n_levels() - 1) <= c.bw_eff(0));
+            assert!(c.p2p_time(c.n_levels() - 1, 1e6).is_finite());
+        });
+    }
+
+    #[test]
+    fn random_graphs_well_formed() {
+        forall(20, 5, |rng| {
+            let g = random_tiny_graph(rng);
+            assert!(g.n_layers() >= 4); // 2 blocks + emb + head
+            assert!(g.tokens > 0.0);
         });
     }
 

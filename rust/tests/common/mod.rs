@@ -1,0 +1,85 @@
+//! Shared helpers for the integration-level suites (`integration.rs`,
+//! `property.rs`, `golden.rs`): config loading, default solver options,
+//! and plan-equality assertions — deduplicated so every suite pins the
+//! *shipped* artifacts the same way.
+//!
+//! Compiled once per test target via `mod common;`; not every target
+//! uses every helper.
+#![allow(dead_code)]
+
+use nest::netsim::LinkGraph;
+use nest::network::Cluster;
+use nest::solver::plan::PlacementPlan;
+use nest::solver::SolverOpts;
+
+/// Absolute path of a repo-relative file (configs live at the root).
+pub fn repo_path(file: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(file)
+}
+
+/// Load a shipped tier-stack topology config (`configs/*.json`).
+pub fn load_cluster(file: &str) -> Cluster {
+    let text = std::fs::read_to_string(repo_path(file))
+        .unwrap_or_else(|e| panic!("{file}: {e}"));
+    Cluster::from_json(&nest::util::json::parse(&text).unwrap())
+        .unwrap_or_else(|e| panic!("{file}: {e}"))
+}
+
+/// Load a shipped edge-list topology (`configs/edgelist_*.json`) as the
+/// explicit link graph plus the optimistic flat analytic cluster the
+/// solver searches on — the `nest netsim --config` construction.
+pub fn load_edgelist(file: &str) -> (Cluster, LinkGraph) {
+    let text = std::fs::read_to_string(repo_path(file))
+        .unwrap_or_else(|e| panic!("{file}: {e}"));
+    let topo = LinkGraph::from_json(&nest::util::json::parse(&text).unwrap())
+        .unwrap_or_else(|e| panic!("{file}: {e}"));
+    let cluster = topo.approx_cluster(nest::hw::Accelerator::h100());
+    (cluster, topo)
+}
+
+/// Default solver options at an explicit worker-thread count.
+pub fn threaded(threads: usize) -> SolverOpts {
+    SolverOpts {
+        threads,
+        ..Default::default()
+    }
+}
+
+/// Assert two plans are field-for-field identical, with modeled times
+/// compared bit-for-bit — the determinism contract (`PartialEq` alone
+/// would accept `-0.0 == 0.0`).
+pub fn assert_plans_identical(a: &PlacementPlan, b: &PlacementPlan, what: &str) {
+    assert_eq!(a, b, "{what}: plans differ field-for-field");
+    assert_eq!(
+        a.batch_time.to_bits(),
+        b.batch_time.to_bits(),
+        "{what}: batch times not bit-identical"
+    );
+    assert_eq!(
+        a.bottleneck.to_bits(),
+        b.bottleneck.to_bits(),
+        "{what}: bottlenecks not bit-identical"
+    );
+    assert_eq!(
+        a.sync_time.to_bits(),
+        b.sync_time.to_bits(),
+        "{what}: sync times not bit-identical"
+    );
+}
+
+/// Base seed for a property suite: the pinned default, unless
+/// `NEST_PROP_SEED` overrides it (the nightly CI job passes a
+/// date-derived value; replays pass the seed printed on failure).
+pub fn prop_seed(pinned: u64) -> u64 {
+    match std::env::var("NEST_PROP_SEED") {
+        Ok(s) => {
+            let seed: u64 = s
+                .trim()
+                .parse()
+                .unwrap_or_else(|_| panic!("NEST_PROP_SEED must be a u64, got '{s}'"));
+            eprintln!("property suite seeded from NEST_PROP_SEED={seed}");
+            seed
+        }
+        Err(_) => pinned,
+    }
+}

@@ -1,0 +1,63 @@
+//! Golden-file snapshot tests: the rendered `nest refine` shortlist
+//! table and the harness netsim cross-validation row on the shipped
+//! dumbbell edge-list, pinned against checked-in expected output so
+//! silent report-field drift (a renamed column, a re-scaled delta, a
+//! changed plan) fails loudly.
+//!
+//! Refresh after an intentional change with:
+//!
+//! ```text
+//! NEST_BLESS=1 cargo test --release --test golden && git add rust/tests/golden/
+//! ```
+//!
+//! A missing golden file is written on first run (bootstrap bless) and
+//! the test passes — commit the generated file to arm the guard.
+
+mod common;
+
+use common::{load_edgelist, repo_path, threaded};
+use nest::graph::models;
+use nest::solver::refine::refine;
+
+/// Compare `actual` against the checked-in snapshot, or (re)write it
+/// when blessing / bootstrapping.
+fn golden_check(name: &str, actual: &str) {
+    let path = repo_path(&format!("rust/tests/golden/{name}"));
+    let bless = std::env::var("NEST_BLESS").is_ok();
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, actual).unwrap();
+        eprintln!(
+            "{} golden file {} — commit it to arm the snapshot guard",
+            if bless { "blessed" } else { "bootstrapped" },
+            path.display()
+        );
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        expected, actual,
+        "golden snapshot '{name}' drifted — if the change is intentional, refresh \
+         with: NEST_BLESS=1 cargo test --release --test golden"
+    );
+}
+
+/// `nest refine --config configs/edgelist_dumbbell.json --topk 4`'s
+/// rendered shortlist table (serial solver: the report is
+/// thread-invariant, this just removes the variable).
+#[test]
+fn golden_refine_table_on_shipped_dumbbell() {
+    let (cluster, topo) = load_edgelist("configs/edgelist_dumbbell.json");
+    let graph = models::by_name("llama2-7b", 1).unwrap();
+    let rep = refine(&graph, &cluster, &topo, &threaded(1), 4).expect("feasible");
+    golden_check("refine_dumbbell.txt", &rep.render_table());
+}
+
+/// The harness netsim cross-validation row for the dumbbell family.
+#[test]
+fn golden_netsim_xval_dumbbell_row() {
+    golden_check(
+        "netsim_xval_dumbbell.txt",
+        &nest::harness::netsim::dumbbell_xval_snapshot(),
+    );
+}

@@ -2,6 +2,9 @@
 //! memory model over real model/cluster combinations, plus end-to-end
 //! properties the paper's evaluation depends on.
 
+mod common;
+
+use common::{assert_plans_identical, load_cluster, load_edgelist, threaded};
 use nest::baselines::{self, build_plan, even_cuts};
 use nest::graph::models;
 use nest::graph::subgraph::SgConfig;
@@ -13,12 +16,6 @@ use nest::sim::{simulate, Schedule};
 use nest::solver::refine::refine;
 use nest::solver::{exact, solve, solve_topk, SolverOpts};
 use nest::util::prop;
-
-fn load_cluster(file: &str) -> Cluster {
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
-    let text = std::fs::read_to_string(&path).unwrap();
-    Cluster::from_json(&nest::util::json::parse(&text).unwrap()).unwrap()
-}
 
 /// Every (Table-2 model × paper cluster) cell yields a valid NEST plan.
 #[test]
@@ -125,7 +122,7 @@ fn nest_dominates_baselines_grid() {
 fn zero_unlocks_constrained_placements() {
     let graph = models::llama3_70b(1);
     let mut cluster = Cluster::fat_tree_tpuv4(512);
-    cluster.accel = cluster.accel.with_capacity(16.0 * nest::hw::GIB);
+    cluster.shrink_capacity(16.0 * nest::hw::GIB);
     let without = solve(
         &graph,
         &cluster,
@@ -262,7 +259,7 @@ fn prop_zero_degree_bounded_by_dp() {
         let graph = models::by_name(model, 1).unwrap();
         let mut cluster = Cluster::fat_tree_tpuv4(n);
         if rng.gen_bool(0.5) {
-            cluster.accel = cluster.accel.with_capacity(24.0 * nest::hw::GIB);
+            cluster.shrink_capacity(24.0 * nest::hw::GIB);
         }
         if let Some(sol) = solve(&graph, &cluster, &SolverOpts::default()) {
             for st in &sol.plan.stages {
@@ -280,11 +277,9 @@ fn shipped_configs_solve() {
     for (file, expect_devices) in [
         ("configs/dgx_superpod.json", 256usize),
         ("configs/oversubscribed_4to1.json", 128),
+        ("configs/hetero_v100_h100.json", 64),
     ] {
-        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
-        let text = std::fs::read_to_string(&path).unwrap();
-        let cluster =
-            Cluster::from_json(&nest::util::json::parse(&text).unwrap()).unwrap();
+        let cluster = load_cluster(file);
         assert_eq!(cluster.n_devices(), expect_devices, "{file}");
         let graph = models::llama2_7b(1);
         let sol = solve(&graph, &cluster, &SolverOpts::default()).unwrap();
@@ -378,12 +373,8 @@ fn shipped_edge_lists_run_netsim() {
         ("configs/edgelist_dumbbell.json", 8usize),
         ("configs/edgelist_spineleaf_4to1.json", 16),
     ] {
-        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
-        let text = std::fs::read_to_string(&path).unwrap();
-        let topo = LinkGraph::from_json(&nest::util::json::parse(&text).unwrap())
-            .unwrap_or_else(|e| panic!("{file}: {e}"));
+        let (cluster, topo) = load_edgelist(file);
         assert_eq!(topo.n_devices(), expect_devices, "{file}");
-        let cluster = topo.approx_cluster(nest::hw::Accelerator::h100());
         let graph = models::bert_large(1);
         let sol = solve(&graph, &cluster, &SolverOpts::default())
             .unwrap_or_else(|| panic!("{file}: infeasible"));
@@ -444,10 +435,10 @@ fn solver_thread_count_invariant() {
             },
         );
         match (serial, threaded) {
-            (Some(a), Some(b)) => assert_eq!(
-                a.plan, b.plan,
-                "{} on {}: plan depends on thread count",
-                graph.model_name, cluster.name
+            (Some(a), Some(b)) => assert_plans_identical(
+                &a.plan,
+                &b.plan,
+                &format!("{} on {}", graph.model_name, cluster.name),
             ),
             (None, None) => {}
             (a, b) => panic!(
@@ -461,24 +452,10 @@ fn solver_thread_count_invariant() {
     }
 }
 
-fn threaded(threads: usize) -> SolverOpts {
-    SolverOpts {
-        threads,
-        ..Default::default()
-    }
-}
-
-/// Load an edge-list from the `configs/` file itself — not the embedded
-/// copy `harness::netsim::dumbbell_topology` uses — so the shipped
-/// artifact is what these tests pin.
-fn load_edgelist(file: &str) -> (Cluster, LinkGraph) {
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
-    let text = std::fs::read_to_string(&path).unwrap();
-    let topo = LinkGraph::from_json(&nest::util::json::parse(&text).unwrap())
-        .unwrap_or_else(|e| panic!("{file}: {e}"));
-    let cluster = topo.approx_cluster(nest::hw::Accelerator::h100());
-    (cluster, topo)
-}
+// `threaded` / `load_edgelist` / `load_cluster` live in `common` — they
+// load the shipped `configs/` artifacts themselves (not the embedded
+// copy `harness::netsim::dumbbell_topology` uses), so the shipped files
+// are what these tests pin.
 
 /// The CI smoke's invariant as a test: `refine` with `topk = 1` on the
 /// shipped dumbbell edge-list reproduces plain `solve` field-for-field
@@ -560,6 +537,67 @@ fn refine_rerank_consistent_on_shipped_dumbbell() {
             r.analytic_rank
         );
     }
+}
+
+/// The heterogeneous-pool acceptance invariant on the *shipped* config:
+/// the solver's plan on `configs/hetero_v100_h100.json` is strictly
+/// faster (analytic batch time) than the best plan constrained to treat
+/// every device as a V100, compute-heavy stages land on the H100 range
+/// (low device ids), and the plan is thread-count-invariant.
+#[test]
+fn hetero_config_strictly_faster_and_migrates_to_h100() {
+    let mixed = load_cluster("configs/hetero_v100_h100.json");
+    assert_eq!(mixed.pool.n_classes(), 2);
+    assert_eq!(mixed.pool.accel_of(0).name, "h100");
+    assert_eq!(mixed.pool.accel_of(63).name, "v100");
+    let v100 = mixed.with_uniform_accel(nest::hw::Accelerator::v100());
+    let graph = models::llama2_7b(1);
+
+    let sol = solve(&graph, &mixed, &threaded(0)).expect("mixed pool feasible");
+    sol.plan.validate(&graph, &mixed).unwrap();
+    let constrained = solve(&graph, &v100, &threaded(0)).expect("v100 twin feasible");
+    constrained.plan.validate(&graph, &v100).unwrap();
+    assert!(
+        sol.plan.batch_time < constrained.plan.batch_time,
+        "mixed pool {} not strictly faster than all-V100 {}",
+        sol.plan.batch_time,
+        constrained.plan.batch_time
+    );
+
+    // Compute-heavy stages migrate to the H100 island: layers hosted on
+    // pure-H100 stages must at least match the layers on any stage that
+    // touches a V100 (lockstep drags those to V100 speed, so the DP
+    // gives them less work — or avoids the slow island entirely).
+    let mut layers_h100_only = 0usize;
+    let mut layers_touching_v100 = 0usize;
+    let mut h100_stage_max = 0usize;
+    let mut v100_stage_max = 0usize;
+    for st in &sol.plan.stages {
+        let layers = st.layers.1 - st.layers.0;
+        if st.accel_class == "h100" {
+            layers_h100_only += layers;
+            h100_stage_max = h100_stage_max.max(layers);
+        } else {
+            layers_touching_v100 += layers;
+            v100_stage_max = v100_stage_max.max(layers);
+        }
+    }
+    assert!(
+        layers_h100_only >= layers_touching_v100,
+        "H100 range hosts {layers_h100_only} layers < V100-touching {layers_touching_v100}: {}",
+        sol.plan.describe()
+    );
+    if layers_touching_v100 > 0 {
+        assert!(
+            h100_stage_max >= v100_stage_max,
+            "heaviest stage sits on the slow island: {}",
+            sol.plan.describe()
+        );
+    }
+
+    // Determinism holds on the mixed pool too.
+    let again = solve(&graph, &mixed, &threaded(1)).expect("serial solve");
+    assert_plans_identical(&sol.plan, &again.plan, "hetero config across threads");
 }
 
 /// Plan JSON export round-trips through our own parser and carries the

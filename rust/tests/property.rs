@@ -1,0 +1,256 @@
+//! Property-based scenario suite: random clusters (homogeneous *and*
+//! heterogeneous, 1–3 tiers, power-of-two arities) × random layer
+//! graphs, plus fuzzed edge-list topologies for the flow simulator.
+//!
+//! For every random solve the suite asserts the cross-engine invariants
+//! the shipped configs only spot-check: the returned plan is
+//! memory-feasible on every device it uses, the batch time is finite
+//! and positive, and a 1-thread solve is field-for-field identical to a
+//! 4-thread solve. For every fuzzed topology: routing is deterministic
+//! across builds, every lowered flow completes in the fair-share
+//! engine, and delivered bytes equal injected bytes.
+//!
+//! Seeds: pinned in CI; override with `NEST_PROP_SEED=<u64>` (the
+//! nightly job passes a date-derived value; `util::prop::forall` prints
+//! the failing case's seed for replay).
+
+mod common;
+
+use common::{assert_plans_identical, prop_seed, threaded};
+use nest::cost::CostModel;
+use nest::netsim::{fairshare, FlowSpec, LinkGraph, TaskKind, Workload};
+use nest::sim::{simulate, Schedule};
+use nest::solver::{solve, solve_topk};
+use nest::util::prop::{self, random_cluster, random_tiny_graph};
+use nest::util::rng::Rng;
+
+/// Every stage of `plan` fits the HBM of *each* device it uses, replica
+/// by replica — checked directly against the per-device pool, not just
+/// through `validate`'s min-capacity shortcut.
+fn assert_memory_feasible_per_device(
+    graph: &nest::graph::LayerGraph,
+    cluster: &nest::network::Cluster,
+    plan: &nest::solver::plan::PlacementPlan,
+) {
+    let s_total = plan.n_stages();
+    for (k, st) in plan.stages.iter().enumerate() {
+        let cm = CostModel::new(graph, cluster, st.sg);
+        let stash = s_total - 1 - k;
+        let peak = cm.stage_peak_bytes(st.layers.0, st.layers.1, &st.mem, stash);
+        for r in 0..plan.dp_width {
+            for &dev in &st.devices {
+                let id = dev + r * plan.devices_per_replica;
+                let cap = cluster.pool.accel_of(id).hbm_capacity;
+                assert!(
+                    peak <= cap * (1.0 + 1e-9),
+                    "stage {k} peak {peak} exceeds device {id} ({}) capacity {cap}",
+                    cluster.pool.accel_of(id).name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_random_scenarios_valid_and_thread_invariant() {
+    let seed = prop_seed(0x5CE9A210);
+    prop::forall(24, seed, |rng| {
+        let c = random_cluster(rng);
+        let g = random_tiny_graph(rng);
+        let serial = solve(&g, &c, &threaded(1));
+        let parallel = solve(&g, &c, &threaded(4));
+        match (serial, parallel) {
+            (Some(a), Some(b)) => {
+                assert_plans_identical(&a.plan, &b.plan, &c.name);
+                a.plan
+                    .validate(&g, &c)
+                    .unwrap_or_else(|e| panic!("{}: {e}", c.name));
+                assert_memory_feasible_per_device(&g, &c, &a.plan);
+                assert!(
+                    a.plan.batch_time.is_finite() && a.plan.batch_time > 0.0,
+                    "{}: batch {}",
+                    c.name,
+                    a.plan.batch_time
+                );
+                // The shared DES evaluates the plan without panicking
+                // and agrees batch time is positive.
+                let rep = simulate(&g, &c, &a.plan, Schedule::OneFOneB);
+                assert!(rep.batch_time.is_finite() && rep.batch_time > 0.0);
+                for st in &a.plan.stages {
+                    assert!(!st.accel_class.is_empty(), "{}", c.name);
+                }
+            }
+            (None, None) => {}
+            (a, b) => panic!(
+                "{}: feasibility depends on thread count (serial={}, parallel={})",
+                c.name,
+                a.is_some(),
+                b.is_some()
+            ),
+        }
+    });
+}
+
+#[test]
+fn prop_random_scenarios_topk_deterministic() {
+    let seed = prop_seed(0x70D05EED);
+    prop::forall(12, seed, |rng| {
+        let c = random_cluster(rng);
+        let g = random_tiny_graph(rng);
+        let k = 1 + rng.gen_range(4);
+        let a = solve_topk(&g, &c, &threaded(1), k);
+        let b = solve_topk(&g, &c, &threaded(4), k);
+        assert_eq!(a.plans, b.plans, "{}: k={k} shortlists diverge", c.name);
+        for (x, y) in a.plans.iter().zip(&b.plans) {
+            assert_eq!(x.batch_time.to_bits(), y.batch_time.to_bits(), "{}", c.name);
+        }
+        let direct = solve(&g, &c, &threaded(0));
+        assert_eq!(
+            a.plans.first(),
+            direct.as_ref().map(|s| &s.plan),
+            "{}: topk rank-1 disagrees with solve()",
+            c.name
+        );
+        for p in &a.plans {
+            p.validate(&g, &c).unwrap_or_else(|e| panic!("{}: {e}", c.name));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Netsim fuzz: random connected edge-lists.
+// ---------------------------------------------------------------------
+
+/// Generate a random connected edge-list topology JSON: 4–32 nodes
+/// (devices + switches), a random spanning tree over *all* nodes plus
+/// extra chords, random bandwidths/latencies. Links are bidirectional
+/// (the parser's default), so tree connectivity implies full device
+/// reachability.
+fn random_edgelist_json(rng: &mut Rng) -> String {
+    let n_devices = 4 + rng.gen_range(21); // 4..=24
+    let n_switches = rng.gen_range(9).min(32 - n_devices); // 0..=8
+    let total = n_devices + n_switches;
+    let mut nodes: Vec<String> = Vec::new();
+    let mut decls: Vec<String> = Vec::new();
+    for i in 0..n_devices {
+        nodes.push(format!("d{i}"));
+        decls.push(format!("{{\"id\": \"d{i}\", \"kind\": \"device\"}}"));
+    }
+    for i in 0..n_switches {
+        nodes.push(format!("s{i}"));
+        decls.push(format!("{{\"id\": \"s{i}\", \"kind\": \"switch\"}}"));
+    }
+    let mut links: Vec<String> = Vec::new();
+    fn link(rng: &mut Rng, a: &str, b: &str) -> String {
+        let bw = 1.0 + 99.0 * rng.gen_f64();
+        let lat = 0.5 + 4.5 * rng.gen_f64();
+        format!(
+            "{{\"src\": \"{a}\", \"dst\": \"{b}\", \"bw_gbps\": {bw:.3}, \
+             \"latency_us\": {lat:.3}}}"
+        )
+    }
+    // Spanning tree: node i attaches to a random earlier node.
+    for i in 1..total {
+        let j = rng.gen_range(i);
+        links.push(link(rng, &nodes[i], &nodes[j]));
+    }
+    // Extra chords.
+    for _ in 0..rng.gen_range(total) {
+        let a = rng.gen_range(total);
+        let b = rng.gen_range(total);
+        if a != b {
+            links.push(link(rng, &nodes[a], &nodes[b]));
+        }
+    }
+    format!(
+        "{{\"name\": \"fuzz-{total}\", \"nodes\": [{}], \"links\": [{}]}}",
+        decls.join(", "),
+        links.join(", ")
+    )
+}
+
+#[test]
+fn prop_netsim_fuzz_routing_deterministic_and_bytes_conserved() {
+    let seed = prop_seed(0xF1025EED);
+    prop::forall(20, seed, |rng| {
+        let json = random_edgelist_json(rng);
+        let parsed = nest::util::json::parse(&json).expect("fuzz JSON parses");
+        let a = LinkGraph::from_json(&parsed).expect("fuzz topology builds");
+        let b = LinkGraph::from_json(&parsed).expect("rebuild");
+        let n = a.n_devices();
+        assert!(n >= 2);
+
+        // Routing is deterministic across builds: identical link
+        // sequences for sampled pairs (and for every pair on small n).
+        for _ in 0..32 {
+            let x = rng.gen_range(n);
+            let mut y = rng.gen_range(n);
+            if x == y {
+                y = (y + 1) % n;
+            }
+            let pa = a.path(x, y);
+            let pb = b.path(x, y);
+            assert_eq!(pa.links, pb.links, "route {x}->{y} differs across builds");
+            assert_eq!(pa.latency.to_bits(), pb.latency.to_bits());
+        }
+
+        // Random workload: a few chains of compute → concurrent flows.
+        let build_wl = |rng: &mut Rng| {
+            let mut wl = Workload::new();
+            let mut injected = 0.0f64;
+            let n_tasks = 1 + rng.gen_range(6);
+            let mut prev: Option<u32> = None;
+            for _ in 0..n_tasks {
+                let deps: Vec<u32> = prev.into_iter().collect();
+                let cmp = wl.add(
+                    TaskKind::Compute {
+                        seconds: rng.gen_f64() * 1e-3,
+                    },
+                    &deps,
+                );
+                let mut flows = Vec::new();
+                for _ in 0..(1 + rng.gen_range(6)) {
+                    let src = rng.gen_range(n);
+                    let mut dst = rng.gen_range(n);
+                    if src == dst {
+                        dst = (dst + 1) % n;
+                    }
+                    let bytes = 1e6 * (1.0 + rng.gen_f64() * 1e3);
+                    injected += bytes;
+                    flows.push(FlowSpec { src, dst, bytes });
+                }
+                prev = Some(wl.add(
+                    TaskKind::Transfer {
+                        flows,
+                        extra_latency: 0.0,
+                    },
+                    &[cmp],
+                ));
+            }
+            (wl, injected)
+        };
+        let mut probe = rng.clone();
+        let (wl, injected) = build_wl(&mut probe);
+        // Every flow completes (fairshare::run asserts all tasks finish)
+        // and the report is sane.
+        let rep = fairshare::run(&a, &wl);
+        assert!(rep.batch_time.is_finite() && rep.batch_time > 0.0);
+        assert!((rep.total_bytes - injected).abs() < 1.0, "injection accounting");
+        // Conservation: delivered bytes equal injected bytes up to the
+        // engine's half-byte completion tolerance per flow.
+        assert!(
+            (rep.delivered_bytes - rep.total_bytes).abs() <= 0.5 * rep.n_flows as f64 + 1e-6,
+            "delivered {} vs injected {} over {} flows",
+            rep.delivered_bytes,
+            rep.total_bytes,
+            rep.n_flows
+        );
+        // Re-running the identical workload is bit-identical.
+        let mut probe2 = rng.clone();
+        let (wl2, _) = build_wl(&mut probe2);
+        let rep2 = fairshare::run(&a, &wl2);
+        assert_eq!(rep.batch_time.to_bits(), rep2.batch_time.to_bits());
+        assert_eq!(rep.events, rep2.events);
+        assert_eq!(rep.n_flows, rep2.n_flows);
+    });
+}
