@@ -6,11 +6,12 @@
 //! 64 devices.
 
 use nest::graph::models;
-use nest::netsim::{self, FlowSpec, LinkGraph, TaskKind, Workload};
+use nest::harness::netsim::spineleaf_topology;
+use nest::netsim::{self, FairshareEngine, FlowSpec, LinkGraph, RefillMode, TaskKind, Workload};
 use nest::network::Cluster;
 use nest::sim::Schedule;
 use nest::solver::{solve, SolverOpts};
-use nest::util::bench::{bench, bench_n};
+use nest::util::bench::{bench, bench_n, report_speedup};
 
 fn main() {
     // Topology expansion + deterministic routing tables.
@@ -45,6 +46,48 @@ fn main() {
         netsim::fairshare::run(&topo, &wl)
     });
 
+    // Incremental vs full-refill rate maintenance on a staggered load
+    // with many disjoint components (NVLink pairs) plus cross-spine
+    // contenders: the case where re-solving only the dirty component
+    // pays. Reports are bit-identical; only wall-clock differs.
+    let staggered = || {
+        let mut wl = Workload::new();
+        let mut prev: Option<u32> = None;
+        for round in 0..32u32 {
+            let deps: Vec<u32> = prev.into_iter().collect();
+            let cmp = wl.add(TaskKind::Compute { seconds: 1e-5 }, &deps);
+            let mut flows = Vec::new();
+            for p in 0..16usize {
+                flows.push(FlowSpec {
+                    src: 8 * p,
+                    dst: 8 * p + 1,
+                    bytes: 1e7 + round as f64 * 1e5,
+                });
+            }
+            flows.push(FlowSpec {
+                src: (round as usize) % 64,
+                dst: 64 + (round as usize) % 64,
+                bytes: 5e7,
+            });
+            prev = Some(wl.add(
+                TaskKind::Transfer {
+                    flows,
+                    extra_latency: 0.0,
+                },
+                &[cmp],
+            ));
+        }
+        wl
+    };
+    let mut engine = FairshareEngine::new(&topo);
+    let inc = bench_n("fairshare_staggered_incremental", 5, || {
+        engine.run_with_mode(&topo, &staggered(), RefillMode::Incremental)
+    });
+    let full = bench_n("fairshare_staggered_full_refill", 5, || {
+        engine.run_with_mode(&topo, &staggered(), RefillMode::FullRefill)
+    });
+    report_speedup("fairshare_incremental_over_full", &full, &inc);
+
     // End-to-end: solve once, then lower + replay a full training batch.
     let graph = models::llama2_7b(1);
     let cluster = Cluster::spine_leaf_h100(64, 4.0);
@@ -52,5 +95,21 @@ fn main() {
     let topo = LinkGraph::from_cluster(&cluster);
     bench_n("netsim_llama2_batch_64dev", 5, || {
         netsim::simulate_flows(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB)
+    });
+
+    // The shipped 4:1 spine-leaf edge-list the perf smoke gates, with a
+    // reused engine (the smoke's exact configuration).
+    let (scluster, stopo) = spineleaf_topology();
+    let ssol = solve(&graph, &scluster, &SolverOpts::default()).expect("feasible");
+    let mut sengine = FairshareEngine::new(&stopo);
+    bench_n("netsim_llama2_batch_spineleaf_edgelist", 5, || {
+        netsim::simulate_flows_with(
+            &mut sengine,
+            &graph,
+            &scluster,
+            &stopo,
+            &ssol.plan,
+            Schedule::OneFOneB,
+        )
     });
 }

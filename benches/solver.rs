@@ -145,9 +145,41 @@ fn main() {
     report_speedup("solve_llama2_7b_256_top1_over_top8", &top8, &top1);
 
     // End-to-end refinement loop on the shipped dumbbell edge-list:
-    // shortlist solve + K flow-level replays + re-rank.
+    // shortlist solve + K flow-level replays + re-rank. The top-8 run
+    // is the bench-smoke's `solve_topk8_refine_dumbbell` twin — the
+    // deepest shortlist the CI gate times.
     let (ec, edge) = dumbbell_topology();
     bench_n("refine_top4_llama2_7b_dumbbell", 3, || {
         refine(&g, &ec, &edge, &opts, 4)
     });
+    bench_n("refine_top8_llama2_7b_dumbbell", 3, || {
+        refine(&g, &ec, &edge, &opts, 8)
+    });
+
+    // Reference pricing (naive layer/tier walks) vs the O(1) range
+    // tables, same search: the solver-side half of this PR's speedup.
+    use nest::cost::PricingMode;
+    let single_ref = bench_n("solve_llama2_7b_fattree_256_reference", 3, || {
+        solve(
+            &g,
+            &c,
+            &SolverOpts {
+                threads: 1,
+                pricing: PricingMode::Reference,
+                ..Default::default()
+            },
+        )
+    });
+    let single_opt = bench_n("solve_llama2_7b_fattree_256_optimized", 3, || {
+        solve(
+            &g,
+            &c,
+            &SolverOpts {
+                threads: 1,
+                pricing: PricingMode::Optimized,
+                ..Default::default()
+            },
+        )
+    });
+    report_speedup("solve_llama2_7b_256_tables_over_reference", &single_ref, &single_opt);
 }

@@ -5,7 +5,14 @@
 //! triple: per-layer forward+backward compute time, intra-stage collective
 //! time (TP/SP/EP/CP traffic at the group's locality), sharded parameter
 //! counts, and activation footprints — all as prefix sums so any
-//! contiguous stage `[i, j)` is costed in O(1) inside the DP's inner loop.
+//! contiguous stage `[i, j)` is costed in O(1) inside the DP's inner
+//! loop. The two queries that are *not* prefix differences are tabled
+//! too: the recompute working-set max rides a sparse table
+//! (O(n log n) once, O(1) per range) and the pipeline-p2p α–β
+//! coefficients are cached per level, so no `(i, j)` transition walks
+//! layers or tiers. `NEST_REFERENCE=1` (or [`PricingMode::Reference`])
+//! swaps back to the naive walks those tables replaced — the property
+//! suite pins both paths to identical bits.
 //! This mirrors the paper's offline SUB-GRAPH profiling (§3.1): local
 //! strategies are characterized once and composed analytically during
 //! placement.
@@ -15,6 +22,69 @@ use crate::graph::LayerGraph;
 use crate::hw::{Accelerator, ClassMask};
 use crate::memory::{self, MemSpec, ZeroStage};
 use crate::network::Cluster;
+
+/// Which pricing implementation a [`CostModel`] uses for the few range
+/// queries that are not plain prefix differences.
+///
+/// * `Optimized` — O(1) tables: a sparse-table range-max for the
+///   recompute working set, cached per-level α–β coefficients for the
+///   pipeline p2p terms. This is the production path.
+/// * `Reference` — the naive twins those tables replaced: a linear layer
+///   walk for the working-set max and per-call `Cluster::p2p_time`
+///   tier scans. Kept alive so the property suite can assert
+///   optimized ≡ reference bit-for-bit on random inputs, and as a
+///   runtime escape hatch (`NEST_REFERENCE=1`).
+/// * `Auto` — resolve from the environment once per process
+///   ([`crate::util::reference_mode`]); what every default constructor
+///   uses.
+///
+/// Both paths compute mathematically identical values; the property
+/// tests pin them to the *same bits* (max is associative and exact, and
+/// the cached α–β coefficients are produced by the very tier scans they
+/// replace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PricingMode {
+    #[default]
+    Auto,
+    Optimized,
+    Reference,
+}
+
+impl PricingMode {
+    /// Collapse `Auto` to the environment's choice.
+    pub fn resolve(self) -> PricingMode {
+        match self {
+            PricingMode::Auto => {
+                if crate::util::reference_mode() {
+                    PricingMode::Reference
+                } else {
+                    PricingMode::Optimized
+                }
+            }
+            m => m,
+        }
+    }
+}
+
+/// Per-mask range pricer: the accelerator classes of one lockstep device
+/// block, resolved once so the DP's inner loops stop re-deriving them
+/// from the bitmask on every `(i, j)` query. Built per DP stage context
+/// ([`CostModel::pricer`]) and per exact-solver `(k, sg)` block — the
+/// class fold runs in the same ascending order as the mask iteration it
+/// replaces, so prices are bit-identical.
+#[derive(Debug, Clone, Copy)]
+pub struct RangePricer {
+    /// Ascending class indices covered by the mask.
+    classes: [u8; 64],
+    n_classes: u8,
+}
+
+impl RangePricer {
+    #[inline]
+    fn classes(&self) -> &[u8] {
+        &self.classes[..self.n_classes as usize]
+    }
+}
 
 /// Pre-computed per-layer costs with prefix sums for O(1) range queries.
 ///
@@ -50,6 +120,22 @@ pub struct CostModel {
     act_rc: Vec<f64>,
     /// per-layer boundary bytes (activation crossing layer k → k+1).
     boundary: Vec<f64>,
+    /// Sparse table over per-layer *full* activation bytes
+    /// (`act_plain[k+1] − act_plain[k]`): `act_rmq[lvl][i]` is the max
+    /// over layers `[i, i + 2^lvl)`. Turns the recompute working-set
+    /// scan — the last O(j−i) walk in the DP's transition — into an
+    /// O(1) query ([`Self::working_set_bytes`]).
+    act_rmq: Vec<Vec<f64>>,
+    /// Cached `Cluster::lat(l)` / `Cluster::bw_eff(l)` per level: the
+    /// pipeline-p2p α–β coefficients the tier scans inside
+    /// `Cluster::p2p_time` recompute on every DP transition.
+    p2p_lat: Vec<f64>,
+    p2p_bw: Vec<f64>,
+    /// `max_k stage_load_lb_best(k, k+1)` — the heaviest single layer on
+    /// the pool's fastest class, hoisted out of the per-config pruning
+    /// bound ([`Self::max_single_layer_lb_best`]).
+    max_layer_lb_best: f64,
+    mode: PricingMode,
     /// ZeRO-3 weight all-gather cost model at the replica-adjacent
     /// locality: `z3_alpha + bytes · z3_beta` (latency + bandwidth terms
     /// kept separate so large payloads don't multiply the α term).
@@ -60,6 +146,18 @@ pub struct CostModel {
 
 impl CostModel {
     pub fn new(graph: &LayerGraph, cluster: &Cluster, sg: SgConfig) -> Self {
+        Self::with_mode(graph, cluster, sg, PricingMode::Auto)
+    }
+
+    /// [`Self::new`] with an explicit [`PricingMode`] (the property
+    /// suite builds optimized and reference models side by side).
+    pub fn with_mode(
+        graph: &LayerGraph,
+        cluster: &Cluster,
+        sg: SgConfig,
+        mode: PricingMode,
+    ) -> Self {
+        let mode = mode.resolve();
         let n = graph.n_layers();
         let classes = cluster.pool.classes();
         let group = sg.group_size();
@@ -99,6 +197,40 @@ impl CostModel {
         let z3_alpha = cluster.allgather(0.0, &z3_shape);
         let z3_beta = cluster.allgather(1e9, &z3_shape) / 1e9 - z3_alpha / 1e9;
 
+        // Range-max sparse table over per-layer full activation bytes.
+        // Level 0 is the per-layer vector itself; level `v` doubles the
+        // window. O(n log n) doubles once per (sg) — amortized to zero
+        // against the O(n²·s) transitions that query it.
+        let act_layer: Vec<f64> = (0..n).map(|k| act_plain[k + 1] - act_plain[k]).collect();
+        let mut act_rmq: Vec<Vec<f64>> = vec![act_layer];
+        let mut width = 1usize;
+        while width * 2 <= n {
+            let prev = act_rmq.last().unwrap();
+            let next: Vec<f64> = (0..=(n - width * 2))
+                .map(|i| prev[i].max(prev[i + width]))
+                .collect();
+            act_rmq.push(next);
+            width *= 2;
+        }
+
+        // Pipeline-p2p α–β coefficients per level, produced by the same
+        // tier scans `Cluster::p2p_time` runs per call — cached values
+        // are bit-identical by construction.
+        let p2p_lat: Vec<f64> = (0..cluster.n_levels()).map(|l| cluster.lat(l)).collect();
+        let p2p_bw: Vec<f64> = (0..cluster.n_levels()).map(|l| cluster.bw_eff(l)).collect();
+
+        // Heaviest single layer on the fastest class — the same fold the
+        // per-config pruning bound used to run per (sg, recompute, p).
+        let max_layer_lb_best = (0..n)
+            .map(|k| {
+                let mut best = f64::INFINITY;
+                for pfx in &fwd_compute {
+                    best = best.min(pfx[k + 1] - pfx[k]);
+                }
+                best * 3.0
+            })
+            .fold(0.0, f64::max);
+
         CostModel {
             sg,
             group,
@@ -111,10 +243,36 @@ impl CostModel {
             act_plain,
             act_rc,
             boundary,
+            act_rmq,
+            p2p_lat,
+            p2p_bw,
+            max_layer_lb_best,
+            mode,
             z3_alpha,
             z3_beta,
             tokens,
         }
+    }
+
+    /// The pricing implementation this model resolved to (never `Auto`).
+    pub fn mode(&self) -> PricingMode {
+        self.mode
+    }
+
+    /// Resolve a class mask into a [`RangePricer`] once, outside the
+    /// DP's `(i, j)` loops.
+    pub fn pricer(&self, mask: ClassMask) -> RangePricer {
+        let mut m = mask & self.full_mask;
+        debug_assert!(m != 0, "empty accelerator-class mask");
+        let mut classes = [0u8; 64];
+        let mut n_classes = 0u8;
+        while m != 0 {
+            let c = m.trailing_zeros() as u8;
+            m &= m - 1;
+            classes[n_classes as usize] = c;
+            n_classes += 1;
+        }
+        RangePricer { classes, n_classes }
     }
 
     pub fn n_layers(&self) -> usize {
@@ -125,18 +283,53 @@ impl CostModel {
     /// group covering `mask`: the slowest covered class sets the pace.
     #[inline]
     fn fwd_range_on(&self, mask: ClassMask, i: usize, j: usize) -> f64 {
-        let mut m = mask & self.full_mask;
-        debug_assert!(m != 0, "empty accelerator-class mask");
+        self.fwd_range_priced(&self.pricer(mask), i, j)
+    }
+
+    /// [`Self::fwd_range_on`] with the mask pre-resolved (the fold runs
+    /// over the same ascending class order, so values are bit-identical).
+    #[inline]
+    fn fwd_range_priced(&self, pricer: &RangePricer, i: usize, j: usize) -> f64 {
         let mut worst = 0.0f64;
-        while m != 0 {
-            let c = m.trailing_zeros() as usize;
-            m &= m - 1;
-            let v = self.fwd_compute[c][j] - self.fwd_compute[c][i];
+        for &c in pricer.classes() {
+            let pfx = &self.fwd_compute[c as usize];
+            let v = pfx[j] - pfx[i];
             if v > worst {
                 worst = v;
             }
         }
         worst
+    }
+
+    /// Transient working set of a recomputing stage `[i, j)`: the
+    /// largest single layer's full activation bytes. O(1) on the sparse
+    /// table; the `Reference` mode keeps the linear walk this replaced
+    /// (`max` is associative and exact, so both return the same bits).
+    #[inline]
+    fn working_set_bytes(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < j && j <= self.n_layers);
+        if self.mode == PricingMode::Reference {
+            let mut w: f64 = 0.0;
+            for k in i..j {
+                w = w.max(self.act_plain[k + 1] - self.act_plain[k]);
+            }
+            return w;
+        }
+        let len = j - i;
+        let lvl = (usize::BITS - 1 - len.leading_zeros()) as usize;
+        let row = &self.act_rmq[lvl];
+        row[i].max(row[j - (1 << lvl)])
+    }
+
+    /// Pipeline-p2p α–β cost at level `l` — cached coefficients on the
+    /// optimized path, the original per-call tier scan under `Reference`.
+    #[inline]
+    fn p2p(&self, cluster: &Cluster, l: usize, bytes: f64) -> f64 {
+        if self.mode == PricingMode::Reference {
+            cluster.p2p_time(l, bytes)
+        } else {
+            self.p2p_lat[l] + bytes / self.p2p_bw[l]
+        }
     }
 
     /// Fastest-class forward compute of `[i, j)` — a valid lower bound
@@ -179,11 +372,7 @@ impl CostModel {
         // Transient working set under recompute: the largest single
         // layer's full activations (re-materialized during backward).
         let working = if spec.recompute {
-            let mut w: f64 = 0.0;
-            for k in i..j {
-                w = w.max(self.act_plain[k + 1] - self.act_plain[k]);
-            }
-            w
+            self.working_set_bytes(i, j)
         } else {
             0.0
         };
@@ -205,15 +394,12 @@ impl CostModel {
         // Allocation-free escalation (this runs once per DP transition —
         // ~10⁷ times per solve; see EXPERIMENTS.md §Perf). Memory terms
         // are assembled inline from the prefix sums rather than through
-        // a candidate Vec.
+        // a candidate Vec; the recompute working set is an O(1)
+        // sparse-table query, so no term walks the layer range.
         let p = self.stage_params(i, j);
         let act = self.stage_act_bytes(i, j, recompute) * (1.0 + stash as f64);
         let working = if recompute {
-            let mut w: f64 = 0.0;
-            for k in i..j {
-                w = w.max(self.act_plain[k + 1] - self.act_plain[k]);
-            }
-            w
+            self.working_set_bytes(i, j)
         } else {
             0.0
         };
@@ -278,8 +464,26 @@ impl CostModel {
         spec: &MemSpec,
         cluster: &Cluster,
     ) -> f64 {
+        self.stage_load_priced(&self.pricer(mask), i, j, recv_level, send_level, spec, cluster)
+    }
+
+    /// [`Self::stage_load_on`] with the class mask pre-resolved — the
+    /// DP's transition hot path (the solver builds one pricer per stage
+    /// context, outside the O(n²) cut scan). Bit-identical to the
+    /// mask-based form.
+    #[allow(clippy::too_many_arguments)]
+    pub fn stage_load_priced(
+        &self,
+        pricer: &RangePricer,
+        i: usize,
+        j: usize,
+        recv_level: Option<usize>,
+        send_level: Option<usize>,
+        spec: &MemSpec,
+        cluster: &Cluster,
+    ) -> f64 {
         debug_assert!(i < j && j <= self.n_layers);
-        let fwd = self.fwd_range_on(mask, i, j);
+        let fwd = self.fwd_range_priced(pricer, i, j);
         let compute_mult = if spec.recompute { 4.0 } else { 3.0 };
         let mut t = fwd * compute_mult;
         t += self.collective[j] - self.collective[i];
@@ -293,11 +497,11 @@ impl CostModel {
             // Activation in (fwd) + gradient out (bwd) across the
             // producer boundary.
             let b = self.boundary[i.saturating_sub(1).min(self.n_layers - 1)];
-            t += 2.0 * cluster.p2p_time(l, b);
+            t += 2.0 * self.p2p(cluster, l, b);
         }
         if let Some(l) = send_level {
             let b = self.boundary[j - 1];
-            t += 2.0 * cluster.p2p_time(l, b);
+            t += 2.0 * self.p2p(cluster, l, b);
         }
         t
     }
@@ -319,11 +523,25 @@ impl CostModel {
         self.fwd_range_on(mask, i, j) * 3.0
     }
 
+    /// [`Self::stage_load_lb_on`] with the mask pre-resolved.
+    #[inline]
+    pub fn stage_load_lb_priced(&self, pricer: &RangePricer, i: usize, j: usize) -> f64 {
+        self.fwd_range_priced(pricer, i, j) * 3.0
+    }
+
     /// Placement-independent lower bound: even on the pool's fastest
     /// class the stage cannot run faster than this.
     #[inline]
     pub fn stage_load_lb_best(&self, i: usize, j: usize) -> f64 {
         self.fwd_range_best(i, j) * 3.0
+    }
+
+    /// `max_k` [`Self::stage_load_lb_best`]`(k, k+1)` — precomputed in
+    /// [`Self::new`] so the per-`(p, d)` config pruning bound stops
+    /// re-folding the layer axis.
+    #[inline]
+    pub fn max_single_layer_lb_best(&self) -> f64 {
+        self.max_layer_lb_best
     }
 
     /// Gradient-sync bytes for stage `[i, j)` (bf16 grads).
@@ -594,6 +812,77 @@ mod tests {
         // Lower bounds bracket the truth.
         assert!(cm.stage_load_lb_best(1, 9) <= cm.stage_load_lb_on(0b01, 1, 9));
         assert!(cm.stage_load_lb_on(0b01, 1, 9) <= cm.stage_load_lb(1, 9));
+    }
+
+    #[test]
+    fn optimized_pricing_matches_reference_bitwise() {
+        // The tentpole invariant: sparse-table working-set maxima,
+        // cached p2p coefficients, and pre-resolved pricers must price
+        // every (i, j, spec, boundary) query to the same bits as the
+        // naive layer-walking reference.
+        for (g, c) in [
+            (models::llama2_7b(1), Cluster::fat_tree_tpuv4(64)),
+            (models::llama2_7b(1), Cluster::hetero_pool(64)),
+            (models::gpt3_35b(1), Cluster::spine_leaf_h100(64, 2.0)),
+        ] {
+            for sg in [SgConfig::serial(), SgConfig::tp(4)] {
+                let opt = CostModel::with_mode(&g, &c, sg, PricingMode::Optimized);
+                let refm = CostModel::with_mode(&g, &c, sg, PricingMode::Reference);
+                let cap = c.pool.min_capacity_all();
+                prop::forall(60, 0x0C0DE, |rng| {
+                    let i = rng.gen_range(opt.n_layers() - 1);
+                    let j = i + 1 + rng.gen_range(opt.n_layers() - i - 1);
+                    let rc = rng.gen_bool(0.5);
+                    let spec = MemSpec {
+                        zero: ZeroStage::None,
+                        recompute: rc,
+                    };
+                    let recv = if rng.gen_bool(0.5) {
+                        Some(rng.gen_range(c.n_levels()))
+                    } else {
+                        None
+                    };
+                    let send = if rng.gen_bool(0.5) {
+                        Some(rng.gen_range(c.n_levels()))
+                    } else {
+                        None
+                    };
+                    let mask = c.pool.full_mask();
+                    let a = opt.stage_load_on(mask, i, j, recv, send, &spec, &c);
+                    let b = refm.stage_load_on(mask, i, j, recv, send, &spec, &c);
+                    assert_eq!(a.to_bits(), b.to_bits(), "load [{i},{j}) rc={rc}");
+                    let pricer = opt.pricer(mask);
+                    let p = opt.stage_load_priced(&pricer, i, j, recv, send, &spec, &c);
+                    assert_eq!(p.to_bits(), a.to_bits(), "pricer [{i},{j})");
+                    let stash = rng.gen_range(8);
+                    let pa = opt.stage_peak_bytes(i, j, &spec, stash);
+                    let pb = refm.stage_peak_bytes(i, j, &spec, stash);
+                    assert_eq!(pa.to_bits(), pb.to_bits(), "peak [{i},{j})");
+                    assert_eq!(
+                        opt.stage_choose_spec(i, j, stash, cap, 8, rc),
+                        refm.stage_choose_spec(i, j, stash, cap, 8, rc),
+                        "spec [{i},{j})"
+                    );
+                    assert_eq!(
+                        opt.stage_load_lb_priced(&pricer, i, j).to_bits(),
+                        refm.stage_load_lb_on(mask, i, j).to_bits()
+                    );
+                });
+                // The hoisted single-layer bound equals the fold it replaced.
+                let n = refm.n_layers();
+                let folded = (0..n)
+                    .map(|k| refm.stage_load_lb_best(k, k + 1))
+                    .fold(0.0, f64::max);
+                assert_eq!(opt.max_single_layer_lb_best().to_bits(), folded.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pricing_mode_resolves() {
+        assert_ne!(PricingMode::Auto.resolve(), PricingMode::Auto);
+        assert_eq!(PricingMode::Optimized.resolve(), PricingMode::Optimized);
+        assert_eq!(PricingMode::Reference.resolve(), PricingMode::Reference);
     }
 
     #[test]

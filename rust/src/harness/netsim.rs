@@ -26,6 +26,23 @@ use super::HarnessOpts;
 /// working directory; the same file ships under `configs/`).
 pub const EDGELIST_DUMBBELL: &str = include_str!("../../../configs/edgelist_dumbbell.json");
 
+/// The shipped 4:1 spine-leaf edge-list (16 GPUs, 4 leaves, 2 spines) —
+/// the contended fabric the fair-share perf smoke replays.
+pub const EDGELIST_SPINELEAF: &str =
+    include_str!("../../../configs/edgelist_spineleaf_4to1.json");
+
+/// The 4:1 spine-leaf edge-list as (optimistic analytic cluster,
+/// explicit link graph) — shared by the harness tables, the perf smoke,
+/// and the benches, like [`dumbbell_topology`].
+pub fn spineleaf_topology() -> (Cluster, LinkGraph) {
+    let topo = LinkGraph::from_json(
+        &crate::util::json::parse(EDGELIST_SPINELEAF).expect("shipped edge-list parses"),
+    )
+    .expect("shipped edge-list builds");
+    let cluster = topo.approx_cluster(Accelerator::h100());
+    (cluster, topo)
+}
+
 /// The dumbbell edge-list as (optimistic analytic cluster, explicit
 /// link graph) — the construction every dumbbell consumer (harness
 /// tables, perf smoke, refine benches/tests) must share so they all

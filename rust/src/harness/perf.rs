@@ -2,26 +2,28 @@
 //!
 //! `nest bench-smoke` runs a small, fixed set of wall-clock metrics —
 //! the placement solve at 1 and 4 worker threads on a mid-size model,
-//! and the flow-level fair-share simulation on the shipped dumbbell
-//! edge-list — writes them as `BENCH_PR.json`, and (with `--baseline`)
-//! fails if any metric regressed more than the tolerance against the
-//! committed `BENCH_BASELINE.json`. Each metric is the **minimum** over
-//! its repetitions, the standard noise-robust statistic for regression
-//! gating. Refresh the baseline with one line:
+//! the top-8 shortlist + flow-level re-ranking (`refine`) on the
+//! shipped dumbbell, and the fair-share engine on the dumbbell and the
+//! 4:1 spine-leaf edge-lists — writes them as `BENCH_PR.json`, and
+//! (with `--baseline`) fails if any metric regressed more than the
+//! tolerance against the committed `BENCH_BASELINE.json`. Each metric
+//! is the **minimum** over its repetitions, the standard noise-robust
+//! statistic for regression gating. Refresh the baseline with one line:
 //!
 //! ```text
 //! cargo run --release -- bench-smoke --out BENCH_BASELINE.json
 //! ```
 
 use crate::graph::models;
-use crate::netsim::simulate_flows;
+use crate::netsim::{simulate_flows_with, FairshareEngine};
 use crate::network::Cluster;
 use crate::sim::Schedule;
+use crate::solver::refine::refine;
 use crate::solver::{solve, SolverOpts};
 use crate::util::bench::{bench_n, report_speedup};
 use crate::util::json::Json;
 
-use super::netsim::dumbbell_topology;
+use super::netsim::{dumbbell_topology, spineleaf_topology};
 
 /// One gated wall-clock metric.
 #[derive(Debug, Clone)]
@@ -108,17 +110,62 @@ pub fn run_smoke(quick: bool) -> PerfSmoke {
     report_speedup("bench_smoke_solve_4t_over_1t", &single, &multi);
 
     // Flow-level fair-share engine on the shipped dumbbell edge-list:
-    // the netsim hot path (plan solved once, untimed).
+    // the netsim hot path (plan solved once, untimed; the engine is
+    // reused across reps like the refine loop reuses it across plans).
     let (ecluster, topo) = dumbbell_topology();
     let sol = solve(&graph, &ecluster, &sopts(0)).expect("dumbbell placement feasible");
+    let mut engine = FairshareEngine::new(&topo);
     let net = bench_n(
         "bench_smoke_netsim_fairshare_dumbbell",
         if quick { 1 } else { 5 },
-        || simulate_flows(&graph, &ecluster, &topo, &sol.plan, Schedule::OneFOneB),
+        || {
+            simulate_flows_with(&mut engine, &graph, &ecluster, &topo, &sol.plan, Schedule::OneFOneB)
+        },
     );
     metrics.push(PerfMetric {
         name: "netsim_fairshare_dumbbell".into(),
         seconds: net.min.as_secs_f64(),
+    });
+
+    // Fair-share on the 4:1 spine-leaf edge-list: many concurrent flows
+    // share (and split around) the oversubscribed trunks, so this is
+    // the metric that moves when the incremental component re-solve or
+    // the lazy drain heap regress.
+    let (scluster, stopo) = spineleaf_topology();
+    let ssol = solve(&graph, &scluster, &sopts(0)).expect("spine-leaf placement feasible");
+    let mut sengine = FairshareEngine::new(&stopo);
+    let snet = bench_n(
+        "bench_smoke_netsim_fairshare_spineleaf",
+        if quick { 1 } else { 5 },
+        || {
+            simulate_flows_with(
+                &mut sengine,
+                &graph,
+                &scluster,
+                &stopo,
+                &ssol.plan,
+                Schedule::OneFOneB,
+            )
+        },
+    );
+    metrics.push(PerfMetric {
+        name: "netsim_fairshare_spineleaf".into(),
+        seconds: snet.min.as_secs_f64(),
+    });
+
+    // End-to-end solve → top-8 shortlist → flow-level re-rank on the
+    // dumbbell: the full `solve → solve_topk → refine` pipeline the
+    // range-pricing tables and the incremental engine accelerate. K is
+    // 8 in both modes so the metric name always describes the workload;
+    // quick mode only shrinks the repetitions.
+    let rf = bench_n(
+        "bench_smoke_solve_topk8_refine_dumbbell",
+        if quick { 1 } else { 3 },
+        || refine(&graph, &ecluster, &topo, &sopts(0), 8),
+    );
+    metrics.push(PerfMetric {
+        name: "solve_topk8_refine_dumbbell".into(),
+        seconds: rf.min.as_secs_f64(),
     });
 
     PerfSmoke {
@@ -272,6 +319,8 @@ mod tests {
             "solve_llama2_7b_fattree_1t",
             "solve_llama2_7b_fattree_4t",
             "netsim_fairshare_dumbbell",
+            "netsim_fairshare_spineleaf",
+            "solve_topk8_refine_dumbbell",
         ] {
             assert!(s.get(name).unwrap() > 0.0, "missing metric {name}");
         }

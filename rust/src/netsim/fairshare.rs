@@ -1,10 +1,10 @@
 //! Max-min fair-share flow engine (progressive filling), in the style of
 //! Parsimon/flowSim: instead of packet- or message-level simulation, the
-//! engine tracks *flows* and recomputes every active flow's bottleneck
-//! rate whenever a flow arrives or completes. Between events rates are
-//! constant, so completions resolve in closed form — the whole batch
-//! simulates in milliseconds while still exposing link contention the
-//! level-wise analytic model cannot see.
+//! engine tracks *flows* and recomputes bottleneck rates whenever a flow
+//! arrives or completes. Between events rates are constant, so
+//! completions resolve in closed form — the whole batch simulates in
+//! milliseconds while still exposing link contention the level-wise
+//! analytic model cannot see.
 //!
 //! The input is a [`Workload`]: a DAG of [`TaskKind::Compute`] tasks
 //! (fixed duration, one per pipeline op) and [`TaskKind::Transfer`] tasks
@@ -12,6 +12,46 @@
 //! drains, plus path latency and any modeled serialization extras).
 //! Everything is single-threaded and iteration-order-stable, so reports
 //! are bit-identical across runs and `--threads` settings.
+//!
+//! # Incremental rate maintenance
+//!
+//! Max-min fairness decomposes over the *connected components* of the
+//! link-sharing graph (flows are adjacent when they share a link): a
+//! component's rates are a pure function of its own flows and links.
+//! The engine exploits this two ways:
+//!
+//! * [`FairshareEngine`] keeps per-link active-flow lists and a dirty
+//!   set of links touched by arriving/completing flows; at each event
+//!   only the affected components are re-solved by progressive filling
+//!   ([`RefillMode::Incremental`]). Untouched components keep their
+//!   rates — which is *exactly* what a full refill would assign them,
+//!   because every component (in either mode) is filled by the same
+//!   pure per-component routine over the same canonically-ordered flow
+//!   list. [`RefillMode::FullRefill`] (the `NEST_REFERENCE=1` escape
+//!   hatch) re-solves every component at every event; the property
+//!   suite pins both modes to bit-identical reports.
+//! * Flow completions live in the event heap as *predicted drain times*
+//!   stamped with a per-flow generation counter; a rate change bumps the
+//!   generation and pushes a fresh prediction, and stale entries are
+//!   dropped lazily on pop — no per-event scan over the active set, no
+//!   re-push/re-peek churn.
+//!
+//! All link-indexed scratch (`frozen`, `n_unfrozen`, `used`, the
+//! component and DFS work lists, the flow slab) lives in the reusable
+//! engine struct, so replaying many plans on one topology (the
+//! refinement loop, the benches) keeps those buffers warm across runs;
+//! only per-workload state (task table, dependency lists, the event
+//! heap) is allocated per run.
+//!
+//! Note the engine's *semantics* changed with this design relative to
+//! the eager pre-engine implementation: flows complete exactly at their
+//! predicted drain times (the old half-byte early-completion shortcut
+//! is gone) and progressive filling runs per component rather than as
+//! one global fill, so reports can differ from the old engine's in the
+//! last bits (all invariants and tolerance-based expectations are
+//! unaffected). `NEST_REFERENCE=1` selects the full-refill scope within
+//! *this* engine — the bit-identity proof is Incremental ≡ FullRefill,
+//! not new ≡ pre-rewrite.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -93,16 +133,94 @@ pub struct NetsimReport {
     /// Bytes injected across all flows.
     pub total_bytes: f64,
     /// Bytes actually drained through links (Σ rate·dt per flow). Equal
-    /// to `total_bytes` up to the engine's half-byte completion
-    /// tolerance — the conservation invariant the fuzz suite checks.
+    /// to `total_bytes` up to the engine's completion tolerance — the
+    /// conservation invariant the fuzz suite checks.
     pub delivered_bytes: f64,
-    /// Engine events processed (rate recomputations).
+    /// Scheduling rounds processed (distinct event times at which state
+    /// advanced). Identical across [`RefillMode`]s.
     pub events: usize,
     /// Per-link mean utilization, hottest first (zero-traffic links
     /// omitted).
     pub link_util: Vec<LinkUtil>,
     /// Hottest link's mean utilization.
     pub max_link_util: f64,
+}
+
+impl NetsimReport {
+    /// Assert two reports are field-for-field identical at bit
+    /// precision — the comparison every bit-identity suite (unit,
+    /// property, cross-mode) must apply in full, kept in one place so a
+    /// new report field cannot silently escape coverage.
+    #[doc(hidden)]
+    pub fn assert_bits_eq(&self, other: &NetsimReport, what: &str) {
+        assert_eq!(
+            self.batch_time.to_bits(),
+            other.batch_time.to_bits(),
+            "{what}: batch_time"
+        );
+        assert_eq!(self.n_flows, other.n_flows, "{what}: n_flows");
+        assert_eq!(
+            self.total_bytes.to_bits(),
+            other.total_bytes.to_bits(),
+            "{what}: total_bytes"
+        );
+        assert_eq!(
+            self.delivered_bytes.to_bits(),
+            other.delivered_bytes.to_bits(),
+            "{what}: delivered_bytes"
+        );
+        assert_eq!(self.events, other.events, "{what}: events");
+        assert_eq!(
+            self.max_link_util.to_bits(),
+            other.max_link_util.to_bits(),
+            "{what}: max_link_util"
+        );
+        assert_eq!(
+            self.link_util.len(),
+            other.link_util.len(),
+            "{what}: link_util rows"
+        );
+        for (x, y) in self.link_util.iter().zip(&other.link_util) {
+            assert_eq!(x.link, y.link, "{what}: link_util order");
+            assert_eq!(
+                x.utilization.to_bits(),
+                y.utilization.to_bits(),
+                "{what}: link_util value"
+            );
+        }
+    }
+}
+
+/// Which rate-maintenance strategy [`FairshareEngine`] uses.
+///
+/// Both produce bit-identical reports — `Incremental` re-solves only
+/// the link-sharing components touched by the event, `FullRefill`
+/// re-solves everything (the naive reference kept for the property
+/// suite and the `NEST_REFERENCE=1` escape hatch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RefillMode {
+    /// Resolve from the environment once per process
+    /// ([`crate::util::reference_mode`]).
+    #[default]
+    Auto,
+    Incremental,
+    FullRefill,
+}
+
+impl RefillMode {
+    /// Collapse `Auto` to the environment's choice.
+    pub fn resolve(self) -> RefillMode {
+        match self {
+            RefillMode::Auto => {
+                if crate::util::reference_mode() {
+                    RefillMode::FullRefill
+                } else {
+                    RefillMode::Incremental
+                }
+            }
+            m => m,
+        }
+    }
 }
 
 /// Event-queue time key with a total order (times are finite).
@@ -125,16 +243,43 @@ impl Ord for TimeKey {
     }
 }
 
-#[derive(Debug)]
+/// Heap payload: a predicted flow drain (validated against the flow's
+/// current generation on pop) or a task completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum EvPayload {
+    Drain { slot: u32, gen: u32 },
+    Task(u32),
+}
+
+/// Heap entries order by `(time, kind, stable id)` — the stable id is
+/// the flow's arrival number or the task id, *not* a push counter, so
+/// exact-time ties resolve identically no matter which [`RefillMode`]
+/// pushed them (push order differs between modes; results must not).
+type HeapEv = Reverse<(TimeKey, u8, u64, EvPayload)>;
+
+const EV_DRAIN: u8 = 0;
+const EV_TASK: u8 = 1;
+
+/// One active flow in the engine's slab. `remaining` is the byte count
+/// *as of* `last_t`; bytes are settled lazily whenever the rate changes
+/// (and at completion), so unchanged flows cost nothing per event.
+#[derive(Debug, Clone)]
 struct ActiveFlow {
     task: u32,
+    /// Arrival number — the canonical ordering key for component fills.
+    id: u64,
+    /// Bumped on every rate change and slot reuse; stale heap entries
+    /// carry an older value and are dropped on pop.
+    gen: u32,
     bytes: f64,
     remaining: f64,
     rate: f64,
+    last_t: f64,
     /// Per-flow ceiling (min flow_cap along the path).
     cap: f64,
     links: Vec<usize>,
     path_latency: f64,
+    alive: bool,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -148,237 +293,545 @@ struct TaskState {
     done: bool,
 }
 
-/// Run `wl` on `topo` and return the contention-aware report.
+/// Reusable scratch for component discovery and progressive filling —
+/// sized once per topology, cleared via epoch stamps and touched lists
+/// instead of reallocation.
+#[derive(Debug, Default)]
+struct Scratch {
+    /// Links touched by flows that arrived/completed since the last
+    /// rate resolve (may contain duplicates; deduped via epoch stamps).
+    dirty_links: Vec<usize>,
+    link_seen: Vec<u64>,
+    flow_seen: Vec<u64>,
+    epoch: u64,
+    /// Current component's flow slots / links / DFS work list.
+    comp: Vec<u32>,
+    comp_links: Vec<usize>,
+    stack: Vec<usize>,
+    /// Progressive-filling state (link-indexed arrays are zeroed
+    /// invariantly between fills via `comp_links`).
+    n_unfrozen: Vec<u32>,
+    used: Vec<f64>,
+    frozen: Vec<bool>,
+    new_rates: Vec<f64>,
+    /// Full-refill canonical iteration order.
+    order: Vec<u32>,
+}
+
+/// Reusable fair-share engine for one topology (link count). Create
+/// with [`FairshareEngine::new`] and call [`FairshareEngine::run`] per
+/// workload; all per-link buffers are retained across runs.
+#[derive(Debug)]
+pub struct FairshareEngine {
+    nl: usize,
+    slots: Vec<ActiveFlow>,
+    free: Vec<u32>,
+    /// Per-link list of active flow slots — the structure that makes
+    /// component discovery O(component) instead of O(flows × links).
+    link_flows: Vec<Vec<u32>>,
+    scratch: Scratch,
+}
+
+impl FairshareEngine {
+    pub fn new(topo: &LinkGraph) -> Self {
+        let nl = topo.links.len();
+        FairshareEngine {
+            nl,
+            slots: Vec::new(),
+            free: Vec::new(),
+            link_flows: vec![Vec::new(); nl],
+            scratch: Scratch {
+                link_seen: vec![0; nl],
+                n_unfrozen: vec![0; nl],
+                used: vec![0.0; nl],
+                ..Scratch::default()
+            },
+        }
+    }
+
+    /// Run `wl` on `topo` with the environment-selected [`RefillMode`].
+    pub fn run(&mut self, topo: &LinkGraph, wl: &Workload) -> NetsimReport {
+        self.run_with_mode(topo, wl, RefillMode::Auto)
+    }
+
+    /// Run `wl` on `topo` under an explicit [`RefillMode`].
+    ///
+    /// Panics if the workload DAG is cyclic (a lowering bug, mirroring
+    /// the analytic simulator's deadlock assert) or if `topo` has a
+    /// different link count than the engine was built for.
+    pub fn run_with_mode(
+        &mut self,
+        topo: &LinkGraph,
+        wl: &Workload,
+        mode: RefillMode,
+    ) -> NetsimReport {
+        assert_eq!(
+            topo.links.len(),
+            self.nl,
+            "engine was built for a different topology"
+        );
+        let mode = mode.resolve();
+        let nt = wl.tasks.len();
+        let mut st: Vec<TaskState> = vec![TaskState::default(); nt];
+        let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); nt];
+        for (i, deps) in wl.deps.iter().enumerate() {
+            st[i].remaining_deps = deps.len() as u32;
+            for &d in deps {
+                dependents[d as usize].push(i as u32);
+            }
+        }
+
+        // Reset per-run state (scratch stamps survive via the epoch).
+        self.slots.clear();
+        self.free.clear();
+        for v in &mut self.link_flows {
+            v.clear();
+        }
+        self.scratch.dirty_links.clear();
+        self.scratch.flow_seen.clear();
+
+        let mut heap: BinaryHeap<HeapEv> = BinaryHeap::new();
+        let mut busy_bytes: Vec<f64> = vec![0.0; self.nl];
+        let mut n_flows = 0usize;
+        let mut total_bytes = 0.0f64;
+        let mut delivered_bytes = 0.0f64;
+        let mut events = 0usize;
+        let mut done_count = 0usize;
+        let mut next_flow_id: u64 = 0;
+        let mut flows_changed = false;
+
+        // Start a task at time `t`: schedule its completion (Compute) or
+        // materialize its flows (Transfer) into the slab + link lists.
+        macro_rules! start_task {
+            ($i:expr, $t:expr) => {{
+                let i: u32 = $i;
+                let t: f64 = $t;
+                let s = &mut st[i as usize];
+                debug_assert!(!s.started);
+                s.started = true;
+                s.latency_end = t;
+                match &wl.tasks[i as usize] {
+                    TaskKind::Compute { seconds } => {
+                        heap.push(Reverse((
+                            TimeKey(t + seconds),
+                            EV_TASK,
+                            i as u64,
+                            EvPayload::Task(i),
+                        )));
+                    }
+                    TaskKind::Transfer {
+                        flows,
+                        extra_latency,
+                    } => {
+                        let mut pending = 0u32;
+                        for f in flows {
+                            if f.src == f.dst || f.bytes <= 0.5 {
+                                continue; // no network crossing
+                            }
+                            let p = topo.path(f.src, f.dst);
+                            n_flows += 1;
+                            total_bytes += f.bytes;
+                            let id = next_flow_id;
+                            next_flow_id += 1;
+                            let slot = match self.free.pop() {
+                                Some(sl) => {
+                                    let fl = &mut self.slots[sl as usize];
+                                    fl.task = i;
+                                    fl.id = id;
+                                    fl.gen = fl.gen.wrapping_add(1);
+                                    fl.bytes = f.bytes;
+                                    fl.remaining = f.bytes;
+                                    fl.rate = 0.0;
+                                    fl.last_t = t;
+                                    fl.cap = p.flow_cap;
+                                    fl.links = p.links;
+                                    fl.path_latency = p.latency;
+                                    fl.alive = true;
+                                    sl
+                                }
+                                None => {
+                                    self.slots.push(ActiveFlow {
+                                        task: i,
+                                        id,
+                                        gen: 0,
+                                        bytes: f.bytes,
+                                        remaining: f.bytes,
+                                        rate: 0.0,
+                                        last_t: t,
+                                        cap: p.flow_cap,
+                                        links: p.links,
+                                        path_latency: p.latency,
+                                        alive: true,
+                                    });
+                                    (self.slots.len() - 1) as u32
+                                }
+                            };
+                            while self.scratch.flow_seen.len() < self.slots.len() {
+                                self.scratch.flow_seen.push(0);
+                            }
+                            for &l in &self.slots[slot as usize].links {
+                                self.link_flows[l].push(slot);
+                                self.scratch.dirty_links.push(l);
+                            }
+                            pending += 1;
+                            flows_changed = true;
+                        }
+                        st[i as usize].pending_flows = pending;
+                        if pending == 0 {
+                            heap.push(Reverse((
+                                TimeKey(t + extra_latency),
+                                EV_TASK,
+                                i as u64,
+                                EvPayload::Task(i),
+                            )));
+                        }
+                    }
+                }
+            }};
+        }
+
+        let mut t = 0.0f64;
+        for i in 0..nt as u32 {
+            if st[i as usize].remaining_deps == 0 {
+                start_task!(i, 0.0);
+            }
+        }
+        if flows_changed {
+            resolve_rates(
+                topo,
+                mode,
+                &mut self.slots,
+                &self.link_flows,
+                &mut self.scratch,
+                t,
+                &mut busy_bytes,
+                &mut heap,
+            );
+            flows_changed = false;
+        }
+
+        loop {
+            // Next valid event: drop stale drain predictions lazily.
+            let mut t_next: Option<f64> = None;
+            while let Some(&Reverse((tk, _, _, ev))) = heap.peek() {
+                let stale = match ev {
+                    EvPayload::Drain { slot, gen } => {
+                        let f = &self.slots[slot as usize];
+                        !f.alive || f.gen != gen
+                    }
+                    EvPayload::Task(task) => st[task as usize].done,
+                };
+                if stale {
+                    heap.pop();
+                    continue;
+                }
+                t_next = Some(tk.0);
+                break;
+            }
+            let Some(t_now) = t_next else { break };
+            t = t_now;
+            events += 1;
+
+            // Process every event due at `t` (ties included; cascades of
+            // zero-cost starts land in the same round, like the eager
+            // engine this replaced).
+            while let Some(&Reverse((tk, _, _, _))) = heap.peek() {
+                if tk.0 > t {
+                    break;
+                }
+                let Reverse((_, _, _, ev)) = heap.pop().unwrap();
+                match ev {
+                    EvPayload::Drain { slot, gen } => {
+                        let sl = slot as usize;
+                        {
+                            let f = &self.slots[sl];
+                            if !f.alive || f.gen != gen {
+                                continue;
+                            }
+                        }
+                        // Settle the final rate epoch and complete.
+                        let f = &mut self.slots[sl];
+                        let dt = t - f.last_t;
+                        if f.rate > 0.0 && dt > 0.0 {
+                            let moved = f.rate * dt;
+                            f.remaining -= moved;
+                            for &l in &f.links {
+                                busy_bytes[l] += moved;
+                            }
+                        }
+                        f.last_t = t;
+                        delivered_bytes += f.bytes - f.remaining.max(0.0);
+                        f.alive = false;
+                        f.gen = f.gen.wrapping_add(1);
+                        let task = f.task as usize;
+                        let path_latency = f.path_latency;
+                        // The dead slot's route is never read again (slot
+                        // reuse overwrites it), so take it to unlink.
+                        let links = std::mem::take(&mut self.slots[sl].links);
+                        for &l in &links {
+                            let v = &mut self.link_flows[l];
+                            let pos = v
+                                .iter()
+                                .position(|&x| x == slot)
+                                .expect("completing flow indexed on its links");
+                            v.swap_remove(pos);
+                            self.scratch.dirty_links.push(l);
+                        }
+                        self.free.push(slot);
+                        let s = &mut st[task];
+                        s.latency_end = s.latency_end.max(t + path_latency);
+                        s.pending_flows -= 1;
+                        if s.pending_flows == 0 {
+                            let extra = match &wl.tasks[task] {
+                                TaskKind::Transfer { extra_latency, .. } => *extra_latency,
+                                TaskKind::Compute { .. } => 0.0,
+                            };
+                            heap.push(Reverse((
+                                TimeKey(s.latency_end + extra),
+                                EV_TASK,
+                                task as u64,
+                                EvPayload::Task(task as u32),
+                            )));
+                        }
+                        flows_changed = true;
+                    }
+                    EvPayload::Task(task) => {
+                        let ti = task as usize;
+                        if st[ti].done {
+                            continue;
+                        }
+                        st[ti].done = true;
+                        done_count += 1;
+                        for &dep in &dependents[ti] {
+                            let ds = &mut st[dep as usize];
+                            ds.remaining_deps -= 1;
+                            if ds.remaining_deps == 0 {
+                                start_task!(dep, t);
+                            }
+                        }
+                    }
+                }
+            }
+
+            if flows_changed {
+                resolve_rates(
+                    topo,
+                    mode,
+                    &mut self.slots,
+                    &self.link_flows,
+                    &mut self.scratch,
+                    t,
+                    &mut busy_bytes,
+                    &mut heap,
+                );
+                flows_changed = false;
+            }
+        }
+
+        assert_eq!(
+            done_count, nt,
+            "flow workload deadlock: {done_count}/{nt} tasks completed (cyclic lowering?)"
+        );
+
+        // Utilization report, hottest first, ties by link id.
+        let mut link_util: Vec<LinkUtil> = busy_bytes
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b > 0.0)
+            .map(|(l, &b)| LinkUtil {
+                link: l,
+                name: topo.link_name(l),
+                utilization: if t > 0.0 {
+                    b / (topo.links[l].capacity * t)
+                } else {
+                    0.0
+                },
+            })
+            .collect();
+        link_util.sort_by(|a, b| {
+            b.utilization
+                .total_cmp(&a.utilization)
+                .then(a.link.cmp(&b.link))
+        });
+        let max_link_util = link_util.first().map(|u| u.utilization).unwrap_or(0.0);
+
+        NetsimReport {
+            batch_time: t,
+            n_flows,
+            total_bytes,
+            delivered_bytes,
+            events,
+            link_util,
+            max_link_util,
+        }
+    }
+}
+
+/// Run `wl` on `topo` and return the contention-aware report
+/// (convenience wrapper constructing a fresh [`FairshareEngine`]).
 ///
 /// Panics if the workload DAG is cyclic (a lowering bug, mirroring the
 /// analytic simulator's deadlock assert).
 pub fn run(topo: &LinkGraph, wl: &Workload) -> NetsimReport {
-    let nt = wl.tasks.len();
-    let mut st: Vec<TaskState> = vec![TaskState::default(); nt];
-    let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); nt];
-    for (i, deps) in wl.deps.iter().enumerate() {
-        st[i].remaining_deps = deps.len() as u32;
-        for &d in deps {
-            dependents[d as usize].push(i as u32);
-        }
-    }
-
-    // Completion-event heap: (time, seq, task). `seq` keeps pops stable
-    // under exact time ties.
-    let mut heap: BinaryHeap<Reverse<(TimeKey, u64, u32)>> = BinaryHeap::new();
-    let mut seq: u64 = 0;
-    let mut active: Vec<ActiveFlow> = Vec::new();
-    let mut busy_bytes: Vec<f64> = vec![0.0; topo.links.len()];
-    let mut n_flows = 0usize;
-    let mut total_bytes = 0.0f64;
-    let mut delivered_bytes = 0.0f64;
-    let mut events = 0usize;
-    let mut done_count = 0usize;
-
-    // Start a task at time `t`: schedule its completion (Compute) or
-    // materialize its flows (Transfer).
-    macro_rules! start_task {
-        ($i:expr, $t:expr) => {{
-            let i: u32 = $i;
-            let t: f64 = $t;
-            let s = &mut st[i as usize];
-            debug_assert!(!s.started);
-            s.started = true;
-            s.latency_end = t;
-            match &wl.tasks[i as usize] {
-                TaskKind::Compute { seconds } => {
-                    seq += 1;
-                    heap.push(Reverse((TimeKey(t + seconds), seq, i)));
-                }
-                TaskKind::Transfer {
-                    flows,
-                    extra_latency,
-                } => {
-                    let mut pending = 0u32;
-                    for f in flows {
-                        if f.src == f.dst || f.bytes <= 0.5 {
-                            continue; // no network crossing
-                        }
-                        let p = topo.path(f.src, f.dst);
-                        n_flows += 1;
-                        total_bytes += f.bytes;
-                        active.push(ActiveFlow {
-                            task: i,
-                            bytes: f.bytes,
-                            remaining: f.bytes,
-                            rate: 0.0,
-                            cap: p.flow_cap,
-                            links: p.links,
-                            path_latency: p.latency,
-                        });
-                        pending += 1;
-                    }
-                    st[i as usize].pending_flows = pending;
-                    if pending == 0 {
-                        seq += 1;
-                        heap.push(Reverse((TimeKey(t + extra_latency), seq, i)));
-                    }
-                }
-            }
-        }};
-    }
-
-    let mut t = 0.0f64;
-    let mut ready: Vec<u32> = Vec::new();
-    for i in 0..nt as u32 {
-        if st[i as usize].remaining_deps == 0 {
-            ready.push(i);
-        }
-    }
-    for i in ready {
-        start_task!(i, t);
-    }
-    recompute_rates(topo, &mut active);
-
-    loop {
-        // Next flow drain under current (constant) rates.
-        let mut t_drain = f64::INFINITY;
-        for f in &active {
-            if f.rate > 0.0 {
-                t_drain = t_drain.min(t + f.remaining / f.rate);
-            }
-        }
-        let t_event = heap
-            .peek()
-            .map(|Reverse((k, _, _))| k.0)
-            .unwrap_or(f64::INFINITY);
-        let t_next = t_drain.min(t_event);
-        if t_next.is_infinite() {
-            break;
-        }
-        events += 1;
-
-        // Advance: drain bytes, accumulate per-link transferred volume.
-        let dt = (t_next - t).max(0.0);
-        if dt > 0.0 {
-            for f in &mut active {
-                let moved = f.rate * dt;
-                f.remaining -= moved;
-                for &l in &f.links {
-                    busy_bytes[l] += moved;
-                }
-            }
-        }
-        t = t_next;
-
-        let mut changed = false;
-        // Flow completions (≤ half a byte left counts as drained).
-        let mut i = 0;
-        while i < active.len() {
-            if active[i].remaining <= 0.5 {
-                let f = active.swap_remove(i);
-                delivered_bytes += f.bytes - f.remaining.max(0.0);
-                let s = &mut st[f.task as usize];
-                s.latency_end = s.latency_end.max(t + f.path_latency);
-                s.pending_flows -= 1;
-                if s.pending_flows == 0 {
-                    let extra = match &wl.tasks[f.task as usize] {
-                        TaskKind::Transfer { extra_latency, .. } => *extra_latency,
-                        TaskKind::Compute { .. } => 0.0,
-                    };
-                    seq += 1;
-                    heap.push(Reverse((TimeKey(s.latency_end + extra), seq, f.task)));
-                }
-                changed = true;
-            } else {
-                i += 1;
-            }
-        }
-        // Task completions due now (and any cascade of 0-cost starts).
-        while let Some(&Reverse((k, _, _))) = heap.peek() {
-            if k.0 > t {
-                break;
-            }
-            let Reverse((_, _, task)) = heap.pop().unwrap();
-            let s = &mut st[task as usize];
-            if s.done {
-                continue;
-            }
-            s.done = true;
-            done_count += 1;
-            for &dep in &dependents[task as usize] {
-                let ds = &mut st[dep as usize];
-                ds.remaining_deps -= 1;
-                if ds.remaining_deps == 0 {
-                    start_task!(dep, t);
-                }
-            }
-            changed = true;
-        }
-        if changed {
-            recompute_rates(topo, &mut active);
-        }
-    }
-
-    assert_eq!(
-        done_count, nt,
-        "flow workload deadlock: {done_count}/{nt} tasks completed (cyclic lowering?)"
-    );
-
-    // Utilization report, hottest first, ties by link id.
-    let mut link_util: Vec<LinkUtil> = busy_bytes
-        .iter()
-        .enumerate()
-        .filter(|(_, &b)| b > 0.0)
-        .map(|(l, &b)| LinkUtil {
-            link: l,
-            name: topo.link_name(l),
-            utilization: if t > 0.0 {
-                b / (topo.links[l].capacity * t)
-            } else {
-                0.0
-            },
-        })
-        .collect();
-    link_util.sort_by(|a, b| {
-        b.utilization
-            .total_cmp(&a.utilization)
-            .then(a.link.cmp(&b.link))
-    });
-    let max_link_util = link_util.first().map(|u| u.utilization).unwrap_or(0.0);
-
-    NetsimReport {
-        batch_time: t,
-        n_flows,
-        total_bytes,
-        delivered_bytes,
-        events,
-        link_util,
-        max_link_util,
-    }
+    FairshareEngine::new(topo).run(topo, wl)
 }
 
-/// Progressive filling: raise every unfrozen flow's rate uniformly;
-/// freeze a flow when it hits its per-flow ceiling or a link on its path
-/// saturates. The result is the max-min fair allocation with rate caps.
-/// Deterministic: pure arithmetic over the active set in index order.
-fn recompute_rates(topo: &LinkGraph, active: &mut [ActiveFlow]) {
-    if active.is_empty() {
-        return;
-    }
-    let nl = topo.links.len();
-    // Only links that carry at least one active flow participate.
-    let mut n_unfrozen: Vec<u32> = vec![0; nl];
-    let mut used: Vec<f64> = vec![0.0; nl];
-    let mut touched: Vec<usize> = Vec::new();
-    for f in active.iter() {
-        for &l in &f.links {
-            if n_unfrozen[l] == 0 {
-                touched.push(l);
+/// [`run`] under an explicit [`RefillMode`] (the property suite compares
+/// `Incremental` against `FullRefill` field-for-field).
+pub fn run_with_mode(topo: &LinkGraph, wl: &Workload, mode: RefillMode) -> NetsimReport {
+    FairshareEngine::new(topo).run_with_mode(topo, wl, mode)
+}
+
+/// Re-solve rates after flows arrived/completed. `Incremental` walks
+/// only the components reachable from the dirty links; `FullRefill`
+/// walks every alive flow. Both hand each component — flows in
+/// canonical (arrival-id) order — to [`fill_component`], so a flow's
+/// rate is the same bits no matter which mode computed it; flows whose
+/// rate is unchanged are left untouched (no byte settlement, no heap
+/// push), which is what keeps the two modes' event streams identical.
+#[allow(clippy::too_many_arguments)]
+fn resolve_rates(
+    topo: &LinkGraph,
+    mode: RefillMode,
+    slots: &mut [ActiveFlow],
+    link_flows: &[Vec<u32>],
+    scratch: &mut Scratch,
+    t: f64,
+    busy_bytes: &mut [f64],
+    heap: &mut BinaryHeap<HeapEv>,
+) {
+    let Scratch {
+        dirty_links,
+        link_seen,
+        flow_seen,
+        epoch,
+        comp,
+        comp_links,
+        stack,
+        n_unfrozen,
+        used,
+        frozen,
+        new_rates,
+        order,
+    } = scratch;
+    *epoch += 1;
+    let ep = *epoch;
+
+    // Grow a component from DFS-discovered links (flows adjacent via
+    // shared links).
+    macro_rules! grow_component {
+        () => {
+            while let Some(l) = stack.pop() {
+                for &slot in &link_flows[l] {
+                    if flow_seen[slot as usize] != ep {
+                        flow_seen[slot as usize] = ep;
+                        comp.push(slot);
+                        for &l2 in &slots[slot as usize].links {
+                            if link_seen[l2] != ep {
+                                link_seen[l2] = ep;
+                                stack.push(l2);
+                            }
+                        }
+                    }
+                }
             }
+        };
+    }
+
+    match mode {
+        RefillMode::Incremental => {
+            for &seed in dirty_links.iter() {
+                if link_seen[seed] == ep {
+                    continue;
+                }
+                comp.clear();
+                stack.clear();
+                link_seen[seed] = ep;
+                stack.push(seed);
+                grow_component!();
+                if comp.is_empty() {
+                    continue; // completing flow left the link idle
+                }
+                comp.sort_unstable_by_key(|&s| slots[s as usize].id);
+                fill_component(
+                    topo, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t,
+                    busy_bytes, heap,
+                );
+            }
+        }
+        RefillMode::FullRefill => {
+            order.clear();
+            for (si, f) in slots.iter().enumerate() {
+                if f.alive {
+                    order.push(si as u32);
+                }
+            }
+            order.sort_unstable_by_key(|&s| slots[s as usize].id);
+            for &slot in order.iter() {
+                if flow_seen[slot as usize] == ep {
+                    continue;
+                }
+                comp.clear();
+                stack.clear();
+                flow_seen[slot as usize] = ep;
+                comp.push(slot);
+                for &l in &slots[slot as usize].links {
+                    if link_seen[l] != ep {
+                        link_seen[l] = ep;
+                        stack.push(l);
+                    }
+                }
+                grow_component!();
+                comp.sort_unstable_by_key(|&s| slots[s as usize].id);
+                fill_component(
+                    topo, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t,
+                    busy_bytes, heap,
+                );
+            }
+        }
+        RefillMode::Auto => unreachable!("mode resolved before the run loop"),
+    }
+    dirty_links.clear();
+}
+
+/// Progressive filling over one link-sharing component: raise every
+/// unfrozen flow's rate uniformly; freeze a flow when it hits its
+/// per-flow ceiling or a link on its path saturates. The result is the
+/// max-min fair allocation with rate caps — a pure function of the
+/// component's (canonically ordered) flows and links, which is what
+/// makes incremental and full refills bit-identical. Flows whose rate
+/// is unchanged are not touched; changed flows settle their drained
+/// bytes at `t`, bump their generation, and push a fresh predicted
+/// drain event.
+#[allow(clippy::too_many_arguments)]
+fn fill_component(
+    topo: &LinkGraph,
+    slots: &mut [ActiveFlow],
+    comp: &[u32],
+    comp_links: &mut Vec<usize>,
+    n_unfrozen: &mut [u32],
+    used: &mut [f64],
+    frozen: &mut Vec<bool>,
+    new_rates: &mut Vec<f64>,
+    t: f64,
+    busy_bytes: &mut [f64],
+    heap: &mut BinaryHeap<HeapEv>,
+) {
+    comp_links.clear();
+    for &s in comp {
+        for &l in &slots[s as usize].links {
+            comp_links.push(l);
             n_unfrozen[l] += 1;
         }
     }
-    touched.sort_unstable();
-    touched.dedup();
+    comp_links.sort_unstable();
+    comp_links.dedup();
 
-    let mut frozen: Vec<bool> = vec![false; active.len()];
-    let mut left = active.len();
+    frozen.clear();
+    frozen.resize(comp.len(), false);
+    new_rates.clear();
+    new_rates.resize(comp.len(), 0.0);
+    let mut left = comp.len();
     let mut fill = 0.0f64;
     while left > 0 {
         // Largest uniform increment before a constraint binds. Track the
@@ -386,7 +839,7 @@ fn recompute_rates(topo: &LinkGraph, active: &mut [ActiveFlow]) {
         let mut delta = f64::INFINITY;
         let mut bind_link: Option<usize> = None;
         let mut bind_flow: Option<usize> = None;
-        for &l in &touched {
+        for &l in comp_links.iter() {
             if n_unfrozen[l] > 0 {
                 let slack = topo.links[l].capacity - used[l] - n_unfrozen[l] as f64 * fill;
                 let d = slack / n_unfrozen[l] as f64;
@@ -397,12 +850,12 @@ fn recompute_rates(topo: &LinkGraph, active: &mut [ActiveFlow]) {
                 }
             }
         }
-        for (i, f) in active.iter().enumerate() {
-            if !frozen[i] {
-                let d = f.cap - fill;
+        for (ci, &s) in comp.iter().enumerate() {
+            if !frozen[ci] {
+                let d = slots[s as usize].cap - fill;
                 if d < delta {
                     delta = d;
-                    bind_flow = Some(i);
+                    bind_flow = Some(ci);
                     bind_link = None;
                 }
             }
@@ -411,20 +864,21 @@ fn recompute_rates(topo: &LinkGraph, active: &mut [ActiveFlow]) {
 
         // Freeze everything the new fill level saturates.
         let mut froze_any = false;
-        for (i, f) in active.iter_mut().enumerate() {
-            if frozen[i] {
+        for (ci, &s) in comp.iter().enumerate() {
+            if frozen[ci] {
                 continue;
             }
+            let f = &slots[s as usize];
             let at_cap = fill >= f.cap * (1.0 - 1e-12);
             let on_saturated = f.links.iter().any(|&l| {
                 let slack = topo.links[l].capacity - used[l] - n_unfrozen[l] as f64 * fill;
                 slack <= topo.links[l].capacity * 1e-12
             });
-            let forced = bind_flow == Some(i)
-                || bind_link.is_some_and(|bl| f.links.contains(&bl));
+            let forced =
+                bind_flow == Some(ci) || bind_link.is_some_and(|bl| f.links.contains(&bl));
             if at_cap || on_saturated || forced {
-                frozen[i] = true;
-                f.rate = fill;
+                frozen[ci] = true;
+                new_rates[ci] = fill;
                 left -= 1;
                 froze_any = true;
                 for &l in &f.links {
@@ -436,13 +890,50 @@ fn recompute_rates(topo: &LinkGraph, active: &mut [ActiveFlow]) {
         debug_assert!(froze_any, "progressive filling stalled");
         if !froze_any {
             // Defensive fallback: freeze everything at the current fill.
-            for (i, f) in active.iter_mut().enumerate() {
-                if !frozen[i] {
-                    frozen[i] = true;
-                    f.rate = fill;
+            for (fz, r) in frozen.iter_mut().zip(new_rates.iter_mut()) {
+                if !*fz {
+                    *fz = true;
+                    *r = fill;
                     left -= 1;
                 }
             }
+        }
+    }
+
+    // Restore the link-indexed scratch invariant (all zeros).
+    for &l in comp_links.iter() {
+        n_unfrozen[l] = 0;
+        used[l] = 0.0;
+    }
+
+    // Apply: settle + re-stamp only flows whose rate actually changed.
+    for (ci, &s) in comp.iter().enumerate() {
+        let f = &mut slots[s as usize];
+        let r = new_rates[ci];
+        if r.to_bits() == f.rate.to_bits() {
+            continue;
+        }
+        let dt = t - f.last_t;
+        if f.rate > 0.0 && dt > 0.0 {
+            let moved = f.rate * dt;
+            f.remaining -= moved;
+            for &l in &f.links {
+                busy_bytes[l] += moved;
+            }
+        }
+        f.last_t = t;
+        f.rate = r;
+        f.gen = f.gen.wrapping_add(1);
+        if r > 0.0 {
+            heap.push(Reverse((
+                TimeKey(t + f.remaining / r),
+                EV_DRAIN,
+                f.id,
+                EvPayload::Drain {
+                    slot: s,
+                    gen: f.gen,
+                },
+            )));
         }
     }
 }
@@ -695,6 +1186,83 @@ mod tests {
         for (x, y) in a.link_util.iter().zip(&b.link_util) {
             assert_eq!(x.utilization.to_bits(), y.utilization.to_bits());
         }
+    }
+
+    #[test]
+    fn incremental_matches_full_refill_bitwise() {
+        // The tentpole invariant: dirty-component rate maintenance must
+        // reproduce the naive every-event full refill to the bit —
+        // including on workloads with several disjoint components alive
+        // at once (NVLink pairs under separate leaves + cross-spine
+        // flows), where the incremental path actually skips work.
+        let c = Cluster::spine_leaf_h100(64, 2.0);
+        let topo = LinkGraph::from_cluster(&c);
+        let mut wl = Workload::new();
+        let mut prev: Option<u32> = None;
+        for i in 0..6u32 {
+            let deps: Vec<u32> = prev.into_iter().collect();
+            let cmp = wl.add(TaskKind::Compute { seconds: 2e-5 }, &deps);
+            let xfer = wl.add(
+                TaskKind::Transfer {
+                    flows: vec![
+                        // Disjoint NVLink pairs in two different leaves.
+                        FlowSpec { src: 0, dst: 1, bytes: 3e8 + i as f64 * 1e7 },
+                        FlowSpec { src: 8, dst: 9, bytes: 2e8 },
+                        // Cross-spine contenders sharing the trunk.
+                        FlowSpec { src: (i as usize) % 8, dst: 32 + i as usize, bytes: 1e8 },
+                        FlowSpec { src: 16, dst: 48, bytes: 5e7 },
+                    ],
+                    extra_latency: 1e-6,
+                },
+                &[cmp],
+            );
+            prev = Some(xfer);
+        }
+        let inc = run_with_mode(&topo, &wl, RefillMode::Incremental);
+        let full = run_with_mode(&topo, &wl, RefillMode::FullRefill);
+        inc.assert_bits_eq(&full, "spine-leaf chain");
+        assert!(inc.n_flows > 0 && inc.batch_time > 0.0);
+    }
+
+    #[test]
+    fn engine_reuse_is_bit_identical() {
+        // One engine, many runs: scratch reuse must not leak state
+        // between workloads.
+        let c = Cluster::spine_leaf_h100(64, 2.0);
+        let topo = LinkGraph::from_cluster(&c);
+        let mut engine = FairshareEngine::new(&topo);
+        let build = |n: u32| {
+            let mut wl = Workload::new();
+            for i in 0..n {
+                wl.add(
+                    TaskKind::Transfer {
+                        flows: vec![FlowSpec {
+                            src: i as usize,
+                            dst: 32 + i as usize,
+                            bytes: 1e8,
+                        }],
+                        extra_latency: 0.0,
+                    },
+                    &[],
+                );
+            }
+            wl
+        };
+        let a1 = engine.run(&topo, &build(8));
+        let b = engine.run(&topo, &build(3)); // different shape in between
+        let a2 = engine.run(&topo, &build(8));
+        a1.assert_bits_eq(&a2, "engine reuse");
+        assert!(b.n_flows == 3);
+        // And a fresh engine agrees.
+        let a3 = run(&topo, &build(8));
+        a1.assert_bits_eq(&a3, "fresh engine");
+    }
+
+    #[test]
+    fn refill_mode_resolves() {
+        assert_ne!(RefillMode::Auto.resolve(), RefillMode::Auto);
+        assert_eq!(RefillMode::Incremental.resolve(), RefillMode::Incremental);
+        assert_eq!(RefillMode::FullRefill.resolve(), RefillMode::FullRefill);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
-use crate::cost::CostModel;
+use crate::cost::{CostModel, PricingMode, RangePricer};
 use crate::graph::subgraph::{enumerate_sg, SgConfig};
 use crate::graph::LayerGraph;
 use crate::memory::MemSpec;
@@ -50,6 +50,9 @@ pub struct ExactOpts {
     /// Worker threads for the per-layer DP fan-out (0 = one per core).
     /// Deterministic: the plan is identical for every thread count.
     pub threads: usize,
+    /// Pricing implementation for the per-config cost models (`Auto` =
+    /// `NEST_REFERENCE` env); bit-identical either way.
+    pub pricing: PricingMode,
 }
 
 impl Default for ExactOpts {
@@ -60,6 +63,7 @@ impl Default for ExactOpts {
             recompute: false,
             dp_width: 1,
             threads: 0,
+            pricing: PricingMode::Auto,
         }
     }
 }
@@ -101,9 +105,10 @@ fn layer_states_for_k(
     out: &mut Vec<DpEntry>,
 ) {
     let l_recv = boundary_level(cluster, k);
-    // Per SUB-GRAPH config: the block [k−a, k)'s class coverage and
-    // memory bound (invariant over the layer loop).
-    let ctxs: Vec<Option<(crate::hw::ClassMask, f64)>> = cms
+    // Per SUB-GRAPH config: the block [k−a, k)'s class coverage, memory
+    // bound, resolved pricer, and send boundary level (all invariant
+    // over the layer loop — hoisted out of the O(n²) scans).
+    let ctxs: Vec<Option<(RangePricer, f64, Option<usize>)>> = cms
         .iter()
         .map(|cm| {
             let a = cm.group;
@@ -111,7 +116,12 @@ fn layer_states_for_k(
                 return None;
             }
             let mask = cluster.pool.replicated_mask(k - a, k, d, stride);
-            Some((mask, cluster.pool.min_capacity(mask)))
+            let l_send = if s > 1 {
+                Some(boundary_level(cluster, k - a))
+            } else {
+                None
+            };
+            Some((cm.pricer(mask), cluster.pool.min_capacity(mask), l_send))
         })
         .collect();
     for i in (0..n).rev() {
@@ -126,19 +136,15 @@ fn layer_states_for_k(
             if a > k || (s > 1 && k - a < s - 1) {
                 continue;
             }
-            let (mask, cap) = ctxs[ci].expect("ctx exists when a <= k");
+            let (pricer, cap, l_send) = ctxs[ci].expect("ctx exists when a <= k");
             let stash = s - 1;
-            let l_send = if s > 1 {
-                Some(boundary_level(cluster, k - a))
-            } else {
-                None
-            };
             if s == 1 {
                 let Some(spec) = cm.stage_choose_spec(i, n, stash, cap, zero_cap, recompute)
                 else {
                     continue;
                 };
-                let load = cm.stage_load_on(mask, i, n, Some(l_recv), None, &spec, cluster);
+                let load =
+                    cm.stage_load_priced(&pricer, i, n, Some(l_recv), None, &spec, cluster);
                 *states += 1;
                 if best.map(|(b, _)| load < b).unwrap_or(true) {
                     best = Some((
@@ -161,7 +167,8 @@ fn layer_states_for_k(
                 else {
                     break; // memory monotone in j
                 };
-                let load = cm.stage_load_on(mask, i, j, Some(l_recv), l_send, &spec, cluster);
+                let load =
+                    cm.stage_load_priced(&pricer, i, j, Some(l_recv), l_send, &spec, cluster);
                 *states += 1;
                 let cand = load.max(rest);
                 if best.map(|(b, _)| cand < b).unwrap_or(true) {
@@ -206,7 +213,7 @@ pub fn solve_exact(graph: &LayerGraph, cluster: &Cluster, opts: &ExactOpts) -> O
     );
     let cms: Vec<CostModel> = sgs
         .iter()
-        .map(|sg| CostModel::new(graph, cluster, *sg))
+        .map(|sg| CostModel::with_mode(graph, cluster, *sg, opts.pricing))
         .collect();
 
     // dp[(i, k, s)] = min bottleneck for suffix [i, n) on k tail devices
@@ -299,10 +306,11 @@ pub fn solve_exact(graph: &LayerGraph, cluster: &Cluster, opts: &ExactOpts) -> O
                 // The first stage occupies the top block [k−a, k).
                 let mask = cluster.pool.replicated_mask(k - a, k, d, k_rep);
                 let fcap = cluster.pool.min_capacity(mask);
+                let pricer = cm.pricer(mask);
                 let eval = |j: usize, rest: f64| -> Option<(f64, Back)> {
                     let spec =
                         cm.stage_choose_spec(0, j, stash, fcap, zero_cap, opts.recompute)?;
-                    let load = cm.stage_load_on(mask, 0, j, None, l_send, &spec, cluster);
+                    let load = cm.stage_load_priced(&pricer, 0, j, None, l_send, &spec, cluster);
                     Some((
                         load.max(rest),
                         Back {
@@ -437,7 +445,7 @@ pub fn brute_force_batch_time(
     );
     let cms: Vec<CostModel> = sgs
         .iter()
-        .map(|sg| CostModel::new(graph, cluster, *sg))
+        .map(|sg| CostModel::with_mode(graph, cluster, *sg, opts.pricing))
         .collect();
 
     let mut best: Option<f64> = None;

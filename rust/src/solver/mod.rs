@@ -100,7 +100,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::cost::CostModel;
+use crate::cost::{CostModel, PricingMode};
 use crate::graph::subgraph::{enumerate_sg, SgConfig};
 use crate::graph::LayerGraph;
 use crate::hw::ClassMask;
@@ -124,6 +124,11 @@ pub struct SolverOpts {
     /// (0 = one per available core). The returned plan is identical for
     /// every thread count — see the module docs.
     pub threads: usize,
+    /// Pricing implementation for the cost models the search builds
+    /// (`Auto` = `NEST_REFERENCE` env). The optimized tables are
+    /// bit-identical to the reference walks, so plans never depend on
+    /// this — the property suite proves it.
+    pub pricing: PricingMode,
 }
 
 impl Default for SolverOpts {
@@ -134,6 +139,7 @@ impl Default for SolverOpts {
             try_recompute: true,
             try_no_recompute: true,
             threads: 0,
+            pricing: PricingMode::Auto,
         }
     }
 }
@@ -299,14 +305,19 @@ fn run_dp(
         spec: vec![MemSpec::plain(); (s_max + 1) * (n + 1)],
     };
 
+    // Boundary levels memoized per block index: the recv level of the
+    // state with `s` stages remaining is `blev[s]`, its send level
+    // `blev[s − 1]` — computed once instead of per (s) pair.
+    let blev: Vec<usize> = (0..=s_max)
+        .map(|s| if s == 0 { 0 } else { boundary_level(cluster, s * g) })
+        .collect();
     for s in 1..=s_max {
         let StageCtx { mask, cap } = ctxs[s];
-        let l_recv = boundary_level(cluster, s * g);
-        let l_send = if s > 1 {
-            Some(boundary_level(cluster, (s - 1) * g))
-        } else {
-            None
-        };
+        // Per-s invariants hoisted out of the cut scan: the resolved
+        // class pricer and the boundary levels.
+        let pricer = cm.pricer(mask);
+        let l_recv = blev[s];
+        let l_send = if s > 1 { Some(blev[s - 1]) } else { None };
         let stash = s - 1;
         // Suffix [i, n) needs at least s layers.
         for i in 0..=(n - s) {
@@ -315,13 +326,13 @@ fn run_dp(
                 // strictly exceeds the compute lower bound here (the
                 // producer edge pays latency), so `lb >= bound` implies
                 // the state is strictly worse than the incumbent.
-                if cm.stage_load_lb_on(mask, i, n) >= bound {
+                if cm.stage_load_lb_priced(&pricer, i, n) >= bound {
                     continue;
                 }
                 if let Some(spec) = cm.stage_choose_spec(i, n, stash, cap, zero_cap, recompute)
                 {
                     let load =
-                        cm.stage_load_on(mask, i, n, Some(l_recv), None, &spec, cluster);
+                        cm.stage_load_priced(&pricer, i, n, Some(l_recv), None, &spec, cluster);
                     *states += 1;
                     if load <= bound {
                         let ix = t.idx(i, 1);
@@ -341,7 +352,7 @@ fn run_dp(
                 // in j — exact pruning once it exceeds the incumbent or
                 // the local best (stage_load > lb strictly, so no
                 // bound-tying candidate is ever lost to this break).
-                let lb = cm.stage_load_lb_on(mask, i, j);
+                let lb = cm.stage_load_lb_priced(&pricer, i, j);
                 if lb >= best.min(bound) {
                     break;
                 }
@@ -358,7 +369,8 @@ fn run_dp(
                     // Memory grows with j: no larger stage fits either.
                     break;
                 };
-                let load = cm.stage_load_on(mask, i, j, Some(l_recv), l_send, &spec, cluster);
+                let load =
+                    cm.stage_load_priced(&pricer, i, j, Some(l_recv), l_send, &spec, cluster);
                 *states += 1;
                 let cand = load.max(rest);
                 if cand < best {
@@ -397,10 +409,11 @@ fn eval_final(
 ) -> Option<(f64, usize, MemSpec)> {
     let n = cm.n_layers();
     let StageCtx { mask, cap } = first;
+    let pricer = cm.pricer(mask);
     let stash = p - 1;
     if p == 1 {
         let spec = cm.stage_choose_spec(0, n, 0, cap, zero_cap, recompute)?;
-        let load = cm.stage_load_on(mask, 0, n, None, None, &spec, cluster);
+        let load = cm.stage_load_priced(&pricer, 0, n, None, None, &spec, cluster);
         if load > bound {
             return None;
         }
@@ -409,7 +422,7 @@ fn eval_final(
     let l_send = boundary_level(cluster, (p - 1) * dp.g);
     let mut best: Option<(f64, usize, MemSpec)> = None;
     for j in 1..=(n - (p - 1)) {
-        let lb = cm.stage_load_lb_on(mask, 0, j);
+        let lb = cm.stage_load_lb_priced(&pricer, 0, j);
         let mut cutoff = bound;
         if let Some((b, _, _)) = best {
             cutoff = cutoff.min(b);
@@ -420,7 +433,7 @@ fn eval_final(
         let Some(spec) = cm.stage_choose_spec(0, j, stash, cap, zero_cap, recompute) else {
             break;
         };
-        let load = cm.stage_load_on(mask, 0, j, None, Some(l_send), &spec, cluster);
+        let load = cm.stage_load_priced(&pricer, 0, j, None, Some(l_send), &spec, cluster);
         let rest = dp.cost_at(j, p - 1);
         let cand = load.max(rest);
         if cand.is_finite() && best.map(|(b, _, _)| cand < b).unwrap_or(true) {
@@ -576,7 +589,7 @@ fn eval_config(
     if g > k_total {
         return out;
     }
-    let cm = CostModel::new(graph, cluster, sg);
+    let cm = CostModel::with_mode(graph, cluster, sg, opts.pricing);
     let s_max = s_cap.min(k_total / g).min(n);
     let global_batch = graph.global_batch;
     let hetero = !cluster.pool.is_homogeneous();
@@ -584,11 +597,10 @@ fn eval_config(
     // Compute-only bounds for config-level pruning: any p-stage pipeline's
     // bottleneck is at least the balanced share of the total compute and
     // at least the heaviest single layer — on the pool's *fastest* class,
-    // so the bound holds wherever the stages land.
+    // so the bound holds wherever the stages land. The single-layer max
+    // is precomputed by the cost model (same fold, same bits).
     let total_lb = cm.stage_load_lb_best(0, n);
-    let max_layer_lb = (0..n)
-        .map(|k| cm.stage_load_lb_best(k, k + 1))
-        .fold(0.0, f64::max);
+    let max_layer_lb = cm.max_single_layer_lb_best();
 
     // Homogeneous pools: every stage block has the same (single-class)
     // context, so DP tables are cached per ZeRO-degree cap (the cap
@@ -1074,6 +1086,44 @@ mod tests {
                 k,
             );
             assert_eq!(s.plans, t.plans, "hetero k={k} shortlists diverge");
+        }
+    }
+
+    #[test]
+    fn reference_pricing_reproduces_optimized_plans() {
+        // The O(1) range tables must not move a single bit of any plan:
+        // solve under both pricing modes and compare field-for-field.
+        let g = models::llama2_7b(1);
+        for c in [Cluster::fat_tree_tpuv4(64), Cluster::hetero_pool(32)] {
+            for threads in [1usize, 4] {
+                let opt = solve(
+                    &g,
+                    &c,
+                    &SolverOpts {
+                        threads,
+                        pricing: PricingMode::Optimized,
+                        ..Default::default()
+                    },
+                )
+                .expect("optimized feasible");
+                let refp = solve(
+                    &g,
+                    &c,
+                    &SolverOpts {
+                        threads,
+                        pricing: PricingMode::Reference,
+                        ..Default::default()
+                    },
+                )
+                .expect("reference feasible");
+                assert_eq!(opt.plan, refp.plan, "{} threads={threads}", c.name);
+                assert_eq!(
+                    opt.plan.batch_time.to_bits(),
+                    refp.plan.batch_time.to_bits(),
+                    "{} threads={threads}: batch times not bit-identical",
+                    c.name
+                );
+            }
         }
     }
 

@@ -28,7 +28,7 @@
 //! cross-topology table in [`crate::harness::refine`].
 
 use crate::graph::LayerGraph;
-use crate::netsim::{simulate_flows, LinkGraph};
+use crate::netsim::{simulate_flows_with, FairshareEngine, LinkGraph};
 use crate::network::Cluster;
 use crate::sim::Schedule;
 use crate::util::table::{fmt_time, Table};
@@ -143,12 +143,16 @@ pub fn refine(
     if top.plans.is_empty() {
         return None;
     }
+    // One fair-share engine for all K replays: the per-link buffers are
+    // sized once and reused (reports are bit-identical to fresh engines).
+    let mut engine = FairshareEngine::new(topo);
     let mut ranked: Vec<RefinedPlan> = top
         .plans
         .into_iter()
         .enumerate()
         .map(|(rank, plan)| {
-            let rep = simulate_flows(graph, cluster, topo, &plan, Schedule::OneFOneB);
+            let rep =
+                simulate_flows_with(&mut engine, graph, cluster, topo, &plan, Schedule::OneFOneB);
             let delta = (rep.batch_time - plan.batch_time) / plan.batch_time;
             RefinedPlan {
                 analytic_rank: rank,

@@ -21,3 +21,15 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+/// `NEST_REFERENCE=1` switches every hot path that keeps a naive twin
+/// (prefix-table pricing in [`crate::cost`], the incremental fair-share
+/// engine in [`crate::netsim::fairshare`]) to its reference
+/// implementation. Read once per process — the property suites pass the
+/// mode explicitly instead of mutating the environment.
+pub fn reference_mode() -> bool {
+    static REFERENCE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *REFERENCE.get_or_init(|| {
+        std::env::var("NEST_REFERENCE").map(|v| v == "1").unwrap_or(false)
+    })
+}

@@ -17,10 +17,11 @@
 mod common;
 
 use common::{assert_plans_identical, prop_seed, threaded};
-use nest::cost::CostModel;
-use nest::netsim::{fairshare, FlowSpec, LinkGraph, TaskKind, Workload};
+use nest::cost::{CostModel, PricingMode};
+use nest::memory::{MemSpec, ZeroStage};
+use nest::netsim::{fairshare, FlowSpec, LinkGraph, RefillMode, TaskKind, Workload};
 use nest::sim::{simulate, Schedule};
-use nest::solver::{solve, solve_topk};
+use nest::solver::{solve, solve_topk, SolverOpts};
 use nest::util::prop::{self, random_cluster, random_tiny_graph};
 use nest::util::rng::Rng;
 
@@ -113,6 +114,99 @@ fn prop_random_scenarios_topk_deterministic() {
         );
         for p in &a.plans {
             p.validate(&g, &c).unwrap_or_else(|e| panic!("{}: {e}", c.name));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Hot-path twins: O(1) range-pricing tables vs the naive reference, and
+// incremental fair-share vs the full refill. Both optimizations claim
+// bit-identical outputs; these suites are the proof on random inputs.
+// ---------------------------------------------------------------------
+
+fn pricing_opts(threads: usize, pricing: PricingMode) -> SolverOpts {
+    SolverOpts {
+        pricing,
+        ..threaded(threads)
+    }
+}
+
+#[test]
+fn prop_prefix_pricing_matches_reference() {
+    // Random hom/het clusters × random graphs: every cost-model range
+    // query — and therefore every solved plan, at 1 and 4 threads —
+    // must be bit-identical between the prefix/sparse-table pricing and
+    // the naive layer/tier-walking reference.
+    let seed = prop_seed(0x9A1C1E5);
+    prop::forall(12, seed, |rng| {
+        let c = random_cluster(rng);
+        let g = random_tiny_graph(rng);
+        let sg = nest::graph::subgraph::SgConfig::serial();
+        let opt = CostModel::with_mode(&g, &c, sg, PricingMode::Optimized);
+        let refm = CostModel::with_mode(&g, &c, sg, PricingMode::Reference);
+        let n = opt.n_layers();
+        let cap = c.pool.min_capacity_all();
+        for _ in 0..24 {
+            let i = rng.gen_range(n - 1);
+            let j = i + 1 + rng.gen_range(n - i - 1);
+            let rc = rng.gen_bool(0.5);
+            let spec = MemSpec {
+                zero: if rng.gen_bool(0.3) {
+                    ZeroStage::Z3 { degree: 4 }
+                } else {
+                    ZeroStage::None
+                },
+                recompute: rc,
+            };
+            let recv = if rng.gen_bool(0.5) {
+                Some(rng.gen_range(c.n_levels()))
+            } else {
+                None
+            };
+            let send = if rng.gen_bool(0.5) {
+                Some(rng.gen_range(c.n_levels()))
+            } else {
+                None
+            };
+            let mask = c.pool.full_mask();
+            let a = opt.stage_load_on(mask, i, j, recv, send, &spec, &c);
+            let b = refm.stage_load_on(mask, i, j, recv, send, &spec, &c);
+            assert_eq!(a.to_bits(), b.to_bits(), "{}: load [{i},{j})", c.name);
+            let stash = rng.gen_range(6);
+            assert_eq!(
+                opt.stage_peak_bytes(i, j, &spec, stash).to_bits(),
+                refm.stage_peak_bytes(i, j, &spec, stash).to_bits(),
+                "{}: peak [{i},{j})",
+                c.name
+            );
+            assert_eq!(
+                opt.stage_choose_spec(i, j, stash, cap, 8, rc),
+                refm.stage_choose_spec(i, j, stash, cap, 8, rc),
+                "{}: spec [{i},{j})",
+                c.name
+            );
+        }
+        // End to end: the full search is plan-identical under both
+        // pricing modes at 1 and 4 worker threads.
+        for threads in [1usize, 4] {
+            let o = solve(&g, &c, &pricing_opts(threads, PricingMode::Optimized));
+            let r = solve(&g, &c, &pricing_opts(threads, PricingMode::Reference));
+            match (o, r) {
+                (Some(a), Some(b)) => {
+                    assert_plans_identical(
+                        &a.plan,
+                        &b.plan,
+                        &format!("{} pricing threads={threads}", c.name),
+                    );
+                }
+                (None, None) => {}
+                (a, b) => panic!(
+                    "{}: feasibility depends on pricing mode (opt={}, ref={})",
+                    c.name,
+                    a.is_some(),
+                    b.is_some()
+                ),
+            }
         }
     });
 }
@@ -252,5 +346,62 @@ fn prop_netsim_fuzz_routing_deterministic_and_bytes_conserved() {
         assert_eq!(rep.batch_time.to_bits(), rep2.batch_time.to_bits());
         assert_eq!(rep.events, rep2.events);
         assert_eq!(rep.n_flows, rep2.n_flows);
+    });
+}
+
+#[test]
+fn prop_fairshare_incremental_matches_full_refill() {
+    // Random connected edge-lists × random flow DAGs (with parallel
+    // chains, so several link-sharing components are alive at once):
+    // the incremental dirty-component engine must reproduce the naive
+    // every-event full refill field-for-field, at bit precision.
+    let seed = prop_seed(0x1FC5_11A7);
+    prop::forall(16, seed, |rng| {
+        let json = random_edgelist_json(rng);
+        let parsed = nest::util::json::parse(&json).expect("fuzz JSON parses");
+        let topo = LinkGraph::from_json(&parsed).expect("fuzz topology builds");
+        let n = topo.n_devices();
+        let build_wl = |rng: &mut Rng| {
+            let mut wl = Workload::new();
+            // 1–3 independent chains of compute → concurrent flows.
+            for _ in 0..(1 + rng.gen_range(3)) {
+                let mut prev: Option<u32> = None;
+                for _ in 0..(1 + rng.gen_range(5)) {
+                    let deps: Vec<u32> = prev.into_iter().collect();
+                    let cmp = wl.add(
+                        TaskKind::Compute {
+                            seconds: rng.gen_f64() * 1e-3,
+                        },
+                        &deps,
+                    );
+                    let mut flows = Vec::new();
+                    for _ in 0..(1 + rng.gen_range(5)) {
+                        let src = rng.gen_range(n);
+                        let mut dst = rng.gen_range(n);
+                        if src == dst {
+                            dst = (dst + 1) % n;
+                        }
+                        flows.push(FlowSpec {
+                            src,
+                            dst,
+                            bytes: 1e6 * (1.0 + rng.gen_f64() * 1e3),
+                        });
+                    }
+                    prev = Some(wl.add(
+                        TaskKind::Transfer {
+                            flows,
+                            extra_latency: rng.gen_f64() * 1e-6,
+                        },
+                        &[cmp],
+                    ));
+                }
+            }
+            wl
+        };
+        let mut probe = rng.clone();
+        let inc = fairshare::run_with_mode(&topo, &build_wl(&mut probe), RefillMode::Incremental);
+        let mut probe = rng.clone();
+        let full = fairshare::run_with_mode(&topo, &build_wl(&mut probe), RefillMode::FullRefill);
+        inc.assert_bits_eq(&full, "incremental vs full refill");
     });
 }
