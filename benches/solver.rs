@@ -182,4 +182,24 @@ fn main() {
         )
     });
     report_speedup("solve_llama2_7b_256_tables_over_reference", &single_ref, &single_opt);
+
+    // Placement service: fingerprinting must be negligible next to a
+    // solve (it runs on every query), and a cache hit must be orders of
+    // magnitude cheaper than the cold solve it replaces.
+    use nest::service::{PlacementService, Query};
+    let q = Query::new(
+        models::llama2_7b(1),
+        Cluster::fat_tree_tpuv4(256),
+        SolverOpts::default(),
+    );
+    bench("service_query_fingerprint_llama2_7b", || q.fingerprint());
+    let mut svc = PlacementService::new(8);
+    let cold = bench_n("service_cold_solve_llama2_7b_256", 3, || {
+        PlacementService::new(8).solve_topk(&q, 1)
+    });
+    svc.solve_topk(&q, 1); // populate the cache once
+    let hit = bench_n("service_cache_hit_llama2_7b_256", 3, || {
+        svc.solve_topk(&q, 1)
+    });
+    report_speedup("service_hit_over_cold_llama2_7b_256", &cold, &hit);
 }

@@ -648,6 +648,57 @@ impl CostModel {
     }
 }
 
+/// A shareable pool of [`CostModel`] tables keyed by
+/// `(context key, SgConfig)`, so batched-sweep and service queries over
+/// the same (graph, cluster) context reuse one set of prefix tables per
+/// strategy instead of rebuilding them per query.
+///
+/// The context key is the caller's content fingerprint of the
+/// (graph, cluster) pair (see `crate::service::Query`); the arena never
+/// inspects the graph or cluster beyond building a model on a miss, so
+/// key collisions are the caller's responsibility. Entries are
+/// reference-counted: handed-out models stay valid even if the arena is
+/// dropped. Lookup is a linear scan — arenas hold at most a few dozen
+/// (context × strategy) pairs, far below hashing break-even, and
+/// `SgConfig` is a 4-field POD compare.
+#[derive(Debug, Default)]
+pub struct CostArena {
+    entries: Vec<((u64, SgConfig), std::rc::Rc<CostModel>)>,
+}
+
+impl CostArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The model for `(key, sg)`, building (and caching) it from
+    /// `graph`/`cluster` on first use. `graph`/`cluster` MUST be the
+    /// pair `key` fingerprints — on a hit they are not even read.
+    pub fn get(
+        &mut self,
+        key: u64,
+        graph: &LayerGraph,
+        cluster: &Cluster,
+        sg: SgConfig,
+    ) -> std::rc::Rc<CostModel> {
+        if let Some((_, cm)) = self.entries.iter().find(|(k, _)| *k == (key, sg)) {
+            return cm.clone();
+        }
+        let cm = std::rc::Rc::new(CostModel::new(graph, cluster, sg));
+        self.entries.push(((key, sg), cm.clone()));
+        cm
+    }
+
+    /// Number of cached (context × strategy) models.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 /// Forward wall-clock of one layer on one device: roofline matmul term
 /// plus vector-unit term.
 fn layer_fwd_time(
@@ -670,6 +721,30 @@ mod tests {
 
     fn setup() -> (LayerGraph, Cluster) {
         (models::gpt3_175b(1), Cluster::fat_tree_tpuv4(64))
+    }
+
+    #[test]
+    fn arena_shares_models_per_key_and_strategy() {
+        let (g, c) = setup();
+        let mut arena = CostArena::new();
+        let a = arena.get(0xABCD, &g, &c, SgConfig::tp(4));
+        let b = arena.get(0xABCD, &g, &c, SgConfig::tp(4));
+        assert!(std::rc::Rc::ptr_eq(&a, &b), "same (key, sg) must share");
+        assert_eq!(arena.len(), 1);
+
+        let other_sg = arena.get(0xABCD, &g, &c, SgConfig::serial());
+        assert!(!std::rc::Rc::ptr_eq(&a, &other_sg));
+        let other_key = arena.get(0x1234, &g, &c, SgConfig::tp(4));
+        assert!(!std::rc::Rc::ptr_eq(&a, &other_key));
+        assert_eq!(arena.len(), 3);
+
+        // A shared model prices identically to a fresh one.
+        let fresh = CostModel::new(&g, &c, SgConfig::tp(4));
+        let spec = MemSpec::plain();
+        assert_eq!(
+            a.stage_load(2, 10, None, None, &spec, &c).to_bits(),
+            fresh.stage_load(2, 10, None, None, &spec, &c).to_bits()
+        );
     }
 
     #[test]

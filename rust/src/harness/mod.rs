@@ -11,6 +11,7 @@ pub mod figures;
 pub mod netsim;
 pub mod perf;
 pub mod refine;
+pub mod service;
 pub mod tables;
 
 use crate::baselines::{alpa, manual, mcmc, mist, phaze};

@@ -8,10 +8,12 @@
 //! (with `--baseline`) fails if any metric regressed more than the
 //! tolerance against the committed `BENCH_BASELINE.json`. Each metric
 //! is the **minimum** over its repetitions, the standard noise-robust
-//! statistic for regression gating. Refresh the baseline with one line:
+//! statistic for regression gating (`_qps` throughput metrics gate in
+//! the opposite direction — see [`gate`]). Refresh only the measured
+//! metrics, preserving hand-added keys, with one line:
 //!
 //! ```text
-//! cargo run --release -- bench-smoke --out BENCH_BASELINE.json
+//! cargo run --release -- bench-smoke --write-baseline
 //! ```
 
 use crate::graph::models;
@@ -29,7 +31,10 @@ use super::netsim::{dumbbell_topology, spineleaf_topology};
 #[derive(Debug, Clone)]
 pub struct PerfMetric {
     pub name: String,
-    /// Minimum wall-clock seconds over the metric's repetitions.
+    /// Minimum wall-clock seconds over the metric's repetitions — or,
+    /// for metrics whose name ends in `_qps`, a throughput in
+    /// queries/sec (larger is better; [`gate`] flips direction on the
+    /// suffix).
     pub seconds: f64,
 }
 
@@ -57,7 +62,7 @@ impl PerfSmoke {
             ("mode", Json::str(self.mode)),
             (
                 "refresh",
-                Json::str("cargo run --release -- bench-smoke --out BENCH_BASELINE.json"),
+                Json::str("cargo run --release -- bench-smoke --write-baseline"),
             ),
             ("metrics", metrics),
         ])
@@ -168,6 +173,27 @@ pub fn run_smoke(quick: bool) -> PerfSmoke {
         seconds: rf.min.as_secs_f64(),
     });
 
+    // Placement-service throughput over the serve-bench query stream
+    // (cache hits + warm starts included — the production headline).
+    // The `_qps` suffix flips the gate: higher is better, so the
+    // committed baseline seeds this LOW and the 25% gate only trips if
+    // throughput *drops* below baseline/(1+tol).
+    let sopts_h = super::HarnessOpts::default().with_threads(0);
+    let serve = crate::harness::service::serve_bench(&sopts_h, if quick { 8 } else { 16 }, true);
+    assert_eq!(
+        serve.mismatches, 0,
+        "serve-bench answers diverged from cold twins"
+    );
+    println!(
+        "bench_smoke_serve_bench: {:.1} queries/s ({:.0}% hit rate)",
+        serve.qps,
+        serve.stats.hit_rate() * 100.0
+    );
+    metrics.push(PerfMetric {
+        name: "serve_qps".into(),
+        seconds: serve.qps,
+    });
+
     PerfSmoke {
         mode: if quick { "quick" } else { "full" },
         metrics,
@@ -190,7 +216,7 @@ pub fn gate(pr: &PerfSmoke, baseline: &Json, tolerance: f64) -> Result<(), Strin
     }
     let Some(base_metrics) = baseline.get("metrics").as_obj() else {
         return Err("baseline has no `metrics` object — refresh it with \
-                    `cargo run --release -- bench-smoke --out BENCH_BASELINE.json`"
+                    `cargo run --release -- bench-smoke --write-baseline`"
             .into());
     };
     let mut violations = Vec::new();
@@ -199,17 +225,27 @@ pub fn gate(pr: &PerfSmoke, baseline: &Json, tolerance: f64) -> Result<(), Strin
             violations.push(format!("baseline metric `{name}` is not a number"));
             continue;
         };
+        // Time metrics regress upward; `_qps` throughputs regress
+        // downward (the mirrored bound keeps the tolerance symmetric:
+        // base/(1+t), not base·(1−t)).
+        let rate = name.ends_with("_qps");
+        let unit = if rate { "qps" } else { "s" };
         match pr.get(name) {
             None => violations.push(format!("metric `{name}` missing from this run")),
-            Some(got) if got > base * (1.0 + tolerance) => violations.push(format!(
-                "{name}: {:.3}s vs baseline {:.3}s ({:+.0}% > {:.0}% tolerance)",
-                got,
-                base,
-                (got / base - 1.0) * 100.0,
-                tolerance * 100.0
-            )),
+            Some(got)
+                if (!rate && got > base * (1.0 + tolerance))
+                    || (rate && got < base / (1.0 + tolerance)) =>
+            {
+                violations.push(format!(
+                    "{name}: {:.3}{unit} vs baseline {:.3}{unit} ({:+.0}% beyond {:.0}% tolerance)",
+                    got,
+                    base,
+                    (got / base - 1.0) * 100.0,
+                    tolerance * 100.0
+                ))
+            }
             Some(got) => println!(
-                "BENCH-GATE ok {name}: {:.3}s vs baseline {:.3}s ({:+.0}%)",
+                "BENCH-GATE ok {name}: {:.3}{unit} vs baseline {:.3}{unit} ({:+.0}%)",
                 got,
                 base,
                 (got / base - 1.0) * 100.0
@@ -237,6 +273,61 @@ pub fn gate(pr: &PerfSmoke, baseline: &Json, tolerance: f64) -> Result<(), Strin
             violations.join("\n  ")
         ))
     }
+}
+
+/// The baseline document after refreshing `existing` with this run's
+/// metrics: measured metrics are overwritten, every *unknown* key —
+/// top-level (e.g. `note`) and per-metric — is preserved, so a
+/// hand-annotated baseline survives `--write-baseline` round trips.
+/// Quick-mode runs are refused: their shrunk workloads would poison
+/// the full-mode gate.
+pub fn merged_baseline(pr: &PerfSmoke, existing: Option<&Json>) -> Result<Json, String> {
+    if pr.mode != "full" {
+        return Err(
+            "refusing to write a baseline from a --quick run — quick workloads are \
+             shrunk, so their numbers would poison the full-mode gate"
+                .into(),
+        );
+    }
+    let mut doc = match existing {
+        None => std::collections::BTreeMap::new(),
+        Some(j) => match j.as_obj() {
+            Some(m) => m.clone(),
+            None => return Err("existing baseline is not a JSON object".into()),
+        },
+    };
+    let mut metrics = doc
+        .get("metrics")
+        .and_then(|m| m.as_obj())
+        .cloned()
+        .unwrap_or_default();
+    for m in &pr.metrics {
+        metrics.insert(m.name.clone(), Json::num(m.seconds));
+    }
+    doc.insert("metrics".into(), Json::Obj(metrics));
+    doc.insert("schema".into(), Json::str("nest-bench-smoke-v1"));
+    doc.insert("mode".into(), Json::str(pr.mode));
+    doc.insert(
+        "refresh".into(),
+        Json::str("cargo run --release -- bench-smoke --write-baseline"),
+    );
+    Ok(Json::Obj(doc))
+}
+
+/// `nest bench-smoke --write-baseline`: merge this run's metrics into
+/// the baseline file at `path` (see [`merged_baseline`]).
+pub fn write_baseline(pr: &PerfSmoke, path: &str) -> Result<(), String> {
+    let existing = match std::fs::read_to_string(path) {
+        Ok(text) => Some(crate::util::json::parse(&text).map_err(|e| format!("{path}: {e}"))?),
+        Err(_) => None,
+    };
+    let doc = merged_baseline(pr, existing.as_ref())?;
+    std::fs::write(path, crate::util::json::to_pretty(&doc)).map_err(|e| format!("{path}: {e}"))?;
+    println!(
+        "BENCH-BASELINE refreshed {} metric(s) in {path}",
+        pr.metrics.len()
+    );
+    Ok(())
 }
 
 #[cfg(test)]
@@ -321,8 +412,49 @@ mod tests {
             "netsim_fairshare_dumbbell",
             "netsim_fairshare_spineleaf",
             "solve_topk8_refine_dumbbell",
+            "serve_qps",
         ] {
             assert!(s.get(name).unwrap() > 0.0, "missing metric {name}");
         }
+    }
+
+    #[test]
+    fn gate_treats_qps_metrics_as_higher_is_better() {
+        let base = parse(r#"{"metrics": {"serve_qps": 10.0}}"#).unwrap();
+        // Faster service: far above baseline — fine.
+        assert!(gate(&smoke(&[("serve_qps", 100.0)]), &base, 0.25).is_ok());
+        // Within the mirrored tolerance band: 10/1.25 = 8.0.
+        assert!(gate(&smoke(&[("serve_qps", 8.5)]), &base, 0.25).is_ok());
+        // A real throughput drop must trip the gate.
+        let err = gate(&smoke(&[("serve_qps", 5.0)]), &base, 0.25).unwrap_err();
+        assert!(err.contains("serve_qps"), "unexpected message: {err}");
+    }
+
+    #[test]
+    fn merged_baseline_preserves_unknown_keys() {
+        let existing = parse(
+            r#"{"note": "hand-tuned", "mode": "full",
+                "metrics": {"a": 9.0, "legacy_metric": 3.0}}"#,
+        )
+        .unwrap();
+        let merged = merged_baseline(&smoke(&[("a", 1.0), ("b", 2.0)]), Some(&existing)).unwrap();
+        assert_eq!(merged.get("note").as_str(), Some("hand-tuned"));
+        assert_eq!(merged.get("metrics").get("a").as_f64(), Some(1.0));
+        assert_eq!(merged.get("metrics").get("b").as_f64(), Some(2.0));
+        // A metric this run didn't measure keeps its old value.
+        assert_eq!(merged.get("metrics").get("legacy_metric").as_f64(), Some(3.0));
+        assert_eq!(merged.get("schema").as_str(), Some("nest-bench-smoke-v1"));
+
+        // From scratch (no existing file) also works.
+        let fresh = merged_baseline(&smoke(&[("a", 1.0)]), None).unwrap();
+        assert_eq!(fresh.get("metrics").get("a").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn merged_baseline_refuses_quick_mode() {
+        let mut pr = smoke(&[("a", 0.1)]);
+        pr.mode = "quick";
+        let err = merged_baseline(&pr, None).unwrap_err();
+        assert!(err.contains("quick"), "unexpected message: {err}");
     }
 }

@@ -1,0 +1,243 @@
+//! `nest serve-bench`: the placement-service production headline —
+//! queries/sec over a repeating query stream, with the cache-hit and
+//! warm-start speedup breakdown and an elasticity migration-cost row.
+//!
+//! The stream cycles a co-design sweep grid (two models × three
+//! cluster scales, 6 unique cells), so a 16-query run exercises every
+//! service path: cold first-encounters, graph-neighbor warm starts
+//! (same model on a scaled cluster), and pure cache hits. Every
+//! non-hit answer is verified bit-identical against a freshly solved
+//! cold twin — the serve-bench doubles as an end-to-end soundness
+//! check, and [`ServeBenchReport::mismatches`] must be zero.
+
+use std::time::Instant;
+
+use crate::graph::models;
+use crate::network::Cluster;
+use crate::service::{ClusterDelta, PlacementService, Query, ServiceStats};
+use crate::solver::solve_topk;
+use crate::util::csv::Csv;
+use crate::util::table::{fmt_bytes, fmt_time, Table};
+
+use super::HarnessOpts;
+
+/// Outcome of one serve-bench run.
+#[derive(Debug, Clone)]
+pub struct ServeBenchReport {
+    /// Queries streamed through the service.
+    pub queries: usize,
+    /// Unique (model, cluster) cells in the stream.
+    pub unique_cells: usize,
+    /// Total service answer time (the qps denominator).
+    pub serve_seconds: f64,
+    /// Headline: queries per second through the service.
+    pub qps: f64,
+    /// Total cold-twin solve time over the same stream (what the
+    /// service replaced).
+    pub cold_seconds: f64,
+    /// Mean cold/serve ratio over cache hits (how much a hit saves).
+    pub hit_speedup: f64,
+    /// Mean cold/serve ratio over warm-started solves (evaluation-order
+    /// seeding only — modest by design; the plan is untouched).
+    pub warm_speedup: f64,
+    /// Served plans that were NOT bit-identical to their cold twin.
+    /// Must be zero; the CLI exits nonzero otherwise.
+    pub mismatches: usize,
+    /// Migration cost of the elasticity row (`reconcile` after failing
+    /// one outer switch-group): (param bytes moved, seconds).
+    pub migration: Option<(f64, f64)>,
+    pub stats: ServiceStats,
+}
+
+/// The sweep grid the stream cycles through: (label, graph ctor, devices).
+fn cells() -> Vec<(&'static str, crate::graph::LayerGraph, usize)> {
+    let mut out = Vec::new();
+    for devices in [8usize, 16, 32] {
+        out.push(("bert-large", models::bert_large(1), devices));
+        out.push(("mixtral-790m", models::mixtral_scaled(1), devices));
+    }
+    out
+}
+
+/// Stream `n_queries` through a fresh [`PlacementService`] and report
+/// queries/sec, the speedup breakdown, and an elasticity row. `quiet`
+/// suppresses all printing (the perf smoke runs this as a metric).
+pub fn serve_bench(opts: &HarnessOpts, n_queries: usize, quiet: bool) -> ServeBenchReport {
+    let grid = cells();
+    let queries: Vec<(usize, Query)> = (0..n_queries.max(1))
+        .map(|i| {
+            let (_, graph, devices) = &grid[i % grid.len()];
+            (
+                i % grid.len(),
+                Query::new(
+                    graph.clone(),
+                    Cluster::v100_cluster(*devices),
+                    opts.solver.clone(),
+                ),
+            )
+        })
+        .collect();
+
+    // Cold twins, one per unique cell: the verification oracle and the
+    // speedup denominator. Solved outside the timed loop.
+    let mut cold: Vec<Option<(Vec<crate::solver::plan::PlacementPlan>, f64)>> =
+        vec![None; grid.len()];
+    for (cell, q) in &queries {
+        if cold[*cell].is_none() {
+            let top = solve_topk(&q.graph, &q.cluster, &q.opts, 1);
+            cold[*cell] = Some((top.plans, top.solve_seconds));
+        }
+    }
+
+    let mut svc = PlacementService::new(grid.len() * 2);
+    let mut tbl = Table::new(&[
+        "q", "model", "devices", "source", "serve", "cold", "speedup",
+    ]);
+    let mut csv = Csv::new(&["query", "model", "devices", "source", "serve_s", "cold_s"]);
+    let mut serve_seconds = 0.0;
+    let mut cold_seconds = 0.0;
+    let mut mismatches = 0usize;
+    let mut hit_ratios = Vec::new();
+    let mut warm_ratios = Vec::new();
+
+    for (i, (cell, q)) in queries.iter().enumerate() {
+        let t0 = Instant::now();
+        let served = svc.solve_topk(q, 1);
+        let dt = t0.elapsed().as_secs_f64();
+        serve_seconds += dt;
+
+        let (cold_plans, cold_dt) = cold[*cell].as_ref().expect("twin solved above");
+        cold_seconds += cold_dt;
+        if served.plans != *cold_plans {
+            mismatches += 1;
+        }
+        let source = if served.cache_hit {
+            "hit"
+        } else if served.warm_started {
+            "warm"
+        } else {
+            "cold"
+        };
+        let ratio = cold_dt / dt.max(1e-9);
+        match source {
+            "hit" => hit_ratios.push(ratio),
+            "warm" => warm_ratios.push(ratio),
+            _ => {}
+        }
+        let (label, _, devices) = &grid[*cell];
+        tbl.row(vec![
+            (i + 1).to_string(),
+            label.to_string(),
+            devices.to_string(),
+            source.into(),
+            fmt_time(dt),
+            fmt_time(*cold_dt),
+            format!("{ratio:.1}x"),
+        ]);
+        csv.row(vec![
+            (i + 1).to_string(),
+            label.to_string(),
+            devices.to_string(),
+            source.into(),
+            format!("{dt:.6}"),
+            format!("{cold_dt:.6}"),
+        ]);
+    }
+
+    // Snapshot the stream's cache counters before the elasticity row
+    // (reconcile issues internal queries of its own).
+    let stats = svc.stats();
+
+    // Elasticity row: fail one outer switch-group under the largest
+    // bert cell and price the migration.
+    let (elabel, egraph, edevices) = &grid[grid.len() - 2];
+    let eq = Query::new(
+        egraph.clone(),
+        Cluster::v100_cluster(*edevices),
+        opts.solver.clone(),
+    );
+    let migration = svc
+        .reconcile(&eq, &ClusterDelta::FailOuterGroups { groups: 1 })
+        .ok()
+        .map(|r| (r.delta.param_bytes, r.delta.migration_seconds));
+
+    let mean = |v: &[f64]| {
+        if v.is_empty() {
+            1.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    };
+    let report = ServeBenchReport {
+        queries: queries.len(),
+        unique_cells: grid.len(),
+        serve_seconds,
+        qps: queries.len() as f64 / serve_seconds.max(1e-9),
+        cold_seconds,
+        hit_speedup: mean(&hit_ratios),
+        warm_speedup: mean(&warm_ratios),
+        mismatches,
+        migration,
+        stats,
+    };
+
+    if !quiet {
+        println!(
+            "== serve-bench: {} queries over {} unique (model, cluster) cells ==",
+            report.queries, report.unique_cells
+        );
+        print!("{}", tbl.render());
+        if let Some((bytes, secs)) = report.migration {
+            println!(
+                "elasticity: fail 1 outer group under {} @ {} devices -> migrate {} in {}",
+                elabel,
+                edevices,
+                fmt_bytes(bytes),
+                fmt_time(secs)
+            );
+        }
+        println!(
+            "serve: {:.1} queries/s ({} in {}), cold twins {}",
+            report.qps,
+            report.queries,
+            fmt_time(report.serve_seconds),
+            fmt_time(report.cold_seconds)
+        );
+        println!(
+            "cache: {:.0}% hit rate ({} hits, {} warm, {} cold); hit speedup {:.0}x, \
+             warm speedup {:.2}x",
+            stats.hit_rate() * 100.0,
+            stats.cache_hits,
+            stats.warm_solves,
+            stats.cold_solves,
+            report.hit_speedup,
+            report.warm_speedup
+        );
+        if report.mismatches > 0 {
+            println!(
+                "FAIL: {} served answer(s) diverged from their cold twins",
+                report.mismatches
+            );
+        }
+        let _ = csv.write(format!("{}/serve_bench.csv", opts.results_dir));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_bench_is_sound_and_hits_cache() {
+        let report = serve_bench(&HarnessOpts::quick().with_threads(1), 8, true);
+        assert_eq!(report.queries, 8);
+        assert_eq!(report.mismatches, 0, "served answers must match cold twins");
+        // 8 queries over 6 cells → 2 hits; cells 2..6 warm from neighbors.
+        assert_eq!(report.stats.cache_hits, 2);
+        assert!(report.stats.warm_solves >= 1);
+        assert!(report.qps > 0.0);
+        let (bytes, secs) = report.migration.expect("elasticity row feasible");
+        assert!(bytes > 0.0 && secs > 0.0);
+    }
+}

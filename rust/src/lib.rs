@@ -17,6 +17,9 @@
 //! * [`netsim`]: flow-level contention-aware network simulator —
 //!   explicit link graphs (tier expansion + arbitrary edge-lists),
 //!   plan→flow lowering, max-min fair-share engine.
+//! * [`service`]: placement-as-a-service — fingerprinted queries over
+//!   an LRU plan cache with warm-started solves and incremental
+//!   `reconcile` after elasticity events.
 //! * [`runtime`]: PJRT engine loading AOT HLO artifacts.
 //! * [`profiler`]: calibrates the compute model against real executions.
 //! * [`trainer`]: real pipeline-parallel training over thread-devices.
@@ -28,6 +31,7 @@ pub mod netsim;
 pub mod profiler;
 pub mod runtime;
 pub mod trainer;
+pub mod service;
 pub mod sim;
 pub mod solver;
 pub mod graph;

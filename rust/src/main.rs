@@ -9,6 +9,8 @@
 //!   refine     top-K analytic shortlist re-ranked by the flow simulator
 //!   refine-xval  cross-topology refinement table (where the ranking flips)
 //!   bench-smoke  deterministic perf smoke + CI bench-regression gate
+//!   serve-bench  placement-service throughput (queries/s, cache hit rate,
+//!              warm-start speedup, elasticity migration cost)
 //!   train      real pipeline-parallel training from AOT artifacts
 //!   profile    calibrate the compute model against PJRT probe runs
 //!   figure2|5|6|7|10|11, table2|4|6|7, v100   — paper reproductions
@@ -304,11 +306,17 @@ fn main() {
                 let out = args.get("out", "BENCH_PR.json");
                 let baseline = args.get_opt("baseline");
                 let tolerance = args.get_f64("tolerance", 0.25);
+                let refresh = args.has_flag("write-baseline");
                 args.check()?;
                 let smoke = nest::harness::perf::run_smoke(quick);
                 std::fs::write(&out, nest::util::json::to_pretty(&smoke.to_json()))
                     .map_err(|e| format!("{out}: {e}"))?;
                 println!("bench report written to {out}");
+                if refresh {
+                    // Merge measured metrics into the committed baseline,
+                    // preserving hand-added keys (refuses --quick runs).
+                    nest::harness::perf::write_baseline(&smoke, "BENCH_BASELINE.json")?;
+                }
                 if let Some(path) = baseline {
                     let text =
                         std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
@@ -320,6 +328,20 @@ fn main() {
                     );
                 }
                 Ok(())
+            }
+            "serve-bench" => {
+                let queries = args.get_usize("queries", 16);
+                args.check()?;
+                let report = nest::harness::service::serve_bench(&hopts, queries, false);
+                if report.mismatches > 0 {
+                    Err(format!(
+                        "placement service unsound: {} served answer(s) were not \
+                         bit-identical to their cold twins",
+                        report.mismatches
+                    ))
+                } else {
+                    Ok(())
+                }
             }
             "figure2" => {
                 figures::figure2(&hopts);
@@ -434,6 +456,10 @@ fn main() {
                      \x20            ever disagrees with plain solve)\n\
                      \x20 refine-xval  cross-topology refinement table: where the re-ranked winner flips (--topk K)\n\
                      \x20 bench-smoke  perf smoke --out BENCH_PR.json [--baseline BENCH_BASELINE.json --tolerance 0.25]\n\
+                     \x20            [--write-baseline: merge measured metrics into BENCH_BASELINE.json, keeping other keys]\n\
+                     \x20 serve-bench  placement-as-a-service throughput: stream --queries N (default 16) over a model x\n\
+                     \x20            cluster grid; reports queries/s, cache hit rate, warm/hit speedups, migration cost\n\
+                     \x20            (exits nonzero if any served plan differs from a cold solve)\n\
                      \x20 train      --steps N --microbatches N --dp N   (needs `make artifacts`)\n\
                      \x20 profile    --reps N\n\
                      \x20 figure2|figure5|figure6|figure7|figure10|figure11\n\

@@ -1,0 +1,780 @@
+//! Placement as a service: the solve→refine pipeline behind a
+//! cache-warm, incremental query layer.
+//!
+//! One-shot `solve` calls fit a research harness; a production
+//! placement service fields many concurrent, overlapping
+//! (model, cluster) queries — co-design sweeps, autoscaling
+//! controllers, elasticity events — where most queries are near-misses
+//! of earlier ones. This module packages the solver for that workload:
+//!
+//! * [`Query`] — a (graph, cluster, [`SolverOpts`]) triple with a
+//!   canonical content **fingerprint** (FNV-1a over every field that
+//!   can reach a plan). Two queries with equal fingerprints are
+//!   guaranteed to produce bit-identical plans, so the fingerprint is
+//!   a sound cache key.
+//! * [`PlacementService`] — an LRU cache of solved top-K shortlists
+//!   keyed by fingerprint. A hit returns the cached plans without
+//!   touching the solver; a miss solves **warm-started** from the best
+//!   cached plan of a *neighboring* query (same graph on a scaled
+//!   cluster, or same cluster under a different model). Warm starts
+//!   reorder the solver's evaluation queue only — the winner is
+//!   provably unchanged (see `solver` module docs, "# Warm starting").
+//! * [`PlacementService::reconcile`] — incremental re-solve: apply a
+//!   [`ClusterDelta`] (device failure / pool resize), re-solve warm,
+//!   and price what the move costs as a
+//!   [`PlanDelta`](crate::solver::plan::PlanDelta): stages re-homed,
+//!   parameter bytes to migrate, migration seconds through the
+//!   cluster's α–β levels.
+//!
+//! ## Fingerprint semantics
+//!
+//! The fingerprint *includes* everything plan-relevant: every layer
+//! (kind, MoE config, dimensions), batch geometry, the allowed
+//! SUB-GRAPH degree lists, tier shapes (arity, bandwidth, latency,
+//! oversubscription), the device pool's accelerator profiles and run
+//! layout, and the pruning-relevant [`SolverOpts`] fields
+//! (`max_stages`, `zero_max_degree`, recompute branches). It
+//! *excludes* fields proven plan-invariant — `threads`, `pricing`, and
+//! `warm_start` (the property suite pins all three) — plus pure labels
+//! that never reach a plan (`Cluster::name`, tier names). Mutating any
+//! included field invalidates the cache entry; flipping thread counts
+//! or re-labelling a cluster does not.
+//!
+//! Everything here is deterministic: cached, warm-started, and cold
+//! paths return field-for-field identical plans (`rust/tests/
+//! property.rs` proves it at 1 and 4 threads on random scenarios).
+
+use crate::cost::CostArena;
+use crate::graph::{Layer, LayerGraph, LayerKind};
+use crate::netsim::{FairshareEngine, LinkGraph};
+use crate::network::Cluster;
+use crate::solver::plan::{diff_plans_in, PlacementPlan, PlanDelta};
+use crate::solver::refine::{rerank, RefineReport};
+use crate::solver::{solve_topk, SolverOpts, WarmStart};
+
+// ---------------------------------------------------------------------
+// Content fingerprints
+// ---------------------------------------------------------------------
+
+/// FNV-1a 64-bit content hasher. Hand-rolled (no `std::hash`) so the
+/// byte stream — and therefore every fingerprint — is pinned across
+/// Rust releases and platforms; golden tests may embed fingerprints.
+struct Fp(u64);
+
+impl Fp {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    fn new() -> Self {
+        Fp(Self::OFFSET)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(Self::PRIME);
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Bit-exact: distinguishes -0.0 from 0.0 and every NaN payload,
+    /// matching the solver's bit-identity contract.
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn bool(&mut self, v: bool) {
+        self.byte(v as u8);
+    }
+
+    /// Enum discriminant / structural tag — keeps adjacent fields from
+    /// aliasing across variants.
+    fn tag(&mut self, t: u8) {
+        self.byte(t);
+    }
+
+    /// Length-prefixed so `["ab","c"]` and `["a","bc"]` differ.
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        for b in s.bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn usizes(&mut self, vs: &[usize]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.usize(v);
+        }
+    }
+
+    fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+fn hash_layer(fp: &mut Fp, layer: &Layer) {
+    fp.str(&layer.name);
+    match layer.kind {
+        LayerKind::Embedding => fp.tag(0),
+        LayerKind::Block => fp.tag(1),
+        LayerKind::MoeBlock(cfg) => {
+            fp.tag(2);
+            fp.usize(cfg.experts);
+            fp.usize(cfg.top_k);
+        }
+        LayerKind::Head => fp.tag(3),
+    }
+    let d = &layer.dims;
+    fp.usize(d.hidden);
+    fp.usize(d.heads);
+    fp.usize(d.kv_heads);
+    fp.usize(d.intermediate);
+    fp.usize(d.seq);
+    fp.usize(d.vocab);
+    fp.bool(d.gated_mlp);
+}
+
+/// Content fingerprint of a model graph: layers, batch geometry, and
+/// the allowed SUB-GRAPH degree lists.
+pub fn graph_fingerprint(graph: &LayerGraph) -> u64 {
+    let mut fp = Fp::new();
+    fp.tag(b'g');
+    fp.str(&graph.model_name);
+    fp.usize(graph.layers.len());
+    for layer in &graph.layers {
+        hash_layer(&mut fp, layer);
+    }
+    fp.usize(graph.mbs);
+    fp.f64(graph.tokens);
+    fp.usize(graph.global_batch);
+    fp.usizes(&graph.tp_widths);
+    fp.usizes(&graph.ep_degrees);
+    fp.usizes(&graph.cp_degrees);
+    fp.finish()
+}
+
+/// Content fingerprint of a cluster: tier shapes and the device pool.
+/// `Cluster::name` and tier names are labels that never reach a plan —
+/// deliberately excluded, so re-labelling does not invalidate caches.
+pub fn cluster_fingerprint(cluster: &Cluster) -> u64 {
+    let mut fp = Fp::new();
+    fp.tag(b'c');
+    fp.usize(cluster.tiers.len());
+    for tier in &cluster.tiers {
+        fp.usize(tier.arity);
+        fp.f64(tier.link_bw);
+        fp.f64(tier.latency);
+        fp.f64(tier.oversub);
+    }
+    let runs = cluster.pool.runs();
+    fp.usize(runs.len());
+    for run in runs {
+        // Accelerator *name* is included: it reaches plans through
+        // `StagePlan::accel_class`.
+        fp.str(&run.accel.name);
+        fp.f64(run.accel.matmul_peak);
+        fp.f64(run.accel.matmul_eff);
+        fp.f64(run.accel.vector_peak);
+        fp.f64(run.accel.hbm_bw);
+        fp.f64(run.accel.hbm_capacity);
+        fp.usize(run.count);
+        match run.access_bw {
+            None => fp.tag(0),
+            Some(bw) => {
+                fp.tag(1);
+                fp.f64(bw);
+            }
+        }
+    }
+    fp.finish()
+}
+
+/// One placement query: solve `graph` on `cluster` under `opts`.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub graph: LayerGraph,
+    pub cluster: Cluster,
+    pub opts: SolverOpts,
+}
+
+impl Query {
+    pub fn new(graph: LayerGraph, cluster: Cluster, opts: SolverOpts) -> Self {
+        Query {
+            graph,
+            cluster,
+            opts,
+        }
+    }
+
+    /// See [`graph_fingerprint`].
+    pub fn graph_fingerprint(&self) -> u64 {
+        graph_fingerprint(&self.graph)
+    }
+
+    /// See [`cluster_fingerprint`].
+    pub fn cluster_fingerprint(&self) -> u64 {
+        cluster_fingerprint(&self.cluster)
+    }
+
+    /// Canonical content fingerprint of the whole query (see module
+    /// docs for inclusion/exclusion semantics). Plan-invariant
+    /// [`SolverOpts`] fields (`threads`, `pricing`, `warm_start`) are
+    /// excluded: a warm-started 4-thread re-run of a cached query IS a
+    /// cache hit, and returning the cached plan is sound because the
+    /// solver's plans are independent of all three.
+    pub fn fingerprint(&self) -> u64 {
+        let mut fp = Fp::new();
+        fp.tag(b'q');
+        fp.u64(self.graph_fingerprint());
+        fp.u64(self.cluster_fingerprint());
+        fp.usize(self.opts.max_stages);
+        fp.usize(self.opts.zero_max_degree);
+        fp.bool(self.opts.try_recompute);
+        fp.bool(self.opts.try_no_recompute);
+        fp.finish()
+    }
+
+    /// Key for shared cost-table contexts: the (graph, cluster) pair
+    /// without solver options (cost tables do not depend on them).
+    fn context_key(&self) -> u64 {
+        let mut fp = Fp::new();
+        fp.tag(b'x');
+        fp.u64(self.graph_fingerprint());
+        fp.u64(self.cluster_fingerprint());
+        fp.finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// The service
+// ---------------------------------------------------------------------
+
+/// Service counters, cumulative since construction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Queries answered (cache hits + solves), including the two
+    /// internal queries each `reconcile` issues.
+    pub queries: u64,
+    pub cache_hits: u64,
+    /// Solves seeded from a neighboring cached plan.
+    pub warm_solves: u64,
+    /// Solves with no usable neighbor.
+    pub cold_solves: u64,
+    /// `reconcile` calls.
+    pub reconciles: u64,
+}
+
+impl ServiceStats {
+    /// Fraction of queries answered from cache (0.0 before any query).
+    pub fn hit_rate(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.queries as f64
+        }
+    }
+}
+
+/// How a query was answered.
+#[derive(Debug, Clone)]
+pub struct Served {
+    /// The analytic top-K shortlist (index 0 = the winner); empty when
+    /// no feasible placement exists. Bit-identical to what a cold
+    /// `solve_topk` returns for the same query.
+    pub plans: Vec<PlacementPlan>,
+    /// Answered from cache without solving.
+    pub cache_hit: bool,
+    /// Solved with a neighbor-seeded warm start.
+    pub warm_started: bool,
+    /// Solver wall-clock for this query (0.0 on a cache hit).
+    pub solve_seconds: f64,
+    /// DP states of the solve that produced the plans (the original
+    /// solve, on a hit).
+    pub dp_states: u64,
+    pub configs_tried: u64,
+}
+
+struct Entry {
+    fp: u64,
+    graph_fp: u64,
+    cluster_fp: u64,
+    /// Shortlist width this entry was solved at — a cached K=8 entry
+    /// serves any request up to K=8; a K=1 entry cannot serve K=4.
+    k: usize,
+    plans: Vec<PlacementPlan>,
+    dp_states: u64,
+    configs_tried: u64,
+}
+
+/// An LRU cache of solved placement queries with warm-started misses.
+/// See the module docs for the full story.
+pub struct PlacementService {
+    capacity: usize,
+    /// Most-recently-used first. Linear scans: service caches hold tens
+    /// of entries, far below hashing break-even, and eviction order
+    /// falls out of the Vec for free.
+    entries: Vec<Entry>,
+    arena: CostArena,
+    stats: ServiceStats,
+}
+
+impl PlacementService {
+    /// A service caching up to `capacity` solved queries (min 1).
+    pub fn new(capacity: usize) -> Self {
+        PlacementService {
+            capacity: capacity.max(1),
+            entries: Vec::new(),
+            arena: CostArena::new(),
+            stats: ServiceStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        self.stats
+    }
+
+    /// Cached entries currently held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Answer `query` with the single best plan (`None` = infeasible).
+    pub fn solve(&mut self, query: &Query) -> Option<Served> {
+        let served = self.solve_topk(query, 1);
+        if served.plans.is_empty() {
+            None
+        } else {
+            Some(served)
+        }
+    }
+
+    /// Answer `query` with its analytic top-`k` shortlist: from cache
+    /// on a fingerprint hit, warm-started from a neighboring entry
+    /// (same graph or same cluster) otherwise. The returned plans are
+    /// bit-identical to a cold `solve_topk` in every path.
+    pub fn solve_topk(&mut self, query: &Query, k: usize) -> Served {
+        self.stats.queries += 1;
+        let fp = query.fingerprint();
+        if let Some(pos) = self
+            .entries
+            .iter()
+            .position(|e| e.fp == fp && e.k >= k.max(1))
+        {
+            self.stats.cache_hits += 1;
+            let entry = self.entries.remove(pos);
+            let served = Served {
+                plans: entry.plans.iter().take(k.max(1)).cloned().collect(),
+                cache_hit: true,
+                warm_started: false,
+                solve_seconds: 0.0,
+                dp_states: entry.dp_states,
+                configs_tried: entry.configs_tried,
+            };
+            self.entries.insert(0, entry); // refresh LRU position
+            return served;
+        }
+
+        let graph_fp = query.graph_fingerprint();
+        let cluster_fp = query.cluster_fingerprint();
+        // Neighbor = most recent cached query sharing the graph (solved
+        // on a scaled cluster) or the cluster (solved for another
+        // model). Its winner's (sg, recompute) is a strong first guess;
+        // evaluating it first tightens the incumbent early.
+        let warm = self
+            .entries
+            .iter()
+            .find(|e| (e.graph_fp == graph_fp || e.cluster_fp == cluster_fp) && !e.plans.is_empty())
+            .map(|e| WarmStart::from_plan(&e.plans[0]));
+        let warm_started = warm.is_some();
+        if warm_started {
+            self.stats.warm_solves += 1;
+        } else {
+            self.stats.cold_solves += 1;
+        }
+
+        let opts = SolverOpts {
+            warm_start: warm,
+            ..query.opts.clone()
+        };
+        let top = solve_topk(&query.graph, &query.cluster, &opts, k.max(1));
+
+        self.entries.insert(
+            0,
+            Entry {
+                fp,
+                graph_fp,
+                cluster_fp,
+                k: k.max(1),
+                plans: top.plans.clone(),
+                dp_states: top.dp_states,
+                configs_tried: top.configs_tried,
+            },
+        );
+        self.entries.truncate(self.capacity);
+
+        Served {
+            plans: top.plans,
+            cache_hit: false,
+            warm_started,
+            solve_seconds: top.solve_seconds,
+            dp_states: top.dp_states,
+            configs_tried: top.configs_tried,
+        }
+    }
+
+    /// Batched sweep evaluation: answer every query in order through
+    /// the shared cache, warm-start chain, and cost-table arena —
+    /// the (model sizes × cluster scales) co-design workload. Results
+    /// are in query order.
+    pub fn sweep(&mut self, queries: &[Query], k: usize) -> Vec<Served> {
+        queries.iter().map(|q| self.solve_topk(q, k)).collect()
+    }
+
+    /// Contention-aware refinement through the cache: the analytic
+    /// shortlist comes from [`Self::solve_topk`] (cached or
+    /// warm-started), then is re-ranked on `topo` by the flow
+    /// simulator — so a repeated refine of a cached query skips the
+    /// solver entirely and pays only the K flow replays.
+    pub fn refine(&mut self, query: &Query, topo: &LinkGraph, k: usize) -> Option<RefineReport> {
+        let served = self.solve_topk(query, k);
+        if served.plans.is_empty() {
+            return None;
+        }
+        let mut engine = FairshareEngine::new(topo);
+        let ranked = rerank(&mut engine, &query.graph, &query.cluster, topo, served.plans);
+        Some(RefineReport {
+            ranked,
+            solve_seconds: served.solve_seconds,
+            dp_states: served.dp_states,
+            configs_tried: served.configs_tried,
+        })
+    }
+
+    /// Incremental re-solve after an elasticity event: apply `delta` to
+    /// the query's cluster, re-solve (warm-started from the original
+    /// plan — same graph fingerprint), and price the migration between
+    /// the two plans. Errors when the original or post-delta query is
+    /// infeasible, or when the delta itself is invalid.
+    pub fn reconcile(
+        &mut self,
+        query: &Query,
+        delta: &ClusterDelta,
+    ) -> Result<ReconcileReport, String> {
+        self.stats.reconciles += 1;
+        let before = self
+            .solve(query)
+            .ok_or_else(|| "reconcile: no feasible placement on the original cluster".to_string())?;
+        let old_plan = before.plans[0].clone();
+
+        let new_cluster = delta.apply(&query.cluster)?;
+        let new_query = Query::new(
+            query.graph.clone(),
+            new_cluster.clone(),
+            query.opts.clone(),
+        );
+        let after = self.solve_topk(&new_query, 1);
+        let plan = after.plans.first().cloned().ok_or_else(|| {
+            format!(
+                "reconcile: no feasible placement on the post-delta cluster \
+                 ({} devices)",
+                new_cluster.n_devices()
+            )
+        })?;
+
+        let plan_delta = diff_plans_in(
+            &mut self.arena,
+            new_query.context_key(),
+            &old_plan,
+            &plan,
+            &query.graph,
+            &new_cluster,
+        );
+        Ok(ReconcileReport {
+            plan,
+            delta: plan_delta,
+            cluster: new_cluster,
+            warm_started: after.warm_started,
+            cache_hit: after.cache_hit,
+            solve_seconds: after.solve_seconds,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Elasticity deltas
+// ---------------------------------------------------------------------
+
+/// An elasticity event against a cluster's *outermost* tier — the unit
+/// real clusters grow and shrink by (a rack or switch-group at a time).
+/// Device ids pack compactly, so the removed/added groups sit at the
+/// tail of the id space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterDelta {
+    /// `groups` outermost-tier groups fail (their devices leave the
+    /// pool).
+    FailOuterGroups { groups: usize },
+    /// Resize the outermost tier to exactly `arity` groups (grow or
+    /// shrink).
+    ResizeOuter { arity: usize },
+}
+
+impl ClusterDelta {
+    /// The cluster after this event. The outermost tier's arity
+    /// changes; the device pool is rebuilt by truncating runs from the
+    /// tail (shrink) or extending the last run (grow). Tier shapes
+    /// below the outermost are untouched.
+    pub fn apply(&self, cluster: &Cluster) -> Result<Cluster, String> {
+        let n_tiers = cluster.tiers.len();
+        if n_tiers == 0 {
+            return Err("cluster has no tiers".into());
+        }
+        let old_arity = cluster.tiers[n_tiers - 1].arity;
+        let new_arity = match *self {
+            ClusterDelta::FailOuterGroups { groups } => {
+                if groups == 0 {
+                    return Err("FailOuterGroups: zero groups is a no-op delta".into());
+                }
+                if groups >= old_arity {
+                    return Err(format!(
+                        "FailOuterGroups: failing {groups} of {old_arity} outer groups \
+                         would empty the cluster"
+                    ));
+                }
+                old_arity - groups
+            }
+            ClusterDelta::ResizeOuter { arity } => {
+                if arity == 0 {
+                    return Err("ResizeOuter: zero arity would empty the cluster".into());
+                }
+                arity
+            }
+        };
+
+        let old_n = cluster.n_devices();
+        let per_group = old_n / old_arity;
+        let new_n = per_group * new_arity;
+
+        let mut runs = cluster.pool.runs().to_vec();
+        if new_n < old_n {
+            let mut excess = old_n - new_n;
+            while excess > 0 {
+                let last = runs.last_mut().expect("pool runs cover all devices");
+                if last.count > excess {
+                    last.count -= excess;
+                    excess = 0;
+                } else {
+                    excess -= last.count;
+                    runs.pop();
+                }
+            }
+        } else if new_n > old_n {
+            // Grown capacity arrives as more of whatever the tail run
+            // already is (racks are bought in like kind).
+            runs.last_mut()
+                .expect("pool runs cover all devices")
+                .count += new_n - old_n;
+        }
+
+        let mut tiers = cluster.tiers.clone();
+        tiers[n_tiers - 1].arity = new_arity;
+        Ok(Cluster {
+            name: cluster.name.clone(),
+            pool: crate::hw::DevicePool::from_runs(runs),
+            tiers,
+        })
+    }
+}
+
+/// Outcome of [`PlacementService::reconcile`].
+#[derive(Debug, Clone)]
+pub struct ReconcileReport {
+    /// The re-solved plan on the post-delta cluster.
+    pub plan: PlacementPlan,
+    /// What moving from the old plan to `plan` costs.
+    pub delta: PlanDelta,
+    /// The post-delta cluster the plan runs on.
+    pub cluster: Cluster,
+    /// The re-solve was warm-started (it is, whenever the original
+    /// query's entry is still cached — same graph fingerprint).
+    pub warm_started: bool,
+    /// The post-delta query was itself already cached.
+    pub cache_hit: bool,
+    pub solve_seconds: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn opts() -> SolverOpts {
+        SolverOpts {
+            threads: 1,
+            ..Default::default()
+        }
+    }
+
+    fn query(devices: usize) -> Query {
+        Query::new(
+            models::bert_large(1),
+            Cluster::v100_cluster(devices),
+            opts(),
+        )
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_content_sensitive() {
+        let q = query(8);
+        assert_eq!(q.fingerprint(), q.clone().fingerprint());
+
+        let mut batch = q.clone();
+        batch.graph.mbs += 1;
+        assert_ne!(q.fingerprint(), batch.fingerprint());
+        assert_ne!(q.graph_fingerprint(), batch.graph_fingerprint());
+        assert_eq!(q.cluster_fingerprint(), batch.cluster_fingerprint());
+
+        let mut fabric = q.clone();
+        fabric.cluster.tiers[1].link_bw *= 2.0;
+        assert_ne!(q.fingerprint(), fabric.fingerprint());
+        assert_eq!(q.graph_fingerprint(), fabric.graph_fingerprint());
+
+        let mut solver = q.clone();
+        solver.opts.max_stages = 2;
+        assert_ne!(q.fingerprint(), solver.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_ignores_plan_invariant_fields_and_labels() {
+        let q = query(8);
+        let mut twin = q.clone();
+        twin.opts.threads = 7;
+        twin.opts.pricing = crate::cost::PricingMode::Reference;
+        twin.opts.warm_start = Some(WarmStart {
+            sg: crate::graph::subgraph::SgConfig::serial(),
+            recompute: true,
+        });
+        twin.cluster.name = "renamed".into();
+        twin.cluster.tiers[0].name = "relabelled".into();
+        assert_eq!(q.fingerprint(), twin.fingerprint());
+        assert_eq!(q.cluster_fingerprint(), twin.cluster_fingerprint());
+    }
+
+    #[test]
+    fn cache_hit_returns_identical_plans_and_counts() {
+        let mut svc = PlacementService::new(8);
+        let q = query(8);
+        let cold = svc.solve_topk(&q, 4);
+        assert!(!cold.cache_hit);
+        let hit = svc.solve_topk(&q, 4);
+        assert!(hit.cache_hit);
+        assert!(!hit.warm_started);
+        assert_eq!(hit.solve_seconds, 0.0);
+        assert_eq!(cold.plans, hit.plans);
+        // Narrower K is served from the same entry, truncated.
+        let narrow = svc.solve_topk(&q, 1);
+        assert!(narrow.cache_hit);
+        assert_eq!(narrow.plans.len(), 1);
+        assert_eq!(narrow.plans[0], cold.plans[0]);
+        // Wider K cannot be served from a narrower entry.
+        let wide = svc.solve_topk(&q, 8);
+        assert!(!wide.cache_hit);
+        assert_eq!(svc.stats().queries, 4);
+        assert_eq!(svc.stats().cache_hits, 2);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_at_capacity() {
+        let mut svc = PlacementService::new(1);
+        let a = query(8);
+        let b = query(16);
+        svc.solve_topk(&a, 1);
+        assert_eq!(svc.len(), 1);
+        svc.solve_topk(&b, 1); // evicts a
+        assert_eq!(svc.len(), 1);
+        let again = svc.solve_topk(&a, 1);
+        assert!(!again.cache_hit, "evicted entry must not hit");
+        // b was warm-startable from a (same graph), and a's re-solve
+        // from b likewise.
+        assert_eq!(svc.stats().warm_solves, 2);
+        assert_eq!(svc.stats().cold_solves, 1);
+    }
+
+    #[test]
+    fn warm_started_solve_matches_cold_solve() {
+        let mut svc = PlacementService::new(4);
+        let small = query(8);
+        let big = query(16);
+        svc.solve_topk(&small, 1);
+        let warm = svc.solve_topk(&big, 1);
+        assert!(warm.warm_started, "same graph on scaled cluster must warm");
+        let cold = solve_topk(&big.graph, &big.cluster, &big.opts, 1);
+        assert_eq!(warm.plans, cold.plans);
+    }
+
+    #[test]
+    fn cluster_delta_fail_and_resize_adjust_device_count() {
+        let c = Cluster::v100_cluster(16); // node arity 2 × switch arity 8
+        let shrunk = ClusterDelta::FailOuterGroups { groups: 2 }
+            .apply(&c)
+            .unwrap();
+        assert_eq!(shrunk.n_devices(), 12);
+        assert_eq!(shrunk.tiers[1].arity, 6);
+        assert_eq!(shrunk.tiers[0].arity, 2, "inner tiers untouched");
+
+        let grown = ClusterDelta::ResizeOuter { arity: 16 }.apply(&c).unwrap();
+        assert_eq!(grown.n_devices(), 32);
+
+        assert!(ClusterDelta::FailOuterGroups { groups: 8 }.apply(&c).is_err());
+        assert!(ClusterDelta::FailOuterGroups { groups: 0 }.apply(&c).is_err());
+        assert!(ClusterDelta::ResizeOuter { arity: 0 }.apply(&c).is_err());
+    }
+
+    #[test]
+    fn cluster_delta_preserves_hetero_run_structure() {
+        let c = Cluster::hetero_pool(64);
+        let n_runs = c.pool.runs().len();
+        let shrunk = ClusterDelta::FailOuterGroups { groups: 1 }
+            .apply(&c)
+            .unwrap();
+        assert!(shrunk.n_devices() < 64);
+        // The tail run shrank (or vanished); earlier runs are intact.
+        assert!(shrunk.pool.runs().len() <= n_runs);
+        assert_eq!(shrunk.pool.runs()[0].accel, c.pool.runs()[0].accel);
+    }
+
+    #[test]
+    fn reconcile_reprices_migration_after_failure() {
+        let mut svc = PlacementService::new(8);
+        let q = query(16);
+        let report = svc
+            .reconcile(&q, &ClusterDelta::FailOuterGroups { groups: 4 })
+            .expect("feasible on 8 devices");
+        assert_eq!(report.cluster.n_devices(), 8);
+        report
+            .plan
+            .validate(&q.graph, &report.cluster)
+            .expect("reconciled plan valid on shrunk cluster");
+        assert!(
+            report.warm_started,
+            "re-solve warms from the just-cached original"
+        );
+        // The shrunk plan is exactly what a cold solve on the shrunk
+        // cluster produces — reconcile never invents a different plan.
+        let shrunk = ClusterDelta::FailOuterGroups { groups: 4 }.apply(&q.cluster).unwrap();
+        let cold = solve_topk(&q.graph, &shrunk, &q.opts, 1);
+        assert_eq!(report.plan, cold.plans[0]);
+        assert_eq!(svc.stats().reconciles, 1);
+    }
+}

@@ -23,6 +23,13 @@
 //! counts `k` fan out over scoped workers whose results merge before the
 //! next layer. States are computed identically regardless of scheduling,
 //! so the result is deterministic and thread-count-invariant.
+//!
+//! Unlike the scalable solver, this DP takes no
+//! [`super::SolverOpts::warm_start`] hint: it has no incumbent to
+//! tighten — every state is materialized unconditionally (no pruning),
+//! so evaluation order cannot change the work done, and a warm start
+//! would be a no-op by construction. The service layer therefore only
+//! warm-starts the scalable path.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -69,6 +69,16 @@
 //! field-for-field identical for every thread count**. `solve` is the
 //! `K = 1` special case and its behavior is unchanged.
 //!
+//! # Warm starting
+//!
+//! [`SolverOpts::warm_start`] carries the `(sg, recompute)` hint of a
+//! neighboring query's winner (the [`crate::service`] cache layer). The
+//! hinted work item is moved to the front of the queue so its achieved
+//! batch time is offered to the incumbent first — strictly a search
+//! *speed* lever: the item set, every prune bound, and the total order
+//! are unchanged, so warm-started solves return bit-identical plans
+//! (property-proven at 1 and 4 threads).
+//!
 //! # Heterogeneous device pools
 //!
 //! When the cluster's [`crate::hw::DevicePool`] mixes accelerator
@@ -109,6 +119,38 @@ use crate::network::Cluster;
 use assign::{boundary_level, stage_devices};
 use plan::{PlacementPlan, StagePlan};
 
+/// Warm-start hint for the outer enumeration: the `(sg, recompute)`
+/// configuration a *neighboring* query's winner used (same graph on a
+/// scaled cluster, or vice versa — see `crate::service`).
+///
+/// The hint seeds the shared incumbent **by evaluation order**, not by
+/// value: the matching work item is moved to the front of the queue, so
+/// the hinted configuration's *achieved* batch time is offered to the
+/// incumbent before the bulk of the enumeration runs. A neighbor's raw
+/// batch time is not achievable on this query in general, and
+/// [`Incumbent`] only tightens its bound once K achieved values exist —
+/// so reordering is the only seeding that is sound for every K. The
+/// item set, every prune site, and the total order are untouched:
+/// a warm-started solve can only prune *earlier*, never differently,
+/// and returns bit-identical plans (the warm-start property tests pin
+/// this at 1 and 4 threads).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WarmStart {
+    pub sg: SgConfig,
+    pub recompute: bool,
+}
+
+impl WarmStart {
+    /// The hint a cached plan induces: its SUB-GRAPH config plus which
+    /// recomputation branch it came from.
+    pub fn from_plan(plan: &PlacementPlan) -> Self {
+        WarmStart {
+            sg: plan.sg,
+            recompute: plan.stages.iter().any(|s| s.mem.recompute),
+        }
+    }
+}
+
 /// Solver options.
 #[derive(Debug, Clone)]
 pub struct SolverOpts {
@@ -129,6 +171,12 @@ pub struct SolverOpts {
     /// bit-identical to the reference walks, so plans never depend on
     /// this — the property suite proves it.
     pub pricing: PricingMode,
+    /// Evaluate this `(sg, recompute)` configuration first so its
+    /// achieved batch time seeds the shared incumbent early (see
+    /// [`WarmStart`]). `None` = cold start. A hint that matches no
+    /// enumerated configuration is ignored. Plans are identical with
+    /// and without a hint — only search statistics move.
+    pub warm_start: Option<WarmStart>,
 }
 
 impl Default for SolverOpts {
@@ -140,6 +188,7 @@ impl Default for SolverOpts {
             try_no_recompute: true,
             threads: 0,
             pricing: PricingMode::Auto,
+            warm_start: None,
         }
     }
 }
@@ -802,6 +851,22 @@ pub fn solve_topk(
         }
     }
 
+    // Warm start: front-load the hinted configuration so the first
+    // worker evaluates it before anything else and its achieved batch
+    // time seeds the shared incumbent. `sg_idx` values travel with the
+    // items, the (sg, recompute, p) space is partitioned exactly as
+    // before, and the K-best merge is insertion-order-independent, so
+    // the result is bit-identical to a cold start (see [`WarmStart`]).
+    if let Some(ws) = &opts.warm_start {
+        if let Some(pos) = items
+            .iter()
+            .position(|&(_, sg, rc)| sg == ws.sg && rc == ws.recompute)
+        {
+            let hinted = items.remove(pos);
+            items.insert(0, hinted);
+        }
+    }
+
     let incumbent = Incumbent::new(k);
     let next = AtomicUsize::new(0);
     let dp_states = AtomicU64::new(0);
@@ -1262,6 +1327,81 @@ mod tests {
                 "topk rank-1 disagrees with solve()"
             );
         });
+    }
+
+    #[test]
+    fn warm_start_hint_does_not_move_any_plan() {
+        // A correct hint, a deliberately wrong hint, and a hint that
+        // matches nothing must all reproduce the cold shortlist
+        // bit-for-bit — the hint is an evaluation-order lever only.
+        let g = models::mixtral_scaled(1);
+        let c = Cluster::v100_cluster(16);
+        for k in [1usize, 4] {
+            let cold = solve_topk(
+                &g,
+                &c,
+                &SolverOpts {
+                    threads: 1,
+                    ..Default::default()
+                },
+                k,
+            );
+            let winner = cold.plans.first().expect("feasible");
+            let hints = [
+                WarmStart::from_plan(winner),
+                WarmStart {
+                    sg: winner.sg,
+                    recompute: !winner.stages.iter().any(|s| s.mem.recompute),
+                },
+                WarmStart {
+                    sg: SgConfig {
+                        tp: 64, // no such configuration is enumerated
+                        sp: false,
+                        ep: 1,
+                        cp: 1,
+                    },
+                    recompute: false,
+                },
+            ];
+            for hint in hints {
+                for threads in [1usize, 4] {
+                    let warm = solve_topk(
+                        &g,
+                        &c,
+                        &SolverOpts {
+                            threads,
+                            warm_start: Some(hint),
+                            ..Default::default()
+                        },
+                        k,
+                    );
+                    assert_eq!(
+                        cold.plans, warm.plans,
+                        "k={k} threads={threads} hint={hint:?}: warm shortlist diverged"
+                    );
+                    for (a, b) in cold.plans.iter().zip(&warm.plans) {
+                        assert_eq!(
+                            a.batch_time.to_bits(),
+                            b.batch_time.to_bits(),
+                            "k={k} threads={threads}: batch times not bit-identical"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_from_plan_captures_recompute_branch() {
+        let g = models::bert_large(1);
+        let c = Cluster::fat_tree_tpuv4(64);
+        let sol = solve(&g, &c, &SolverOpts::default()).expect("solution");
+        let ws = WarmStart::from_plan(&sol.plan);
+        assert_eq!(ws.sg, sol.plan.sg);
+        assert_eq!(
+            ws.recompute,
+            sol.plan.stages.iter().any(|s| s.mem.recompute)
+        );
     }
 
     #[test]

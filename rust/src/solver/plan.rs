@@ -1,7 +1,7 @@
 //! Placement plans: the solver's output (§3.2 "The final output is a
 //! parallelism configuration and placement plan").
 
-use crate::cost::CostModel;
+use crate::cost::{CostArena, CostModel};
 use crate::graph::subgraph::SgConfig;
 use crate::graph::LayerGraph;
 use crate::memory::MemSpec;
@@ -280,6 +280,160 @@ impl PlacementPlan {
     }
 }
 
+/// One stage of a re-solved plan whose physical placement changed
+/// relative to the previous plan (an elasticity event re-homed it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageMove {
+    /// Stage index in the *new* plan.
+    pub stage: usize,
+    pub layers: (usize, usize),
+    /// First device (replica 0) of the old stage that held this stage's
+    /// leading layer; `None` when the old plan had no stage starting a
+    /// comparable range (the whole pipeline was recut).
+    pub from_device: Option<usize>,
+    /// First device (replica 0) of the stage in the new plan.
+    pub to_device: usize,
+    /// Weight bytes that must land on the stage's devices, replicas
+    /// included (`per-device shard × group × dp width`).
+    pub param_bytes: f64,
+    /// Slowest single shard pull for this stage, priced through the
+    /// cluster's α–β levels.
+    pub seconds: f64,
+}
+
+/// What changed between two plans for the same graph: the stages whose
+/// device ranges moved, the parameter bytes that must migrate, and the
+/// migration time priced through [`Cluster`].
+///
+/// The migration model is deliberately simple: every device of a moved
+/// stage pulls its weight shard point-to-point from the shard's old
+/// home, all pulls proceed in parallel, so the migration time is the
+/// slowest single pull (`max` over moved stages). Levels come from the
+/// lowest common tier of the old and new leading devices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanDelta {
+    /// Moves in new-plan stage order.
+    pub moved: Vec<StageMove>,
+    /// Stages of the new plan that kept layers, devices, sub-graph
+    /// config, memory spec, and replication intact.
+    pub unchanged: usize,
+    /// Total weight bytes across all moved stages (all replicas).
+    pub param_bytes: f64,
+    /// Modeled migration time (seconds); 0.0 when nothing moved.
+    pub migration_seconds: f64,
+}
+
+impl PlanDelta {
+    pub fn is_noop(&self) -> bool {
+        self.moved.is_empty()
+    }
+
+    /// One-line summary for tables and logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} moved / {} unchanged stages, {} to migrate, {}",
+            self.moved.len(),
+            self.unchanged,
+            crate::util::table::fmt_bytes(self.param_bytes),
+            crate::util::table::fmt_time(self.migration_seconds),
+        )
+    }
+}
+
+/// Lowest common tier of devices `a` and `b` under compact packing: the
+/// innermost level whose subtree contains both. Device ids past the
+/// cluster's edge (a source that *failed* out of the pool) resolve to
+/// the subtree they would occupy, which lands the transfer on the
+/// outermost shared tier — the conservative choice.
+fn lca_level(cluster: &Cluster, a: usize, b: usize) -> usize {
+    if a == b {
+        return 0;
+    }
+    for l in 0..cluster.n_levels() {
+        if a / cluster.capacity(l) == b / cluster.capacity(l) {
+            return l;
+        }
+    }
+    cluster.n_levels() - 1
+}
+
+/// Diff `new` against `old` for the same `graph`, pricing the migration
+/// on `cluster` (the cluster the *new* plan runs on). See [`PlanDelta`]
+/// for the migration model. Any change to the replication layout
+/// (`dp_width` / `devices_per_replica`) moves every stage: replica
+/// weights live at `devices + r·stride`, so a stride change re-homes
+/// every copy even when replica 0 stands still.
+pub fn diff_plans(
+    old: &PlacementPlan,
+    new: &PlacementPlan,
+    graph: &LayerGraph,
+    cluster: &Cluster,
+) -> PlanDelta {
+    diff_plans_in(&mut CostArena::new(), 0, old, new, graph, cluster)
+}
+
+/// [`diff_plans`] pricing through a caller-held [`CostArena`], so
+/// repeated reconciles of the same (graph, cluster) context (keyed by
+/// `key`, the caller's content fingerprint) reuse per-strategy cost
+/// tables instead of rebuilding them per diff.
+pub fn diff_plans_in(
+    arena: &mut CostArena,
+    key: u64,
+    old: &PlacementPlan,
+    new: &PlacementPlan,
+    graph: &LayerGraph,
+    cluster: &Cluster,
+) -> PlanDelta {
+    let replication_changed =
+        old.dp_width != new.dp_width || old.devices_per_replica != new.devices_per_replica;
+    let mut moved = Vec::new();
+    let mut total_bytes = 0.0;
+    let mut migration = 0.0f64;
+    for (k, st) in new.stages.iter().enumerate() {
+        let unchanged = !replication_changed
+            && old.stages.iter().any(|o| {
+                o.layers == st.layers
+                    && o.devices == st.devices
+                    && o.sg == st.sg
+                    && o.mem == st.mem
+            });
+        if unchanged {
+            continue;
+        }
+        let cm = arena.get(key, graph, cluster, st.sg);
+        // Per-device weight shard of the stage's layer range, and the
+        // full footprint across the group and every replica.
+        let shard_bytes = cm.stage_params(st.layers.0, st.layers.1) * crate::memory::WEIGHT_BYTES;
+        let stage_bytes = shard_bytes * st.sg.group_size() as f64 * new.dp_width as f64;
+        let to_device = st.devices.first().copied().unwrap_or(0);
+        // The shard's old home: the old stage that held this range's
+        // leading layer.
+        let from_device = old
+            .stages
+            .iter()
+            .find(|o| o.layers.0 <= st.layers.0 && st.layers.0 < o.layers.1)
+            .and_then(|o| o.devices.first().copied());
+        let level = lca_level(cluster, from_device.unwrap_or(to_device), to_device);
+        let seconds = cluster.p2p_time(level, shard_bytes);
+        total_bytes += stage_bytes;
+        migration = migration.max(seconds);
+        moved.push(StageMove {
+            stage: k,
+            layers: st.layers,
+            from_device,
+            to_device,
+            param_bytes: stage_bytes,
+            seconds,
+        });
+    }
+    PlanDelta {
+        unchanged: new.stages.len() - moved.len(),
+        moved,
+        param_bytes: total_bytes,
+        migration_seconds: migration,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -383,5 +537,56 @@ mod tests {
             parsed.get("stages").idx(1).get("send_level"),
             &crate::util::json::Json::Null
         );
+    }
+
+    #[test]
+    fn diff_of_identical_plans_is_noop() {
+        let (g, c, plan) = mini_plan();
+        let delta = diff_plans(&plan, &plan, &g, &c);
+        assert!(delta.is_noop());
+        assert_eq!(delta.unchanged, plan.n_stages());
+        assert_eq!(delta.param_bytes, 0.0);
+        assert_eq!(delta.migration_seconds, 0.0);
+    }
+
+    #[test]
+    fn diff_prices_a_moved_stage() {
+        let (g, c, plan) = mini_plan();
+        let mut moved = plan.clone();
+        moved.stages[0].devices = vec![3];
+        let delta = diff_plans(&plan, &moved, &g, &c);
+        assert_eq!(delta.moved.len(), 1);
+        assert_eq!(delta.unchanged, 1);
+        let mv = &delta.moved[0];
+        assert_eq!(mv.stage, 0);
+        assert_eq!(mv.from_device, Some(1));
+        assert_eq!(mv.to_device, 3);
+        assert!(mv.param_bytes > 0.0, "weights must migrate");
+        assert!(delta.migration_seconds > 0.0, "migration is never free");
+        assert!(delta.describe().contains("1 moved"));
+    }
+
+    #[test]
+    fn replication_change_moves_every_stage() {
+        // A narrower dp width keeps replica 0 in place but re-homes
+        // every other replica's weights — all stages count as moved.
+        let (g, c, plan) = mini_plan();
+        let mut resized = plan.clone();
+        resized.dp_width = 1;
+        let delta = diff_plans(&plan, &resized, &g, &c);
+        assert_eq!(delta.moved.len(), plan.n_stages());
+        assert_eq!(delta.unchanged, 0);
+        assert!(delta.migration_seconds > 0.0);
+    }
+
+    #[test]
+    fn lca_level_shared_and_disjoint_subtrees() {
+        let c = Cluster::v100_cluster(16); // capacities [2, 16]
+        assert_eq!(lca_level(&c, 3, 3), 0);
+        assert_eq!(lca_level(&c, 0, 1), 0); // same 2-wide node
+        assert_eq!(lca_level(&c, 0, 2), 1); // across nodes
+        // A failed source past the cluster edge resolves conservatively
+        // to the outermost tier.
+        assert_eq!(lca_level(&c, 17, 0), 1);
     }
 }

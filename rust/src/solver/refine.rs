@@ -146,13 +146,34 @@ pub fn refine(
     // One fair-share engine for all K replays: the per-link buffers are
     // sized once and reused (reports are bit-identical to fresh engines).
     let mut engine = FairshareEngine::new(topo);
-    let mut ranked: Vec<RefinedPlan> = top
-        .plans
+    let ranked = rerank(&mut engine, graph, cluster, topo, top.plans);
+    Some(RefineReport {
+        ranked,
+        solve_seconds: top.solve_seconds,
+        dp_states: top.dp_states,
+        configs_tried: top.configs_tried,
+    })
+}
+
+/// Re-rank an analytic shortlist (plans in DP order, index = analytic
+/// rank) by flow-simulated batch time on `topo`, reusing the caller's
+/// fair-share `engine`. This is the simulation half of [`refine`],
+/// split out so [`crate::service::PlacementService`] can re-rank a
+/// *cached* shortlist against a new topology without re-solving.
+/// Single-threaded and bit-deterministic: the result depends only on
+/// the inputs, never on engine history.
+pub fn rerank(
+    engine: &mut FairshareEngine,
+    graph: &LayerGraph,
+    cluster: &Cluster,
+    topo: &LinkGraph,
+    plans: Vec<PlacementPlan>,
+) -> Vec<RefinedPlan> {
+    let mut ranked: Vec<RefinedPlan> = plans
         .into_iter()
         .enumerate()
         .map(|(rank, plan)| {
-            let rep =
-                simulate_flows_with(&mut engine, graph, cluster, topo, &plan, Schedule::OneFOneB);
+            let rep = simulate_flows_with(engine, graph, cluster, topo, &plan, Schedule::OneFOneB);
             let delta = (rep.batch_time - plan.batch_time) / plan.batch_time;
             RefinedPlan {
                 analytic_rank: rank,
@@ -170,12 +191,7 @@ pub fn refine(
             .total_cmp(&b.sim_batch)
             .then(a.analytic_rank.cmp(&b.analytic_rank))
     });
-    Some(RefineReport {
-        ranked,
-        solve_seconds: top.solve_seconds,
-        dp_states: top.dp_states,
-        configs_tried: top.configs_tried,
-    })
+    ranked
 }
 
 #[cfg(test)]

@@ -625,3 +625,83 @@ fn plan_json_export_complete() {
     }
     assert_eq!(expect, graph.n_layers());
 }
+
+/// Placement-as-a-service elasticity: `reconcile` after a device
+/// failure returns a valid plan on the shrunk cluster plus a nonzero
+/// priced migration — the ISSUE-6 acceptance gate.
+#[test]
+fn service_reconcile_prices_device_failure() {
+    use nest::service::{ClusterDelta, PlacementService, Query};
+
+    let graph = models::bert_large(1);
+    let cluster = Cluster::v100_cluster(16);
+    let mut svc = PlacementService::new(8);
+    let q = Query::new(graph.clone(), cluster.clone(), threaded(1));
+
+    let report = svc
+        .reconcile(&q, &ClusterDelta::FailOuterGroups { groups: 1 })
+        .expect("bert-large feasible on 14 V100s");
+    assert_eq!(report.cluster.n_devices(), 14);
+    report
+        .plan
+        .validate(&graph, &report.cluster)
+        .expect("reconciled plan valid on the shrunk cluster");
+    assert!(
+        report.warm_started,
+        "the re-solve should warm-start from the just-cached original"
+    );
+    assert!(
+        report.delta.param_bytes > 0.0,
+        "shrinking 16 -> 14 devices must move weights"
+    );
+    assert!(
+        report.delta.migration_seconds > 0.0,
+        "a nonzero migration must take nonzero modeled time"
+    );
+    assert!(!report.delta.is_noop());
+    assert!(report.delta.moved.len() + report.delta.unchanged == report.plan.n_stages());
+
+    // The reconciled plan is exactly the cold solve on the shrunk
+    // cluster — reconcile is a pure cache/warm-start fast path.
+    let shrunk = ClusterDelta::FailOuterGroups { groups: 1 }
+        .apply(&cluster)
+        .unwrap();
+    let cold = solve(&graph, &shrunk, &threaded(1)).expect("feasible");
+    assert_plans_identical(&report.plan, &cold.plan, "reconcile vs cold");
+}
+
+/// On an oversubscribed 4:1 fabric, expert parallelism must *win*: the
+/// best Mixtral plan with EP enabled beats the best `ep_degrees=[1]`
+/// twin, and the winner actually uses EP. The scaled Mixtral pins
+/// `cp_degrees=[1]`, so EP is the only dimension that shards the
+/// dominant expert compute — the twin has no escape hatch.
+#[test]
+fn expert_parallelism_wins_on_oversubscribed_fabric() {
+    let graph = models::mixtral_scaled(1);
+    let cluster = Cluster::spine_leaf_h100(64, 4.0);
+    let with_ep = solve(&graph, &cluster, &SolverOpts::default())
+        .expect("mixtral-790m feasible with EP");
+
+    let mut no_ep_graph = graph.clone();
+    no_ep_graph.ep_degrees = vec![1];
+    let without_ep = solve(&no_ep_graph, &cluster, &SolverOpts::default())
+        .expect("mixtral-790m feasible without EP");
+
+    // The EP search space is a superset, so ≤ holds unconditionally…
+    assert!(
+        with_ep.plan.batch_time <= without_ep.plan.batch_time,
+        "EP superset search lost to its own subset"
+    );
+    // …and on a 4:1 fabric the win must be strict, through EP.
+    assert!(
+        with_ep.plan.batch_time < without_ep.plan.batch_time,
+        "EP-enabled best ({}) must strictly beat the ep=1 twin ({})",
+        with_ep.plan.batch_time,
+        without_ep.plan.batch_time
+    );
+    assert!(
+        with_ep.plan.sg.ep > 1,
+        "strict win must come from an EP plan, got {:?}",
+        with_ep.plan.sg
+    );
+}

@@ -119,6 +119,102 @@ fn prop_random_scenarios_topk_deterministic() {
 }
 
 // ---------------------------------------------------------------------
+// Warm-start soundness: a warm-started solve reorders the solver's
+// evaluation queue only, so plans must be field-for-field identical to
+// cold solves — for genuine hints, adversarial (wrong) hints, and at
+// both thread counts. This is the property the placement service's
+// cache-key exclusions lean on.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_warm_started_solves_identical_to_cold() {
+    use nest::graph::subgraph::SgConfig;
+    use nest::solver::WarmStart;
+
+    let seed = prop_seed(0x3A9E_57A7);
+    prop::forall(12, seed, |rng| {
+        let c = random_cluster(rng);
+        let g = random_tiny_graph(rng);
+        let k = 1 + rng.gen_range(3);
+        let cold = solve_topk(&g, &c, &threaded(1), k);
+
+        // A genuine hint (the winner's own config), and an adversarial
+        // one that matches no enumerated configuration.
+        let mut hints: Vec<WarmStart> = cold.plans.first().map(WarmStart::from_plan).into_iter().collect();
+        hints.push(WarmStart {
+            sg: SgConfig {
+                tp: 64 + rng.gen_range(64),
+                sp: false,
+                ep: 1,
+                cp: 1,
+            },
+            recompute: rng.gen_bool(0.5),
+        });
+        for hint in hints {
+            for threads in [1usize, 4] {
+                let warm_opts = SolverOpts {
+                    warm_start: Some(hint),
+                    ..threaded(threads)
+                };
+                let warm = solve_topk(&g, &c, &warm_opts, k);
+                assert_eq!(
+                    warm.plans.len(),
+                    cold.plans.len(),
+                    "{}: warm start changed shortlist size",
+                    c.name
+                );
+                for (w, cold_plan) in warm.plans.iter().zip(&cold.plans) {
+                    assert_plans_identical(w, cold_plan, &format!("{} warm vs cold", c.name));
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_service_cache_hits_and_warm_solves_identical_to_cold() {
+    use nest::service::{PlacementService, Query};
+
+    let seed = prop_seed(0xCAC4E5EE);
+    prop::forall(8, seed, |rng| {
+        let c = random_cluster(rng);
+        let g = random_tiny_graph(rng);
+        let k = 1 + rng.gen_range(3);
+        for threads in [1usize, 4] {
+            let mut svc = PlacementService::new(8);
+            let q = Query::new(g.clone(), c.clone(), threaded(threads));
+            let cold = solve_topk(&g, &c, &threaded(threads), k);
+
+            let first = svc.solve_topk(&q, k);
+            assert!(!first.cache_hit, "{}", c.name);
+            let hit = svc.solve_topk(&q, k);
+            assert!(hit.cache_hit, "{}: identical query must hit", c.name);
+            for served in [&first, &hit] {
+                assert_eq!(served.plans.len(), cold.plans.len(), "{}", c.name);
+                for (s, cp) in served.plans.iter().zip(&cold.plans) {
+                    assert_plans_identical(s, cp, &format!("{} served vs cold", c.name));
+                }
+            }
+
+            // Mutating any fingerprinted cluster field must miss — and
+            // the (possibly warm-started) re-solve must still equal its
+            // own cold twin.
+            let mut c2 = c.clone();
+            let t = rng.gen_range(c2.tiers.len());
+            c2.tiers[t].link_bw *= 0.5;
+            let q2 = Query::new(g.clone(), c2.clone(), threaded(threads));
+            let served2 = svc.solve_topk(&q2, k);
+            assert!(!served2.cache_hit, "{}: mutated cluster must miss", c.name);
+            let cold2 = solve_topk(&g, &c2, &threaded(threads), k);
+            assert_eq!(served2.plans.len(), cold2.plans.len(), "{}", c.name);
+            for (s, cp) in served2.plans.iter().zip(&cold2.plans) {
+                assert_plans_identical(s, cp, &format!("{} mutated-cluster serve", c.name));
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
 // Hot-path twins: O(1) range-pricing tables vs the naive reference, and
 // incremental fair-share vs the full refill. Both optimizations claim
 // bit-identical outputs; these suites are the proof on random inputs.
