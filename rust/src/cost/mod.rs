@@ -157,6 +157,7 @@ impl CostModel {
         sg: SgConfig,
         mode: PricingMode,
     ) -> Self {
+        let _span = crate::obs::span("cost.build", "cost");
         let mode = mode.resolve();
         let n = graph.n_layers();
         let classes = cluster.pool.classes();

@@ -225,6 +225,42 @@ pub fn gate(pr: &PerfSmoke, baseline: &Json, tolerance: f64) -> Result<(), Strin
             violations.push(format!("baseline metric `{name}` is not a number"));
             continue;
         };
+        // `_pct` keys are derived gates, not measured metrics: the
+        // baseline value is an *absolute percentage ceiling* computed
+        // from other metrics in this run. `obs_overhead_pct` bounds the
+        // flight recorder's tracing-OFF cost on the 4-thread solve —
+        // run-vs-baseline drift on that anchor beyond the ceiling fails
+        // the gate (tighter than the generic wall-clock tolerance).
+        // They never appear in run metrics, so `--write-baseline`
+        // preserves them untouched.
+        if name.ends_with("_pct") {
+            if name == "obs_overhead_pct" {
+                let anchor = "solve_llama2_7b_fattree_4t";
+                let base_anchor = base_metrics.get(anchor).and_then(|j| j.as_f64());
+                match (pr.get(anchor), base_anchor) {
+                    (Some(run), Some(b)) if b > 0.0 => {
+                        let pct = (run / b - 1.0) * 100.0;
+                        if pct > base {
+                            violations.push(format!(
+                                "{name}: {anchor} ran {pct:+.1}% vs baseline — beyond \
+                                 the {base:.1}% tracing-off overhead ceiling"
+                            ));
+                        } else {
+                            println!(
+                                "BENCH-GATE ok {name}: {anchor} {pct:+.1}% vs ceiling {base:.1}%"
+                            );
+                        }
+                    }
+                    _ => println!(
+                        "BENCH-GATE warn {name}: anchor metric `{anchor}` missing from \
+                         the run or baseline — overhead gate skipped"
+                    ),
+                }
+            } else {
+                println!("BENCH-GATE warn {name}: unknown `_pct` gate — ignored");
+            }
+            continue;
+        }
         // Time metrics regress upward; `_qps` throughputs regress
         // downward (the mirrored bound keeps the tolerance symmetric:
         // base/(1+t), not base·(1−t)).
@@ -428,6 +464,58 @@ mod tests {
         // A real throughput drop must trip the gate.
         let err = gate(&smoke(&[("serve_qps", 5.0)]), &base, 0.25).unwrap_err();
         assert!(err.contains("serve_qps"), "unexpected message: {err}");
+    }
+
+    #[test]
+    fn obs_overhead_gate_passes_within_ceiling() {
+        // 10.1s vs a 10.0s anchor is +1.0% — inside the 2% ceiling.
+        let base = parse(
+            r#"{"metrics": {"solve_llama2_7b_fattree_4t": 10.0,
+                            "obs_overhead_pct": 2.0}}"#,
+        )
+        .unwrap();
+        let pr = smoke(&[("solve_llama2_7b_fattree_4t", 10.1)]);
+        assert!(gate(&pr, &base, 0.25).is_ok());
+        // A missing anchor downgrades the overhead gate to a warning,
+        // but the anchor itself still trips the missing-metric check.
+        let err = gate(&smoke(&[("serve_qps", 1.0)]), &base, 0.25).unwrap_err();
+        assert!(!err.contains("obs_overhead_pct"), "unexpected: {err}");
+        assert!(err.contains("solve_llama2_7b_fattree_4t"), "unexpected: {err}");
+    }
+
+    #[test]
+    fn obs_overhead_gate_fails_beyond_ceiling() {
+        // 10.5s vs 10.0s is +5.0% — beyond the 2% ceiling, even though
+        // the generic 25% wall-clock tolerance would wave it through.
+        let base = parse(
+            r#"{"metrics": {"solve_llama2_7b_fattree_4t": 10.0,
+                            "obs_overhead_pct": 2.0}}"#,
+        )
+        .unwrap();
+        let pr = smoke(&[("solve_llama2_7b_fattree_4t", 10.5)]);
+        let err = gate(&pr, &base, 0.25).unwrap_err();
+        assert!(err.contains("obs_overhead_pct"), "unexpected message: {err}");
+    }
+
+    #[test]
+    fn pct_gates_survive_baseline_refresh() {
+        // `_pct` keys are never run metrics, so --write-baseline must
+        // carry them forward untouched.
+        let existing = parse(
+            r#"{"metrics": {"solve_llama2_7b_fattree_4t": 10.0,
+                            "obs_overhead_pct": 2.0}}"#,
+        )
+        .unwrap();
+        let merged = merged_baseline(
+            &smoke(&[("solve_llama2_7b_fattree_4t", 9.0)]),
+            Some(&existing),
+        )
+        .unwrap();
+        assert_eq!(merged.get("metrics").get("obs_overhead_pct").as_f64(), Some(2.0));
+        assert_eq!(
+            merged.get("metrics").get("solve_llama2_7b_fattree_4t").as_f64(),
+            Some(9.0)
+        );
     }
 
     #[test]

@@ -20,6 +20,10 @@
 //! * [`service`]: placement-as-a-service — fingerprinted queries over
 //!   an LRU plan cache with warm-started solves and incremental
 //!   `reconcile` after elasticity events.
+//! * [`obs`]: the flight recorder — zero-dep spans/counters/histograms
+//!   across solver, netsim, and service, merged per-thread post-run and
+//!   exported as Chrome trace-event JSON (strictly outside the
+//!   determinism boundary; compiled to a cached-bool branch when off).
 //! * [`runtime`]: PJRT engine loading AOT HLO artifacts.
 //! * [`profiler`]: calibrates the compute model against real executions.
 //! * [`trainer`]: real pipeline-parallel training over thread-devices.
@@ -28,6 +32,7 @@
 pub mod baselines;
 pub mod cost;
 pub mod netsim;
+pub mod obs;
 pub mod profiler;
 pub mod runtime;
 pub mod trainer;

@@ -11,6 +11,8 @@
 //!   bench-smoke  deterministic perf smoke + CI bench-regression gate
 //!   serve-bench  placement-service throughput (queries/s, cache hit rate,
 //!              warm-start speedup, elasticity migration cost)
+//!   obs-summary  human tables from a `--trace` flight-recorder file
+//!              (top spans by self-time, prune effectiveness, cache hits)
 //!   train      real pipeline-parallel training from AOT artifacts
 //!   profile    calibrate the compute model against PJRT probe runs
 //!   figure2|5|6|7|10|11, table2|4|6|7, v100   — paper reproductions
@@ -41,9 +43,20 @@ fn cluster_by_name(name: &str, devices: usize, oversub: f64) -> Result<Cluster, 
             let v = nest::util::json::parse(&text)?;
             Cluster::from_json(&v)
         }
-        other => Err(format!(
-            "unknown cluster '{other}' (fat-tree, spine-leaf, v100, hetero, torus2d, or a .json file)"
-        )),
+        other => {
+            // Bare name fallback: a shipped config under configs/
+            // (`--config dgx_superpod` ≡ `--cluster configs/dgx_superpod.json`).
+            let shipped = format!("configs/{other}.json");
+            if std::path::Path::new(&shipped).is_file() {
+                let text = std::fs::read_to_string(&shipped).map_err(|e| e.to_string())?;
+                let v = nest::util::json::parse(&text)?;
+                return Cluster::from_json(&v);
+            }
+            Err(format!(
+                "unknown cluster '{other}' (fat-tree, spine-leaf, v100, hetero, torus2d, \
+                 a configs/ name, or a .json file)"
+            ))
+        }
     }
 }
 
@@ -98,6 +111,19 @@ fn main() {
     // for every thread count — see nest::solver docs. An explicit
     // `--threads 0` is a clean error, not a silent hang.
     let threads = args.get_usize_nonzero("threads", 0);
+    // Flight recorder: `--trace <path>` (path-validated) wins over the
+    // NEST_TRACE environment variable. `obs-summary` *reads* a trace
+    // instead of recording one, so it opts out here and parses the flag
+    // itself. Tracing is strictly observational: plans and reports are
+    // bit-identical with it on or off (see nest::obs).
+    let trace = if cmd == "obs-summary" {
+        None
+    } else {
+        args.get_out_path("trace").or_else(nest::obs::env_trace_path)
+    };
+    if trace.is_some() {
+        nest::obs::set_enabled(true);
+    }
     // Fail fast on malformed common flags before any solve starts.
     if let Err(e) = args.check() {
         eprintln!("error: {e}");
@@ -117,7 +143,10 @@ fn main() {
             "solve" | "simulate" => {
                 let graph = models::by_name(&model, mbs)
                     .ok_or_else(|| format!("unknown model '{model}'"))?;
-                let cluster = cluster_by_name(&cluster_name, devices, oversub)?;
+                // `--config` is accepted as an alias for `--cluster`
+                // (matching the netsim/refine subcommands' spelling).
+                let cluster_src = args.get_opt("config").unwrap_or_else(|| cluster_name.clone());
+                let cluster = cluster_by_name(&cluster_src, devices, oversub)?;
                 println!("{}", cluster.describe());
                 let sopts = SolverOpts {
                     threads,
@@ -329,6 +358,17 @@ fn main() {
                 }
                 Ok(())
             }
+            "obs-summary" => {
+                let path = args.get("trace", "nest_trace.json");
+                args.check()?;
+                let text =
+                    std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
+                let v = nest::util::json::parse(&text)?;
+                let summary = nest::obs::summary_from_json(&v)?;
+                println!("flight-recorder summary for {path}:");
+                print!("{summary}");
+                Ok(())
+            }
             "serve-bench" => {
                 let queries = args.get_usize("queries", 16);
                 args.check()?;
@@ -460,6 +500,8 @@ fn main() {
                      \x20 serve-bench  placement-as-a-service throughput: stream --queries N (default 16) over a model x\n\
                      \x20            cluster grid; reports queries/s, cache hit rate, warm/hit speedups, migration cost\n\
                      \x20            (exits nonzero if any served plan differs from a cold solve)\n\
+                     \x20 obs-summary  --trace <file.json>: human tables from a recorded trace (top spans by\n\
+                     \x20            self-time, prune-site effectiveness, cache hit ratio, histogram quantiles)\n\
                      \x20 train      --steps N --microbatches N --dp N   (needs `make artifacts`)\n\
                      \x20 profile    --reps N\n\
                      \x20 figure2|figure5|figure6|figure7|figure10|figure11\n\
@@ -467,7 +509,9 @@ fn main() {
                      \x20 hetero     mixed H100+V100 pool vs single-class twins (exits nonzero if the\n\
                      \x20            mixed solve is not strictly faster than the all-V100 constraint)\n\
                      \x20 all        run the complete evaluation\n\n\
-                     global: --quick (smaller sweeps), --results <dir>, --threads N (solver workers, N ≥ 1; omit for all cores)\n\n\
+                     global: --quick (smaller sweeps), --results <dir>, --threads N (solver workers, N ≥ 1; omit for all cores),\n\
+                     \x20       --trace <file.json> (flight recorder: Chrome-trace spans/counters/histograms; also NEST_TRACE=<path>;\n\
+                     \x20       zero overhead when off, bit-identical plans when on)\n\n\
                      models: llama2-7b llama3-70b bertlarge gpt3-175b gpt3-35b mixtral-8x7b mixtral-790m"
                 );
                 Ok(())
@@ -476,6 +520,33 @@ fn main() {
     };
 
     let result = run(&mut args).and_then(|_| args.finish());
+
+    // Emit the flight-recorder trace (also on error — a trace of a
+    // failed run is exactly when you want one). Merges every worker
+    // thread's buffer in stable thread-index order.
+    if let Some(path) = &trace {
+        match nest::obs::write_trace(path) {
+            Ok(n) => {
+                println!(
+                    "trace written to {path} ({n} spans) — load in chrome://tracing or \
+                     ui.perfetto.dev, or run `nest obs-summary --trace {path}`"
+                );
+                // The full-evaluation path renders the summary inline.
+                if cmd == "all" && result.is_ok() {
+                    if let Ok(text) = std::fs::read_to_string(path) {
+                        if let Ok(v) = nest::util::json::parse(&text) {
+                            if let Ok(s) = nest::obs::summary_from_json(&v) {
+                                println!("flight-recorder summary:");
+                                print!("{s}");
+                            }
+                        }
+                    }
+                }
+            }
+            Err(e) => eprintln!("warning: failed to write trace {path}: {e}"),
+        }
+    }
+
     if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);

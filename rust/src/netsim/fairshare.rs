@@ -57,6 +57,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use super::topo::LinkGraph;
+use crate::obs;
 
 /// One flow: `bytes` from device `src` to device `dst` along the
 /// topology's deterministic route.
@@ -372,6 +373,14 @@ impl FairshareEngine {
         );
         let mode = mode.resolve();
         let nt = wl.tasks.len();
+        // Event-loop span; heap traffic accumulates in plain locals
+        // (flushed once after the loop) so the event loop never pays a
+        // recorder call per pop.
+        let _span = obs::span_with("netsim.run", "netsim", || {
+            vec![("mode", format!("{mode:?}")), ("tasks", nt.to_string())]
+        });
+        let mut heap_pops: u64 = 0;
+        let mut stale_drops: u64 = 0;
         let mut st: Vec<TaskState> = vec![TaskState::default(); nt];
         let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); nt];
         for (i, deps) in wl.deps.iter().enumerate() {
@@ -523,6 +532,7 @@ impl FairshareEngine {
                 };
                 if stale {
                     heap.pop();
+                    stale_drops += 1;
                     continue;
                 }
                 t_next = Some(tk.0);
@@ -540,12 +550,14 @@ impl FairshareEngine {
                     break;
                 }
                 let Reverse((_, _, _, ev)) = heap.pop().unwrap();
+                heap_pops += 1;
                 match ev {
                     EvPayload::Drain { slot, gen } => {
                         let sl = slot as usize;
                         {
                             let f = &self.slots[sl];
                             if !f.alive || f.gen != gen {
+                                stale_drops += 1;
                                 continue;
                             }
                         }
@@ -655,6 +667,28 @@ impl FairshareEngine {
         });
         let max_link_util = link_util.first().map(|u| u.utilization).unwrap_or(0.0);
 
+        if obs::enabled() {
+            obs::count("netsim.heap.pop", heap_pops);
+            obs::count("netsim.heap.stale_drop", stale_drops);
+            obs::count("netsim.events", events as u64);
+            // Per-link utilization snapshot: one histogram sample per
+            // active link (integer percent), plus an instant carrying
+            // the hottest link for the timeline view.
+            for u in &link_util {
+                obs::record("netsim.link_util_pct", (u.utilization * 100.0).round() as u64);
+            }
+            obs::instant("netsim.link_util", "netsim", || {
+                vec![
+                    ("links_active", link_util.len().to_string()),
+                    (
+                        "max_link",
+                        link_util.first().map(|u| u.name.clone()).unwrap_or_default(),
+                    ),
+                    ("max_util_pct", format!("{:.1}", max_link_util * 100.0)),
+                ]
+            });
+        }
+
         NetsimReport {
             batch_time: t,
             n_flows,
@@ -753,6 +787,9 @@ fn resolve_rates(
                     continue; // completing flow left the link idle
                 }
                 comp.sort_unstable_by_key(|&s| slots[s as usize].id);
+                if obs::enabled() {
+                    obs::record("netsim.dirty_component", comp.len() as u64);
+                }
                 fill_component(
                     topo, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t,
                     busy_bytes, heap,
@@ -783,6 +820,9 @@ fn resolve_rates(
                 }
                 grow_component!();
                 comp.sort_unstable_by_key(|&s| slots[s as usize].id);
+                if obs::enabled() {
+                    obs::record("netsim.dirty_component", comp.len() as u64);
+                }
                 fill_component(
                     topo, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t,
                     busy_bytes, heap,

@@ -1,0 +1,840 @@
+//! Flight recorder for the solve → refine → serve pipeline: RAII spans,
+//! monotonically-named counters, and log-bucketed latency histograms,
+//! exported as Chrome trace-event JSON (`chrome://tracing` / Perfetto).
+//!
+//! Zero external dependencies (house style: the vendored [`crate::util`]
+//! shims only). Three design rules everything here obeys:
+//!
+//! 1. **The off path is a branch on a cached bool.** Every public entry
+//!    point loads one relaxed [`AtomicBool`] and returns — no
+//!    allocation, no clock read, no thread-local touch. Hot loops that
+//!    cannot afford even a call per iteration (the DP transition scans,
+//!    the fair-share event loop) accumulate plain local `u64`s
+//!    unconditionally and flush them once per call behind
+//!    [`enabled()`].
+//! 2. **Outside the determinism boundary.** Tracing observes; it never
+//!    steers. Plans, K-best shortlists, and `NetsimReport`s are
+//!    bit-identical with tracing on or off, at any `--threads`
+//!    (`prop_tracing_is_outside_the_determinism_boundary` in the
+//!    property suite is the proof on random scenarios).
+//! 3. **Per-thread buffers, merged post-run.** Each thread records into
+//!    its own [`ThreadBuf`] (no locks on the hot path); scoped worker
+//!    threads flush to a global collector when they exit, and
+//!    [`drain`] merges everything in stable thread-index order.
+//!
+//! Enablement: the `--trace <path>` CLI flag, or the `NEST_TRACE`
+//! environment variable (`NEST_TRACE=out.json`; `NEST_TRACE=1` picks
+//! the default `nest_trace.json`; `0`/unset leaves tracing off). The
+//! CLI flag wins when both are present. `nest obs-summary --trace
+//! <file>` renders a human table from an emitted trace.
+//!
+//! Naming scheme (`layer.noun[.detail]`) — the full glossary lives in
+//! README § Observability: spans `solver.solve_topk`, `solver.config`,
+//! `cost.build`, `netsim.run`, `refine.refine`, `refine.replay`,
+//! `service.query`, `service.fingerprint`; counters
+//! `solver.prune.config_bound`, `solver.prune.dp_state`,
+//! `solver.prune.final_cut`, `solver.dp_states`,
+//! `solver.incumbent.improved`, `netsim.heap.pop`,
+//! `netsim.heap.stale_drop`, `netsim.events`, `service.cache_hit`,
+//! `service.cache_miss`, `service.warm_neighbor`, `service.evict`;
+//! histograms `netsim.dirty_component`, `netsim.link_util_pct`,
+//! `service.query_us`.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+use crate::util::table::Table;
+
+// ---------------------------------------------------------------------
+// Enablement + clock
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The cached-bool gate every recording entry point branches on.
+/// Relaxed is enough: enablement is set once before the run and read
+/// monotonically; a racing reader at worst drops or keeps one event,
+/// never corrupts state.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the recorder on or off. Pins the process clock anchor on first
+/// enable so `ts` values are relative to (just before) the traced run.
+pub fn set_enabled(on: bool) {
+    if on {
+        anchor();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Resolve `NEST_TRACE` to an output path: unset/`0` → off, `1` or
+/// empty → the default `nest_trace.json`, anything else → that path.
+pub fn env_trace_path() -> Option<String> {
+    match std::env::var("NEST_TRACE") {
+        Err(_) => None,
+        Ok(v) if v == "0" => None,
+        Ok(v) if v.is_empty() || v == "1" => Some("nest_trace.json".to_string()),
+        Ok(v) => Some(v),
+    }
+}
+
+fn anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace anchor. Only meaningful while
+/// tracing is (or has been) enabled; callers use it to time sections
+/// they feed into [`record`] histograms.
+pub fn now_ns() -> u64 {
+    anchor().elapsed().as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------
+// Per-thread recorder
+// ---------------------------------------------------------------------
+
+/// A completed span: wall interval plus self-time (duration minus the
+/// durations of spans nested inside it on the same thread).
+#[derive(Debug, Clone)]
+struct SpanEv {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    dur_ns: u64,
+    self_ns: u64,
+    args: Vec<(&'static str, String)>,
+}
+
+/// A point event (Chrome `ph:"i"`).
+#[derive(Debug, Clone)]
+struct InstantEv {
+    name: &'static str,
+    cat: &'static str,
+    ts_ns: u64,
+    args: Vec<(&'static str, String)>,
+}
+
+/// Log₂-bucketed histogram: bucket 0 holds the value 0, bucket `b ≥ 1`
+/// holds `[2^(b-1), 2^b)`. 65 buckets cover the full `u64` range, so
+/// recording can never overflow into a panic on the hot path.
+#[derive(Debug, Clone)]
+struct Hist {
+    count: u64,
+    total: u64,
+    buckets: [u64; 65],
+}
+
+impl Hist {
+    fn new() -> Self {
+        Hist {
+            count: 0,
+            total: 0,
+            buckets: [0; 65],
+        }
+    }
+
+    fn record(&mut self, v: u64) {
+        self.count += 1;
+        self.total = self.total.saturating_add(v);
+        self.buckets[bucket_of(v)] += 1;
+    }
+
+    fn merge(&mut self, other: &Hist) {
+        self.count += other.count;
+        self.total = self.total.saturating_add(other.total);
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Lower bound of the bucket containing the q-quantile (0 < q ≤ 1).
+    fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count as f64) * q).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return bucket_lo(b);
+            }
+        }
+        bucket_lo(64)
+    }
+}
+
+fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+fn bucket_lo(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        1u64 << (b - 1)
+    }
+}
+
+/// One thread's recording buffer. `stack` carries, per open span, the
+/// summed duration of its already-closed children — how self-time is
+/// computed without any global state.
+#[derive(Debug)]
+struct ThreadBuf {
+    index: usize,
+    spans: Vec<SpanEv>,
+    instants: Vec<InstantEv>,
+    counters: BTreeMap<&'static str, u64>,
+    hists: BTreeMap<&'static str, Hist>,
+    stack: Vec<u64>,
+}
+
+impl ThreadBuf {
+    fn with_index(index: usize) -> Self {
+        ThreadBuf {
+            index,
+            spans: Vec::new(),
+            instants: Vec::new(),
+            counters: BTreeMap::new(),
+            hists: BTreeMap::new(),
+            stack: Vec::new(),
+        }
+    }
+
+    fn fresh() -> Self {
+        static NEXT_TID: AtomicUsize = AtomicUsize::new(0);
+        Self::with_index(NEXT_TID.fetch_add(1, Ordering::Relaxed))
+    }
+
+    fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+            && self.instants.is_empty()
+            && self.counters.is_empty()
+            && self.hists.is_empty()
+    }
+}
+
+/// Buffers flushed by exiting threads (the solver's scoped workers all
+/// exit before `solve_topk` returns, so a post-run [`drain`] sees every
+/// worker's events here).
+static COLLECTOR: Mutex<Vec<ThreadBuf>> = Mutex::new(Vec::new());
+
+fn collector() -> MutexGuard<'static, Vec<ThreadBuf>> {
+    COLLECTOR.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// TLS wrapper whose `Drop` flushes the thread's buffer into the global
+/// collector when the thread exits.
+struct Holder(RefCell<ThreadBuf>);
+
+impl Drop for Holder {
+    fn drop(&mut self) {
+        let buf = self.0.get_mut();
+        if !buf.is_empty() {
+            let idx = buf.index;
+            let taken = std::mem::replace(buf, ThreadBuf::with_index(idx));
+            collector().push(taken);
+        }
+    }
+}
+
+thread_local! {
+    static HOLDER: Holder = Holder(RefCell::new(ThreadBuf::fresh()));
+}
+
+fn with_buf<R>(f: impl FnOnce(&mut ThreadBuf) -> R) -> R {
+    HOLDER.with(|h| f(&mut h.0.borrow_mut()))
+}
+
+// ---------------------------------------------------------------------
+// Recording API
+// ---------------------------------------------------------------------
+
+/// RAII span guard. `None` when tracing is off — constructing and
+/// dropping the disabled guard touches nothing (no clock, no TLS).
+pub struct Span(Option<OpenSpan>);
+
+struct OpenSpan {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    args: Vec<(&'static str, String)>,
+}
+
+/// Open a span; it closes (and records) when the guard drops.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    open_span(name, cat, Vec::new())
+}
+
+/// [`span`] with key/value args rendered into the trace. The closure
+/// runs only when tracing is on, so arg formatting costs nothing on the
+/// off path.
+#[inline]
+pub fn span_with(
+    name: &'static str,
+    cat: &'static str,
+    args: impl FnOnce() -> Vec<(&'static str, String)>,
+) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    open_span(name, cat, args())
+}
+
+fn open_span(name: &'static str, cat: &'static str, args: Vec<(&'static str, String)>) -> Span {
+    with_buf(|b| b.stack.push(0));
+    Span(Some(OpenSpan {
+        name,
+        cat,
+        start_ns: now_ns(),
+        args,
+    }))
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(o) = self.0.take() {
+            let dur = now_ns().saturating_sub(o.start_ns);
+            with_buf(|b| {
+                let child = b.stack.pop().unwrap_or(0);
+                if let Some(top) = b.stack.last_mut() {
+                    *top += dur;
+                }
+                b.spans.push(SpanEv {
+                    name: o.name,
+                    cat: o.cat,
+                    start_ns: o.start_ns,
+                    dur_ns: dur,
+                    self_ns: dur.saturating_sub(child),
+                    args: o.args,
+                });
+            });
+        }
+    }
+}
+
+/// Bump a named counter by `delta`.
+#[inline]
+pub fn count(name: &'static str, delta: u64) {
+    if !enabled() || delta == 0 {
+        return;
+    }
+    with_buf(|b| *b.counters.entry(name).or_insert(0) += delta);
+}
+
+/// Record one sample into a log-bucketed histogram.
+#[inline]
+pub fn record(name: &'static str, value: u64) {
+    if !enabled() {
+        return;
+    }
+    with_buf(|b| b.hists.entry(name).or_insert_with(Hist::new).record(value));
+}
+
+/// Emit a point event (Chrome instant). Args closure runs only when
+/// tracing is on.
+#[inline]
+pub fn instant(
+    name: &'static str,
+    cat: &'static str,
+    args: impl FnOnce() -> Vec<(&'static str, String)>,
+) {
+    if !enabled() {
+        return;
+    }
+    let ev = InstantEv {
+        name,
+        cat,
+        ts_ns: now_ns(),
+        args: args(),
+    };
+    with_buf(|b| b.instants.push(ev));
+}
+
+// ---------------------------------------------------------------------
+// Draining + Chrome export
+// ---------------------------------------------------------------------
+
+/// Everything recorded since the last drain, one entry per thread
+/// buffer, sorted by stable thread index.
+pub struct TraceData {
+    threads: Vec<ThreadBuf>,
+}
+
+impl TraceData {
+    pub fn is_empty(&self) -> bool {
+        self.threads.iter().all(|t| t.is_empty())
+    }
+
+    pub fn n_spans(&self) -> usize {
+        self.threads.iter().map(|t| t.spans.len()).sum()
+    }
+
+    /// Merged view of a counter across all thread buffers.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.threads
+            .iter()
+            .filter_map(|t| t.counters.get(name))
+            .sum()
+    }
+}
+
+/// Take every buffered event: the calling thread's live buffer (its TLS
+/// destructor only runs at thread exit) plus everything exited threads
+/// already flushed. Call between runs, not inside an open span — an
+/// open span's child-time accounting does not survive the drain.
+pub fn drain() -> TraceData {
+    with_buf(|b| {
+        if !b.is_empty() {
+            let idx = b.index;
+            let taken = std::mem::replace(b, ThreadBuf::with_index(idx));
+            collector().push(taken);
+        }
+    });
+    let mut threads: Vec<ThreadBuf> = std::mem::take(&mut *collector());
+    threads.sort_by_key(|b| b.index);
+    TraceData { threads }
+}
+
+fn args_json(args: &[(&'static str, String)], extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs: Vec<(&str, Json)> = args
+        .iter()
+        .map(|(k, v)| (*k, Json::str(v.clone())))
+        .collect();
+    pairs.extend(extra);
+    Json::obj(pairs)
+}
+
+/// Render drained data as Chrome trace-event JSON: spans as complete
+/// (`ph:"X"`) events, instants as `ph:"i"`, one `thread_name` metadata
+/// record per buffer, and the merged counters/histograms under a
+/// `"nest"` top-level key (unknown top-level keys are ignored by the
+/// trace viewers).
+pub fn to_chrome_json(data: &TraceData) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for b in &data.threads {
+        let tid = Json::num(b.index as f64);
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(0.0)),
+            ("tid", tid.clone()),
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(format!("nest-{}", b.index)))]),
+            ),
+        ]));
+        for s in &b.spans {
+            events.push(Json::obj(vec![
+                ("ph", Json::str("X")),
+                ("name", Json::str(s.name)),
+                ("cat", Json::str(s.cat)),
+                ("ts", Json::num(s.start_ns as f64 / 1e3)),
+                ("dur", Json::num(s.dur_ns as f64 / 1e3)),
+                ("pid", Json::num(0.0)),
+                ("tid", tid.clone()),
+                (
+                    "args",
+                    args_json(
+                        &s.args,
+                        vec![("self_us", Json::num(s.self_ns as f64 / 1e3))],
+                    ),
+                ),
+            ]));
+        }
+        for i in &b.instants {
+            events.push(Json::obj(vec![
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("name", Json::str(i.name)),
+                ("cat", Json::str(i.cat)),
+                ("ts", Json::num(i.ts_ns as f64 / 1e3)),
+                ("pid", Json::num(0.0)),
+                ("tid", tid.clone()),
+                ("args", args_json(&i.args, Vec::new())),
+            ]));
+        }
+    }
+
+    let mut counters: BTreeMap<&'static str, u64> = BTreeMap::new();
+    let mut hists: BTreeMap<&'static str, Hist> = BTreeMap::new();
+    for b in &data.threads {
+        for (k, v) in &b.counters {
+            *counters.entry(k).or_insert(0) += v;
+        }
+        for (k, h) in &b.hists {
+            hists.entry(k).or_insert_with(Hist::new).merge(h);
+        }
+    }
+    let counters_json = Json::obj(
+        counters
+            .iter()
+            .map(|(k, v)| (*k, Json::num(*v as f64)))
+            .collect(),
+    );
+    let hists_json = Json::obj(
+        hists
+            .iter()
+            .map(|(k, h)| {
+                let buckets: Vec<Json> = h
+                    .buckets
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &n)| n > 0)
+                    .map(|(b, &n)| {
+                        Json::arr(vec![Json::num(bucket_lo(b) as f64), Json::num(n as f64)])
+                    })
+                    .collect();
+                (
+                    *k,
+                    Json::obj(vec![
+                        ("count", Json::num(h.count as f64)),
+                        ("total", Json::num(h.total as f64)),
+                        ("p50", Json::num(h.quantile(0.50) as f64)),
+                        ("p99", Json::num(h.quantile(0.99) as f64)),
+                        ("buckets", Json::arr(buckets)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "nest",
+            Json::obj(vec![
+                ("schema", Json::str("nest-trace-v1")),
+                ("counters", counters_json),
+                ("histograms", hists_json),
+            ]),
+        ),
+    ])
+}
+
+/// Drain and write the Chrome trace to `path`. Returns the number of
+/// span events written.
+pub fn write_trace(path: &str) -> std::io::Result<usize> {
+    let data = drain();
+    let n = data.n_spans();
+    std::fs::write(path, json::to_pretty(&to_chrome_json(&data)))?;
+    Ok(n)
+}
+
+// ---------------------------------------------------------------------
+// Human summary (`nest obs-summary`)
+// ---------------------------------------------------------------------
+
+fn fmt_us(us: f64) -> String {
+    crate::util::table::fmt_time(us / 1e6)
+}
+
+/// Render the `obs-summary` tables from a parsed trace file: top spans
+/// by self-time, counters (with prune-site shares and the service cache
+/// hit ratio), and histogram quantiles.
+pub fn summary_from_json(v: &Json) -> Result<String, String> {
+    let events = v
+        .get("traceEvents")
+        .as_arr()
+        .ok_or("trace has no traceEvents array")?;
+
+    struct Agg {
+        calls: u64,
+        total_us: f64,
+        self_us: f64,
+    }
+    let mut spans: BTreeMap<String, Agg> = BTreeMap::new();
+    for e in events {
+        if e.get("ph").as_str() != Some("X") {
+            continue;
+        }
+        let name = e.get("name").as_str().unwrap_or("?").to_string();
+        let dur = e.get("dur").as_f64().unwrap_or(0.0);
+        let self_us = e.get("args").get("self_us").as_f64().unwrap_or(dur);
+        let a = spans.entry(name).or_insert(Agg {
+            calls: 0,
+            total_us: 0.0,
+            self_us: 0.0,
+        });
+        a.calls += 1;
+        a.total_us += dur;
+        a.self_us += self_us;
+    }
+
+    let mut out = String::new();
+    let mut ranked: Vec<(&String, &Agg)> = spans.iter().collect();
+    ranked.sort_by(|a, b| b.1.self_us.total_cmp(&a.1.self_us));
+    let self_sum: f64 = ranked.iter().map(|(_, a)| a.self_us).sum();
+    let mut t = Table::new(&["span", "calls", "total", "self", "self%"]);
+    for (name, a) in ranked.iter().take(12) {
+        t.row(vec![
+            (*name).clone(),
+            a.calls.to_string(),
+            fmt_us(a.total_us),
+            fmt_us(a.self_us),
+            if self_sum > 0.0 {
+                format!("{:5.1}", 100.0 * a.self_us / self_sum)
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    out.push_str("== top spans by self-time ==\n");
+    out.push_str(&t.render());
+
+    let nest = v.get("nest");
+    if let Some(counters) = nest.get("counters").as_obj() {
+        let mut t = Table::new(&["counter", "value"]);
+        for (k, val) in counters {
+            t.row(vec![k.clone(), format!("{}", val.as_u64().unwrap_or(0))]);
+        }
+        out.push_str("\n== counters ==\n");
+        out.push_str(&t.render());
+
+        let get = |k: &str| counters.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+        let states = get("solver.dp_states");
+        let prunes = [
+            ("config bound", get("solver.prune.config_bound")),
+            ("dp state bound", get("solver.prune.dp_state")),
+            ("final cut scan", get("solver.prune.final_cut")),
+        ];
+        if prunes.iter().any(|(_, n)| *n > 0) || states > 0 {
+            out.push_str("\n== prune-site effectiveness ==\n");
+            let mut t = Table::new(&["site", "hits", "per dp state"]);
+            for (site, n) in prunes {
+                t.row(vec![
+                    site.to_string(),
+                    n.to_string(),
+                    if states > 0 {
+                        format!("{:.3}", n as f64 / states as f64)
+                    } else {
+                        "-".to_string()
+                    },
+                ]);
+            }
+            t.row(vec!["dp states".to_string(), states.to_string(), "1.000".to_string()]);
+            out.push_str(&t.render());
+        }
+
+        let (hit, miss) = (get("service.cache_hit"), get("service.cache_miss"));
+        if hit + miss > 0 {
+            out.push_str(&format!(
+                "\ncache hit ratio: {}/{} ({:.1}%), warm-neighbor starts: {}, evictions: {}\n",
+                hit,
+                hit + miss,
+                100.0 * hit as f64 / (hit + miss) as f64,
+                get("service.warm_neighbor"),
+                get("service.evict"),
+            ));
+        }
+    }
+
+    if let Some(hists) = nest.get("histograms").as_obj() {
+        if !hists.is_empty() {
+            let mut t = Table::new(&["histogram", "samples", "p50≥", "p99≥"]);
+            for (k, h) in hists {
+                t.row(vec![
+                    k.clone(),
+                    format!("{}", h.get("count").as_u64().unwrap_or(0)),
+                    format!("{}", h.get("p50").as_u64().unwrap_or(0)),
+                    format!("{}", h.get("p99").as_u64().unwrap_or(0)),
+                ]);
+            }
+            out.push_str("\n== histograms (log₂ bucket lower bounds) ==\n");
+            out.push_str(&t.render());
+        }
+    }
+
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Test support
+// ---------------------------------------------------------------------
+
+/// Serialize tests that toggle the global recorder: the enable flag and
+/// the collector are process-wide, so tests that turn tracing on take
+/// this lock, drain on entry (discarding other tests' leftovers), and
+/// disable + drain before releasing it.
+pub fn exclusive() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_bucketing_boundaries_and_quantiles() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        for b in 1..64 {
+            // Each bucket's lower bound maps back into the bucket.
+            assert_eq!(bucket_of(bucket_lo(b)), b, "bucket {b}");
+            assert_eq!(bucket_of(bucket_lo(b + 1) - 1), b, "bucket {b} upper");
+        }
+
+        let mut h = Hist::new();
+        assert_eq!(h.quantile(0.5), 0);
+        for v in [0u64, 1, 1, 2, 3, 100, 100_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count, 7);
+        assert_eq!(h.total, 100_107);
+        // 7 samples: p50 target = 4th sample = value 2 → bucket lo 2.
+        assert_eq!(h.quantile(0.5), 2);
+        // p99 target = 7th sample = 100_000 → bucket [65536, 131072).
+        assert_eq!(h.quantile(0.99), 65_536);
+
+        let mut other = Hist::new();
+        other.record(1);
+        h.merge(&other);
+        assert_eq!(h.count, 8);
+        assert_eq!(h.buckets[1], 3);
+    }
+
+    #[test]
+    fn disabled_recorder_is_a_noop() {
+        let _g = exclusive();
+        set_enabled(false);
+        let _ = drain();
+        {
+            let _s = span("test.noop", "test");
+            count("test.noop_counter", 3);
+            record("test.noop_hist", 7);
+            instant("test.noop_instant", "test", Vec::new);
+        }
+        let data = drain();
+        assert!(data.is_empty(), "disabled recorder buffered events");
+    }
+
+    #[test]
+    fn span_nesting_self_time_and_scoped_worker_merge() {
+        let _g = exclusive();
+        set_enabled(true);
+        let _ = drain();
+
+        {
+            let _outer = span("test.outer", "test");
+            {
+                let _inner = span_with("test.inner", "test", || {
+                    vec![("k", "v".to_string())]
+                });
+                count("test.work", 1);
+            }
+            std::thread::scope(|s| {
+                for _ in 0..2 {
+                    s.spawn(|| {
+                        let _w = span("test.worker", "test");
+                        count("test.work", 10);
+                        record("test.hist", 5);
+                    });
+                }
+            });
+        }
+
+        set_enabled(false);
+        let data = drain();
+        // Main-thread buffer + one per scoped worker, merged post-exit.
+        assert!(data.threads.len() >= 3, "worker buffers not collected");
+        assert_eq!(data.counter("test.work"), 21);
+
+        let find = |name: &str| -> Vec<&SpanEv> {
+            data.threads
+                .iter()
+                .flat_map(|t| t.spans.iter())
+                .filter(|s| s.name == name)
+                .collect()
+        };
+        let outer = find("test.outer");
+        let inner = find("test.inner");
+        assert_eq!(outer.len(), 1);
+        assert_eq!(inner.len(), 1);
+        assert_eq!(find("test.worker").len(), 2);
+        // Self-time: outer excludes exactly its same-thread child. The
+        // worker spans ran on other threads and must not be subtracted.
+        assert_eq!(
+            outer[0].self_ns,
+            outer[0].dur_ns - inner[0].dur_ns,
+            "self-time accounting"
+        );
+        assert!(inner[0].start_ns >= outer[0].start_ns);
+        assert_eq!(inner[0].args, vec![("k", "v".to_string())]);
+    }
+
+    #[test]
+    fn chrome_trace_json_is_well_formed_and_reparses() {
+        let _g = exclusive();
+        set_enabled(true);
+        let _ = drain();
+        {
+            let _s = span("test.span", "test");
+            count("test.counter", 4);
+            record("test.hist", 1024);
+            instant("test.instant", "test", || vec![("why", "because".into())]);
+        }
+        set_enabled(false);
+        let data = drain();
+        let rendered = json::to_pretty(&to_chrome_json(&data));
+        let back = json::parse(&rendered).expect("trace JSON reparses");
+
+        let events = back.get("traceEvents").as_arr().expect("traceEvents array");
+        assert!(!events.is_empty());
+        let mut saw_span = false;
+        for e in events {
+            let ph = e.get("ph").as_str().expect("every event has ph");
+            assert!(e.get("name").as_str().is_some());
+            if ph == "X" {
+                saw_span = true;
+                assert!(e.get("ts").as_f64().is_some());
+                assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+                assert!(e.get("args").get("self_us").as_f64().is_some());
+            }
+        }
+        assert!(saw_span);
+        assert_eq!(
+            back.get("nest").get("counters").get("test.counter").as_u64(),
+            Some(4)
+        );
+        let h = back.get("nest").get("histograms").get("test.hist");
+        assert_eq!(h.get("count").as_u64(), Some(1));
+        assert_eq!(h.get("p50").as_u64(), Some(1024));
+
+        // The summary renderer accepts its own output format.
+        let summary = summary_from_json(&back).expect("summary renders");
+        assert!(summary.contains("test.span"));
+        assert!(summary.contains("test.counter"));
+        assert!(summary.contains("test.hist"));
+    }
+
+    #[test]
+    fn env_trace_path_resolution() {
+        let _g = exclusive();
+        std::env::remove_var("NEST_TRACE");
+        assert_eq!(env_trace_path(), None);
+        std::env::set_var("NEST_TRACE", "0");
+        assert_eq!(env_trace_path(), None);
+        std::env::set_var("NEST_TRACE", "1");
+        assert_eq!(env_trace_path(), Some("nest_trace.json".to_string()));
+        std::env::set_var("NEST_TRACE", "custom.json");
+        assert_eq!(env_trace_path(), Some("custom.json".to_string()));
+        std::env::remove_var("NEST_TRACE");
+    }
+}

@@ -48,6 +48,7 @@ use crate::cost::CostArena;
 use crate::graph::{Layer, LayerGraph, LayerKind};
 use crate::netsim::{FairshareEngine, LinkGraph};
 use crate::network::Cluster;
+use crate::obs;
 use crate::solver::plan::{diff_plans_in, PlacementPlan, PlanDelta};
 use crate::solver::refine::{rerank, RefineReport};
 use crate::solver::{solve_topk, SolverOpts, WarmStart};
@@ -231,6 +232,7 @@ impl Query {
     /// cache hit, and returning the cached plan is sound because the
     /// solver's plans are independent of all three.
     pub fn fingerprint(&self) -> u64 {
+        let _span = obs::span("service.fingerprint", "service");
         let mut fp = Fp::new();
         fp.tag(b'q');
         fp.u64(self.graph_fingerprint());
@@ -365,6 +367,19 @@ impl PlacementService {
     /// (same graph or same cluster) otherwise. The returned plans are
     /// bit-identical to a cold `solve_topk` in every path.
     pub fn solve_topk(&mut self, query: &Query, k: usize) -> Served {
+        // Per-query span + latency histogram (µs). The flight recorder
+        // mirrors `ServiceStats` (which stays authoritative) so traces
+        // are self-contained.
+        let _span = obs::span_with("service.query", "service", || {
+            vec![("k", k.max(1).to_string())]
+        });
+        let q_start = obs::enabled().then(obs::now_ns);
+        let finish = |served: Served| -> Served {
+            if let Some(s) = q_start {
+                obs::record("service.query_us", (obs::now_ns() - s) / 1_000);
+            }
+            served
+        };
         self.stats.queries += 1;
         let fp = query.fingerprint();
         if let Some(pos) = self
@@ -373,6 +388,7 @@ impl PlacementService {
             .position(|e| e.fp == fp && e.k >= k.max(1))
         {
             self.stats.cache_hits += 1;
+            obs::count("service.cache_hit", 1);
             let entry = self.entries.remove(pos);
             let served = Served {
                 plans: entry.plans.iter().take(k.max(1)).cloned().collect(),
@@ -383,8 +399,9 @@ impl PlacementService {
                 configs_tried: entry.configs_tried,
             };
             self.entries.insert(0, entry); // refresh LRU position
-            return served;
+            return finish(served);
         }
+        obs::count("service.cache_miss", 1);
 
         let graph_fp = query.graph_fingerprint();
         let cluster_fp = query.cluster_fingerprint();
@@ -400,6 +417,7 @@ impl PlacementService {
         let warm_started = warm.is_some();
         if warm_started {
             self.stats.warm_solves += 1;
+            obs::count("service.warm_neighbor", 1);
         } else {
             self.stats.cold_solves += 1;
         }
@@ -422,16 +440,23 @@ impl PlacementService {
                 configs_tried: top.configs_tried,
             },
         );
+        let evicted = self.entries.len().saturating_sub(self.capacity);
+        if evicted > 0 {
+            obs::count("service.evict", evicted as u64);
+            obs::instant("service.evict", "service", || {
+                vec![("evicted", evicted.to_string())]
+            });
+        }
         self.entries.truncate(self.capacity);
 
-        Served {
+        finish(Served {
             plans: top.plans,
             cache_hit: false,
             warm_started,
             solve_seconds: top.solve_seconds,
             dp_states: top.dp_states,
             configs_tried: top.configs_tried,
-        }
+        })
     }
 
     /// Batched sweep evaluation: answer every query in order through

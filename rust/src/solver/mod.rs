@@ -99,6 +99,21 @@
 //! The full per-stage-device-count generalization (the paper's
 //! `dp[l][D][k][s]` with enumerated allocations) is in [`exact`] and is
 //! used for small clusters (§5.4) and as the optimality cross-check.
+//!
+//! # Tuning the prune sites
+//!
+//! Run any solve with `--trace out.json` (or `NEST_TRACE=out.json`) and
+//! the [`crate::obs`] flight recorder counts every hit at the three
+//! strict prune sites — `solver.prune.config_bound` (the per-`(p, d)`
+//! balanced-compute bound in `eval_config`), `solver.prune.dp_state`
+//! (the per-state lower-bound skip and cut-scan break in [`run_dp`]),
+//! and `solver.prune.final_cut` (the first-stage cut-scan break in
+//! [`eval_final`]) — alongside `solver.dp_states`, per-configuration
+//! spans, and `solver.incumbent.improved` events. `nest obs-summary
+//! --trace out.json` turns that into a prune-site effectiveness table:
+//! the place to look before touching any bound, and the evidence that a
+//! new bound actually fires. Tracing is strictly observational — plans
+//! are bit-identical with it on or off (property-proven).
 
 pub mod assign;
 pub mod exact;
@@ -116,6 +131,7 @@ use crate::graph::LayerGraph;
 use crate::hw::ClassMask;
 use crate::memory::MemSpec;
 use crate::network::Cluster;
+use crate::obs;
 use assign::{boundary_level, stage_devices};
 use plan::{PlacementPlan, StagePlan};
 
@@ -257,6 +273,12 @@ impl Incumbent {
         let pos = ts.partition_point(|&t| t <= v);
         ts.insert(pos, v);
         ts.truncate(self.k);
+        // Flight recorder (cold path: only reached on a genuine top-K
+        // entry). Strictly observational — never steers the search.
+        obs::count("solver.incumbent.improved", 1);
+        obs::instant("solver.incumbent.improved", "solver", || {
+            vec![("batch_time", format!("{v:.6e}"))]
+        });
         if ts.len() == self.k {
             self.kth
                 .fetch_min(ts[self.k - 1].to_bits(), Ordering::Relaxed);
@@ -360,6 +382,10 @@ fn run_dp(
     let blev: Vec<usize> = (0..=s_max)
         .map(|s| if s == 0 { 0 } else { boundary_level(cluster, s * g) })
         .collect();
+    // Prune hits accumulate in a plain local (same pattern as `states`)
+    // and flush to the flight recorder once per table build — the
+    // transition scans never pay a per-iteration recorder call.
+    let mut pruned: u64 = 0;
     for s in 1..=s_max {
         let StageCtx { mask, cap } = ctxs[s];
         // Per-s invariants hoisted out of the cut scan: the resolved
@@ -376,6 +402,7 @@ fn run_dp(
                 // producer edge pays latency), so `lb >= bound` implies
                 // the state is strictly worse than the incumbent.
                 if cm.stage_load_lb_priced(&pricer, i, n) >= bound {
+                    pruned += 1;
                     continue;
                 }
                 if let Some(spec) = cm.stage_choose_spec(i, n, stash, cap, zero_cap, recompute)
@@ -403,6 +430,7 @@ fn run_dp(
                 // bound-tying candidate is ever lost to this break).
                 let lb = cm.stage_load_lb_priced(&pricer, i, j);
                 if lb >= best.min(bound) {
+                    pruned += 1;
                     break;
                 }
                 let rest = t.cost_at(j, s - 1);
@@ -435,6 +463,9 @@ fn run_dp(
                 t.spec[ix] = best_spec;
             }
         }
+    }
+    if obs::enabled() {
+        obs::count("solver.prune.dp_state", pruned);
     }
     t
 }
@@ -470,6 +501,7 @@ fn eval_final(
     }
     let l_send = boundary_level(cluster, (p - 1) * dp.g);
     let mut best: Option<(f64, usize, MemSpec)> = None;
+    let mut pruned: u64 = 0;
     for j in 1..=(n - (p - 1)) {
         let lb = cm.stage_load_lb_priced(&pricer, 0, j);
         let mut cutoff = bound;
@@ -477,6 +509,7 @@ fn eval_final(
             cutoff = cutoff.min(b);
         }
         if lb >= cutoff {
+            pruned += 1;
             break;
         }
         let Some(spec) = cm.stage_choose_spec(0, j, stash, cap, zero_cap, recompute) else {
@@ -488,6 +521,9 @@ fn eval_final(
         if cand.is_finite() && best.map(|(b, _, _)| cand < b).unwrap_or(true) {
             best = Some((cand, j, spec));
         }
+    }
+    if obs::enabled() {
+        obs::count("solver.prune.final_cut", pruned);
     }
     best
 }
@@ -627,6 +663,15 @@ fn eval_config(
     k: usize,
     incumbent: &Incumbent,
 ) -> ConfigOutcome {
+    // Per-configuration span: one per (sg, recompute) work item, with
+    // the configuration in the args (the trace's unit of solver work).
+    let _span = obs::span_with("solver.config", "solver", || {
+        vec![
+            ("sg", format!("{sg:?}")),
+            ("recompute", rc.to_string()),
+            ("sg_idx", sg_idx.to_string()),
+        ]
+    });
     let mut out = ConfigOutcome {
         kbest: Vec::new(),
         dp_states: 0,
@@ -658,6 +703,7 @@ fn eval_config(
     // replica coverage depends on the stride p·g and width d.
     let uniform_ctxs = stage_ctxs(cluster, g, s_max, 1, 0);
     let mut tables: HashMap<usize, DpTable> = HashMap::new();
+    let mut prune_cfg: u64 = 0;
     for p in 1..=s_max {
         let d_max = k_total / (g * p);
         if d_max == 0 {
@@ -686,6 +732,7 @@ fn eval_config(
             // communication-free pipeline on the fastest class cannot
             // enter the top-K here.
             if (total_lb / p as f64).max(max_layer_lb) * mult > incumbent.bound() {
+                prune_cfg += 1;
                 continue;
             }
             let zero_cap = pow2_floor(d).min(opts.zero_max_degree);
@@ -772,6 +819,9 @@ fn eval_config(
             kbest_insert(&mut out.kbest, cand, k);
         }
     }
+    if obs::enabled() {
+        obs::count("solver.prune.config_bound", prune_cfg);
+    }
     out
 }
 
@@ -820,6 +870,13 @@ pub fn solve_topk(
     k: usize,
 ) -> TopKSolution {
     let k = k.max(1);
+    let _span = obs::span_with("solver.solve_topk", "solver", || {
+        vec![
+            ("model", graph.model_name.clone()),
+            ("cluster", cluster.name.clone()),
+            ("k", k.to_string()),
+        ]
+    });
     let t0 = Instant::now();
     let k_total = cluster.n_devices();
     let n = graph.n_layers();
@@ -918,6 +975,11 @@ pub fn solve_topk(
     let mut best: Vec<Candidate> = Vec::new();
     for cand in per_worker.into_iter().flatten() {
         kbest_insert(&mut best, cand, k);
+    }
+
+    if obs::enabled() {
+        obs::count("solver.dp_states", dp_states.load(Ordering::Relaxed));
+        obs::count("solver.configs", configs.load(Ordering::Relaxed));
     }
 
     TopKSolution {

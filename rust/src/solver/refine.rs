@@ -139,6 +139,9 @@ pub fn refine(
     opts: &SolverOpts,
     topk: usize,
 ) -> Option<RefineReport> {
+    let _span = crate::obs::span_with("refine.refine", "refine", || {
+        vec![("topk", topk.to_string())]
+    });
     let top = solve_topk(graph, cluster, opts, topk);
     if top.plans.is_empty() {
         return None;
@@ -173,6 +176,9 @@ pub fn rerank(
         .into_iter()
         .enumerate()
         .map(|(rank, plan)| {
+            let _span = crate::obs::span_with("refine.replay", "refine", || {
+                vec![("analytic_rank", rank.to_string())]
+            });
             let rep = simulate_flows_with(engine, graph, cluster, topo, &plan, Schedule::OneFOneB);
             let delta = (rep.batch_time - plan.batch_time) / plan.batch_time;
             RefinedPlan {

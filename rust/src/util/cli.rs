@@ -97,6 +97,42 @@ impl Args {
         v
     }
 
+    /// Optional *output-file* path option (e.g. `--trace out.json`):
+    /// validates that the value is plausibly writable *before* the
+    /// expensive run, mirroring [`Args::get_usize_nonzero`]'s
+    /// record-and-continue error style. Rejected with a clean error (and
+    /// `None` returned): an empty value, a path that names an existing
+    /// directory, or a path whose parent directory does not exist (or is
+    /// not a directory). An existing *file* is accepted — output paths
+    /// overwrite.
+    pub fn get_out_path(&mut self, key: &str) -> Option<String> {
+        self.known.push(key.to_string());
+        let v = self.opts.get(key).cloned()?;
+        if v.is_empty() {
+            self.errors
+                .push(format!("--{key} expects a file path, got an empty string"));
+            return None;
+        }
+        let path = std::path::Path::new(&v);
+        if path.is_dir() {
+            self.errors
+                .push(format!("--{key} path '{v}' is an existing directory"));
+            return None;
+        }
+        // Parent "" means the current directory (plain file name) —
+        // always fine. Anything else must already exist as a directory.
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() && !parent.is_dir() {
+                self.errors.push(format!(
+                    "--{key} path '{v}': parent directory '{}' does not exist",
+                    parent.display()
+                ));
+                return None;
+            }
+        }
+        Some(v)
+    }
+
     /// f64 option with a default; garbage records a clean error (see
     /// [`Args::check`]) and returns the default.
     pub fn get_f64(&mut self, key: &str, default: f64) -> f64 {
@@ -220,6 +256,46 @@ mod tests {
         let mut a = Args::parse(v(&["--topk", "4"]));
         assert_eq!(a.get_usize_nonzero("topk", 1), 4);
         assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn out_path_accepts_plain_and_nested_writable_paths() {
+        // Plain file name in the current directory.
+        let mut a = Args::parse(v(&["--trace", "out.json"]));
+        assert_eq!(a.get_out_path("trace"), Some("out.json".to_string()));
+        assert!(a.finish().is_ok());
+        // Existing parent directory.
+        let dir = std::env::temp_dir().join("nest_cli_out_path_ok");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.json");
+        let mut a = Args::parse(v(&["--trace", p.to_str().unwrap()]));
+        assert_eq!(a.get_out_path("trace"), Some(p.to_str().unwrap().to_string()));
+        assert!(a.check().is_ok());
+        // Absent flag: None, no error.
+        let mut a = Args::parse(v(&[]));
+        assert_eq!(a.get_out_path("trace"), None);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn out_path_rejects_empty_dir_and_missing_parent() {
+        // Empty string (`--trace=`).
+        let mut a = Args::parse(v(&["--trace="]));
+        assert_eq!(a.get_out_path("trace"), None);
+        assert!(a.check().unwrap_err().contains("empty"), "{:?}", a.check());
+        // Existing directory.
+        let dir = std::env::temp_dir().join("nest_cli_out_path_dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut a = Args::parse(v(&["--trace", dir.to_str().unwrap()]));
+        assert_eq!(a.get_out_path("trace"), None);
+        let err = a.check().unwrap_err();
+        assert!(err.contains("existing directory"), "unexpected: {err}");
+        // Nonexistent parent directory.
+        let mut a = Args::parse(v(&["--trace", "no/such/dir/t.json"]));
+        assert_eq!(a.get_out_path("trace"), None);
+        let err = a.check().unwrap_err();
+        assert!(err.contains("parent directory"), "unexpected: {err}");
+        assert!(a.finish().is_err());
     }
 
     #[test]

@@ -501,3 +501,109 @@ fn prop_fairshare_incremental_matches_full_refill() {
         inc.assert_bits_eq(&full, "incremental vs full refill");
     });
 }
+
+// ---------------------------------------------------------------------
+// Flight recorder: tracing sits *outside* the determinism boundary.
+// Enabling the recorder may only observe the pipeline — every solver
+// shortlist, service response, and netsim report must be
+// field-for-field (bit-for-bit for floats) identical to its untraced
+// twin, at 1 and 4 worker threads.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_tracing_is_outside_the_determinism_boundary() {
+    use nest::obs;
+    use nest::service::{PlacementService, Query};
+
+    // The recorder's enable bit and collector are process-global:
+    // serialize against the obs unit tests and drop any stale buffers.
+    let _guard = obs::exclusive();
+    let _ = obs::drain();
+
+    let seed = prop_seed(0x0B5_7ACE);
+    prop::forall(6, seed, |rng| {
+        let c = random_cluster(rng);
+        let g = random_tiny_graph(rng);
+        let k = 1 + rng.gen_range(3);
+        let json = random_edgelist_json(rng);
+        let parsed = nest::util::json::parse(&json).expect("fuzz JSON parses");
+        let topo = LinkGraph::from_json(&parsed).expect("fuzz topology builds");
+        let n = topo.n_devices();
+        let build_wl = |rng: &mut Rng| {
+            let mut wl = Workload::new();
+            let mut prev: Option<u32> = None;
+            for _ in 0..(1 + rng.gen_range(4)) {
+                let deps: Vec<u32> = prev.into_iter().collect();
+                let cmp = wl.add(
+                    TaskKind::Compute {
+                        seconds: rng.gen_f64() * 1e-3,
+                    },
+                    &deps,
+                );
+                let mut flows = Vec::new();
+                for _ in 0..(1 + rng.gen_range(4)) {
+                    let src = rng.gen_range(n);
+                    let mut dst = rng.gen_range(n);
+                    if src == dst {
+                        dst = (dst + 1) % n;
+                    }
+                    flows.push(FlowSpec {
+                        src,
+                        dst,
+                        bytes: 1e6 * (1.0 + rng.gen_f64() * 1e2),
+                    });
+                }
+                prev = Some(wl.add(
+                    TaskKind::Transfer {
+                        flows,
+                        extra_latency: 0.0,
+                    },
+                    &[cmp],
+                ));
+            }
+            wl
+        };
+
+        for threads in [1usize, 4] {
+            // Untraced references.
+            assert!(!obs::enabled(), "recorder leaked on from a prior case");
+            let cold = solve_topk(&g, &c, &threaded(threads), k);
+            let q = Query::new(g.clone(), c.clone(), threaded(threads));
+            let mut svc = PlacementService::new(4);
+            let served_cold = svc.solve_topk(&q, k);
+            let served_hit = svc.solve_topk(&q, k);
+            let mut probe = rng.clone();
+            let rep = fairshare::run(&topo, &build_wl(&mut probe));
+
+            // Traced twins of the exact same calls.
+            obs::set_enabled(true);
+            let traced = solve_topk(&g, &c, &threaded(threads), k);
+            let mut svc2 = PlacementService::new(4);
+            let t_cold = svc2.solve_topk(&q, k);
+            let t_hit = svc2.solve_topk(&q, k);
+            let mut probe = rng.clone();
+            let rep2 = fairshare::run(&topo, &build_wl(&mut probe));
+            obs::set_enabled(false);
+            let data = obs::drain();
+            assert!(data.n_spans() > 0, "traced pipeline recorded no spans");
+
+            // Solver shortlist: identical plans, bit-identical floats.
+            assert_eq!(traced.plans, cold.plans, "{}: traced shortlist diverged", c.name);
+            for (x, y) in traced.plans.iter().zip(&cold.plans) {
+                assert_eq!(x.batch_time.to_bits(), y.batch_time.to_bits(), "{}", c.name);
+            }
+
+            // Service: same hit/miss behaviour, identical served plans.
+            for (t, u) in [(&t_cold, &served_cold), (&t_hit, &served_hit)] {
+                assert_eq!(t.cache_hit, u.cache_hit, "{}", c.name);
+                assert_eq!(t.plans.len(), u.plans.len(), "{}", c.name);
+                for (a, b) in t.plans.iter().zip(&u.plans) {
+                    assert_plans_identical(a, b, &format!("{} traced serve", c.name));
+                }
+            }
+
+            // Netsim: the full report at bit precision.
+            rep2.assert_bits_eq(&rep, "traced vs untraced fairshare");
+        }
+    });
+}
