@@ -7,7 +7,10 @@
 
 use nest::graph::models;
 use nest::harness::netsim::spineleaf_topology;
-use nest::netsim::{self, FairshareEngine, FlowSpec, LinkGraph, RefillMode, TaskKind, Workload};
+use nest::harness::scale::scale_workload;
+use nest::netsim::{
+    topo, FlowSpec, LinkGraph, RefillMode, SimMode, Simulation, TaskKind, Workload,
+};
 use nest::network::Cluster;
 use nest::sim::Schedule;
 use nest::solver::{solve, SolverOpts};
@@ -26,7 +29,7 @@ fn main() {
 
     // Fair-share engine: 64-flow cross-spine permutation on a 4:1 trunk
     // (every flow shares the waist; one rate recomputation per event).
-    let topo = LinkGraph::from_cluster(&spine128);
+    let spine_topo = LinkGraph::from_cluster(&spine128);
     bench("fairshare_64flow_permutation", || {
         let mut wl = Workload::new();
         let flows: Vec<FlowSpec> = (0..64)
@@ -43,7 +46,7 @@ fn main() {
             },
             &[],
         );
-        netsim::fairshare::run(&topo, &wl)
+        Simulation::new().run_workload(&spine_topo, &wl)
     });
 
     // Incremental vs full-refill rate maintenance on a staggered load
@@ -79,12 +82,13 @@ fn main() {
         }
         wl
     };
-    let mut engine = FairshareEngine::new(&topo);
+    let mut inc_sim = Simulation::new().refill(RefillMode::Incremental);
     let inc = bench_n("fairshare_staggered_incremental", 5, || {
-        engine.run_with_mode(&topo, &staggered(), RefillMode::Incremental)
+        inc_sim.run_workload(&spine_topo, &staggered())
     });
+    let mut full_sim = Simulation::new().refill(RefillMode::FullRefill);
     let full = bench_n("fairshare_staggered_full_refill", 5, || {
-        engine.run_with_mode(&topo, &staggered(), RefillMode::FullRefill)
+        full_sim.run_workload(&spine_topo, &staggered())
     });
     report_speedup("fairshare_incremental_over_full", &full, &inc);
 
@@ -92,24 +96,33 @@ fn main() {
     let graph = models::llama2_7b(1);
     let cluster = Cluster::spine_leaf_h100(64, 4.0);
     let sol = solve(&graph, &cluster, &SolverOpts::default()).expect("feasible");
-    let topo = LinkGraph::from_cluster(&cluster);
+    let batch_topo = LinkGraph::from_cluster(&cluster);
     bench_n("netsim_llama2_batch_64dev", 5, || {
-        netsim::simulate_flows(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB)
+        Simulation::new().run(&graph, &cluster, &batch_topo, &sol.plan, Schedule::OneFOneB)
     });
 
     // The shipped 4:1 spine-leaf edge-list the perf smoke gates, with a
     // reused engine (the smoke's exact configuration).
     let (scluster, stopo) = spineleaf_topology();
     let ssol = solve(&graph, &scluster, &SolverOpts::default()).expect("feasible");
-    let mut sengine = FairshareEngine::new(&stopo);
+    let mut ssim = Simulation::new();
     bench_n("netsim_llama2_batch_spineleaf_edgelist", 5, || {
-        netsim::simulate_flows_with(
-            &mut sengine,
-            &graph,
-            &scluster,
-            &stopo,
-            &ssol.plan,
-            Schedule::OneFOneB,
-        )
+        ssim.run(&graph, &scluster, &stopo, &ssol.plan, Schedule::OneFOneB)
     });
+
+    // Decomposed vs monolithic on a generated spine-leaf fabric with a
+    // rack-local flow mix — the workload whose link-sharing partition
+    // has enough independent components for the fan-out to pay.
+    // Reports are bit-identical; only wall-clock differs.
+    let fabric = topo::spineleaf(16, 8, 4.0);
+    let wl = scale_workload(fabric.n_devices(), 8, 32, 20_000, 0.9, 42);
+    let mut mono_sim = Simulation::new().mode(SimMode::Monolithic);
+    let mono = bench_n("netsim_monolithic_spineleaf", 3, || {
+        mono_sim.run_workload(&fabric, &wl)
+    });
+    let mut dec_sim = Simulation::new().mode(SimMode::Decomposed).threads(0);
+    let dec = bench_n("netsim_decomposed_spineleaf", 3, || {
+        dec_sim.run_workload(&fabric, &wl)
+    });
+    report_speedup("netsim_decomposed_over_monolithic", &mono, &dec);
 }

@@ -13,7 +13,7 @@
 //! the hottest links so the bottleneck is visible by name.
 
 use nest::graph::models;
-use nest::netsim::{simulate_flows, LinkGraph};
+use nest::netsim::{LinkGraph, Simulation};
 use nest::network::Cluster;
 use nest::sim::{simulate, Schedule};
 use nest::solver::{solve, SolverOpts};
@@ -39,7 +39,7 @@ fn main() {
             .expect("no feasible placement");
         println!("plan: {}", sol.plan.strategy_string());
         let ana = simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB);
-        let flow = simulate_flows(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB);
+        let flow = Simulation::new().run(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB);
         let err = (flow.batch_time - ana.batch_time) / ana.batch_time;
         println!(
             "analytic DES {}  |  flow-sim {}  |  contention error {:+.1}%",

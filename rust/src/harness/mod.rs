@@ -11,11 +11,13 @@ pub mod figures;
 pub mod netsim;
 pub mod perf;
 pub mod refine;
+pub mod scale;
 pub mod service;
 pub mod tables;
 
 use crate::baselines::{alpa, manual, mcmc, mist, phaze};
 use crate::graph::LayerGraph;
+use crate::netsim::NetsimOpts;
 use crate::network::Cluster;
 use crate::sim::{simulate, Schedule, SimReport};
 use crate::solver::plan::PlacementPlan;
@@ -51,6 +53,10 @@ pub struct HarnessOpts {
     /// MCMC iterations (paper-scale: 2000×10; --quick shrinks it).
     pub mcmc: mcmc::McmcOpts,
     pub solver: SolverOpts,
+    /// Flow-simulator options for every sim-touching harness path
+    /// (netsim cross-validation, refine tables) — the CLI's `--mode` /
+    /// `--threads` land here.
+    pub netsim: NetsimOpts,
     /// Write CSVs under this directory.
     pub results_dir: String,
 }
@@ -60,6 +66,7 @@ impl Default for HarnessOpts {
         HarnessOpts {
             mcmc: mcmc::McmcOpts::default(),
             solver: SolverOpts::default(),
+            netsim: NetsimOpts::default(),
             results_dir: "results".into(),
         }
     }
@@ -83,6 +90,7 @@ impl HarnessOpts {
     /// thread-count-invariant; only Table 4 wall-clock changes.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.solver.threads = threads;
+        self.netsim.threads = threads;
         self
     }
 }

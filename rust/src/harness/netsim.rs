@@ -13,7 +13,7 @@
 
 use crate::graph::models;
 use crate::hw::Accelerator;
-use crate::netsim::{simulate_flows, LinkGraph};
+use crate::netsim::{LinkGraph, Simulation};
 use crate::network::Cluster;
 use crate::sim::{simulate, Schedule};
 use crate::solver::solve as nest_solve;
@@ -71,7 +71,7 @@ pub fn dumbbell_xval_snapshot() -> String {
     };
     let sol = nest_solve(&graph, &cluster, &opts).expect("dumbbell solvable");
     let ana = simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB);
-    let flow = simulate_flows(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB);
+    let flow = Simulation::new().run(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB);
     let err = (flow.batch_time - ana.batch_time) / ana.batch_time;
     let mut tbl = Table::new(&[
         "topology",
@@ -176,6 +176,9 @@ pub fn netsim_xval_quick(opts: &HarnessOpts, quick: bool) -> bool {
     ]);
     let model = "llama2-7b";
     let mut all_ok = true;
+    // One Simulation across families: `--mode`/`--threads` land in
+    // `opts.netsim`; reports are bit-identical for every setting.
+    let mut sim = Simulation::with_opts(opts.netsim);
     for fam in families(quick) {
         let graph = models::by_name(model, 1).expect("model exists");
         let Some(sol) = nest_solve(&graph, &fam.cluster, &opts.solver) else {
@@ -194,7 +197,7 @@ pub fn netsim_xval_quick(opts: &HarnessOpts, quick: bool) -> bool {
             continue;
         };
         let ana = simulate(&graph, &fam.cluster, &sol.plan, Schedule::OneFOneB);
-        let flow = simulate_flows(&graph, &fam.cluster, &fam.topo, &sol.plan, Schedule::OneFOneB);
+        let flow = sim.run(&graph, &fam.cluster, &fam.topo, &sol.plan, Schedule::OneFOneB);
         let err = (flow.batch_time - ana.batch_time) / ana.batch_time;
         // Contended scenarios: flow-sim must never be faster than the
         // analytic estimate (the abstraction can only hide congestion).

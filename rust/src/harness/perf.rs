@@ -8,8 +8,8 @@
 //! (with `--baseline`) fails if any metric regressed more than the
 //! tolerance against the committed `BENCH_BASELINE.json`. Each metric
 //! is the **minimum** over its repetitions, the standard noise-robust
-//! statistic for regression gating (`_qps` throughput metrics gate in
-//! the opposite direction — see [`gate`]). Refresh only the measured
+//! statistic for regression gating (`_qps` / `_per_sec` throughput
+//! metrics gate in the opposite direction — see [`gate`]). Refresh only the measured
 //! metrics, preserving hand-added keys, with one line:
 //!
 //! ```text
@@ -17,7 +17,7 @@
 //! ```
 
 use crate::graph::models;
-use crate::netsim::{simulate_flows_with, FairshareEngine};
+use crate::netsim::{topo, SimMode, Simulation};
 use crate::network::Cluster;
 use crate::sim::Schedule;
 use crate::solver::refine::refine;
@@ -26,15 +26,15 @@ use crate::util::bench::{bench_n, report_speedup};
 use crate::util::json::Json;
 
 use super::netsim::{dumbbell_topology, spineleaf_topology};
+use super::scale::scale_workload;
 
 /// One gated wall-clock metric.
 #[derive(Debug, Clone)]
 pub struct PerfMetric {
     pub name: String,
     /// Minimum wall-clock seconds over the metric's repetitions — or,
-    /// for metrics whose name ends in `_qps`, a throughput in
-    /// queries/sec (larger is better; [`gate`] flips direction on the
-    /// suffix).
+    /// for metrics whose name ends in `_qps` / `_per_sec`, a throughput
+    /// (larger is better; [`gate`] flips direction on the suffix).
     pub seconds: f64,
 }
 
@@ -117,15 +117,13 @@ pub fn run_smoke(quick: bool) -> PerfSmoke {
     // Flow-level fair-share engine on the shipped dumbbell edge-list:
     // the netsim hot path (plan solved once, untimed; the engine is
     // reused across reps like the refine loop reuses it across plans).
-    let (ecluster, topo) = dumbbell_topology();
+    let (ecluster, dtopo) = dumbbell_topology();
     let sol = solve(&graph, &ecluster, &sopts(0)).expect("dumbbell placement feasible");
-    let mut engine = FairshareEngine::new(&topo);
+    let mut sim = Simulation::new();
     let net = bench_n(
         "bench_smoke_netsim_fairshare_dumbbell",
         if quick { 1 } else { 5 },
-        || {
-            simulate_flows_with(&mut engine, &graph, &ecluster, &topo, &sol.plan, Schedule::OneFOneB)
-        },
+        || sim.run(&graph, &ecluster, &dtopo, &sol.plan, Schedule::OneFOneB),
     );
     metrics.push(PerfMetric {
         name: "netsim_fairshare_dumbbell".into(),
@@ -138,24 +136,42 @@ pub fn run_smoke(quick: bool) -> PerfSmoke {
     // the lazy drain heap regress.
     let (scluster, stopo) = spineleaf_topology();
     let ssol = solve(&graph, &scluster, &sopts(0)).expect("spine-leaf placement feasible");
-    let mut sengine = FairshareEngine::new(&stopo);
+    let mut ssim = Simulation::new();
     let snet = bench_n(
         "bench_smoke_netsim_fairshare_spineleaf",
         if quick { 1 } else { 5 },
-        || {
-            simulate_flows_with(
-                &mut sengine,
-                &graph,
-                &scluster,
-                &stopo,
-                &ssol.plan,
-                Schedule::OneFOneB,
-            )
-        },
+        || ssim.run(&graph, &scluster, &stopo, &ssol.plan, Schedule::OneFOneB),
     );
     metrics.push(PerfMetric {
         name: "netsim_fairshare_spineleaf".into(),
         seconds: snet.min.as_secs_f64(),
+    });
+
+    // Decomposed flow simulation at fabric scale: a generated fat-tree
+    // plus the rack-local `netsim-scale` workload, reported as a
+    // throughput so the gate flips direction (`_per_sec`, like `_qps`:
+    // the baseline seeds LOW and only a throughput *drop* trips it).
+    let sk = if quick { 4 } else { 8 };
+    let sflows = if quick { 2_000 } else { 50_000 };
+    let fabric = topo::fattree(sk);
+    let swl = scale_workload(
+        fabric.n_devices(),
+        sk / 2,
+        sk * sk / 4,
+        sflows,
+        0.9,
+        42,
+    );
+    let mut dsim = Simulation::new().mode(SimMode::Decomposed).threads(0);
+    let scale = bench_n(
+        "bench_smoke_netsim_scale_decomposed",
+        if quick { 1 } else { 3 },
+        || dsim.run_workload(&fabric, &swl),
+    );
+    let wall = scale.min.as_secs_f64();
+    metrics.push(PerfMetric {
+        name: "netsim_scale_flows_per_sec".into(),
+        seconds: if wall > 0.0 { sflows as f64 / wall } else { 0.0 },
     });
 
     // End-to-end solve → top-8 shortlist → flow-level re-rank on the
@@ -166,7 +182,7 @@ pub fn run_smoke(quick: bool) -> PerfSmoke {
     let rf = bench_n(
         "bench_smoke_solve_topk8_refine_dumbbell",
         if quick { 1 } else { 3 },
-        || refine(&graph, &ecluster, &topo, &sopts(0), 8),
+        || refine(&graph, &ecluster, &dtopo, &sopts(0), 8),
     );
     metrics.push(PerfMetric {
         name: "solve_topk8_refine_dumbbell".into(),
@@ -261,11 +277,11 @@ pub fn gate(pr: &PerfSmoke, baseline: &Json, tolerance: f64) -> Result<(), Strin
             }
             continue;
         }
-        // Time metrics regress upward; `_qps` throughputs regress
-        // downward (the mirrored bound keeps the tolerance symmetric:
-        // base/(1+t), not base·(1−t)).
-        let rate = name.ends_with("_qps");
-        let unit = if rate { "qps" } else { "s" };
+        // Time metrics regress upward; `_qps` / `_per_sec` throughputs
+        // regress downward (the mirrored bound keeps the tolerance
+        // symmetric: base/(1+t), not base·(1−t)).
+        let rate = name.ends_with("_qps") || name.ends_with("_per_sec");
+        let unit = if rate { "/s" } else { "s" };
         match pr.get(name) {
             None => violations.push(format!("metric `{name}` missing from this run")),
             Some(got)
@@ -447,6 +463,7 @@ mod tests {
             "solve_llama2_7b_fattree_4t",
             "netsim_fairshare_dumbbell",
             "netsim_fairshare_spineleaf",
+            "netsim_scale_flows_per_sec",
             "solve_topk8_refine_dumbbell",
             "serve_qps",
         ] {
@@ -464,6 +481,20 @@ mod tests {
         // A real throughput drop must trip the gate.
         let err = gate(&smoke(&[("serve_qps", 5.0)]), &base, 0.25).unwrap_err();
         assert!(err.contains("serve_qps"), "unexpected message: {err}");
+    }
+
+    #[test]
+    fn gate_treats_per_sec_metrics_as_higher_is_better() {
+        let base = parse(r#"{"metrics": {"netsim_scale_flows_per_sec": 1000.0}}"#).unwrap();
+        // Faster than baseline and inside the mirrored band: both pass.
+        assert!(gate(&smoke(&[("netsim_scale_flows_per_sec", 9e5)]), &base, 0.25).is_ok());
+        assert!(gate(&smoke(&[("netsim_scale_flows_per_sec", 850.0)]), &base, 0.25).is_ok());
+        // A throughput collapse trips the gate.
+        let err = gate(&smoke(&[("netsim_scale_flows_per_sec", 100.0)]), &base, 0.25).unwrap_err();
+        assert!(
+            err.contains("netsim_scale_flows_per_sec"),
+            "unexpected message: {err}"
+        );
     }
 
     #[test]

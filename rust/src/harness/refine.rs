@@ -19,7 +19,7 @@ use crate::graph::models;
 use crate::netsim::LinkGraph;
 use crate::network::Cluster;
 use crate::sim::{simulate, Schedule};
-use crate::solver::refine::refine;
+use crate::solver::refine::refine_opts;
 use crate::util::csv::Csv;
 use crate::util::table::{fmt_time, Table};
 
@@ -99,7 +99,9 @@ pub fn refine_table(opts: &HarnessOpts, topk: usize, quick: bool) -> bool {
     let mut all_ok = true;
     let mut any_flip = false;
     for fam in families(quick) {
-        let Some(rep) = refine(&graph, &fam.cluster, &fam.topo, &opts.solver, topk) else {
+        let Some(rep) =
+            refine_opts(&graph, &fam.cluster, &fam.topo, &opts.solver, topk, opts.netsim)
+        else {
             tbl.row(vec![
                 fam.label.into(),
                 model.into(),

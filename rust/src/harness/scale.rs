@@ -1,0 +1,262 @@
+//! `nest netsim-scale`: fleet-scale flow simulation on generated
+//! fabrics, with the monolithic twin as a built-in exactness gate.
+//!
+//! The driver builds a seeded fat-tree ([`crate::netsim::topo::fattree`]),
+//! synthesizes a deterministic rack-local flow mix ([`scale_workload`]),
+//! and runs it decomposed ([`crate::netsim::SimMode::Decomposed`]) and
+//! monolithic, reporting wall-clock, flows/sec, and the component
+//! census. The two reports must agree to the bit — the run fails (and
+//! the CI smoke exits nonzero) on any mismatch, making every
+//! `netsim-scale` invocation a full-size decomposition proof.
+
+use std::time::Instant;
+
+use crate::netsim::{
+    decompose, topo, FlowSpec, NetsimReport, SimMode, Simulation, TaskKind, Workload,
+};
+use crate::util::rng::Rng;
+use crate::util::table::{fmt_time, Table};
+
+/// Knobs of one `netsim-scale` run (CLI defaults live in `main.rs`).
+#[derive(Debug, Clone)]
+pub struct ScaleOpts {
+    /// Fat-tree arity (even; k³/4 hosts — 16 → 1024 hosts).
+    pub k: usize,
+    /// Network-crossing flows to synthesize.
+    pub flows: usize,
+    /// Workload seed (fabric + routes are seed-independent).
+    pub seed: u64,
+    /// Decomposed-mode worker threads (0 = one per core).
+    pub threads: usize,
+    /// Fraction of flow batches confined to their rack (the rest roam
+    /// the whole pod, merging that pod's components).
+    pub locality: f64,
+}
+
+/// Synthesize a deterministic fleet-scale workload over `n_devices`
+/// hosts grouped into racks of `rack` consecutive ids (inside pods of
+/// `pod` ids): per rack, a chain of Compute-jitter → Transfer-batch
+/// tasks totalling its share of `n_flows`. A batch is rack-local with
+/// probability `locality`, else pod-scoped — so the link-sharing
+/// partition sees many independent racks plus occasional pod-sized
+/// merges, which is exactly the structure decomposed mode exploits.
+/// Every flow has distinct endpoints and ≥ 64 KB, so all `n_flows`
+/// cross the network.
+pub fn scale_workload(
+    n_devices: usize,
+    rack: usize,
+    pod: usize,
+    n_flows: usize,
+    locality: f64,
+    seed: u64,
+) -> Workload {
+    assert!(rack >= 2 && n_devices >= rack, "rack must hold ≥ 2 hosts");
+    assert!(pod >= rack && pod % rack == 0, "pods must be whole racks");
+    assert!((0.0..=1.0).contains(&locality), "locality is a fraction");
+    let n_racks = (n_devices / rack).max(1);
+    let mut wl = Workload::new();
+    let mut rng = Rng::new(seed);
+    let per = n_flows / n_racks;
+    let extra = n_flows % n_racks;
+    for r in 0..n_racks {
+        let rack_base = r * rack;
+        let pod_base = (rack_base / pod) * pod;
+        let pod_span = pod.min(n_devices - pod_base);
+        let mut left = per + usize::from(r < extra);
+        let mut prev: Option<u32> = None;
+        while left > 0 {
+            let batch = left.min(32);
+            let deps: Vec<u32> = prev.into_iter().collect();
+            let cmp = wl.add(
+                TaskKind::Compute {
+                    seconds: 1e-5 + 9e-5 * rng.gen_f64(),
+                },
+                &deps,
+            );
+            let (base, span) = if rng.gen_bool(locality) {
+                (rack_base, rack)
+            } else {
+                (pod_base, pod_span)
+            };
+            let mut flows = Vec::with_capacity(batch);
+            for _ in 0..batch {
+                let src = base + rng.gen_range(span);
+                let mut dst = base + rng.gen_range(span);
+                if src == dst {
+                    dst = base + (dst - base + 1) % span;
+                }
+                flows.push(FlowSpec {
+                    src,
+                    dst,
+                    bytes: 64.0 * 1024.0 * (1.0 + 99.0 * rng.gen_f64()),
+                });
+            }
+            prev = Some(wl.add(
+                TaskKind::Transfer {
+                    flows,
+                    extra_latency: 0.0,
+                },
+                &[cmp],
+            ));
+            left -= batch;
+        }
+    }
+    wl
+}
+
+/// Outcome of one `netsim-scale` run (the CLI maps `ok` to the exit
+/// code; the bench smoke reads `flows_per_sec`).
+#[derive(Debug, Clone)]
+pub struct ScaleOutcome {
+    pub report: NetsimReport,
+    pub components: usize,
+    pub wall_decomposed: f64,
+    pub wall_monolithic: f64,
+    pub flows_per_sec: f64,
+    /// Decomposed report is bit-identical to the monolithic twin.
+    pub ok: bool,
+}
+
+/// Build the fabric + workload, run decomposed and monolithic, print the
+/// wall-clock / flows-per-sec table, and verify bit-identity.
+pub fn netsim_scale(opts: &ScaleOpts) -> ScaleOutcome {
+    println!("== netsim-scale: decomposed flow simulation at fabric scale ==");
+    let t0 = Instant::now();
+    let fabric = topo::fattree(opts.k);
+    println!(
+        "fabric:    {} ({} nodes; built in {})",
+        fabric.describe(),
+        fabric.nodes.len(),
+        fmt_time(t0.elapsed().as_secs_f64()),
+    );
+
+    let rack = opts.k / 2;
+    let pod = opts.k * opts.k / 4;
+    let wl = scale_workload(
+        fabric.n_devices(),
+        rack,
+        pod,
+        opts.flows,
+        opts.locality,
+        opts.seed,
+    );
+    // Census pass for the table (run_decomposed repartitions internally;
+    // one extra pass keeps the simulation path identical to production).
+    let comps = decompose::partition(&fabric, &wl);
+    let components = comps.len();
+    let largest = comps.iter().map(|c| c.n_flows).max().unwrap_or(0);
+    println!(
+        "workload:  {} tasks, {} flows, seed {} → {} link-sharing components (largest {} flows)",
+        wl.n_tasks(),
+        opts.flows,
+        opts.seed,
+        components,
+        largest,
+    );
+    drop(comps);
+
+    let t = Instant::now();
+    let dec = Simulation::new()
+        .mode(SimMode::Decomposed)
+        .threads(opts.threads)
+        .run_workload(&fabric, &wl);
+    let wall_dec = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let mono = Simulation::new()
+        .mode(SimMode::Monolithic)
+        .run_workload(&fabric, &wl);
+    let wall_mono = t.elapsed().as_secs_f64();
+
+    let flows_per_sec = if wall_dec > 0.0 {
+        dec.n_flows as f64 / wall_dec
+    } else {
+        0.0
+    };
+    let mut table = Table::new(&["mode", "wall", "flows/sec", "sim batch", "events"]);
+    for (name, rep, wall) in [
+        ("decomposed", &dec, wall_dec),
+        ("monolithic", &mono, wall_mono),
+    ] {
+        table.row(vec![
+            name.into(),
+            fmt_time(wall),
+            format!("{:.0}", if wall > 0.0 { rep.n_flows as f64 / wall } else { 0.0 }),
+            fmt_time(rep.batch_time),
+            rep.events.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "headline:  {:.0} flows/sec decomposed ({:.2}× vs monolithic)",
+        flows_per_sec,
+        if wall_dec > 0.0 { wall_mono / wall_dec } else { 0.0 },
+    );
+
+    // Exactness gate: the decomposed report must match the monolithic
+    // twin to the bit. assert_bits_eq names the first diverging field.
+    let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        dec.assert_bits_eq(&mono, "netsim-scale decomposed vs monolithic twin");
+    }))
+    .is_ok();
+    println!(
+        "twin:      {}",
+        if ok {
+            "decomposed ≡ monolithic (bit-identical)"
+        } else {
+            "MISMATCH — decomposed diverged from the monolithic twin"
+        }
+    );
+
+    ScaleOutcome {
+        report: dec,
+        components,
+        wall_decomposed: wall_dec,
+        wall_monolithic: wall_mono,
+        flows_per_sec,
+        ok,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_workload_is_deterministic_and_sized() {
+        let wl = scale_workload(16, 2, 4, 1000, 0.9, 7);
+        let wl2 = scale_workload(16, 2, 4, 1000, 0.9, 7);
+        assert_eq!(wl.n_tasks(), wl2.n_tasks());
+        let count = |w: &Workload| {
+            let topo = topo::fattree(4);
+            Simulation::new()
+                .mode(SimMode::Monolithic)
+                .run_workload(&topo, w)
+                .n_flows
+        };
+        assert_eq!(count(&wl), 1000);
+        assert_eq!(count(&wl2), 1000);
+    }
+
+    #[test]
+    fn rack_local_mix_decomposes_into_many_components() {
+        let topo = topo::fattree(4);
+        let wl = scale_workload(16, 2, 4, 800, 1.0, 11);
+        let comps = decompose::partition(&topo, &wl);
+        // Pure rack-locality: one component per rack.
+        assert_eq!(comps.len(), 8);
+    }
+
+    #[test]
+    fn netsim_scale_quick_run_is_exact() {
+        let out = netsim_scale(&ScaleOpts {
+            k: 4,
+            flows: 500,
+            seed: 42,
+            threads: 2,
+            locality: 0.9,
+        });
+        assert!(out.ok, "decomposed diverged from monolithic");
+        assert_eq!(out.report.n_flows, 500);
+        assert!(out.flows_per_sec > 0.0);
+    }
+}

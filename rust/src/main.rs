@@ -6,6 +6,8 @@
 //!   netsim     flow-level contention cross-check of a plan on an explicit
 //!              link graph (tier stacks or arbitrary edge-list JSON)
 //!   netsim-xval  analytic-vs-flow-sim error table across topology families
+//!   netsim-scale decomposed flow simulation on a generated fat-tree, with
+//!              the monolithic twin as a bit-identity gate
 //!   refine     top-K analytic shortlist re-ranked by the flow simulator
 //!   refine-xval  cross-topology refinement table (where the ranking flips)
 //!   bench-smoke  deterministic perf smoke + CI bench-regression gate
@@ -20,10 +22,10 @@
 
 use nest::graph::models;
 use nest::harness::{figures, tables, HarnessOpts};
-use nest::netsim::{simulate_flows, LinkGraph};
+use nest::netsim::{LinkGraph, SimMode, Simulation};
 use nest::network::Cluster;
 use nest::sim::{simulate, Schedule};
-use nest::solver::refine::refine;
+use nest::solver::refine::refine_opts;
 use nest::solver::{solve, SolverOpts};
 use nest::trainer::{train, TrainOpts};
 use nest::util::cli::Args;
@@ -109,8 +111,20 @@ fn main() {
     let results_dir = args.get("results", "results");
     // Solver worker threads (omit for one per core); plans are identical
     // for every thread count — see nest::solver docs. An explicit
-    // `--threads 0` is a clean error, not a silent hang.
+    // `--threads 0` is a clean error, not a silent hang. The same count
+    // drives the flow simulator's decomposed-mode workers.
     let threads = args.get_usize_nonzero("threads", 0);
+    // Flow-simulator execution mode, shared by every sim-touching
+    // subcommand (netsim, netsim-xval, refine, refine-xval; netsim-scale
+    // always runs both modes). Reports are bit-identical across modes.
+    let sim_mode = match args
+        .get_choice("mode", &["auto", "monolithic", "decomposed"], "auto")
+        .as_str()
+    {
+        "monolithic" => SimMode::Monolithic,
+        "decomposed" => SimMode::Decomposed,
+        _ => SimMode::Auto,
+    };
     // Flight recorder: `--trace <path>` (path-validated) wins over the
     // NEST_TRACE environment variable. `obs-summary` *reads* a trace
     // instead of recording one, so it opts out here and parses the flag
@@ -136,6 +150,7 @@ fn main() {
         HarnessOpts::default()
     }
     .with_threads(threads);
+    hopts.netsim.mode = sim_mode;
     hopts.results_dir = results_dir;
 
     let run = |args: &mut Args| -> Result<(), String> {
@@ -237,7 +252,8 @@ fn main() {
                 let sol = solve(&graph, &cluster, &sopts).ok_or("no feasible placement")?;
                 println!("{}", sol.plan.describe());
                 let ana = simulate(&graph, &cluster, &sol.plan, Schedule::OneFOneB);
-                let flow = simulate_flows(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB);
+                let flow = Simulation::with_opts(hopts.netsim)
+                    .run(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB);
                 let err = (flow.batch_time - ana.batch_time) / ana.batch_time;
                 println!(
                     "analytic DES: batch {} | {:.1} samples/s",
@@ -258,6 +274,32 @@ fn main() {
                     println!("  {:>6.1}%  {}", u.utilization * 100.0, u.name);
                 }
                 Ok(())
+            }
+            "netsim-scale" => {
+                let k = args.get_usize_nonzero("k", if quick { 4 } else { 16 });
+                let flows = args.get_usize_nonzero("flows", if quick { 2_000 } else { 200_000 });
+                let seed = args.get_usize("seed", 42) as u64;
+                let locality = args.get_f64("locality", 0.9);
+                args.check()?;
+                if k % 2 != 0 {
+                    return Err(format!("--k must be even (fat-tree arity), got {k}"));
+                }
+                if !(0.0..=1.0).contains(&locality) {
+                    return Err(format!("--locality must be in [0, 1], got {locality}"));
+                }
+                let out = nest::harness::scale::netsim_scale(&nest::harness::scale::ScaleOpts {
+                    k,
+                    flows,
+                    seed,
+                    threads,
+                    locality,
+                });
+                if out.ok {
+                    Ok(())
+                } else {
+                    Err("netsim-scale: decomposed report diverged from the monolithic twin"
+                        .into())
+                }
             }
             "netsim-xval" => {
                 if nest::harness::netsim::netsim_xval_quick(&hopts, quick) {
@@ -281,7 +323,7 @@ fn main() {
                     threads,
                     ..Default::default()
                 };
-                let report = refine(&graph, &cluster, &topo, &sopts, topk)
+                let report = refine_opts(&graph, &cluster, &topo, &sopts, topk, hopts.netsim)
                     .ok_or("no feasible placement")?;
                 println!(
                     "shortlist of {} solved in {} ({} DP states, {} configs)",
@@ -491,6 +533,9 @@ fn main() {
                      \x20 netsim     --config <tier-or-edge-list.json | cluster name>: solve, then cross-check the plan\n\
                      \x20            under flow-level link contention (reports batch-time error + per-link utilization)\n\
                      \x20 netsim-xval  analytic-vs-flow-sim table across topology families (fat-tree, 4:1 spine, torus, edge-list)\n\
+                     \x20 netsim-scale  decomposed flow simulation at fabric scale: --k <even fat-tree arity> --flows N\n\
+                     \x20            --seed S --locality F (rack-local batch fraction); runs decomposed + monolithic,\n\
+                     \x20            reports wall-clock and flows/sec, exits nonzero unless the reports are bit-identical\n\
                      \x20 refine     --config <topo> --model <m> --topk K: solve the analytic top-K shortlist, replay each\n\
                      \x20            plan under flow-level contention, and re-rank (exits nonzero if the K=1 shortlist\n\
                      \x20            ever disagrees with plain solve)\n\
@@ -509,7 +554,8 @@ fn main() {
                      \x20 hetero     mixed H100+V100 pool vs single-class twins (exits nonzero if the\n\
                      \x20            mixed solve is not strictly faster than the all-V100 constraint)\n\
                      \x20 all        run the complete evaluation\n\n\
-                     global: --quick (smaller sweeps), --results <dir>, --threads N (solver workers, N ≥ 1; omit for all cores),\n\
+                     global: --quick (smaller sweeps), --results <dir>, --threads N (solver + netsim workers, N ≥ 1; omit for all cores),\n\
+                     \x20       --mode <auto|monolithic|decomposed> (flow-simulator execution mode; reports are bit-identical either way),\n\
                      \x20       --trace <file.json> (flight recorder: Chrome-trace spans/counters/histograms; also NEST_TRACE=<path>;\n\
                      \x20       zero overhead when off, bit-identical plans when on)\n\n\
                      models: llama2-7b llama3-70b bertlarge gpt3-175b gpt3-35b mixtral-8x7b mixtral-790m"

@@ -1,0 +1,381 @@
+//! Static decomposition of a flow workload into independent
+//! sub-simulations — the fleet-scale execution mode behind
+//! [`super::Simulation`].
+//!
+//! Max-min fair share decomposes exactly over the connected components
+//! of the link-sharing graph (a component's rates are a pure function of
+//! its own flows and links — the same argument that makes the engine's
+//! incremental refill bit-identical to a full refill). This module
+//! hoists that argument from per-event maintenance to a *static*
+//! pre-simulation partition:
+//!
+//! 1. [`partition`] unions tasks over (a) workload dependency edges —a
+//!    task's start time depends on its prerequisites, so causally
+//!    connected tasks must share a clock — and (b) shared directed links
+//!    between their flows' deterministic routes. Each resulting
+//!    component is a closed sub-workload: nothing outside it can affect
+//!    its event evolution.
+//! 2. [`run_decomposed`] runs each component on a plain
+//!    [`FairshareEngine`] (workers claim components off an atomic index,
+//!    mirroring the solver's scoped-thread pool) and merges the raw
+//!    [`SubRun`] outcomes into one report via the same
+//!    [`fairshare::finalize`] path monolithic runs use.
+//!
+//! # Why the merge is exact
+//!
+//! Task ids are remapped *monotonically* (components keep their tasks in
+//! ascending original order), so heap tie-breaks `(time, kind, stable
+//! id)` and the per-component canonical (arrival-id) fill order resolve
+//! identically to the monolithic run restricted to that component. The
+//! merged report is then assembled from interleaving-independent pieces:
+//! byte totals sum per-flow records in canonical `(original task,
+//! flow-index)` order, event rounds are counted from the sorted union of
+//! round timestamps, and link utilizations scatter by link id (each link
+//! belongs to exactly one component). No step depends on thread schedule
+//! or component order — `prop_decomposed_matches_monolithic` pins the
+//! whole report to the bit at 1 and 4 threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::fairshare::{self, FairshareEngine, NetsimReport, RefillMode, SubRun, TaskKind, Workload};
+use super::topo::LinkGraph;
+use crate::obs;
+
+/// One closed sub-workload of the partition.
+pub struct Component {
+    /// Task ids remapped to `0..tasks.len()`; `tasks[local] = original`.
+    pub wl: Workload,
+    /// Original task ids, ascending (so the remap is monotonic).
+    pub tasks: Vec<u32>,
+    /// Network-crossing flows in this component.
+    pub n_flows: usize,
+}
+
+/// Union-find over task ids (path halving, union by attachment to the
+/// smaller root so roots stay the smallest member — cheap determinism).
+struct Dsu(Vec<u32>);
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Dsu((0..n as u32).collect())
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.0[x as usize] != x {
+            let parent = self.0[x as usize];
+            self.0[x as usize] = self.0[parent as usize];
+            x = self.0[x as usize];
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return;
+        }
+        let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+        self.0[hi as usize] = lo;
+    }
+}
+
+/// Partition `wl` into closed components: tasks connected by dependency
+/// edges or by flows sharing a directed link end up together. Routes are
+/// the topology's deterministic paths (the same ones the engine will
+/// use); degenerate flows touch no links and add no edges.
+///
+/// Components are ordered by smallest original task id, and each keeps
+/// its tasks in ascending original order.
+pub fn partition(topo: &LinkGraph, wl: &Workload) -> Vec<Component> {
+    let nt = wl.tasks.len();
+    let mut dsu = Dsu::new(nt);
+    for (i, deps) in wl.deps.iter().enumerate() {
+        for &d in deps {
+            dsu.union(i as u32, d);
+        }
+    }
+    let mut link_owner: Vec<u32> = vec![u32::MAX; topo.links.len()];
+    for (i, kind) in wl.tasks.iter().enumerate() {
+        if let TaskKind::Transfer { flows, .. } = kind {
+            for f in flows {
+                if fairshare::flow_is_degenerate(f) {
+                    continue;
+                }
+                for &l in &topo.path(f.src, f.dst).links {
+                    if link_owner[l] == u32::MAX {
+                        link_owner[l] = i as u32;
+                    } else {
+                        dsu.union(i as u32, link_owner[l]);
+                    }
+                }
+            }
+        }
+    }
+
+    // Group members by root; first-seen order over ascending task ids
+    // yields components sorted by smallest member, members ascending.
+    let mut comp_of_root: Vec<u32> = vec![u32::MAX; nt];
+    let mut comps: Vec<Component> = Vec::new();
+    for i in 0..nt as u32 {
+        let r = dsu.find(i) as usize;
+        if comp_of_root[r] == u32::MAX {
+            comp_of_root[r] = comps.len() as u32;
+            comps.push(Component {
+                wl: Workload::new(),
+                tasks: Vec::new(),
+                n_flows: 0,
+            });
+        }
+        comps[comp_of_root[r] as usize].tasks.push(i);
+    }
+
+    let mut local: Vec<u32> = vec![0; nt];
+    for c in &comps {
+        for (li, &t) in c.tasks.iter().enumerate() {
+            local[t as usize] = li as u32;
+        }
+    }
+    for c in &mut comps {
+        let Component { wl: cwl, tasks, n_flows } = c;
+        for &t in tasks.iter() {
+            let kind = wl.tasks[t as usize].clone();
+            if let TaskKind::Transfer { flows, .. } = &kind {
+                *n_flows += flows
+                    .iter()
+                    .filter(|f| !fairshare::flow_is_degenerate(f))
+                    .count();
+            }
+            let deps: Vec<u32> = wl.deps[t as usize]
+                .iter()
+                .map(|&d| local[d as usize])
+                .collect();
+            cwl.add(kind, &deps);
+        }
+    }
+    comps
+}
+
+/// Run `wl` decomposed: partition, simulate each component on its own
+/// engine pass (fanned across up to `threads` scoped workers; 0 = one
+/// per core), and merge into a report bit-identical to the monolithic
+/// run. Workers each build one [`FairshareEngine`] and reuse it across
+/// the components they claim.
+pub fn run_decomposed(
+    topo: &LinkGraph,
+    wl: &Workload,
+    refill: RefillMode,
+    threads: usize,
+) -> NetsimReport {
+    let refill = refill.resolve();
+    let _span = obs::span_with("netsim.run", "netsim", || {
+        vec![
+            ("mode", "Decomposed".to_string()),
+            ("refill", format!("{refill:?}")),
+            ("tasks", wl.n_tasks().to_string()),
+        ]
+    });
+    let comps = partition(topo, wl);
+    if obs::enabled() {
+        for c in &comps {
+            obs::record("netsim.component_flows", c.n_flows as u64);
+        }
+    }
+
+    let run_one = |engine: &mut FairshareEngine, c: &Component| -> SubRun {
+        let _span = obs::span_with("netsim.component", "netsim", || {
+            vec![
+                ("tasks", c.tasks.len().to_string()),
+                ("flows", c.n_flows.to_string()),
+            ]
+        });
+        engine.sub_run(topo, &c.wl, refill)
+    };
+
+    let n_threads = crate::util::resolve_threads(threads).min(comps.len().max(1));
+    let mut subs: Vec<Option<SubRun>> = Vec::new();
+    subs.resize_with(comps.len(), || None);
+    if n_threads <= 1 {
+        let mut engine = FairshareEngine::new(topo);
+        for (i, c) in comps.iter().enumerate() {
+            subs[i] = Some(run_one(&mut engine, c));
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_threads)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut engine = FairshareEngine::new(topo);
+                        let mut got: Vec<(usize, SubRun)> = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= comps.len() {
+                                break;
+                            }
+                            got.push((i, run_one(&mut engine, &comps[i])));
+                        }
+                        got
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, sub) in h.join().expect("netsim component worker panicked") {
+                    subs[i] = Some(sub);
+                }
+            }
+        });
+    }
+
+    // Merge. Every step is order-independent: max over end times, sorted
+    // union of round timestamps (rounds coincide only at exactly equal
+    // times, mirroring the monolithic loop's same-`t` batching), record
+    // tasks mapped back to original ids, busy pairs concatenated (links
+    // are disjoint across components).
+    let mut end_t = 0.0f64;
+    let mut times: Vec<f64> = Vec::new();
+    let mut busy: Vec<(u32, f64)> = Vec::new();
+    let mut records: Vec<fairshare::FlowRecord> = Vec::new();
+    for (ci, sub) in subs.into_iter().enumerate() {
+        let sub = sub.expect("every component simulated");
+        end_t = end_t.max(sub.end_t);
+        times.extend_from_slice(&sub.event_times);
+        busy.extend_from_slice(&sub.busy);
+        let map = &comps[ci].tasks;
+        records.extend(sub.records.into_iter().map(|r| fairshare::FlowRecord {
+            task: map[r.task as usize],
+            ..r
+        }));
+    }
+    times.sort_unstable_by(f64::total_cmp);
+    let mut events = 0usize;
+    let mut last = 0.0f64;
+    for (i, &t) in times.iter().enumerate() {
+        if i == 0 || t != last {
+            events += 1;
+            last = t;
+        }
+    }
+    fairshare::finalize(topo, end_t, events, records, &busy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::GB;
+    use crate::netsim::FlowSpec;
+
+    fn two_rack_topo() -> LinkGraph {
+        // Two rack-local device pairs behind their own switches. The
+        // trunk keeps the graph all-pairs reachable (a `from_json`
+        // invariant) but no rack-local route crosses it.
+        let spec = r#"{
+            "name": "two-rack",
+            "nodes": ["d0", "d1", "d2", "d3",
+                      {"id": "s0", "kind": "switch"},
+                      {"id": "s1", "kind": "switch"}],
+            "links": [
+                {"src": "d0", "dst": "s0", "bw_gbps": 80, "latency_us": 1},
+                {"src": "d1", "dst": "s0", "bw_gbps": 80, "latency_us": 1},
+                {"src": "d2", "dst": "s1", "bw_gbps": 80, "latency_us": 1},
+                {"src": "d3", "dst": "s1", "bw_gbps": 80, "latency_us": 1},
+                {"src": "s0", "dst": "s1", "bw_gbps": 80, "latency_us": 1}
+            ]
+        }"#;
+        LinkGraph::from_json(&crate::util::json::parse(spec).expect("valid json"))
+            .expect("valid edge-list")
+    }
+
+    fn rack_local_workload() -> Workload {
+        let mut wl = Workload::new();
+        // Rack A: chain of two transfers.
+        let a0 = wl.add(
+            TaskKind::Transfer {
+                flows: vec![FlowSpec { src: 0, dst: 1, bytes: GB }],
+                extra_latency: 0.0,
+            },
+            &[],
+        );
+        wl.add(
+            TaskKind::Transfer {
+                flows: vec![FlowSpec { src: 1, dst: 0, bytes: 2.0 * GB }],
+                extra_latency: 0.0,
+            },
+            &[a0],
+        );
+        // Rack B: compute then transfer.
+        let b0 = wl.add(TaskKind::Compute { seconds: 1e-3 }, &[]);
+        wl.add(
+            TaskKind::Transfer {
+                flows: vec![FlowSpec { src: 2, dst: 3, bytes: GB }],
+                extra_latency: 0.0,
+            },
+            &[b0],
+        );
+        wl
+    }
+
+    #[test]
+    fn partition_splits_rack_local_traffic() {
+        let topo = two_rack_topo();
+        let wl = rack_local_workload();
+        let comps = partition(&topo, &wl);
+        assert_eq!(comps.len(), 2);
+        // Ordered by smallest original task id, members ascending.
+        assert_eq!(comps[0].tasks, vec![0, 1]);
+        assert_eq!(comps[1].tasks, vec![2, 3]);
+        assert_eq!(comps[0].n_flows, 2);
+        assert_eq!(comps[1].n_flows, 1);
+        // Remapped deps survive: rack B's transfer depends on its
+        // compute under local ids.
+        assert_eq!(comps[1].wl.n_tasks(), 2);
+        assert_eq!(comps[1].wl.deps[1], vec![0]);
+    }
+
+    #[test]
+    fn dependency_edges_merge_link_disjoint_tasks() {
+        let topo = two_rack_topo();
+        let mut wl = Workload::new();
+        let a = wl.add(
+            TaskKind::Transfer {
+                flows: vec![FlowSpec { src: 0, dst: 1, bytes: GB }],
+                extra_latency: 0.0,
+            },
+            &[],
+        );
+        // Depends on rack A's transfer but sends in rack B: causally one
+        // component even though the routes are link-disjoint.
+        wl.add(
+            TaskKind::Transfer {
+                flows: vec![FlowSpec { src: 2, dst: 3, bytes: GB }],
+                extra_latency: 0.0,
+            },
+            &[a],
+        );
+        let comps = partition(&topo, &wl);
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].tasks, vec![0, 1]);
+    }
+
+    #[test]
+    fn decomposed_matches_monolithic_at_any_thread_count() {
+        let topo = two_rack_topo();
+        let wl = rack_local_workload();
+        let mono = FairshareEngine::new(&topo).run_with_mode(&topo, &wl, RefillMode::Incremental);
+        for threads in [1, 4] {
+            let dec = run_decomposed(&topo, &wl, RefillMode::Incremental, threads);
+            mono.assert_bits_eq(&dec, &format!("decomposed vs monolithic ({threads} threads)"));
+        }
+        let mono_full = FairshareEngine::new(&topo).run_with_mode(&topo, &wl, RefillMode::FullRefill);
+        let dec_full = run_decomposed(&topo, &wl, RefillMode::FullRefill, 2);
+        mono_full.assert_bits_eq(&dec_full, "decomposed vs monolithic (full refill)");
+    }
+
+    #[test]
+    fn empty_workload_decomposes_to_empty_report() {
+        let topo = two_rack_topo();
+        let rep = run_decomposed(&topo, &Workload::new(), RefillMode::Incremental, 4);
+        assert_eq!(rep.n_flows, 0);
+        assert_eq!(rep.events, 0);
+        assert_eq!(rep.batch_time, 0.0);
+    }
+}

@@ -52,6 +52,22 @@
 //! unaffected). `NEST_REFERENCE=1` selects the full-refill scope within
 //! *this* engine — the bit-identity proof is Incremental ≡ FullRefill,
 //! not new ≡ pre-rewrite.
+//!
+//! # Decomposed execution
+//!
+//! [`super::decompose`] hoists the component argument one level further:
+//! a *static* pre-simulation partition of the task DAG (dependency edges
+//! ∪ link-sharing edges) lets each component run as an independent
+//! sub-simulation, possibly on worker threads. To make the merged report
+//! bit-identical to a monolithic run regardless of interleaving, the
+//! engine separates simulation ([`FairshareEngine::sub_run`], returning
+//! a raw [`SubRun`]) from report assembly ([`finalize`]): byte totals
+//! are summed over per-flow [`FlowRecord`]s in canonical
+//! `(task, flow-index)` order rather than event order, and event rounds
+//! are counted from round timestamps. Monolithic runs go through the
+//! identical finalize path, so the summation-order change is shared —
+//! totals can differ from pre-decomposition builds in the last bits
+//! (tolerance-based expectations are unaffected).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -66,6 +82,13 @@ pub struct FlowSpec {
     pub src: usize,
     pub dst: usize,
     pub bytes: f64,
+}
+
+/// Flows that never cross the network (self-loops, sub-byte payloads)
+/// are skipped by the engine. The decomposition partitioner must apply
+/// the *same* predicate, so it lives in one place.
+pub(super) fn flow_is_degenerate(f: &FlowSpec) -> bool {
+    f.src == f.dst || f.bytes <= 0.5
 }
 
 /// A schedulable unit of the lowered workload.
@@ -90,9 +113,11 @@ pub enum TaskKind {
 /// completes.
 #[derive(Debug, Default)]
 pub struct Workload {
-    tasks: Vec<TaskKind>,
+    /// Visible to the sibling decomposition pass (`netsim::decompose`),
+    /// which partitions tasks without going through the engine.
+    pub(super) tasks: Vec<TaskKind>,
     /// Prerequisites per task.
-    deps: Vec<Vec<u32>>,
+    pub(super) deps: Vec<Vec<u32>>,
 }
 
 impl Workload {
@@ -264,11 +289,78 @@ const EV_TASK: u8 = 1;
 /// One active flow in the engine's slab. `remaining` is the byte count
 /// *as of* `last_t`; bytes are settled lazily whenever the rate changes
 /// (and at completion), so unchanged flows cost nothing per event.
+/// Per-flow accounting record — the canonical unit byte totals are
+/// summed over. `(task, idx)` is globally unique (`idx` = position in
+/// the task's flow list), so sorting records fixes one f64 addition
+/// order shared by monolithic runs and decomposed merges.
+#[derive(Debug, Clone, Copy)]
+pub(super) struct FlowRecord {
+    pub(super) task: u32,
+    pub(super) idx: u32,
+    pub(super) bytes: f64,
+    pub(super) delivered: f64,
+}
+
+/// Per-link transferred-byte accumulator with a touched-link list, so a
+/// sub-run's output and reset cost O(links actually used) rather than
+/// O(all links) — decomposed mode runs thousands of tiny components on
+/// one fabric-sized engine.
+#[derive(Debug, Default)]
+struct BusyLedger {
+    bytes: Vec<f64>,
+    touched: Vec<u32>,
+}
+
+impl BusyLedger {
+    fn add(&mut self, l: usize, moved: f64) {
+        if self.bytes[l] == 0.0 {
+            self.touched.push(l as u32);
+        }
+        self.bytes[l] += moved;
+    }
+
+    /// Drain to link-sorted `(link, bytes)` pairs and restore the
+    /// all-zero invariant. Zero-byte touches are dropped; duplicates in
+    /// `touched` collapse because the first drain zeroes the entry.
+    fn drain_sorted(&mut self) -> Vec<(u32, f64)> {
+        let mut out: Vec<(u32, f64)> = Vec::with_capacity(self.touched.len());
+        for &l in &self.touched {
+            let b = self.bytes[l as usize];
+            if b != 0.0 {
+                out.push((l, b));
+                self.bytes[l as usize] = 0.0;
+            }
+        }
+        self.touched.clear();
+        out.sort_unstable_by_key(|p| p.0);
+        out
+    }
+}
+
+/// Raw outcome of one engine pass — a monolithic run or one decomposed
+/// component — before report assembly. Every field is
+/// interleaving-independent, which is what lets [`finalize`] produce
+/// identical bits from one monolithic pass or a merge of per-component
+/// passes.
+#[derive(Debug, Default)]
+pub(super) struct SubRun {
+    /// Completion time of the last task (0.0 for an empty workload).
+    pub(super) end_t: f64,
+    /// Strictly increasing timestamps of the scheduling rounds.
+    pub(super) event_times: Vec<f64>,
+    /// Link-sorted `(link, transferred bytes)` pairs, nonzero only.
+    pub(super) busy: Vec<(u32, f64)>,
+    /// One record per materialized flow, in arrival order.
+    pub(super) records: Vec<FlowRecord>,
+}
+
 #[derive(Debug, Clone)]
 struct ActiveFlow {
     task: u32,
     /// Arrival number — the canonical ordering key for component fills.
     id: u64,
+    /// Index of this flow's [`FlowRecord`] in the current sub-run.
+    rec: u32,
     /// Bumped on every rate change and slot reuse; stale heap entries
     /// carry an older value and are dropped on pop.
     gen: u32,
@@ -331,6 +423,7 @@ pub struct FairshareEngine {
     /// component discovery O(component) instead of O(flows × links).
     link_flows: Vec<Vec<u32>>,
     scratch: Scratch,
+    busy: BusyLedger,
 }
 
 impl FairshareEngine {
@@ -347,7 +440,17 @@ impl FairshareEngine {
                 used: vec![0.0; nl],
                 ..Scratch::default()
             },
+            busy: BusyLedger {
+                bytes: vec![0.0; nl],
+                touched: Vec::new(),
+            },
         }
+    }
+
+    /// Link count the engine was built for (how [`super::Simulation`]
+    /// decides whether a retained engine can be reused).
+    pub(super) fn n_links(&self) -> usize {
+        self.nl
     }
 
     /// Run `wl` on `topo` with the environment-selected [`RefillMode`].
@@ -366,19 +469,31 @@ impl FairshareEngine {
         wl: &Workload,
         mode: RefillMode,
     ) -> NetsimReport {
+        let mode = mode.resolve();
+        let _span = obs::span_with("netsim.run", "netsim", || {
+            vec![
+                ("mode", format!("{mode:?}")),
+                ("tasks", wl.tasks.len().to_string()),
+            ]
+        });
+        let sub = self.sub_run(topo, wl, mode);
+        let events = sub.event_times.len();
+        finalize(topo, sub.end_t, events, sub.records, &sub.busy)
+    }
+
+    /// One engine pass over `wl`, returning the raw [`SubRun`] outcome.
+    /// Report assembly lives in [`finalize`] so that a monolithic run
+    /// and a merge of decomposed component sub-runs share one code path
+    /// (and therefore one set of bits). `mode` must already be resolved.
+    pub(super) fn sub_run(&mut self, topo: &LinkGraph, wl: &Workload, mode: RefillMode) -> SubRun {
         assert_eq!(
             topo.links.len(),
             self.nl,
             "engine was built for a different topology"
         );
-        let mode = mode.resolve();
         let nt = wl.tasks.len();
-        // Event-loop span; heap traffic accumulates in plain locals
-        // (flushed once after the loop) so the event loop never pays a
-        // recorder call per pop.
-        let _span = obs::span_with("netsim.run", "netsim", || {
-            vec![("mode", format!("{mode:?}")), ("tasks", nt.to_string())]
-        });
+        // Heap traffic accumulates in plain locals (flushed once after
+        // the loop) so the event loop never pays a recorder call per pop.
         let mut heap_pops: u64 = 0;
         let mut stale_drops: u64 = 0;
         let mut st: Vec<TaskState> = vec![TaskState::default(); nt];
@@ -400,11 +515,8 @@ impl FairshareEngine {
         self.scratch.flow_seen.clear();
 
         let mut heap: BinaryHeap<HeapEv> = BinaryHeap::new();
-        let mut busy_bytes: Vec<f64> = vec![0.0; self.nl];
-        let mut n_flows = 0usize;
-        let mut total_bytes = 0.0f64;
-        let mut delivered_bytes = 0.0f64;
-        let mut events = 0usize;
+        let mut records: Vec<FlowRecord> = Vec::new();
+        let mut event_times: Vec<f64> = Vec::new();
         let mut done_count = 0usize;
         let mut next_flow_id: u64 = 0;
         let mut flows_changed = false;
@@ -433,13 +545,18 @@ impl FairshareEngine {
                         extra_latency,
                     } => {
                         let mut pending = 0u32;
-                        for f in flows {
-                            if f.src == f.dst || f.bytes <= 0.5 {
+                        for (fi, f) in flows.iter().enumerate() {
+                            if flow_is_degenerate(f) {
                                 continue; // no network crossing
                             }
                             let p = topo.path(f.src, f.dst);
-                            n_flows += 1;
-                            total_bytes += f.bytes;
+                            let rec = records.len() as u32;
+                            records.push(FlowRecord {
+                                task: i,
+                                idx: fi as u32,
+                                bytes: f.bytes,
+                                delivered: 0.0,
+                            });
                             let id = next_flow_id;
                             next_flow_id += 1;
                             let slot = match self.free.pop() {
@@ -447,6 +564,7 @@ impl FairshareEngine {
                                     let fl = &mut self.slots[sl as usize];
                                     fl.task = i;
                                     fl.id = id;
+                                    fl.rec = rec;
                                     fl.gen = fl.gen.wrapping_add(1);
                                     fl.bytes = f.bytes;
                                     fl.remaining = f.bytes;
@@ -462,6 +580,7 @@ impl FairshareEngine {
                                     self.slots.push(ActiveFlow {
                                         task: i,
                                         id,
+                                        rec,
                                         gen: 0,
                                         bytes: f.bytes,
                                         remaining: f.bytes,
@@ -513,7 +632,7 @@ impl FairshareEngine {
                 &self.link_flows,
                 &mut self.scratch,
                 t,
-                &mut busy_bytes,
+                &mut self.busy,
                 &mut heap,
             );
             flows_changed = false;
@@ -540,7 +659,7 @@ impl FairshareEngine {
             }
             let Some(t_now) = t_next else { break };
             t = t_now;
-            events += 1;
+            event_times.push(t_now);
 
             // Process every event due at `t` (ties included; cascades of
             // zero-cost starts land in the same round, like the eager
@@ -568,11 +687,11 @@ impl FairshareEngine {
                             let moved = f.rate * dt;
                             f.remaining -= moved;
                             for &l in &f.links {
-                                busy_bytes[l] += moved;
+                                self.busy.add(l, moved);
                             }
                         }
                         f.last_t = t;
-                        delivered_bytes += f.bytes - f.remaining.max(0.0);
+                        records[f.rec as usize].delivered = f.bytes - f.remaining.max(0.0);
                         f.alive = false;
                         f.gen = f.gen.wrapping_add(1);
                         let task = f.task as usize;
@@ -633,7 +752,7 @@ impl FairshareEngine {
                     &self.link_flows,
                     &mut self.scratch,
                     t,
-                    &mut busy_bytes,
+                    &mut self.busy,
                     &mut heap,
                 );
                 flows_changed = false;
@@ -645,59 +764,94 @@ impl FairshareEngine {
             "flow workload deadlock: {done_count}/{nt} tasks completed (cyclic lowering?)"
         );
 
-        // Utilization report, hottest first, ties by link id.
-        let mut link_util: Vec<LinkUtil> = busy_bytes
-            .iter()
-            .enumerate()
-            .filter(|(_, &b)| b > 0.0)
-            .map(|(l, &b)| LinkUtil {
-                link: l,
-                name: topo.link_name(l),
-                utilization: if t > 0.0 {
-                    b / (topo.links[l].capacity * t)
-                } else {
-                    0.0
-                },
-            })
-            .collect();
-        link_util.sort_by(|a, b| {
-            b.utilization
-                .total_cmp(&a.utilization)
-                .then(a.link.cmp(&b.link))
-        });
-        let max_link_util = link_util.first().map(|u| u.utilization).unwrap_or(0.0);
-
         if obs::enabled() {
             obs::count("netsim.heap.pop", heap_pops);
             obs::count("netsim.heap.stale_drop", stale_drops);
-            obs::count("netsim.events", events as u64);
-            // Per-link utilization snapshot: one histogram sample per
-            // active link (integer percent), plus an instant carrying
-            // the hottest link for the timeline view.
-            for u in &link_util {
-                obs::record("netsim.link_util_pct", (u.utilization * 100.0).round() as u64);
-            }
-            obs::instant("netsim.link_util", "netsim", || {
-                vec![
-                    ("links_active", link_util.len().to_string()),
-                    (
-                        "max_link",
-                        link_util.first().map(|u| u.name.clone()).unwrap_or_default(),
-                    ),
-                    ("max_util_pct", format!("{:.1}", max_link_util * 100.0)),
-                ]
-            });
+            obs::count("netsim.events", event_times.len() as u64);
         }
 
-        NetsimReport {
-            batch_time: t,
-            n_flows,
-            total_bytes,
-            delivered_bytes,
-            events,
-            link_util,
-            max_link_util,
+        SubRun {
+            end_t: t,
+            event_times,
+            busy: self.busy.drain_sorted(),
+            records,
         }
+    }
+}
+
+/// Assemble the user-facing [`NetsimReport`] from sub-run outcomes.
+/// `busy` must hold each link at most once — guaranteed for a single
+/// sub-run by the engine's ledger, and for decomposed merges because
+/// components are link-disjoint. Record order does not matter: totals
+/// are summed in canonical `(task, idx)` order, so one monolithic pass
+/// and a merge of component passes produce the same bits.
+pub(super) fn finalize(
+    topo: &LinkGraph,
+    end_t: f64,
+    events: usize,
+    mut records: Vec<FlowRecord>,
+    busy: &[(u32, f64)],
+) -> NetsimReport {
+    records.sort_unstable_by_key(|r| (r.task, r.idx));
+    let n_flows = records.len();
+    let mut total_bytes = 0.0f64;
+    let mut delivered_bytes = 0.0f64;
+    for r in &records {
+        total_bytes += r.bytes;
+        delivered_bytes += r.delivered;
+    }
+
+    // Utilization report, hottest first, ties by link id.
+    let mut link_util: Vec<LinkUtil> = busy
+        .iter()
+        .filter(|&&(_, b)| b > 0.0)
+        .map(|&(l, b)| {
+            let l = l as usize;
+            LinkUtil {
+                link: l,
+                name: topo.link_name(l),
+                utilization: if end_t > 0.0 {
+                    b / (topo.links[l].capacity * end_t)
+                } else {
+                    0.0
+                },
+            }
+        })
+        .collect();
+    link_util.sort_by(|a, b| {
+        b.utilization
+            .total_cmp(&a.utilization)
+            .then(a.link.cmp(&b.link))
+    });
+    let max_link_util = link_util.first().map(|u| u.utilization).unwrap_or(0.0);
+
+    if obs::enabled() {
+        // Per-link utilization snapshot: one histogram sample per
+        // active link (integer percent), plus an instant carrying
+        // the hottest link for the timeline view.
+        for u in &link_util {
+            obs::record("netsim.link_util_pct", (u.utilization * 100.0).round() as u64);
+        }
+        obs::instant("netsim.link_util", "netsim", || {
+            vec![
+                ("links_active", link_util.len().to_string()),
+                (
+                    "max_link",
+                    link_util.first().map(|u| u.name.clone()).unwrap_or_default(),
+                ),
+                ("max_util_pct", format!("{:.1}", max_link_util * 100.0)),
+            ]
+        });
+    }
+
+    NetsimReport {
+        batch_time: end_t,
+        n_flows,
+        total_bytes,
+        delivered_bytes,
+        events,
+        link_util,
+        max_link_util,
     }
 }
 
@@ -731,7 +885,7 @@ fn resolve_rates(
     link_flows: &[Vec<u32>],
     scratch: &mut Scratch,
     t: f64,
-    busy_bytes: &mut [f64],
+    busy: &mut BusyLedger,
     heap: &mut BinaryHeap<HeapEv>,
 ) {
     let Scratch {
@@ -791,8 +945,8 @@ fn resolve_rates(
                     obs::record("netsim.dirty_component", comp.len() as u64);
                 }
                 fill_component(
-                    topo, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t,
-                    busy_bytes, heap,
+                    topo, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t, busy,
+                    heap,
                 );
             }
         }
@@ -824,8 +978,8 @@ fn resolve_rates(
                     obs::record("netsim.dirty_component", comp.len() as u64);
                 }
                 fill_component(
-                    topo, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t,
-                    busy_bytes, heap,
+                    topo, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t, busy,
+                    heap,
                 );
             }
         }
@@ -854,7 +1008,7 @@ fn fill_component(
     frozen: &mut Vec<bool>,
     new_rates: &mut Vec<f64>,
     t: f64,
-    busy_bytes: &mut [f64],
+    busy: &mut BusyLedger,
     heap: &mut BinaryHeap<HeapEv>,
 ) {
     comp_links.clear();
@@ -958,7 +1112,7 @@ fn fill_component(
             let moved = f.rate * dt;
             f.remaining -= moved;
             for &l in &f.links {
-                busy_bytes[l] += moved;
+                busy.add(l, moved);
             }
         }
         f.last_t = t;

@@ -24,14 +24,20 @@
 //! much worse under contention", not "was the analytic model too
 //! pessimistic".
 //!
-//! Entry points: [`simulate_flows`] for one plan on one topology, the
-//! `nest netsim` / `nest netsim-xval` CLI subcommands, and
-//! [`crate::harness::netsim::netsim_xval`] for the cross-validation
-//! table over topology families. Since the refinement loop
-//! ([`crate::solver::refine`], `nest refine`) landed, the simulator is
-//! also a *decision-maker*: it re-ranks the DP's analytic top-K
-//! shortlist under contention.
+//! The one entry point is [`Simulation`]: a builder holding
+//! [`NetsimOpts`] (execution mode, refill strategy, worker threads,
+//! engine reuse) with all environment resolution (`NEST_REFERENCE`,
+//! `NEST_NETSIM_MODE`) in exactly one place — [`NetsimOpts::resolve`].
+//! [`SimMode::Decomposed`] statically partitions the workload into
+//! link-sharing components and fans them across scoped worker threads
+//! ([`decompose`]), bit-identical to the monolithic event loop; the
+//! `nest netsim` / `netsim-xval` / `netsim-scale` subcommands and
+//! [`crate::harness::netsim::netsim_xval`] sit on top. Since the
+//! refinement loop ([`crate::solver::refine`], `nest refine`) landed,
+//! the simulator is also a *decision-maker*: it re-ranks the DP's
+//! analytic top-K shortlist under contention.
 
+pub mod decompose;
 pub mod fairshare;
 pub mod flows;
 pub mod topo;
@@ -46,10 +52,191 @@ use crate::network::Cluster;
 use crate::sim::Schedule;
 use crate::solver::plan::PlacementPlan;
 
-/// Lower one training batch of `plan` onto `topo` and run the
-/// fair-share engine. `cluster` is the analytic view the plan was
-/// solved against (compute costs + α accounting). Deterministic:
-/// identical inputs produce bit-identical reports.
+/// Execution strategy for one simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimMode {
+    /// Resolve from the environment once per process
+    /// (`NEST_NETSIM_MODE=monolithic|decomposed`; default monolithic).
+    #[default]
+    Auto,
+    /// One event loop over the whole workload.
+    Monolithic,
+    /// Static partition into link-sharing components, fanned across
+    /// scoped worker threads, merged bit-identically ([`decompose`]).
+    Decomposed,
+}
+
+/// `NEST_NETSIM_MODE` read once per process — the single place the
+/// execution-mode environment switch is consulted.
+fn env_sim_mode() -> Option<SimMode> {
+    static MODE: std::sync::OnceLock<Option<SimMode>> = std::sync::OnceLock::new();
+    *MODE.get_or_init(|| match std::env::var("NEST_NETSIM_MODE").ok().as_deref() {
+        Some("monolithic") => Some(SimMode::Monolithic),
+        Some("decomposed") => Some(SimMode::Decomposed),
+        Some(other) if !other.is_empty() => {
+            eprintln!(
+                "warning: NEST_NETSIM_MODE='{other}' is not 'monolithic' or 'decomposed'; ignored"
+            );
+            None
+        }
+        _ => None,
+    })
+}
+
+impl SimMode {
+    /// Collapse `Auto` to the environment's choice (default monolithic).
+    pub fn resolve(self) -> SimMode {
+        match self {
+            SimMode::Auto => env_sim_mode().unwrap_or(SimMode::Monolithic),
+            m => m,
+        }
+    }
+}
+
+/// All knobs of a simulation run. `Default` is `Auto` everywhere —
+/// env-resolved via [`NetsimOpts::resolve`], which is the *only* place
+/// `NEST_REFERENCE` / `NEST_NETSIM_MODE` feed the simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct NetsimOpts {
+    pub mode: SimMode,
+    /// Rate-maintenance strategy within each event loop
+    /// (`NEST_REFERENCE=1` resolves `Auto` to the full-refill twin).
+    pub refill: RefillMode,
+    /// Decomposed-mode worker threads (0 = one per core). Monolithic
+    /// runs are single-threaded regardless.
+    pub threads: usize,
+    /// Keep the engine (its per-link buffers) across monolithic runs on
+    /// one topology. Decomposed runs build per-worker engines instead.
+    pub reuse_engine: bool,
+}
+
+impl Default for NetsimOpts {
+    fn default() -> Self {
+        NetsimOpts {
+            mode: SimMode::Auto,
+            refill: RefillMode::Auto,
+            threads: 0,
+            reuse_engine: true,
+        }
+    }
+}
+
+impl NetsimOpts {
+    /// Collapse every `Auto` to its environment-resolved value.
+    pub fn resolve(self) -> NetsimOpts {
+        NetsimOpts {
+            mode: self.mode.resolve(),
+            refill: self.refill.resolve(),
+            ..self
+        }
+    }
+}
+
+/// The unified simulation entry point: configure once, run many plans
+/// or workloads. Replaces the accreted `simulate_flows` /
+/// `simulate_flows_with` / `fairshare::run_with_mode` surface (kept as
+/// thin deprecated wrappers).
+///
+/// ```ignore
+/// let mut sim = Simulation::new().mode(SimMode::Decomposed).threads(8);
+/// let report = sim.run(&graph, &cluster, &topo, &plan, Schedule::OneFOneB);
+/// ```
+///
+/// Reports are bit-identical across modes, thread counts, and engine
+/// reuse — the property suite pins all three.
+#[derive(Debug, Default)]
+pub struct Simulation {
+    opts: NetsimOpts,
+    /// Retained monolithic engine (rebuilt when the topology's link
+    /// count changes; see [`NetsimOpts::reuse_engine`]).
+    engine: Option<FairshareEngine>,
+}
+
+impl Simulation {
+    pub fn new() -> Self {
+        Simulation::default()
+    }
+
+    pub fn with_opts(opts: NetsimOpts) -> Self {
+        Simulation {
+            opts,
+            engine: None,
+        }
+    }
+
+    /// Builder: execution mode.
+    pub fn mode(mut self, mode: SimMode) -> Self {
+        self.opts.mode = mode;
+        self
+    }
+
+    /// Builder: refill strategy.
+    pub fn refill(mut self, refill: RefillMode) -> Self {
+        self.opts.refill = refill;
+        self
+    }
+
+    /// Builder: decomposed-mode worker threads (0 = one per core).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.opts.threads = threads;
+        self
+    }
+
+    /// Builder: engine retention across monolithic runs.
+    pub fn reuse_engine(mut self, reuse: bool) -> Self {
+        self.opts.reuse_engine = reuse;
+        self
+    }
+
+    /// The configured (unresolved) options.
+    pub fn opts(&self) -> NetsimOpts {
+        self.opts
+    }
+
+    /// Lower one training batch of `plan` onto `topo` and simulate it.
+    /// `cluster` is the analytic view the plan was solved against
+    /// (compute costs + α accounting). Deterministic: identical inputs
+    /// produce bit-identical reports.
+    pub fn run(
+        &mut self,
+        graph: &LayerGraph,
+        cluster: &Cluster,
+        topo: &LinkGraph,
+        plan: &PlacementPlan,
+        schedule: Schedule,
+    ) -> NetsimReport {
+        let wl = flows::lower(graph, cluster, topo, plan, schedule);
+        self.run_workload(topo, &wl)
+    }
+
+    /// Simulate an already-lowered [`Workload`].
+    pub fn run_workload(&mut self, topo: &LinkGraph, wl: &Workload) -> NetsimReport {
+        let opts = self.opts.resolve();
+        match opts.mode {
+            SimMode::Decomposed => decompose::run_decomposed(topo, wl, opts.refill, opts.threads),
+            _ => {
+                if !opts.reuse_engine {
+                    return FairshareEngine::new(topo).run_with_mode(topo, wl, opts.refill);
+                }
+                let stale = self
+                    .engine
+                    .as_ref()
+                    .map_or(true, |e| e.n_links() != topo.links.len());
+                if stale {
+                    self.engine = Some(FairshareEngine::new(topo));
+                }
+                self.engine
+                    .as_mut()
+                    .expect("engine just ensured")
+                    .run_with_mode(topo, wl, opts.refill)
+            }
+        }
+    }
+}
+
+/// Deprecated: construct a [`Simulation`] instead (this is a thin
+/// delegating wrapper kept so out-of-tree callers don't break).
+#[doc(hidden)]
 pub fn simulate_flows(
     graph: &LayerGraph,
     cluster: &Cluster,
@@ -57,14 +244,13 @@ pub fn simulate_flows(
     plan: &PlacementPlan,
     schedule: Schedule,
 ) -> NetsimReport {
-    let mut engine = FairshareEngine::new(topo);
-    simulate_flows_with(&mut engine, graph, cluster, topo, plan, schedule)
+    Simulation::new().run(graph, cluster, topo, plan, schedule)
 }
 
-/// [`simulate_flows`] on a caller-held [`FairshareEngine`], so loops
-/// that replay many plans on one topology (the refinement re-ranking,
-/// the benches) reuse the engine's per-link buffers instead of
-/// reallocating them per plan. Bit-identical to a fresh engine.
+/// Deprecated: hold a [`Simulation`] (its retained engine replaces the
+/// caller-held [`FairshareEngine`]). Thin delegating wrapper for
+/// out-of-tree callers.
+#[doc(hidden)]
 pub fn simulate_flows_with(
     engine: &mut FairshareEngine,
     graph: &LayerGraph,
@@ -93,7 +279,7 @@ mod tests {
         let sol = solve(&g, &c, &SolverOpts::default()).expect("feasible");
         let topo = LinkGraph::from_cluster(&c);
         let ana = crate::sim::simulate(&g, &c, &sol.plan, Schedule::OneFOneB);
-        let flow = simulate_flows(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
+        let flow = Simulation::new().run(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
         assert!(flow.batch_time.is_finite() && flow.batch_time > 0.0);
         assert!(
             flow.batch_time >= ana.batch_time * (1.0 - 1e-9),
@@ -115,8 +301,73 @@ mod tests {
         let c = Cluster::spine_leaf_h100(64, 2.0);
         let sol = solve(&g, &c, &SolverOpts::default()).expect("feasible");
         let topo = LinkGraph::from_cluster(&c);
-        let a = simulate_flows(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
-        let b = simulate_flows(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
-        a.assert_bits_eq(&b, "repeated simulate_flows");
+        let mut sim = Simulation::new();
+        let a = sim.run(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
+        let b = sim.run(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
+        a.assert_bits_eq(&b, "repeated Simulation::run");
+    }
+
+    #[test]
+    fn all_modes_agree_on_a_solver_plan() {
+        // The acceptance bar in miniature: monolithic, decomposed (1 and
+        // 4 threads), fresh engine, retained engine, and the deprecated
+        // wrapper all produce the same bits on a real lowered plan.
+        let g = models::bert_large(1);
+        let c = Cluster::spine_leaf_h100(64, 4.0);
+        let sol = solve(&g, &c, &SolverOpts::default()).expect("feasible");
+        let topo = LinkGraph::from_cluster(&c);
+        let mono = Simulation::new()
+            .mode(SimMode::Monolithic)
+            .run(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
+        for threads in [1, 4] {
+            let dec = Simulation::new()
+                .mode(SimMode::Decomposed)
+                .threads(threads)
+                .run(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
+            mono.assert_bits_eq(&dec, &format!("decomposed@{threads} vs monolithic"));
+        }
+        let fresh = Simulation::new()
+            .reuse_engine(false)
+            .run(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
+        mono.assert_bits_eq(&fresh, "fresh engine vs retained");
+        let wrapped = simulate_flows(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
+        mono.assert_bits_eq(&wrapped, "deprecated wrapper vs Simulation");
+    }
+
+    #[test]
+    fn retained_engine_rebuilds_on_topology_change() {
+        let g = models::bert_large(1);
+        let c1 = Cluster::fat_tree_tpuv4(64);
+        let c2 = Cluster::spine_leaf_h100(64, 2.0);
+        let t1 = LinkGraph::from_cluster(&c1);
+        let t2 = LinkGraph::from_cluster(&c2);
+        let p1 = solve(&g, &c1, &SolverOpts::default()).expect("feasible").plan;
+        let p2 = solve(&g, &c2, &SolverOpts::default()).expect("feasible").plan;
+        let mut sim = Simulation::new();
+        let a1 = sim.run(&g, &c1, &t1, &p1, Schedule::OneFOneB);
+        let b2 = sim.run(&g, &c2, &t2, &p2, Schedule::OneFOneB);
+        let a1_again = sim.run(&g, &c1, &t1, &p1, Schedule::OneFOneB);
+        a1.assert_bits_eq(&a1_again, "engine swapped across topologies");
+        let fresh2 = Simulation::new().run(&g, &c2, &t2, &p2, Schedule::OneFOneB);
+        b2.assert_bits_eq(&fresh2, "retained vs fresh on second topology");
+    }
+
+    #[test]
+    fn opts_resolve_leaves_no_auto() {
+        let r = NetsimOpts::default().resolve();
+        assert_ne!(r.mode, SimMode::Auto);
+        assert_ne!(r.refill, RefillMode::Auto);
+        // Explicit choices pass through untouched.
+        let e = NetsimOpts {
+            mode: SimMode::Decomposed,
+            refill: RefillMode::FullRefill,
+            threads: 3,
+            reuse_engine: false,
+        }
+        .resolve();
+        assert_eq!(e.mode, SimMode::Decomposed);
+        assert_eq!(e.refill, RefillMode::FullRefill);
+        assert_eq!(e.threads, 3);
+        assert!(!e.reuse_engine);
     }
 }

@@ -467,6 +467,163 @@ fn route_toward(nn: usize, links: &[Link], in_links: &[Vec<usize>], dn: usize) -
     hop_link
 }
 
+// ----- generated fabrics --------------------------------------------------
+
+/// NIC lane of the generated fabrics: 200 Gbit/s ≈ 25 GB/s.
+const GEN_LANE: f64 = 25.0 * GB;
+
+fn bidir_link(links: &mut Vec<Link>, a: usize, b: usize, capacity: f64, latency: f64, flow_cap: f64) {
+    for (src, dst) in [(a, b), (b, a)] {
+        links.push(Link {
+            src,
+            dst,
+            capacity,
+            latency,
+            flow_cap,
+        });
+    }
+}
+
+/// Generate a classic k-ary fat-tree (Al-Fares et al.): `k` pods of
+/// `k/2` edge + `k/2` aggregation switches, `(k/2)²` cores, `k³/4`
+/// hosts, uniform 25 GB/s links (rearrangeably non-blocking). `k` must
+/// be even and ≥ 2; `fattree(16)` is the 1024-host / 1344-node fabric
+/// `nest netsim-scale` sweeps. Hosts under one edge switch are
+/// consecutive device ids (rack-locality is id-locality), and routing
+/// is the deterministic shortest-path tables every `LinkGraph` gets.
+pub fn fattree(k: usize) -> LinkGraph {
+    assert!(k >= 2 && k % 2 == 0, "fat-tree arity must be even, got {k}");
+    let h = k / 2;
+    let hosts = k * h * h;
+    let lat = 1e-6;
+    let mut nodes: Vec<Node> = (0..hosts)
+        .map(|d| Node {
+            name: format!("h{d}"),
+            kind: NodeKind::Device,
+        })
+        .collect();
+    let edge_base = nodes.len();
+    for p in 0..k {
+        for e in 0..h {
+            nodes.push(Node {
+                name: format!("edge{p}.{e}"),
+                kind: NodeKind::Switch,
+            });
+        }
+    }
+    let agg_base = nodes.len();
+    for p in 0..k {
+        for a in 0..h {
+            nodes.push(Node {
+                name: format!("agg{p}.{a}"),
+                kind: NodeKind::Switch,
+            });
+        }
+    }
+    let core_base = nodes.len();
+    for c in 0..h * h {
+        nodes.push(Node {
+            name: format!("core{c}"),
+            kind: NodeKind::Switch,
+        });
+    }
+
+    let mut links: Vec<Link> = Vec::new();
+    for p in 0..k {
+        for e in 0..h {
+            let edge = edge_base + p * h + e;
+            for i in 0..h {
+                bidir_link(&mut links, p * h * h + e * h + i, edge, GEN_LANE, lat, GEN_LANE);
+            }
+            for a in 0..h {
+                bidir_link(&mut links, edge, agg_base + p * h + a, GEN_LANE, lat, GEN_LANE);
+            }
+        }
+        for a in 0..h {
+            for j in 0..h {
+                bidir_link(
+                    &mut links,
+                    agg_base + p * h + a,
+                    core_base + a * h + j,
+                    GEN_LANE,
+                    lat,
+                    GEN_LANE,
+                );
+            }
+        }
+    }
+    LinkGraph::build(
+        format!("fattree-k{k}"),
+        nodes,
+        links,
+        (0..hosts).collect(),
+        Vec::new(),
+    )
+    .expect("generated fat-tree is connected")
+}
+
+/// Generate a two-tier spine-leaf fabric: `racks` leaves of
+/// `hosts_per_rack` hosts each, `max(1, racks/4)` spines, host lanes at
+/// 25 GB/s, and each leaf's spine uplinks sized so aggregate uplink =
+/// downlink / `oversub` (per-flow ceiling one lane). Hosts in one rack
+/// are consecutive device ids.
+pub fn spineleaf(racks: usize, hosts_per_rack: usize, oversub: f64) -> LinkGraph {
+    assert!(racks >= 1 && hosts_per_rack >= 1, "empty spine-leaf");
+    assert!(
+        oversub.is_finite() && oversub >= 1.0,
+        "oversubscription must be ≥ 1, got {oversub}"
+    );
+    let hosts = racks * hosts_per_rack;
+    let spines = (racks / 4).max(1);
+    let mut nodes: Vec<Node> = (0..hosts)
+        .map(|d| Node {
+            name: format!("h{d}"),
+            kind: NodeKind::Device,
+        })
+        .collect();
+    let leaf_base = nodes.len();
+    for r in 0..racks {
+        nodes.push(Node {
+            name: format!("leaf{r}"),
+            kind: NodeKind::Switch,
+        });
+    }
+    let spine_base = nodes.len();
+    for s in 0..spines {
+        nodes.push(Node {
+            name: format!("spine{s}"),
+            kind: NodeKind::Switch,
+        });
+    }
+
+    let mut links: Vec<Link> = Vec::new();
+    let uplink = hosts_per_rack as f64 * GEN_LANE / oversub / spines as f64;
+    for r in 0..racks {
+        let leaf = leaf_base + r;
+        for i in 0..hosts_per_rack {
+            bidir_link(&mut links, r * hosts_per_rack + i, leaf, GEN_LANE, 1e-6, GEN_LANE);
+        }
+        for s in 0..spines {
+            bidir_link(
+                &mut links,
+                leaf,
+                spine_base + s,
+                uplink,
+                2e-6,
+                GEN_LANE.min(uplink),
+            );
+        }
+    }
+    LinkGraph::build(
+        format!("spineleaf-{racks}x{hosts_per_rack}-o{oversub}"),
+        nodes,
+        links,
+        (0..hosts).collect(),
+        Vec::new(),
+    )
+    .expect("generated spine-leaf is connected")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -653,5 +810,53 @@ mod tests {
         assert_eq!(t.ring_group(0, 0), 0);
         assert_eq!(t.ring_group(9, 0), 1);
         assert_eq!(t.ring_group(9, 1), 0);
+    }
+
+    #[test]
+    fn fattree_generator_shape_and_routing() {
+        let g = fattree(4);
+        assert_eq!(g.n_devices(), 16);
+        assert_eq!(g.nodes.len(), 16 + 8 + 8 + 4);
+        // host-edge + edge-agg + agg-core, bidirectional.
+        assert_eq!(g.links.len(), 2 * (16 + 16 + 16));
+        // Rack-local: two hops under the shared edge switch.
+        assert_eq!(g.path(0, 1).links.len(), 2);
+        // Cross-pod: host→edge→agg→core→agg→edge→host.
+        assert_eq!(g.path(0, 15).links.len(), 6);
+        // Deterministic: regenerating gives identical routes.
+        let g2 = fattree(4);
+        assert_eq!(g.path(3, 12).links, g2.path(3, 12).links);
+    }
+
+    #[test]
+    fn fattree_reaches_netsim_scale_size() {
+        let g = fattree(16);
+        assert_eq!(g.n_devices(), 1024);
+        assert_eq!(g.nodes.len(), 1024 + 128 + 128 + 64);
+    }
+
+    #[test]
+    fn spineleaf_generator_shape_and_oversub() {
+        let g = spineleaf(8, 4, 4.0);
+        assert_eq!(g.n_devices(), 32);
+        assert_eq!(g.nodes.len(), 32 + 8 + 2);
+        assert_eq!(g.path(0, 1).links.len(), 2);
+        // Cross-rack: host→leaf→spine→leaf→host.
+        assert_eq!(g.path(0, 31).links.len(), 4);
+        // Aggregate uplink per leaf = downlink / oversub.
+        let leaf = 32; // first leaf node id
+        let up: f64 = g
+            .links
+            .iter()
+            .filter(|l| l.src == leaf && l.dst >= 40)
+            .map(|l| l.capacity)
+            .sum();
+        let down: f64 = g
+            .links
+            .iter()
+            .filter(|l| l.src == leaf && l.dst < 32)
+            .map(|l| l.capacity)
+            .sum();
+        assert!((up - down / 4.0).abs() < 1.0, "up {up} vs down/4 {}", down / 4.0);
     }
 }

@@ -30,15 +30,17 @@
 //!
 //! Naming scheme (`layer.noun[.detail]`) — the full glossary lives in
 //! README § Observability: spans `solver.solve_topk`, `solver.config`,
-//! `cost.build`, `netsim.run`, `refine.refine`, `refine.replay`,
-//! `service.query`, `service.fingerprint`; counters
+//! `cost.build`, `netsim.run`, `netsim.component` (one per
+//! link-sharing component in decomposed runs), `refine.refine`,
+//! `refine.replay`, `service.query`, `service.fingerprint`; counters
 //! `solver.prune.config_bound`, `solver.prune.dp_state`,
 //! `solver.prune.final_cut`, `solver.dp_states`,
 //! `solver.incumbent.improved`, `netsim.heap.pop`,
 //! `netsim.heap.stale_drop`, `netsim.events`, `service.cache_hit`,
 //! `service.cache_miss`, `service.warm_neighbor`, `service.evict`;
 //! histograms `netsim.dirty_component`, `netsim.link_util_pct`,
-//! `service.query_us`.
+//! `netsim.component_flows` (component-size census of each decomposed
+//! run), `service.query_us`.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;

@@ -46,7 +46,7 @@
 
 use crate::cost::CostArena;
 use crate::graph::{Layer, LayerGraph, LayerKind};
-use crate::netsim::{FairshareEngine, LinkGraph};
+use crate::netsim::{LinkGraph, Simulation};
 use crate::network::Cluster;
 use crate::obs;
 use crate::solver::plan::{diff_plans_in, PlacementPlan, PlanDelta};
@@ -477,8 +477,8 @@ impl PlacementService {
         if served.plans.is_empty() {
             return None;
         }
-        let mut engine = FairshareEngine::new(topo);
-        let ranked = rerank(&mut engine, &query.graph, &query.cluster, topo, served.plans);
+        let mut sim = Simulation::new();
+        let ranked = rerank(&mut sim, &query.graph, &query.cluster, topo, served.plans);
         Some(RefineReport {
             ranked,
             solve_seconds: served.solve_seconds,

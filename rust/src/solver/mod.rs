@@ -222,16 +222,7 @@ pub struct Solution {
     pub configs_tried: u64,
 }
 
-/// Resolve a thread-count option (0 = available parallelism).
-pub(crate) fn resolve_threads(requested: usize) -> usize {
-    if requested > 0 {
-        requested
-    } else {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-    }
-}
+pub(crate) use crate::util::resolve_threads;
 
 /// Shared K-best incumbent: the pruning bound is the K-th smallest
 /// *achieved* batch time offered so far (`f64::INFINITY` until K

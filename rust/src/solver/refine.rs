@@ -28,7 +28,7 @@
 //! cross-topology table in [`crate::harness::refine`].
 
 use crate::graph::LayerGraph;
-use crate::netsim::{simulate_flows_with, FairshareEngine, LinkGraph};
+use crate::netsim::{LinkGraph, NetsimOpts, Simulation};
 use crate::network::Cluster;
 use crate::sim::Schedule;
 use crate::util::table::{fmt_time, Table};
@@ -139,6 +139,20 @@ pub fn refine(
     opts: &SolverOpts,
     topk: usize,
 ) -> Option<RefineReport> {
+    refine_opts(graph, cluster, topo, opts, topk, NetsimOpts::default())
+}
+
+/// [`refine`] with explicit flow-simulator options (`nest refine
+/// --mode …` lands here). Reports are bit-identical across simulation
+/// modes and thread counts — the options trade wall-clock, not bits.
+pub fn refine_opts(
+    graph: &LayerGraph,
+    cluster: &Cluster,
+    topo: &LinkGraph,
+    opts: &SolverOpts,
+    topk: usize,
+    netsim: NetsimOpts,
+) -> Option<RefineReport> {
     let _span = crate::obs::span_with("refine.refine", "refine", || {
         vec![("topk", topk.to_string())]
     });
@@ -146,10 +160,10 @@ pub fn refine(
     if top.plans.is_empty() {
         return None;
     }
-    // One fair-share engine for all K replays: the per-link buffers are
-    // sized once and reused (reports are bit-identical to fresh engines).
-    let mut engine = FairshareEngine::new(topo);
-    let ranked = rerank(&mut engine, graph, cluster, topo, top.plans);
+    // One Simulation for all K replays: its retained engine's per-link
+    // buffers are sized once and reused (bit-identical to fresh engines).
+    let mut sim = Simulation::with_opts(netsim);
+    let ranked = rerank(&mut sim, graph, cluster, topo, top.plans);
     Some(RefineReport {
         ranked,
         solve_seconds: top.solve_seconds,
@@ -160,13 +174,13 @@ pub fn refine(
 
 /// Re-rank an analytic shortlist (plans in DP order, index = analytic
 /// rank) by flow-simulated batch time on `topo`, reusing the caller's
-/// fair-share `engine`. This is the simulation half of [`refine`],
-/// split out so [`crate::service::PlacementService`] can re-rank a
-/// *cached* shortlist against a new topology without re-solving.
-/// Single-threaded and bit-deterministic: the result depends only on
-/// the inputs, never on engine history.
+/// `sim`. This is the simulation half of [`refine`], split out so
+/// [`crate::service::PlacementService`] can re-rank a *cached*
+/// shortlist against a new topology without re-solving.
+/// Bit-deterministic: the result depends only on the inputs and never
+/// on simulation history, mode, or thread count.
 pub fn rerank(
-    engine: &mut FairshareEngine,
+    sim: &mut Simulation,
     graph: &LayerGraph,
     cluster: &Cluster,
     topo: &LinkGraph,
@@ -179,7 +193,7 @@ pub fn rerank(
             let _span = crate::obs::span_with("refine.replay", "refine", || {
                 vec![("analytic_rank", rank.to_string())]
             });
-            let rep = simulate_flows_with(engine, graph, cluster, topo, &plan, Schedule::OneFOneB);
+            let rep = sim.run(graph, cluster, topo, &plan, Schedule::OneFOneB);
             let delta = (rep.batch_time - plan.batch_time) / plan.batch_time;
             RefinedPlan {
                 analytic_rank: rank,

@@ -133,6 +133,28 @@ impl Args {
         Some(v)
     }
 
+    /// Enumerated string option: the value must be one of `choices`
+    /// (e.g. `--mode auto|monolithic|decomposed`). A value outside the
+    /// set records a clean error listing the alternatives and returns
+    /// the default — the record-and-continue style of the numeric
+    /// accessors, so every sim-touching subcommand rejects the same
+    /// inputs with the same message.
+    pub fn get_choice(&mut self, key: &str, choices: &[&str], default: &str) -> String {
+        debug_assert!(choices.contains(&default), "default must be a choice");
+        self.known.push(key.to_string());
+        match self.opts.get(key) {
+            None => default.to_string(),
+            Some(v) if choices.iter().any(|c| c == v) => v.clone(),
+            Some(v) => {
+                self.errors.push(format!(
+                    "--{key} expects one of {}, got '{v}'",
+                    choices.join("|")
+                ));
+                default.to_string()
+            }
+        }
+    }
+
     /// f64 option with a default; garbage records a clean error (see
     /// [`Args::check`]) and returns the default.
     pub fn get_f64(&mut self, key: &str, default: f64) -> f64 {
@@ -295,6 +317,31 @@ mod tests {
         assert_eq!(a.get_out_path("trace"), None);
         let err = a.check().unwrap_err();
         assert!(err.contains("parent directory"), "unexpected: {err}");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn choice_accepts_listed_values_and_defaults() {
+        const MODES: &[&str] = &["auto", "monolithic", "decomposed"];
+        let mut a = Args::parse(v(&["--mode", "decomposed"]));
+        assert_eq!(a.get_choice("mode", MODES, "auto"), "decomposed");
+        assert!(a.finish().is_ok());
+        // Absent flag: the default, no error.
+        let mut a = Args::parse(v(&[]));
+        assert_eq!(a.get_choice("mode", MODES, "auto"), "auto");
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn choice_rejects_unlisted_value_with_alternatives() {
+        const MODES: &[&str] = &["auto", "monolithic", "decomposed"];
+        let mut a = Args::parse(v(&["--mode", "turbo"]));
+        assert_eq!(a.get_choice("mode", MODES, "auto"), "auto");
+        let err = a.check().unwrap_err();
+        assert!(
+            err.contains("auto|monolithic|decomposed") && err.contains("turbo"),
+            "unexpected message: {err}"
+        );
         assert!(a.finish().is_err());
     }
 

@@ -33,3 +33,16 @@ pub fn reference_mode() -> bool {
         std::env::var("NEST_REFERENCE").map(|v| v == "1").unwrap_or(false)
     })
 }
+
+/// Resolve a thread-count option (0 = available parallelism). Shared by
+/// every fan-out site (solver workers, netsim component workers) so
+/// `--threads` means the same thing everywhere.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}

@@ -10,7 +10,7 @@ use nest::graph::models;
 use nest::graph::subgraph::SgConfig;
 use nest::harness::{run_method, HarnessOpts, Method};
 use nest::memory::ZeroStage;
-use nest::netsim::{simulate_flows, LinkGraph};
+use nest::netsim::{LinkGraph, SimMode, Simulation};
 use nest::network::Cluster;
 use nest::sim::{simulate, Schedule};
 use nest::solver::refine::refine;
@@ -300,14 +300,14 @@ fn netsim_oversubscribed_spine_strictly_slower_than_twin() {
     // One plan, solved against the clean twin, replayed on both fabrics.
     let plan = solve(&graph, &c_1to1, &SolverOpts::default()).unwrap().plan;
     plan.validate(&graph, &c_1to1).unwrap();
-    let clean = simulate_flows(
+    let clean = Simulation::new().run(
         &graph,
         &c_1to1,
         &LinkGraph::from_cluster(&c_1to1),
         &plan,
         Schedule::OneFOneB,
     );
-    let congested = simulate_flows(
+    let congested = Simulation::new().run(
         &graph,
         &c_1to1, // same analytic cost view: only the fabric differs
         &LinkGraph::from_cluster(&c_4to1),
@@ -344,7 +344,7 @@ fn netsim_reports_bit_identical_across_threads() {
             },
         )
         .unwrap();
-        reports.push(simulate_flows(
+        reports.push(Simulation::new().run(
             &graph,
             &cluster,
             &topo,
@@ -378,7 +378,7 @@ fn shipped_edge_lists_run_netsim() {
         let graph = models::bert_large(1);
         let sol = solve(&graph, &cluster, &SolverOpts::default())
             .unwrap_or_else(|| panic!("{file}: infeasible"));
-        let rep = simulate_flows(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB);
+        let rep = Simulation::new().run(&graph, &cluster, &topo, &sol.plan, Schedule::OneFOneB);
         assert!(rep.batch_time.is_finite() && rep.batch_time > 0.0, "{file}");
         assert!(rep.n_flows > 0, "{file}");
         // The flat abstraction is optimistic by construction: the real
@@ -390,6 +390,49 @@ fn shipped_edge_lists_run_netsim() {
             rep.batch_time,
             ana.batch_time
         );
+    }
+}
+
+/// Decomposed execution is bit-identical to monolithic on every shipped
+/// configuration the simulator touches — the edge-list files plus the
+/// generated preset fabrics — at 1 and 4 worker threads. This is the
+/// in-tree counterpart of the fuzzed decomposition property: real
+/// plan-lowered workloads, not synthetic flow chains.
+#[test]
+fn decomposed_matches_monolithic_on_shipped_configs() {
+    let graph = models::bert_large(1);
+    let mut scenarios: Vec<(String, Cluster, LinkGraph)> = Vec::new();
+    for file in [
+        "configs/edgelist_dumbbell.json",
+        "configs/edgelist_spineleaf_4to1.json",
+    ] {
+        let (cluster, topo) = load_edgelist(file);
+        scenarios.push((file.to_string(), cluster, topo));
+    }
+    for (name, cluster) in [
+        ("fat-tree-64", Cluster::fat_tree_tpuv4(64)),
+        ("spine-leaf-64-4:1", Cluster::spine_leaf_h100(64, 4.0)),
+    ] {
+        let topo = LinkGraph::from_cluster(&cluster);
+        scenarios.push((name.to_string(), cluster, topo));
+    }
+    for (name, cluster, topo) in &scenarios {
+        let sol = solve(&graph, cluster, &SolverOpts::default())
+            .unwrap_or_else(|| panic!("{name}: infeasible"));
+        let mono = Simulation::new().mode(SimMode::Monolithic).run(
+            &graph,
+            cluster,
+            topo,
+            &sol.plan,
+            Schedule::OneFOneB,
+        );
+        for threads in [1usize, 4] {
+            let dec = Simulation::new()
+                .mode(SimMode::Decomposed)
+                .threads(threads)
+                .run(&graph, cluster, topo, &sol.plan, Schedule::OneFOneB);
+            dec.assert_bits_eq(&mono, &format!("{name}: decomposed {threads}t vs monolithic"));
+        }
     }
 }
 

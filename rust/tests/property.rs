@@ -19,7 +19,7 @@ mod common;
 use common::{assert_plans_identical, prop_seed, threaded};
 use nest::cost::{CostModel, PricingMode};
 use nest::memory::{MemSpec, ZeroStage};
-use nest::netsim::{fairshare, FlowSpec, LinkGraph, RefillMode, TaskKind, Workload};
+use nest::netsim::{FlowSpec, LinkGraph, RefillMode, SimMode, Simulation, TaskKind, Workload};
 use nest::sim::{simulate, Schedule};
 use nest::solver::{solve, solve_topk, SolverOpts};
 use nest::util::prop::{self, random_cluster, random_tiny_graph};
@@ -421,9 +421,9 @@ fn prop_netsim_fuzz_routing_deterministic_and_bytes_conserved() {
         };
         let mut probe = rng.clone();
         let (wl, injected) = build_wl(&mut probe);
-        // Every flow completes (fairshare::run asserts all tasks finish)
+        // Every flow completes (the engine asserts all tasks finish)
         // and the report is sane.
-        let rep = fairshare::run(&a, &wl);
+        let rep = Simulation::new().run_workload(&a, &wl);
         assert!(rep.batch_time.is_finite() && rep.batch_time > 0.0);
         assert!((rep.total_bytes - injected).abs() < 1.0, "injection accounting");
         // Conservation: delivered bytes equal injected bytes up to the
@@ -438,7 +438,7 @@ fn prop_netsim_fuzz_routing_deterministic_and_bytes_conserved() {
         // Re-running the identical workload is bit-identical.
         let mut probe2 = rng.clone();
         let (wl2, _) = build_wl(&mut probe2);
-        let rep2 = fairshare::run(&a, &wl2);
+        let rep2 = Simulation::new().run_workload(&a, &wl2);
         assert_eq!(rep.batch_time.to_bits(), rep2.batch_time.to_bits());
         assert_eq!(rep.events, rep2.events);
         assert_eq!(rep.n_flows, rep2.n_flows);
@@ -495,10 +495,137 @@ fn prop_fairshare_incremental_matches_full_refill() {
             wl
         };
         let mut probe = rng.clone();
-        let inc = fairshare::run_with_mode(&topo, &build_wl(&mut probe), RefillMode::Incremental);
+        let inc = Simulation::new()
+            .refill(RefillMode::Incremental)
+            .run_workload(&topo, &build_wl(&mut probe));
         let mut probe = rng.clone();
-        let full = fairshare::run_with_mode(&topo, &build_wl(&mut probe), RefillMode::FullRefill);
+        let full = Simulation::new()
+            .refill(RefillMode::FullRefill)
+            .run_workload(&topo, &build_wl(&mut probe));
         inc.assert_bits_eq(&full, "incremental vs full refill");
+    });
+}
+
+#[test]
+fn prop_decomposed_matches_monolithic() {
+    // The decomposition theorem, fuzzed: on random connected edge-lists
+    // × random multi-chain workloads (several link-sharing components
+    // alive at once), the statically partitioned, thread-fanned
+    // decomposed engine must reproduce the monolithic event loop
+    // *field-for-field at bit precision* — at 1 and 4 worker threads,
+    // under both rate-maintenance strategies.
+    let seed = prop_seed(0xDEC0_3305);
+    prop::forall(14, seed, |rng| {
+        let json = random_edgelist_json(rng);
+        let parsed = nest::util::json::parse(&json).expect("fuzz JSON parses");
+        let topo = LinkGraph::from_json(&parsed).expect("fuzz topology builds");
+        let n = topo.n_devices();
+        let build_wl = |rng: &mut Rng| {
+            let mut wl = Workload::new();
+            // 2–5 independent chains → the partition usually has > 1
+            // component, so the merge path is genuinely exercised.
+            for _ in 0..(2 + rng.gen_range(4)) {
+                let mut prev: Option<u32> = None;
+                for _ in 0..(1 + rng.gen_range(4)) {
+                    let deps: Vec<u32> = prev.into_iter().collect();
+                    let cmp = wl.add(
+                        TaskKind::Compute {
+                            seconds: rng.gen_f64() * 1e-3,
+                        },
+                        &deps,
+                    );
+                    let mut flows = Vec::new();
+                    for _ in 0..(1 + rng.gen_range(5)) {
+                        let src = rng.gen_range(n);
+                        let mut dst = rng.gen_range(n);
+                        if src == dst {
+                            dst = (dst + 1) % n;
+                        }
+                        flows.push(FlowSpec {
+                            src,
+                            dst,
+                            bytes: 1e6 * (1.0 + rng.gen_f64() * 1e3),
+                        });
+                    }
+                    prev = Some(wl.add(
+                        TaskKind::Transfer {
+                            flows,
+                            extra_latency: rng.gen_f64() * 1e-6,
+                        },
+                        &[cmp],
+                    ));
+                }
+            }
+            wl
+        };
+        let mut probe = rng.clone();
+        let wl = build_wl(&mut probe);
+        for refill in [RefillMode::Incremental, RefillMode::FullRefill] {
+            let mono = Simulation::new()
+                .mode(SimMode::Monolithic)
+                .refill(refill)
+                .run_workload(&topo, &wl);
+            for threads in [1usize, 4] {
+                let dec = Simulation::new()
+                    .mode(SimMode::Decomposed)
+                    .refill(refill)
+                    .threads(threads)
+                    .run_workload(&topo, &wl);
+                dec.assert_bits_eq(
+                    &mono,
+                    &format!("decomposed({threads}t, {refill:?}) vs monolithic"),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fattree_scale_fuzz_conserves_bytes_and_is_deterministic() {
+    // The generated fat-tree + synthetic rack-local workload the
+    // `netsim-scale` driver runs, fuzzed over seeds and locality: every
+    // injected byte is delivered (up to the engine's half-byte
+    // completion tolerance per flow), reports are bit-identical across
+    // runs, and decomposed ≡ monolithic on every draw.
+    let seed = prop_seed(0xFA77_0EE5);
+    let fabric = nest::netsim::topo::fattree(4);
+    prop::forall(8, seed, |rng| {
+        let wseed = rng.gen_range(1 << 20) as u64;
+        let locality = rng.gen_f64();
+        let flows = 200 + rng.gen_range(600);
+        let wl = nest::harness::scale::scale_workload(
+            fabric.n_devices(),
+            2,
+            4,
+            flows,
+            locality,
+            wseed,
+        );
+        let mono = Simulation::new()
+            .mode(SimMode::Monolithic)
+            .run_workload(&fabric, &wl);
+        assert_eq!(mono.n_flows, flows, "every synthesized flow crosses the network");
+        assert!(
+            (mono.delivered_bytes - mono.total_bytes).abs()
+                <= 0.5 * mono.n_flows as f64 + 1e-6,
+            "delivered {} vs injected {} over {} flows (seed {wseed})",
+            mono.delivered_bytes,
+            mono.total_bytes,
+            mono.n_flows
+        );
+        // Cross-run determinism, then the decomposition theorem again
+        // at fabric scale.
+        let rerun = Simulation::new()
+            .mode(SimMode::Monolithic)
+            .run_workload(&fabric, &wl);
+        rerun.assert_bits_eq(&mono, "fat-tree monolithic rerun");
+        for threads in [1usize, 4] {
+            let dec = Simulation::new()
+                .mode(SimMode::Decomposed)
+                .threads(threads)
+                .run_workload(&fabric, &wl);
+            dec.assert_bits_eq(&mono, &format!("fat-tree decomposed {threads}t"));
+        }
     });
 }
 
@@ -573,7 +700,7 @@ fn prop_tracing_is_outside_the_determinism_boundary() {
             let served_cold = svc.solve_topk(&q, k);
             let served_hit = svc.solve_topk(&q, k);
             let mut probe = rng.clone();
-            let rep = fairshare::run(&topo, &build_wl(&mut probe));
+            let rep = Simulation::new().run_workload(&topo, &build_wl(&mut probe));
 
             // Traced twins of the exact same calls.
             obs::set_enabled(true);
@@ -582,7 +709,7 @@ fn prop_tracing_is_outside_the_determinism_boundary() {
             let t_cold = svc2.solve_topk(&q, k);
             let t_hit = svc2.solve_topk(&q, k);
             let mut probe = rng.clone();
-            let rep2 = fairshare::run(&topo, &build_wl(&mut probe));
+            let rep2 = Simulation::new().run_workload(&topo, &build_wl(&mut probe));
             obs::set_enabled(false);
             let data = obs::drain();
             assert!(data.n_spans() > 0, "traced pipeline recorded no spans");
