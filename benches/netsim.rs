@@ -9,7 +9,8 @@ use nest::graph::models;
 use nest::harness::netsim::spineleaf_topology;
 use nest::harness::scale::scale_workload;
 use nest::netsim::{
-    topo, FlowSpec, LinkGraph, RefillMode, SimMode, Simulation, TaskKind, Workload,
+    flowgen, flows, topo, FlowSpec, LinkGraph, MixSpec, RefillMode, SimMode, Simulation,
+    TaskKind, Workload,
 };
 use nest::network::Cluster;
 use nest::sim::Schedule;
@@ -108,6 +109,21 @@ fn main() {
     let mut ssim = Simulation::new();
     bench_n("netsim_llama2_batch_spineleaf_edgelist", 5, || {
         ssim.run(&graph, &scluster, &stopo, &ssol.plan, Schedule::OneFOneB)
+    });
+
+    // Background-flow generation + injection + mixed replay on the same
+    // edge-list: the `nest mix` / `refine --bg-load` inner loop (one
+    // load level of the sweep). Generation is a pure function of
+    // (topo, spec), so it reruns inside the closure alongside the
+    // lower + inject + fair-share path it feeds.
+    let base = ssim.run(&graph, &scluster, &stopo, &ssol.plan, Schedule::OneFOneB);
+    let mspec = MixSpec::at_load(0.5, base.batch_time, 0xB6);
+    let mut mix_sim = Simulation::new();
+    bench_n("flowgen_mix_spineleaf_edgelist", 5, || {
+        let mix = flowgen::generate(&stopo, &mspec);
+        let mut mwl = flows::lower(&graph, &scluster, &stopo, &ssol.plan, Schedule::OneFOneB);
+        flowgen::inject(&mut mwl, &mix);
+        mix_sim.run_workload(&stopo, &mwl)
     });
 
     // Decomposed vs monolithic on a generated spine-leaf fabric with a

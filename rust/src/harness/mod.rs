@@ -8,6 +8,7 @@
 //! model protocol (§5.1).
 
 pub mod figures;
+pub mod mix;
 pub mod netsim;
 pub mod perf;
 pub mod refine;

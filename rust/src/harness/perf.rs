@@ -17,7 +17,7 @@
 //! ```
 
 use crate::graph::models;
-use crate::netsim::{topo, SimMode, Simulation};
+use crate::netsim::{flowgen, flows, topo, MixSpec, SimMode, Simulation};
 use crate::network::Cluster;
 use crate::sim::Schedule;
 use crate::solver::refine::refine;
@@ -172,6 +172,30 @@ pub fn run_smoke(quick: bool) -> PerfSmoke {
     metrics.push(PerfMetric {
         name: "netsim_scale_flows_per_sec".into(),
         seconds: if wall > 0.0 { sflows as f64 / wall } else { 0.0 },
+    });
+
+    // Background-flow generation + injection + mixed replay on the 4:1
+    // spine-leaf: the `nest mix` / `refine --bg-load` hot path (one
+    // level of the sweep, generate → lower → inject → fair-share).
+    // Reported as flows/s of injected background traffic (`_per_sec`:
+    // the gate trips only on a throughput drop).
+    let mix_flows = if quick { 256 } else { 2_048 };
+    let base_rep = ssim.run(&graph, &scluster, &stopo, &ssol.plan, Schedule::OneFOneB);
+    let mspec = MixSpec {
+        flows: mix_flows,
+        ..MixSpec::at_load(0.5, base_rep.batch_time, 0xB6)
+    };
+    let mut msim = Simulation::new();
+    let mixb = bench_n("bench_smoke_mix_spineleaf", if quick { 1 } else { 3 }, || {
+        let mix = flowgen::generate(&stopo, &mspec);
+        let mut wl = flows::lower(&graph, &scluster, &stopo, &ssol.plan, Schedule::OneFOneB);
+        flowgen::inject(&mut wl, &mix);
+        msim.run_workload(&stopo, &wl)
+    });
+    let mwall = mixb.min.as_secs_f64();
+    metrics.push(PerfMetric {
+        name: "mix_flows_per_sec".into(),
+        seconds: if mwall > 0.0 { mix_flows as f64 / mwall } else { 0.0 },
     });
 
     // End-to-end solve → top-8 shortlist → flow-level re-rank on the
@@ -464,6 +488,7 @@ mod tests {
             "netsim_fairshare_dumbbell",
             "netsim_fairshare_spineleaf",
             "netsim_scale_flows_per_sec",
+            "mix_flows_per_sec",
             "solve_topk8_refine_dumbbell",
             "serve_qps",
         ] {

@@ -9,7 +9,10 @@
 //!   netsim-scale decomposed flow simulation on a generated fat-tree, with
 //!              the monolithic twin as a bit-identity gate
 //!   refine     top-K analytic shortlist re-ranked by the flow simulator
+//!              (`--bg-load` replays the shortlist under background traffic)
 //!   refine-xval  cross-topology refinement table (where the ranking flips)
+//!   mix        multi-tenant harness: shortlist refined under background
+//!              load across topology families (plan flips per load level)
 //!   bench-smoke  deterministic perf smoke + CI bench-regression gate
 //!   serve-bench  placement-service throughput (queries/s, cache hit rate,
 //!              warm-start speedup, elasticity migration cost)
@@ -25,7 +28,7 @@ use nest::harness::{figures, tables, HarnessOpts};
 use nest::netsim::{LinkGraph, SimMode, Simulation};
 use nest::network::Cluster;
 use nest::sim::{simulate, Schedule};
-use nest::solver::refine::refine_opts;
+use nest::solver::refine::{refine_under_load, RefineOpts};
 use nest::solver::{solve, SolverOpts};
 use nest::trainer::{train, TrainOpts};
 use nest::util::cli::Args;
@@ -91,6 +94,33 @@ fn netsim_topology(
         let topo = LinkGraph::from_cluster(&cluster);
         Ok((cluster, topo))
     }
+}
+
+/// Parse a `--bg-load 0.3,0.6` comma-separated list of target max
+/// per-link background loads (fractions of capacity). Empty/absent ⇒ no
+/// background replay.
+fn parse_bg_loads(args: &mut Args) -> Result<Vec<f64>, String> {
+    let Some(raw) = args.get_opt("bg-load") else {
+        return Ok(Vec::new());
+    };
+    let mut loads = Vec::new();
+    for part in raw.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let v: f64 = part
+            .parse()
+            .map_err(|_| format!("--bg-load: '{part}' is not a number"))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("--bg-load: level {v} must be finite and ≥ 0"));
+        }
+        loads.push(v);
+    }
+    if loads.is_empty() {
+        return Err("--bg-load: expected at least one level, e.g. 0.3,0.6".into());
+    }
+    Ok(loads)
 }
 
 fn main() {
@@ -315,6 +345,11 @@ fn main() {
                     .ok_or_else(|| format!("unknown model '{model}'"))?;
                 let config = args.get("config", &cluster_name);
                 let topk = args.get_usize_nonzero("topk", 4);
+                let bg_loads = parse_bg_loads(args)?;
+                // `--rank mean` averages degradation across levels instead
+                // of taking the worst case (the default).
+                let worst_case =
+                    args.get_choice("rank", &["worst", "mean"], "worst") == "worst";
                 args.check()?;
                 let (cluster, topo) = netsim_topology(&config, devices, oversub)?;
                 println!("{}", cluster.describe());
@@ -323,7 +358,14 @@ fn main() {
                     threads,
                     ..Default::default()
                 };
-                let report = refine_opts(&graph, &cluster, &topo, &sopts, topk, hopts.netsim)
+                let ropts = RefineOpts {
+                    topk,
+                    netsim: hopts.netsim,
+                    bg_loads,
+                    worst_case,
+                    ..Default::default()
+                };
+                let report = refine_under_load(&graph, &cluster, &topo, &sopts, &ropts)
                     .ok_or("no feasible placement")?;
                 println!(
                     "shortlist of {} solved in {} ({} DP states, {} configs)",
@@ -345,21 +387,67 @@ fn main() {
                     );
                 }
                 if report.winner_changed() {
-                    println!(
-                        "re-ranked winner: {} (dp rank {}) — {:.1}% faster than the \
-                         analytic winner under link contention",
-                        report.winner().plan.strategy_string(),
-                        report.winner().analytic_rank + 1,
-                        report.sim_improvement() * 100.0
-                    );
+                    if report.bg_loads.is_empty() {
+                        println!(
+                            "re-ranked winner: {} (dp rank {}) — {:.1}% faster than the \
+                             analytic winner under link contention",
+                            report.winner().plan.strategy_string(),
+                            report.winner().analytic_rank + 1,
+                            report.sim_improvement() * 100.0
+                        );
+                    } else {
+                        println!(
+                            "re-ranked winner: {} (dp rank {}) — degrades less under \
+                             background load than the analytic rank-1",
+                            report.winner().plan.strategy_string(),
+                            report.winner().analytic_rank + 1,
+                        );
+                    }
                 } else {
                     println!(
                         "re-ranking confirms the analytic winner: {}",
                         report.winner().plan.strategy_string()
                     );
                 }
+                if !report.bg_loads.is_empty() {
+                    println!(
+                        "background replay at {} load level(s): winner degrades \
+                         {:+.1}% ({}) vs {:+.1}% for the analytic rank-1",
+                        report.bg_loads.len(),
+                        report.winner().degradation * 100.0,
+                        if worst_case { "worst-case" } else { "mean" },
+                        report.analytic_winner().degradation * 100.0,
+                    );
+                    // CI gate: re-ranking under load must never pick a plan
+                    // that degrades *more* than the analytic rank-1.
+                    if report.winner().degradation > report.analytic_winner().degradation {
+                        return Err(
+                            "refine --bg-load regression: the re-ranked winner degrades \
+                             more under background load than the analytic rank-1 plan"
+                                .into(),
+                        );
+                    }
+                }
                 println!("{}", report.winner().plan.describe());
                 Ok(())
+            }
+            "mix" => {
+                let topk = args.get_usize_nonzero("topk", 4);
+                let bg_loads = parse_bg_loads(args)?;
+                args.check()?;
+                let bg_loads = if bg_loads.is_empty() {
+                    nest::harness::mix::DEFAULT_BG_LOADS.to_vec()
+                } else {
+                    bg_loads
+                };
+                if nest::harness::mix::mix_table(&hopts, &bg_loads, topk, quick) {
+                    Ok(())
+                } else {
+                    Err("workload-mix regression: a robust winner degraded more than \
+                         the analytic rank-1 under background load (or a family was \
+                         infeasible)"
+                        .into())
+                }
             }
             "refine-xval" => {
                 let topk = args.get_usize_nonzero("topk", 4);
@@ -521,6 +609,17 @@ fn main() {
                          family was infeasible)"
                         .into());
                 }
+                if !nest::harness::mix::mix_table(
+                    &hopts,
+                    &nest::harness::mix::DEFAULT_BG_LOADS,
+                    4,
+                    quick,
+                ) {
+                    return Err("workload-mix regression: a robust winner degraded more \
+                         than the analytic rank-1 under background load (or a family \
+                         was infeasible)"
+                        .into());
+                }
                 Ok(())
             }
             _ => {
@@ -538,8 +637,14 @@ fn main() {
                      \x20            reports wall-clock and flows/sec, exits nonzero unless the reports are bit-identical\n\
                      \x20 refine     --config <topo> --model <m> --topk K: solve the analytic top-K shortlist, replay each\n\
                      \x20            plan under flow-level contention, and re-rank (exits nonzero if the K=1 shortlist\n\
-                     \x20            ever disagrees with plain solve)\n\
+                     \x20            ever disagrees with plain solve). --bg-load 0.3,0.6 additionally replays every plan\n\
+                     \x20            under seeded background traffic at each max per-link load level and re-ranks by\n\
+                     \x20            degradation (--rank <worst|mean>; exits nonzero if the robust winner degrades\n\
+                     \x20            more than the analytic rank-1)\n\
                      \x20 refine-xval  cross-topology refinement table: where the re-ranked winner flips (--topk K)\n\
+                     \x20 mix        multi-tenant harness: refine the top-K shortlist under background load on fat-tree,\n\
+                     \x20            4:1 spine-leaf, and the dumbbell edge-list (--bg-load 0.2,0.4,0.6 --topk K);\n\
+                     \x20            prints plan flips per load level, writes results/mix.csv, exits nonzero on regression\n\
                      \x20 bench-smoke  perf smoke --out BENCH_PR.json [--baseline BENCH_BASELINE.json --tolerance 0.25]\n\
                      \x20            [--write-baseline: merge measured metrics into BENCH_BASELINE.json, keeping other keys]\n\
                      \x20 serve-bench  placement-as-a-service throughput: stream --queries N (default 16) over a model x\n\

@@ -151,6 +151,11 @@ pub fn partition(topo: &LinkGraph, wl: &Workload) -> Vec<Component> {
                 .collect();
             cwl.add(kind, &deps);
         }
+        // The remap is monotonic, so the component's training tasks
+        // (original id below the workload's boundary) are exactly the
+        // local prefix — carry the boundary so each sub-run tracks its
+        // training completion time like the monolithic loop does.
+        cwl.bg_from = tasks.partition_point(|&t| t < wl.bg_from) as u32;
     }
     comps
 }
@@ -232,12 +237,14 @@ pub fn run_decomposed(
     // tasks mapped back to original ids, busy pairs concatenated (links
     // are disjoint across components).
     let mut end_t = 0.0f64;
+    let mut train_end_t = 0.0f64;
     let mut times: Vec<f64> = Vec::new();
     let mut busy: Vec<(u32, f64)> = Vec::new();
     let mut records: Vec<fairshare::FlowRecord> = Vec::new();
     for (ci, sub) in subs.into_iter().enumerate() {
         let sub = sub.expect("every component simulated");
         end_t = end_t.max(sub.end_t);
+        train_end_t = train_end_t.max(sub.train_end_t);
         times.extend_from_slice(&sub.event_times);
         busy.extend_from_slice(&sub.busy);
         let map = &comps[ci].tasks;
@@ -255,7 +262,7 @@ pub fn run_decomposed(
             last = t;
         }
     }
-    fairshare::finalize(topo, end_t, events, records, &busy)
+    fairshare::finalize(topo, end_t, train_end_t, events, records, &busy, wl.bg_from)
 }
 
 #[cfg(test)]

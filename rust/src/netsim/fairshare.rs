@@ -111,13 +111,28 @@ pub enum TaskKind {
 /// A DAG of tasks. Dependencies are by task id (the value returned by
 /// [`Workload::add`]); a task starts the instant its last prerequisite
 /// completes.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Workload {
     /// Visible to the sibling decomposition pass (`netsim::decompose`),
     /// which partitions tasks without going through the engine.
     pub(super) tasks: Vec<TaskKind>,
     /// Prerequisites per task.
     pub(super) deps: Vec<Vec<u32>>,
+    /// First background task id: tasks `>= bg_from` belong to an
+    /// injected background mix (`netsim::flowgen::inject`) and are
+    /// accounted separately in the report. `u32::MAX` (the default)
+    /// means every task is the training job's own.
+    pub(super) bg_from: u32,
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Workload {
+            tasks: Vec::new(),
+            deps: Vec::new(),
+            bg_from: u32::MAX,
+        }
+    }
 }
 
 impl Workload {
@@ -152,9 +167,14 @@ pub struct LinkUtil {
 /// Flow-simulation outcome for one workload.
 #[derive(Debug, Clone)]
 pub struct NetsimReport {
-    /// Makespan: completion time of the last task (seconds).
+    /// Makespan: completion time of the last task (seconds), background
+    /// tasks included.
     pub batch_time: f64,
-    /// Flows that actually crossed the network.
+    /// Completion time of the last *training* task — the number the
+    /// refinement loop ranks by under background load. Equals
+    /// `batch_time` when no background mix was injected.
+    pub train_batch_time: f64,
+    /// Flows that actually crossed the network (background included).
     pub n_flows: usize,
     /// Bytes injected across all flows.
     pub total_bytes: f64,
@@ -162,6 +182,13 @@ pub struct NetsimReport {
     /// to `total_bytes` up to the engine's completion tolerance — the
     /// conservation invariant the fuzz suite checks.
     pub delivered_bytes: f64,
+    /// Background-mix slice of the flow accounting (all zero without an
+    /// injected mix): flows, injected bytes, and drained bytes of tasks
+    /// past the workload's training/background boundary. The training
+    /// job's own totals are the differences from the overall fields.
+    pub bg_flows: usize,
+    pub bg_bytes: f64,
+    pub bg_delivered_bytes: f64,
     /// Scheduling rounds processed (distinct event times at which state
     /// advanced). Identical across [`RefillMode`]s.
     pub events: usize,
@@ -184,7 +211,23 @@ impl NetsimReport {
             other.batch_time.to_bits(),
             "{what}: batch_time"
         );
+        assert_eq!(
+            self.train_batch_time.to_bits(),
+            other.train_batch_time.to_bits(),
+            "{what}: train_batch_time"
+        );
         assert_eq!(self.n_flows, other.n_flows, "{what}: n_flows");
+        assert_eq!(self.bg_flows, other.bg_flows, "{what}: bg_flows");
+        assert_eq!(
+            self.bg_bytes.to_bits(),
+            other.bg_bytes.to_bits(),
+            "{what}: bg_bytes"
+        );
+        assert_eq!(
+            self.bg_delivered_bytes.to_bits(),
+            other.bg_delivered_bytes.to_bits(),
+            "{what}: bg_delivered_bytes"
+        );
         assert_eq!(
             self.total_bytes.to_bits(),
             other.total_bytes.to_bits(),
@@ -346,6 +389,9 @@ impl BusyLedger {
 pub(super) struct SubRun {
     /// Completion time of the last task (0.0 for an empty workload).
     pub(super) end_t: f64,
+    /// Completion time of the last *training* task (task id below the
+    /// workload's `bg_from`); equals `end_t` without a background mix.
+    pub(super) train_end_t: f64,
     /// Strictly increasing timestamps of the scheduling rounds.
     pub(super) event_times: Vec<f64>,
     /// Link-sorted `(link, transferred bytes)` pairs, nonzero only.
@@ -478,7 +524,15 @@ impl FairshareEngine {
         });
         let sub = self.sub_run(topo, wl, mode);
         let events = sub.event_times.len();
-        finalize(topo, sub.end_t, events, sub.records, &sub.busy)
+        finalize(
+            topo,
+            sub.end_t,
+            sub.train_end_t,
+            events,
+            sub.records,
+            &sub.busy,
+            wl.bg_from,
+        )
     }
 
     /// One engine pass over `wl`, returning the raw [`SubRun`] outcome.
@@ -518,6 +572,7 @@ impl FairshareEngine {
         let mut records: Vec<FlowRecord> = Vec::new();
         let mut event_times: Vec<f64> = Vec::new();
         let mut done_count = 0usize;
+        let mut train_end = 0.0f64;
         let mut next_flow_id: u64 = 0;
         let mut flows_changed = false;
 
@@ -733,6 +788,9 @@ impl FairshareEngine {
                         }
                         st[ti].done = true;
                         done_count += 1;
+                        if task < wl.bg_from {
+                            train_end = train_end.max(t);
+                        }
                         for &dep in &dependents[ti] {
                             let ds = &mut st[dep as usize];
                             ds.remaining_deps -= 1;
@@ -772,6 +830,7 @@ impl FairshareEngine {
 
         SubRun {
             end_t: t,
+            train_end_t: train_end,
             event_times,
             busy: self.busy.drain_sorted(),
             records,
@@ -784,21 +843,34 @@ impl FairshareEngine {
 /// sub-run by the engine's ledger, and for decomposed merges because
 /// components are link-disjoint. Record order does not matter: totals
 /// are summed in canonical `(task, idx)` order, so one monolithic pass
-/// and a merge of component passes produce the same bits.
+/// and a merge of component passes produce the same bits. Records carry
+/// *original* task ids (decomposed merges remap before calling in), so
+/// `bg_from` — the caller's original-id training/background boundary —
+/// classifies identically in both modes.
 pub(super) fn finalize(
     topo: &LinkGraph,
     end_t: f64,
+    train_end_t: f64,
     events: usize,
     mut records: Vec<FlowRecord>,
     busy: &[(u32, f64)],
+    bg_from: u32,
 ) -> NetsimReport {
     records.sort_unstable_by_key(|r| (r.task, r.idx));
     let n_flows = records.len();
     let mut total_bytes = 0.0f64;
     let mut delivered_bytes = 0.0f64;
+    let mut bg_flows = 0usize;
+    let mut bg_bytes = 0.0f64;
+    let mut bg_delivered_bytes = 0.0f64;
     for r in &records {
         total_bytes += r.bytes;
         delivered_bytes += r.delivered;
+        if r.task >= bg_from {
+            bg_flows += 1;
+            bg_bytes += r.bytes;
+            bg_delivered_bytes += r.delivered;
+        }
     }
 
     // Utilization report, hottest first, ties by link id.
@@ -846,9 +918,13 @@ pub(super) fn finalize(
 
     NetsimReport {
         batch_time: end_t,
+        train_batch_time: train_end_t,
         n_flows,
         total_bytes,
         delivered_bytes,
+        bg_flows,
+        bg_bytes,
+        bg_delivered_bytes,
         events,
         link_util,
         max_link_util,

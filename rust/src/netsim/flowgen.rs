@@ -1,0 +1,482 @@
+//! Seeded background-flow generation — the multi-tenant half of the
+//! flow simulator, in the style of parsimon-eval's workload generator.
+//!
+//! A production fabric is never empty: the training job under study
+//! shares links with other tenants' shuffles, checkpoints, and serving
+//! traffic. [`generate`] draws a deterministic background *mix* for a
+//! topology — flow sizes from an empirical or lognormal distribution,
+//! lognormal inter-arrival gaps, a spatial traffic matrix (uniform /
+//! rack-skewed / hotspot) — and then rescales every flow's bytes so the
+//! *offered* max per-link load over the window equals the requested
+//! target exactly (routing is deterministic, so the per-link byte sums
+//! are a pure function of the draw). [`inject`] appends the mix to an
+//! already-lowered [`Workload`] as independent delay→transfer task
+//! pairs, marking where the background suffix starts so the engine can
+//! report the training job's own completion time
+//! ([`super::fairshare::NetsimReport::train_batch_time`]) and byte
+//! totals separately from the background's.
+//!
+//! Everything here is a pure single-threaded function of `(topo, spec)`
+//! — same seed, same flows, bit for bit — and injected mixes ride the
+//! normal [`super::Simulation`] paths: the decomposition partition and
+//! merge treat background tasks like any others, so Monolithic and
+//! Decomposed runs of a mixed workload stay bit-identical at any thread
+//! count (the property suite pins this).
+
+use super::fairshare::{FlowSpec, TaskKind, Workload};
+use super::topo::LinkGraph;
+use crate::obs;
+use crate::util::rng::Rng;
+
+/// Background flow-size distribution.
+#[derive(Debug, Clone)]
+pub enum SizeDist {
+    /// `median_bytes · exp(sigma · z)`, `z` standard normal. Heavy
+    ///-tailed for `sigma ≳ 1`, the classic datacenter shape. Samples
+    /// are floored at 64 bytes (a packet) so no draw is degenerate.
+    Lognormal { median_bytes: f64, sigma: f64 },
+    /// Discrete `(bytes, weight)` buckets sampled by CDF walk — how
+    /// published traces (web search, Hadoop) are usually tabulated.
+    /// Weights need not be normalized; they must be positive.
+    Empirical { buckets: Vec<(f64, f64)> },
+}
+
+impl SizeDist {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            SizeDist::Lognormal {
+                median_bytes,
+                sigma,
+            } => (median_bytes * (sigma * std_normal(rng)).exp()).max(64.0),
+            SizeDist::Empirical { buckets } => {
+                assert!(!buckets.is_empty(), "empirical size distribution is empty");
+                let total: f64 = buckets.iter().map(|b| b.1).sum();
+                assert!(total > 0.0, "empirical size weights must be positive");
+                let mut u = rng.gen_f64() * total;
+                for &(bytes, w) in buckets {
+                    if u < w {
+                        return bytes.max(1.0);
+                    }
+                    u -= w;
+                }
+                buckets.last().expect("nonempty").0.max(1.0)
+            }
+        }
+    }
+}
+
+/// Spatial traffic matrix: how (src, dst) device pairs are drawn.
+#[derive(Debug, Clone)]
+pub enum SpatialMatrix {
+    /// Every ordered pair equally likely.
+    Uniform,
+    /// With probability `locality` the destination stays inside the
+    /// source's rack (contiguous blocks of `rack_size` devices, the
+    /// same convention the scale harness uses); otherwise uniform.
+    RackSkewed { rack_size: usize, locality: f64 },
+    /// With probability `weight` the destination is one of the first
+    /// `hotspots` devices (an incast-prone storage/parameter tier);
+    /// otherwise uniform.
+    Hotspot { hotspots: usize, weight: f64 },
+}
+
+impl SpatialMatrix {
+    /// Draw one non-degenerate ordered pair on `n` devices.
+    fn pick_pair(&self, n: usize, rng: &mut Rng) -> (usize, usize) {
+        let src = rng.gen_range(n);
+        // `(dst, base, span)`: the drawn destination and the candidate
+        // set `[base, base + span)` it came from.
+        let (dst, base, span) = match self {
+            SpatialMatrix::Uniform => (rng.gen_range(n), 0, n),
+            SpatialMatrix::RackSkewed { rack_size, locality } => {
+                let rs = (*rack_size).clamp(1, n);
+                if rng.gen_bool(*locality) {
+                    let base = src / rs * rs;
+                    let span = rs.min(n - base);
+                    (base + rng.gen_range(span), base, span)
+                } else {
+                    (rng.gen_range(n), 0, n)
+                }
+            }
+            SpatialMatrix::Hotspot { hotspots, weight } => {
+                let h = (*hotspots).clamp(1, n);
+                if rng.gen_bool(*weight) {
+                    (rng.gen_range(h), 0, h)
+                } else {
+                    (rng.gen_range(n), 0, n)
+                }
+            }
+        };
+        if dst != src {
+            return (src, dst);
+        }
+        // Self-loops never cross the network: nudge to the next device
+        // within the drawn candidate set (preserving rack locality /
+        // hotspot membership), falling back to the whole device range
+        // when the set is the single source device.
+        let nudged = base + (dst - base + 1) % span;
+        if nudged != src {
+            (src, nudged)
+        } else {
+            (src, (src + 1) % n)
+        }
+    }
+}
+
+/// Full specification of one background mix. The mix is a pure function
+/// of `(topo, spec)`; `seed` alone distinguishes replicates.
+#[derive(Debug, Clone)]
+pub struct MixSpec {
+    /// Target max per-link *offered* load: the hottest link's injected
+    /// bytes divided by `capacity · duration`. [`generate`] rescales
+    /// flow sizes so this is met exactly (up to float rounding).
+    pub target_load: f64,
+    /// Arrival window in seconds: background flows arrive in
+    /// `[0, duration)`. Callers typically pass the training batch time.
+    pub duration: f64,
+    /// Approximate flow count — sets the median inter-arrival gap to
+    /// `duration / flows`; the realized count varies with the draw.
+    pub flows: usize,
+    /// Lognormal shape of the inter-arrival gaps (0 = evenly spaced,
+    /// 1 ≈ bursty open-loop arrivals).
+    pub sigma_arrival: f64,
+    pub size: SizeDist,
+    pub spatial: SpatialMatrix,
+    pub seed: u64,
+}
+
+impl MixSpec {
+    /// A reasonable default mix at `target_load` over `duration`:
+    /// 256 uniform flows, heavy-tailed lognormal sizes, bursty
+    /// arrivals. The harness and `refine --bg-load` build on this.
+    pub fn at_load(target_load: f64, duration: f64, seed: u64) -> Self {
+        MixSpec {
+            target_load,
+            duration,
+            flows: 256,
+            sigma_arrival: 1.0,
+            size: SizeDist::Lognormal {
+                median_bytes: 1e6,
+                sigma: 1.5,
+            },
+            spatial: SpatialMatrix::Uniform,
+            seed,
+        }
+    }
+}
+
+/// One background flow: `flow` arrives (its transfer becomes eligible)
+/// at absolute time `at`.
+#[derive(Debug, Clone)]
+pub struct BgFlow {
+    pub at: f64,
+    pub flow: FlowSpec,
+}
+
+/// A generated background mix, ready for [`inject`].
+#[derive(Debug, Clone)]
+pub struct BgMix {
+    /// Flows in arrival order (strictly nondecreasing `at`).
+    pub flows: Vec<BgFlow>,
+    /// The arrival window the mix was scaled against.
+    pub duration: f64,
+    /// Max per-link offered load after scaling — equals the spec's
+    /// `target_load` up to float rounding (0.0 for an empty draw).
+    pub offered_max_load: f64,
+    /// Byte scale factor applied to hit the target.
+    pub scale: f64,
+}
+
+impl BgMix {
+    /// Total injected background bytes.
+    pub fn total_bytes(&self) -> f64 {
+        self.flows.iter().map(|f| f.flow.bytes).sum()
+    }
+}
+
+/// Standard normal via Box–Muller. `1.0 - gen_f64()` keeps the log
+/// argument in `(0, 1]` (gen_f64 is `[0, 1)`), so the draw is finite.
+fn std_normal(rng: &mut Rng) -> f64 {
+    let u1 = 1.0 - rng.gen_f64();
+    let u2 = rng.gen_f64();
+    (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+/// Max per-link *offered* load of `flows` over `duration`: each flow's
+/// bytes are charged to every link on its deterministic route, and the
+/// hottest link's byte sum is divided by `capacity · duration`.
+/// Self-loop flows touch no links. This is the quantity [`generate`]
+/// scales to the target — offered, not simulated: fair-share backlog
+/// can stretch actual drains past the window at high loads.
+pub fn offered_load(topo: &LinkGraph, flows: &[BgFlow], duration: f64) -> f64 {
+    if duration <= 0.0 {
+        return 0.0;
+    }
+    let mut per_link = vec![0.0f64; topo.links.len()];
+    for bg in flows {
+        if bg.flow.src == bg.flow.dst {
+            continue;
+        }
+        for &l in &topo.path(bg.flow.src, bg.flow.dst).links {
+            per_link[l] += bg.flow.bytes;
+        }
+    }
+    per_link
+        .iter()
+        .enumerate()
+        .map(|(l, &b)| b / (topo.links[l].capacity * duration))
+        .fold(0.0, f64::max)
+}
+
+/// Draw the background mix for `topo` under `spec`. Pure and
+/// single-threaded: the same `(topo, spec)` always yields bit-identical
+/// flows, independent of simulator mode or thread count.
+///
+/// Sizes and pairs are drawn open-loop until the arrival clock leaves
+/// the window, then every flow's bytes are multiplied by one common
+/// factor so the max per-link offered load equals `spec.target_load`
+/// exactly — per-link sums are linear in the common scale, so the
+/// hottest link stays the hottest and lands on the target.
+pub fn generate(topo: &LinkGraph, spec: &MixSpec) -> BgMix {
+    let _span = obs::span_with("flowgen.generate", "netsim", || {
+        vec![
+            ("seed", spec.seed.to_string()),
+            ("target_load", format!("{:.3}", spec.target_load)),
+        ]
+    });
+    let n = topo.n_devices();
+    assert!(n >= 2, "background traffic needs at least two devices");
+    assert!(
+        spec.target_load >= 0.0 && spec.target_load.is_finite(),
+        "target_load must be a finite nonnegative fraction"
+    );
+    assert!(
+        spec.duration > 0.0 && spec.duration.is_finite(),
+        "mix duration must be positive"
+    );
+    let mut rng = Rng::new(spec.seed);
+    let median_gap = spec.duration / spec.flows.max(1) as f64;
+    let mut flows: Vec<BgFlow> = Vec::new();
+    let mut t = 0.0f64;
+    if spec.target_load > 0.0 {
+        loop {
+            t += median_gap * (spec.sigma_arrival * std_normal(&mut rng)).exp();
+            if t >= spec.duration {
+                break;
+            }
+            let (src, dst) = spec.spatial.pick_pair(n, &mut rng);
+            let bytes = spec.size.sample(&mut rng);
+            flows.push(BgFlow {
+                at: t,
+                flow: FlowSpec { src, dst, bytes },
+            });
+        }
+    }
+    let raw = offered_load(topo, &flows, spec.duration);
+    let scale = if raw > 0.0 {
+        spec.target_load / raw
+    } else {
+        0.0
+    };
+    if scale != 1.0 {
+        for f in &mut flows {
+            f.flow.bytes *= scale;
+        }
+    }
+    let offered_max_load = offered_load(topo, &flows, spec.duration);
+    if obs::enabled() {
+        obs::count("flowgen.flows", flows.len() as u64);
+    }
+    BgMix {
+        flows,
+        duration: spec.duration,
+        offered_max_load,
+        scale,
+    }
+}
+
+/// Append `mix` to an already-lowered workload as background tasks:
+/// each flow becomes a root `Compute` delay of its arrival time plus a
+/// dependent single-flow `Transfer`, so it enters the fair-share
+/// contention set exactly at `at`. Marks the training/background task
+/// boundary (everything added before this call counts as training in
+/// the report); callable once per workload, after all training tasks.
+/// Returns the number of background flows injected.
+pub fn inject(wl: &mut Workload, mix: &BgMix) -> usize {
+    assert_eq!(
+        wl.bg_from,
+        u32::MAX,
+        "a background mix was already injected into this workload"
+    );
+    wl.bg_from = wl.n_tasks() as u32;
+    let mut injected = 0usize;
+    for bg in &mix.flows {
+        // Sub-half-byte flows (possible after aggressive down-scaling)
+        // would be skipped by the engine anyway; don't materialize them.
+        if bg.flow.bytes <= 0.5 {
+            continue;
+        }
+        let delay = wl.add(TaskKind::Compute { seconds: bg.at }, &[]);
+        wl.add(
+            TaskKind::Transfer {
+                flows: vec![bg.flow.clone()],
+                extra_latency: 0.0,
+            },
+            &[delay],
+        );
+        injected += 1;
+    }
+    if obs::enabled() {
+        obs::count("flowgen.injected", injected as u64);
+    }
+    injected
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::topo;
+
+    fn spec(seed: u64) -> MixSpec {
+        MixSpec::at_load(0.4, 1e-2, seed)
+    }
+
+    fn assert_mixes_identical(a: &BgMix, b: &BgMix) {
+        assert_eq!(a.flows.len(), b.flows.len());
+        for (x, y) in a.flows.iter().zip(&b.flows) {
+            assert_eq!(x.at.to_bits(), y.at.to_bits());
+            assert_eq!(x.flow.src, y.flow.src);
+            assert_eq!(x.flow.dst, y.flow.dst);
+            assert_eq!(x.flow.bytes.to_bits(), y.flow.bytes.to_bits());
+        }
+        assert_eq!(a.offered_max_load.to_bits(), b.offered_max_load.to_bits());
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_mix_bitwise() {
+        let t = topo::spineleaf(4, 4, 4.0);
+        let a = generate(&t, &spec(7));
+        let b = generate(&t, &spec(7));
+        assert_mixes_identical(&a, &b);
+        assert!(!a.flows.is_empty(), "default spec draws a nonempty mix");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let t = topo::spineleaf(4, 4, 4.0);
+        let a = generate(&t, &spec(7));
+        let b = generate(&t, &spec(8));
+        let same = a.flows.len() == b.flows.len()
+            && a.flows.iter().zip(&b.flows).all(|(x, y)| {
+                x.flow.src == y.flow.src
+                    && x.flow.dst == y.flow.dst
+                    && x.flow.bytes.to_bits() == y.flow.bytes.to_bits()
+            });
+        assert!(!same, "distinct seeds drew identical mixes");
+    }
+
+    #[test]
+    fn offered_load_hits_the_target_exactly() {
+        let t = topo::fattree(4);
+        for load in [0.1, 0.35, 0.8] {
+            let mix = generate(&t, &MixSpec::at_load(load, 5e-3, 99));
+            assert!(!mix.flows.is_empty());
+            assert!(
+                (mix.offered_max_load - load).abs() <= load * 1e-9,
+                "offered {} vs target {load}",
+                mix.offered_max_load
+            );
+        }
+    }
+
+    #[test]
+    fn zero_load_is_an_empty_mix() {
+        let t = topo::spineleaf(2, 4, 2.0);
+        let mix = generate(&t, &MixSpec::at_load(0.0, 1e-2, 3));
+        assert!(mix.flows.is_empty());
+        assert_eq!(mix.offered_max_load, 0.0);
+        let mut wl = Workload::new();
+        assert_eq!(inject(&mut wl, &mix), 0);
+        assert_eq!(wl.n_tasks(), 0);
+    }
+
+    #[test]
+    fn rack_skew_keeps_traffic_local() {
+        let t = topo::spineleaf(4, 8, 4.0);
+        let mut s = spec(21);
+        s.spatial = SpatialMatrix::RackSkewed {
+            rack_size: 8,
+            locality: 1.0,
+        };
+        let mix = generate(&t, &s);
+        assert!(!mix.flows.is_empty());
+        for f in &mix.flows {
+            assert_eq!(
+                f.flow.src / 8,
+                f.flow.dst / 8,
+                "locality=1.0 drew a cross-rack pair"
+            );
+        }
+    }
+
+    #[test]
+    fn hotspot_concentrates_destinations() {
+        let t = topo::spineleaf(4, 8, 4.0);
+        let mut s = spec(22);
+        s.flows = 512;
+        s.spatial = SpatialMatrix::Hotspot {
+            hotspots: 2,
+            weight: 0.9,
+        };
+        let mix = generate(&t, &s);
+        let hot = mix.flows.iter().filter(|f| f.flow.dst < 2).count();
+        assert!(
+            hot * 2 > mix.flows.len(),
+            "only {hot}/{} flows hit the hotspot",
+            mix.flows.len()
+        );
+    }
+
+    #[test]
+    fn empirical_sizes_come_from_the_buckets() {
+        let t = topo::spineleaf(2, 4, 2.0);
+        let mut s = spec(5);
+        s.size = SizeDist::Empirical {
+            buckets: vec![(1e3, 0.5), (1e6, 0.3), (1e8, 0.2)],
+        };
+        let mix = generate(&t, &s);
+        assert!(!mix.flows.is_empty());
+        // After common scaling, sizes stay proportional to the buckets:
+        // each flow's bytes / scale must be one of the bucket values.
+        for f in &mix.flows {
+            let raw = f.flow.bytes / mix.scale;
+            assert!(
+                [1e3, 1e6, 1e8].iter().any(|b| (raw - b).abs() < 1e-3 * b),
+                "unscaled size {raw} not in the empirical buckets"
+            );
+        }
+    }
+
+    #[test]
+    fn inject_marks_the_background_boundary() {
+        let t = topo::spineleaf(2, 4, 2.0);
+        let mix = generate(&t, &spec(11));
+        let mut wl = Workload::new();
+        wl.add(TaskKind::Compute { seconds: 1e-3 }, &[]);
+        let before = wl.n_tasks();
+        let injected = inject(&mut wl, &mix);
+        assert!(injected > 0);
+        assert_eq!(wl.bg_from, before as u32);
+        assert_eq!(wl.n_tasks(), before + 2 * injected);
+    }
+
+    #[test]
+    #[should_panic(expected = "already injected")]
+    fn double_injection_panics() {
+        let t = topo::spineleaf(2, 4, 2.0);
+        let mix = generate(&t, &spec(11));
+        let mut wl = Workload::new();
+        inject(&mut wl, &mix);
+        inject(&mut wl, &mix);
+    }
+}

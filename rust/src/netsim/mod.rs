@@ -35,16 +35,22 @@
 //! [`crate::harness::netsim::netsim_xval`] sit on top. Since the
 //! refinement loop ([`crate::solver::refine`], `nest refine`) landed,
 //! the simulator is also a *decision-maker*: it re-ranks the DP's
-//! analytic top-K shortlist under contention.
+//! analytic top-K shortlist under contention — and, with a seeded
+//! background mix from [`flowgen`] injected into the lowered workload
+//! ([`flowgen::inject`] before [`Simulation::run_workload`]), under
+//! multi-tenant fabric load as well (`nest refine --bg-load`,
+//! `nest mix`).
 
 pub mod decompose;
 pub mod fairshare;
+pub mod flowgen;
 pub mod flows;
 pub mod topo;
 
 pub use fairshare::{
     FairshareEngine, FlowSpec, LinkUtil, NetsimReport, RefillMode, TaskKind, Workload,
 };
+pub use flowgen::{BgFlow, BgMix, MixSpec, SizeDist, SpatialMatrix};
 pub use topo::{Link, LinkGraph, Node, NodeKind, PathInfo};
 
 use crate::graph::LayerGraph;
@@ -350,6 +356,60 @@ mod tests {
         a1.assert_bits_eq(&a1_again, "engine swapped across topologies");
         let fresh2 = Simulation::new().run(&g, &c2, &t2, &p2, Schedule::OneFOneB);
         b2.assert_bits_eq(&fresh2, "retained vs fresh on second topology");
+    }
+
+    #[test]
+    fn background_mix_rides_every_mode_bit_identically() {
+        // The multi-tenant acceptance bar in miniature: a seeded
+        // background mix injected into a real lowered plan produces the
+        // same bits monolithic and decomposed at 1 and 4 threads, and
+        // the report splits training vs background accounting.
+        let g = models::bert_large(1);
+        let c = Cluster::spine_leaf_h100(64, 4.0);
+        let sol = solve(&g, &c, &SolverOpts::default()).expect("feasible");
+        let topo = LinkGraph::from_cluster(&c);
+        let base = Simulation::new().run(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
+        assert_eq!(
+            base.train_batch_time.to_bits(),
+            base.batch_time.to_bits(),
+            "no mix injected: training time is the makespan"
+        );
+        assert_eq!(base.bg_flows, 0);
+        assert_eq!(base.bg_bytes, 0.0);
+
+        let mut wl = flows::lower(&g, &c, &topo, &sol.plan, Schedule::OneFOneB);
+        let mix = flowgen::generate(
+            &topo,
+            &flowgen::MixSpec::at_load(0.5, base.batch_time, 0xB6),
+        );
+        assert!(flowgen::inject(&mut wl, &mix) > 0);
+        let mono = Simulation::new()
+            .mode(SimMode::Monolithic)
+            .run_workload(&topo, &wl);
+        for threads in [1, 4] {
+            let dec = Simulation::new()
+                .mode(SimMode::Decomposed)
+                .threads(threads)
+                .run_workload(&topo, &wl);
+            mono.assert_bits_eq(&dec, &format!("mixed workload decomposed@{threads}"));
+        }
+        assert!(mono.bg_flows > 0);
+        assert_eq!(mono.n_flows - mono.bg_flows, base.n_flows);
+        assert!(mono.bg_bytes > 0.0 && mono.bg_bytes < mono.total_bytes);
+        assert!(mono.train_batch_time <= mono.batch_time);
+        assert!(mono.train_batch_time > 0.0 && mono.train_batch_time.is_finite());
+        // Conservation splits: background bytes drain like any others.
+        let bg_injected: f64 = mix
+            .flows
+            .iter()
+            .filter(|f| f.flow.bytes > 0.5)
+            .map(|f| f.flow.bytes)
+            .sum();
+        assert!((mono.bg_bytes - bg_injected).abs() <= 1e-6 * bg_injected.max(1.0));
+        assert!(
+            (mono.bg_delivered_bytes - mono.bg_bytes).abs()
+                <= 0.5 * mono.bg_flows as f64 + 1e-6
+        );
     }
 
     #[test]

@@ -481,6 +481,7 @@ impl PlacementService {
         let ranked = rerank(&mut sim, &query.graph, &query.cluster, topo, served.plans);
         Some(RefineReport {
             ranked,
+            bg_loads: Vec::new(),
             solve_seconds: served.solve_seconds,
             dp_states: served.dp_states,
             configs_tried: served.configs_tried,

@@ -26,9 +26,17 @@
 //!
 //! Entry points: [`refine`], the `nest refine` CLI subcommand, and the
 //! cross-topology table in [`crate::harness::refine`].
+//!
+//! [`refine_under_load`] extends the loop to *shared* fabrics: every
+//! shortlisted plan is additionally replayed against seeded background
+//! mixes ([`crate::netsim::flowgen`]) at each requested per-link load
+//! level, and the ranking key becomes the worst-case (or mean) relative
+//! degradation of the plan's *training* batch time — `nest refine
+//! --bg-load 0.3,0.6` picks the plan that degrades least, and the
+//! `nest mix` harness tables the flips across load levels.
 
 use crate::graph::LayerGraph;
-use crate::netsim::{LinkGraph, NetsimOpts, Simulation};
+use crate::netsim::{flowgen, flows, LinkGraph, MixSpec, NetsimOpts, Simulation};
 use crate::network::Cluster;
 use crate::sim::Schedule;
 use crate::util::table::{fmt_time, Table};
@@ -54,15 +62,29 @@ pub struct RefinedPlan {
     pub max_link_util: f64,
     /// Flows the plan's training batch lowered into.
     pub n_flows: usize,
+    /// Flow-simulated *training* batch time under each requested
+    /// background-load level, parallel to [`RefineOpts::bg_loads`]
+    /// (empty when no background replays were requested).
+    pub bg_sim: Vec<f64>,
+    /// Contention-robustness key: worst-case (or mean — see
+    /// [`RefineOpts::worst_case`]) relative degradation of the training
+    /// batch time across the background levels,
+    /// `(bg_sim[i] − sim_batch) / sim_batch`. 0.0 without levels.
+    pub degradation: f64,
     pub plan: PlacementPlan,
 }
 
 /// Refinement outcome: the shortlist in *simulated* order.
 #[derive(Debug, Clone)]
 pub struct RefineReport {
-    /// Shortlisted plans sorted by `(sim_batch, analytic_rank)` —
-    /// index 0 is the re-ranked winner.
+    /// Shortlisted plans sorted by `(sim_batch, analytic_rank)` — or,
+    /// when background levels were replayed
+    /// ([`refine_under_load`]), by `(degradation, sim_batch,
+    /// analytic_rank)` — index 0 is the re-ranked winner.
     pub ranked: Vec<RefinedPlan>,
+    /// Background-load levels the shortlist was replayed under (empty
+    /// for plain refinement); `ranked[..].bg_sim` is parallel to this.
+    pub bg_loads: Vec<f64>,
     pub solve_seconds: f64,
     pub dp_states: u64,
     pub configs_tried: u64,
@@ -96,9 +118,12 @@ impl RefineReport {
         (ana - self.winner().sim_batch) / ana
     }
 
-    /// Render the shortlist as a per-plan table (sim order).
+    /// Render the shortlist as a per-plan table (sim order). When
+    /// background levels were replayed, one `bg N%` column per level
+    /// (training batch time under that load) and the degradation key
+    /// are appended.
     pub fn render_table(&self) -> String {
-        let mut tbl = Table::new(&[
+        let mut headers: Vec<String> = [
             "sim rank",
             "dp rank",
             "strategy",
@@ -107,9 +132,20 @@ impl RefineReport {
             "flow-sim",
             "delta",
             "max link util",
-        ]);
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        for load in &self.bg_loads {
+            headers.push(format!("bg {:.0}%", load * 100.0));
+        }
+        if !self.bg_loads.is_empty() {
+            headers.push("degradation".into());
+        }
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut tbl = Table::new(&header_refs);
         for (i, r) in self.ranked.iter().enumerate() {
-            tbl.row(vec![
+            let mut row = vec![
                 (i + 1).to_string(),
                 (r.analytic_rank + 1).to_string(),
                 r.plan.strategy_string(),
@@ -118,7 +154,14 @@ impl RefineReport {
                 fmt_time(r.sim_batch),
                 format!("{:+.1}%", r.delta * 100.0),
                 format!("{:.0}%", r.max_link_util * 100.0),
-            ]);
+            ];
+            for bg in &r.bg_sim {
+                row.push(fmt_time(*bg));
+            }
+            if !self.bg_loads.is_empty() {
+                row.push(format!("{:+.1}%", r.degradation * 100.0));
+            }
+            tbl.row(row);
         }
         tbl.render()
     }
@@ -166,10 +209,120 @@ pub fn refine_opts(
     let ranked = rerank(&mut sim, graph, cluster, topo, top.plans);
     Some(RefineReport {
         ranked,
+        bg_loads: Vec::new(),
         solve_seconds: top.solve_seconds,
         dp_states: top.dp_states,
         configs_tried: top.configs_tried,
     })
+}
+
+/// Knobs of a background-load-aware refinement ([`refine_under_load`]).
+#[derive(Debug, Clone)]
+pub struct RefineOpts {
+    /// Analytic shortlist size.
+    pub topk: usize,
+    /// Flow-simulator options for every replay.
+    pub netsim: NetsimOpts,
+    /// Target max per-link background loads to replay the shortlist
+    /// under (`nest refine --bg-load 0.3,0.6`). Empty = plain
+    /// [`refine_opts`] behavior.
+    pub bg_loads: Vec<f64>,
+    /// Seed of the background mixes; level `i` draws with
+    /// `bg_seed + i`, and every plan at one level replays the *same*
+    /// mix (robustness must compare like against like).
+    pub bg_seed: u64,
+    /// Rank by worst-case degradation across the levels (default);
+    /// `false` ranks by the mean instead.
+    pub worst_case: bool,
+}
+
+impl Default for RefineOpts {
+    fn default() -> Self {
+        RefineOpts {
+            topk: 4,
+            netsim: NetsimOpts::default(),
+            bg_loads: Vec::new(),
+            bg_seed: 0xB6,
+            worst_case: true,
+        }
+    }
+}
+
+/// Refinement under multi-tenant fabric load: solve the analytic top-K
+/// shortlist, re-rank it by contention-aware batch time as
+/// [`refine_opts`] does, then replay every shortlisted plan under each
+/// requested background-load level (one seeded [`crate::netsim::flowgen`]
+/// mix per level, shared by all plans) and re-rank by worst-case (or
+/// mean) *training* batch-time degradation. The plan that degrades
+/// least on a shared fabric wins; zero-load simulated time and analytic
+/// rank break ties. With empty `ropts.bg_loads` this is exactly
+/// [`refine_opts`].
+///
+/// Deterministic: mixes are pure functions of `(topo, level, bg_seed)`
+/// and the replays are bit-deterministic, so the report is
+/// field-for-field identical across solver threads and simulator modes.
+pub fn refine_under_load(
+    graph: &LayerGraph,
+    cluster: &Cluster,
+    topo: &LinkGraph,
+    opts: &SolverOpts,
+    ropts: &RefineOpts,
+) -> Option<RefineReport> {
+    let mut report = refine_opts(graph, cluster, topo, opts, ropts.topk, ropts.netsim)?;
+    if ropts.bg_loads.is_empty() {
+        return Some(report);
+    }
+    let _span = crate::obs::span_with("refine.under_load", "refine", || {
+        vec![
+            ("levels", ropts.bg_loads.len().to_string()),
+            ("plans", report.ranked.len().to_string()),
+        ]
+    });
+    // The mixes' arrival window covers the slowest shortlisted plan, so
+    // every candidate sees the whole background churn.
+    let duration = report
+        .ranked
+        .iter()
+        .map(|r| r.sim_batch)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let mut sim = Simulation::with_opts(ropts.netsim);
+    for (li, &load) in ropts.bg_loads.iter().enumerate() {
+        let mix = flowgen::generate(
+            topo,
+            &MixSpec::at_load(load, duration, ropts.bg_seed.wrapping_add(li as u64)),
+        );
+        for r in report.ranked.iter_mut() {
+            let mut wl = flows::lower(graph, cluster, topo, &r.plan, Schedule::OneFOneB);
+            flowgen::inject(&mut wl, &mix);
+            let rep = sim.run_workload(topo, &wl);
+            r.bg_sim.push(rep.train_batch_time);
+        }
+    }
+    for r in report.ranked.iter_mut() {
+        let sim_batch = r.sim_batch;
+        let d = if ropts.worst_case {
+            r.bg_sim
+                .iter()
+                .map(|&bg| (bg - sim_batch) / sim_batch)
+                .fold(f64::NEG_INFINITY, f64::max)
+        } else {
+            r.bg_sim
+                .iter()
+                .map(|&bg| (bg - sim_batch) / sim_batch)
+                .sum::<f64>()
+                / r.bg_sim.len() as f64
+        };
+        r.degradation = d;
+    }
+    report.ranked.sort_by(|a, b| {
+        a.degradation
+            .total_cmp(&b.degradation)
+            .then(a.sim_batch.total_cmp(&b.sim_batch))
+            .then(a.analytic_rank.cmp(&b.analytic_rank))
+    });
+    report.bg_loads = ropts.bg_loads.clone();
+    Some(report)
 }
 
 /// Re-rank an analytic shortlist (plans in DP order, index = analytic
@@ -202,6 +355,8 @@ pub fn rerank(
                 delta,
                 max_link_util: rep.max_link_util,
                 n_flows: rep.n_flows,
+                bg_sim: Vec::new(),
+                degradation: 0.0,
                 plan,
             }
         })
@@ -293,6 +448,93 @@ mod tests {
         let table = rep.render_table();
         for r in &rep.ranked {
             assert!(table.contains(&r.plan.strategy_string()));
+        }
+    }
+
+    #[test]
+    fn under_load_with_no_levels_is_plain_refine() {
+        let g = models::llama2_7b(1);
+        let (c, topo) = dumbbell();
+        let plain = refine(&g, &c, &topo, &opts(1), 3).expect("feasible");
+        let ropts = RefineOpts {
+            topk: 3,
+            ..Default::default()
+        };
+        let under = refine_under_load(&g, &c, &topo, &opts(1), &ropts).expect("feasible");
+        assert!(under.bg_loads.is_empty());
+        assert_eq!(plain.ranked.len(), under.ranked.len());
+        for (x, y) in plain.ranked.iter().zip(&under.ranked) {
+            assert_eq!(x.plan, y.plan);
+            assert_eq!(x.sim_batch.to_bits(), y.sim_batch.to_bits());
+            assert!(y.bg_sim.is_empty());
+            assert_eq!(y.degradation, 0.0);
+        }
+    }
+
+    #[test]
+    fn under_load_ranks_by_degradation_and_is_thread_invariant() {
+        let g = models::llama2_7b(1);
+        let (c, topo) = dumbbell();
+        let ropts = RefineOpts {
+            topk: 3,
+            bg_loads: vec![0.3, 0.6],
+            ..Default::default()
+        };
+        let a = refine_under_load(&g, &c, &topo, &opts(1), &ropts).expect("feasible");
+        let b = refine_under_load(&g, &c, &topo, &opts(4), &ropts).expect("feasible");
+        assert_eq!(a.bg_loads, vec![0.3, 0.6]);
+        for r in &a.ranked {
+            assert_eq!(r.bg_sim.len(), 2, "one replay per load level");
+            // Worst-case key: the max per-level degradation.
+            let worst = r
+                .bg_sim
+                .iter()
+                .map(|&bg| (bg - r.sim_batch) / r.sim_batch)
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(r.degradation.to_bits(), worst.to_bits());
+        }
+        for w in a.ranked.windows(2) {
+            assert!(w[0].degradation <= w[1].degradation, "ranked by degradation");
+        }
+        // The robust winner never degrades more than the analytic pick.
+        assert!(a.winner().degradation <= a.analytic_winner().degradation);
+        // Field-for-field thread invariance.
+        assert_eq!(a.ranked.len(), b.ranked.len());
+        for (x, y) in a.ranked.iter().zip(&b.ranked) {
+            assert_eq!(x.plan, y.plan);
+            assert_eq!(x.analytic_rank, y.analytic_rank);
+            assert_eq!(x.sim_batch.to_bits(), y.sim_batch.to_bits());
+            assert_eq!(x.degradation.to_bits(), y.degradation.to_bits());
+            for (p, q) in x.bg_sim.iter().zip(&y.bg_sim) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+        // The rendered table grows one column per level plus the key.
+        let table = a.render_table();
+        assert!(table.contains("bg 30%"));
+        assert!(table.contains("bg 60%"));
+        assert!(table.contains("degradation"));
+    }
+
+    #[test]
+    fn under_load_mean_ranking_uses_the_mean() {
+        let g = models::llama2_7b(1);
+        let (c, topo) = dumbbell();
+        let ropts = RefineOpts {
+            topk: 2,
+            bg_loads: vec![0.2, 0.5],
+            worst_case: false,
+            ..Default::default()
+        };
+        let rep = refine_under_load(&g, &c, &topo, &opts(0), &ropts).expect("feasible");
+        for r in &rep.ranked {
+            let mean = r
+                .bg_sim
+                .iter()
+                .map(|&bg| (bg - r.sim_batch) / r.sim_batch)
+                .sum::<f64>()
+                / r.bg_sim.len() as f64;
+            assert_eq!(r.degradation.to_bits(), mean.to_bits());
         }
     }
 }

@@ -1,6 +1,7 @@
 //! Golden-file snapshot tests: the rendered `nest refine` shortlist
-//! table and the harness netsim cross-validation row on the shipped
-//! dumbbell edge-list, pinned against checked-in expected output so
+//! table, the harness netsim cross-validation row, and the `nest mix`
+//! shortlist-under-load table on the shipped dumbbell edge-list,
+//! pinned against checked-in expected output so
 //! silent report-field drift (a renamed column, a re-scaled delta, a
 //! changed plan) fails loudly.
 //!
@@ -60,4 +61,12 @@ fn golden_netsim_xval_dumbbell_row() {
         "netsim_xval_dumbbell.txt",
         &nest::harness::netsim::dumbbell_xval_snapshot(),
     );
+}
+
+/// The `nest mix` shortlist-under-load snapshot on the dumbbell
+/// (serial solver, fixed seed and load levels): pins the flowgen draw,
+/// the injection path, and the degradation ranking in one artifact.
+#[test]
+fn golden_mix_snapshot_on_dumbbell() {
+    golden_check("mix_dumbbell.txt", &nest::harness::mix::mix_snapshot());
 }

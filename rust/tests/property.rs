@@ -19,7 +19,9 @@ mod common;
 use common::{assert_plans_identical, prop_seed, threaded};
 use nest::cost::{CostModel, PricingMode};
 use nest::memory::{MemSpec, ZeroStage};
-use nest::netsim::{FlowSpec, LinkGraph, RefillMode, SimMode, Simulation, TaskKind, Workload};
+use nest::netsim::{
+    flowgen, FlowSpec, LinkGraph, MixSpec, RefillMode, SimMode, Simulation, TaskKind, Workload,
+};
 use nest::sim::{simulate, Schedule};
 use nest::solver::{solve, solve_topk, SolverOpts};
 use nest::util::prop::{self, random_cluster, random_tiny_graph};
@@ -626,6 +628,210 @@ fn prop_fattree_scale_fuzz_conserves_bytes_and_is_deterministic() {
                 .run_workload(&fabric, &wl);
             dec.assert_bits_eq(&mono, &format!("fat-tree decomposed {threads}t"));
         }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Background-flow generator (netsim::flowgen): seeded determinism, load
+// targeting, and the monotone-degradation property on chain workloads.
+// ---------------------------------------------------------------------
+
+/// A serial training chain (compute → concurrent flows → compute → …):
+/// exactly one training task is active at a time, which is the regime
+/// where background injection provably cannot *speed up* training (see
+/// `prop_background_never_speeds_up_training_chains`). Returns the
+/// workload and its injected training bytes.
+fn random_training_chain(rng: &mut Rng, n: usize) -> (Workload, f64) {
+    let mut wl = Workload::new();
+    let mut injected = 0.0f64;
+    let mut prev: Option<u32> = None;
+    for _ in 0..(2 + rng.gen_range(5)) {
+        let deps: Vec<u32> = prev.into_iter().collect();
+        let cmp = wl.add(
+            TaskKind::Compute {
+                seconds: rng.gen_f64() * 1e-3,
+            },
+            &deps,
+        );
+        let mut flows = Vec::new();
+        for _ in 0..(1 + rng.gen_range(5)) {
+            let src = rng.gen_range(n);
+            let mut dst = rng.gen_range(n);
+            if src == dst {
+                dst = (dst + 1) % n;
+            }
+            let bytes = 1e6 * (1.0 + rng.gen_f64() * 1e2);
+            injected += bytes;
+            flows.push(FlowSpec { src, dst, bytes });
+        }
+        prev = Some(wl.add(
+            TaskKind::Transfer {
+                flows,
+                extra_latency: 0.0,
+            },
+            &[cmp],
+        ));
+    }
+    (wl, injected)
+}
+
+#[test]
+fn prop_flowgen_deterministic_and_hits_target_load() {
+    // On random connected edge-lists: the same (topo, spec) yields a
+    // bit-identical mix, a different seed yields a different one, the
+    // achieved max per-link offered load lands on the target (the spec
+    // demands ±10%; the linear rescale hits it to fp precision), and a
+    // mixed training+background workload replays bit-identically across
+    // simulator modes and thread counts.
+    let seed = prop_seed(0xF70_11E2);
+    prop::forall(12, seed, |rng| {
+        let json = random_edgelist_json(rng);
+        let parsed = nest::util::json::parse(&json).expect("fuzz JSON parses");
+        let topo = LinkGraph::from_json(&parsed).expect("fuzz topology builds");
+        let n = topo.n_devices();
+        let target = 0.05 + 0.85 * rng.gen_f64();
+        let duration = 1e-3 * (1.0 + rng.gen_f64() * 9.0);
+        let mix_seed = rng.next_u64();
+        let spec = MixSpec::at_load(target, duration, mix_seed);
+
+        // Same seed ⇒ bit-identical flow set; different seed ⇒ not.
+        let a = flowgen::generate(&topo, &spec);
+        let b = flowgen::generate(&topo, &spec);
+        assert_eq!(a.flows.len(), b.flows.len(), "flow count diverged across draws");
+        for (x, y) in a.flows.iter().zip(&b.flows) {
+            assert_eq!(x.at.to_bits(), y.at.to_bits());
+            assert_eq!(x.flow.src, y.flow.src);
+            assert_eq!(x.flow.dst, y.flow.dst);
+            assert_eq!(x.flow.bytes.to_bits(), y.flow.bytes.to_bits());
+        }
+        let other = flowgen::generate(
+            &topo,
+            &MixSpec {
+                seed: mix_seed ^ 0xDEAD_BEEF,
+                ..spec.clone()
+            },
+        );
+        let same = a.flows.len() == other.flows.len()
+            && a.flows.iter().zip(&other.flows).all(|(x, y)| {
+                x.at.to_bits() == y.at.to_bits()
+                    && x.flow.bytes.to_bits() == y.flow.bytes.to_bits()
+            });
+        assert!(!same, "different seeds produced an identical mix");
+
+        // Load targeting: the rescale lands the hottest link on the
+        // target exactly (well inside the spec's ±10%).
+        if a.flows.is_empty() {
+            assert_eq!(a.offered_max_load, 0.0);
+        } else {
+            let achieved = flowgen::offered_load(&topo, &a.flows, a.duration);
+            assert!(
+                (achieved - target).abs() <= target * 1e-9,
+                "offered load {achieved} missed target {target}"
+            );
+            assert_eq!(achieved.to_bits(), a.offered_max_load.to_bits());
+        }
+
+        // Mixed replay is bit-identical across modes and thread counts,
+        // and the report accounts training vs background separately.
+        let mut probe = rng.clone();
+        let (mut wl, train_bytes) = random_training_chain(&mut probe, n);
+        let injected = flowgen::inject(&mut wl, &a);
+        let mono = Simulation::new()
+            .mode(SimMode::Monolithic)
+            .run_workload(&topo, &wl);
+        for threads in [1usize, 4] {
+            let dec = Simulation::new()
+                .mode(SimMode::Decomposed)
+                .threads(threads)
+                .run_workload(&topo, &wl);
+            dec.assert_bits_eq(&mono, &format!("mixed workload decomposed {threads}t"));
+        }
+        assert_eq!(mono.bg_flows, injected, "every injected flow is accounted");
+        assert!(
+            ((mono.total_bytes - mono.bg_bytes) - train_bytes).abs() < 1.0,
+            "training bytes {} vs injected {train_bytes}",
+            mono.total_bytes - mono.bg_bytes
+        );
+    });
+}
+
+#[test]
+fn prop_background_never_speeds_up_training_chains() {
+    // On random connected edge-lists × serial training chains (one
+    // training task active at a time — max-min makespans are NOT
+    // monotone under injection when training transfers overlap, so the
+    // chain structure is load-bearing): injecting any background mix
+    // never decreases the training batch time, and delivered bytes
+    // conserve injected bytes with training and background accounted
+    // separately.
+    let seed = prop_seed(0xB6_10AD);
+    prop::forall(12, seed, |rng| {
+        let json = random_edgelist_json(rng);
+        let parsed = nest::util::json::parse(&json).expect("fuzz JSON parses");
+        let topo = LinkGraph::from_json(&parsed).expect("fuzz topology builds");
+        let n = topo.n_devices();
+        let mut probe = rng.clone();
+        let (wl, _) = random_training_chain(&mut probe, n);
+        let base = Simulation::new().run_workload(&topo, &wl);
+        // A clean run is all training: the training clock IS the batch
+        // clock and no background is reported.
+        assert_eq!(base.train_batch_time.to_bits(), base.batch_time.to_bits());
+        assert_eq!(base.bg_flows, 0);
+        assert_eq!(base.bg_bytes, 0.0);
+
+        let load = 0.1 + 0.8 * rng.gen_f64();
+        let spec = MixSpec::at_load(load, base.batch_time, rng.next_u64());
+        let mix = flowgen::generate(&topo, &spec);
+        let mut probe = rng.clone();
+        let (mut mixed_wl, train_bytes) = random_training_chain(&mut probe, n);
+        let injected = flowgen::inject(&mut mixed_wl, &mix);
+        let rep = Simulation::new().run_workload(&topo, &mixed_wl);
+
+        // Monotone degradation (fp-tolerant: with a single active
+        // training task, work conservation on each saturated link makes
+        // the bound exact).
+        assert!(
+            rep.train_batch_time >= base.batch_time * (1.0 - 1e-9),
+            "background sped training up: {} < {} at load {load}",
+            rep.train_batch_time,
+            base.batch_time
+        );
+        assert!(rep.train_batch_time <= rep.batch_time, "training outlived the batch");
+
+        // Conservation, split by class: background bytes match the
+        // materialized mix, training bytes match the chain, and each
+        // class's delivered bytes equal its injected bytes up to the
+        // engine's half-byte completion tolerance per flow.
+        let bg_injected: f64 = mix
+            .flows
+            .iter()
+            .filter(|f| f.flow.bytes > 0.5)
+            .map(|f| f.flow.bytes)
+            .sum();
+        assert_eq!(rep.bg_flows, injected);
+        assert!(
+            (rep.bg_bytes - bg_injected).abs() <= 1e-6 * bg_injected.max(1.0),
+            "bg bytes {} vs injected {bg_injected}",
+            rep.bg_bytes
+        );
+        assert!(
+            ((rep.total_bytes - rep.bg_bytes) - train_bytes).abs() < 1.0,
+            "training bytes {} vs injected {train_bytes}",
+            rep.total_bytes - rep.bg_bytes
+        );
+        assert!(
+            (rep.bg_delivered_bytes - rep.bg_bytes).abs()
+                <= 0.5 * rep.bg_flows as f64 + 1e-6,
+            "bg delivered {} vs offered {}",
+            rep.bg_delivered_bytes,
+            rep.bg_bytes
+        );
+        let train_flows = rep.n_flows - rep.bg_flows;
+        let train_delivered = rep.delivered_bytes - rep.bg_delivered_bytes;
+        assert!(
+            (train_delivered - train_bytes).abs() <= 0.5 * train_flows as f64 + 1e-6,
+            "training delivered {train_delivered} vs injected {train_bytes}"
+        );
     });
 }
 
