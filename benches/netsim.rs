@@ -9,8 +9,8 @@ use nest::graph::models;
 use nest::harness::netsim::spineleaf_topology;
 use nest::harness::scale::scale_workload;
 use nest::netsim::{
-    flowgen, flows, topo, FlowSpec, LinkGraph, MixSpec, RefillMode, SimMode, Simulation,
-    TaskKind, Workload,
+    faults, flowgen, flows, topo, FaultSpec, FlowSpec, LinkGraph, MixSpec, RefillMode, SimMode,
+    Simulation, TaskKind, Workload,
 };
 use nest::network::Cluster;
 use nest::sim::Schedule;
@@ -124,6 +124,27 @@ fn main() {
         let mut mwl = flows::lower(&graph, &scluster, &stopo, &ssol.plan, Schedule::OneFOneB);
         flowgen::inject(&mut mwl, &mix);
         mix_sim.run_workload(&stopo, &mwl)
+    });
+
+    // Seeded fault draw + straggler lowering + capacity-event replay on
+    // the same edge-list: the `nest chaos` / `refine --fault-severity`
+    // inner loop (one scenario of one severity level). The draw is a
+    // pure function of (topo, spec), so it reruns inside the closure
+    // alongside the lower_faulted + inject + fair-share path it feeds.
+    let fspec = FaultSpec::at_severity(0.6, base.batch_time, 0xFA17);
+    let mut fault_sim = Simulation::new();
+    bench_n("faults_scenario_spineleaf_edgelist", 5, || {
+        let sc = faults::draw(&stopo, &fspec);
+        let mut fwl = flows::lower_faulted(
+            &graph,
+            &scluster,
+            &stopo,
+            &ssol.plan,
+            Schedule::OneFOneB,
+            Some(&sc),
+        );
+        faults::inject(&mut fwl, &stopo, &sc);
+        fault_sim.run_workload(&stopo, &fwl)
     });
 
     // Decomposed vs monolithic on a generated spine-leaf fabric with a

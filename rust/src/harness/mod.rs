@@ -7,6 +7,7 @@
 //! abstraction they *searched* with — mirroring the paper's shared cost
 //! model protocol (§5.1).
 
+pub mod chaos;
 pub mod figures;
 pub mod mix;
 pub mod netsim;

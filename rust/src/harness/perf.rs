@@ -17,7 +17,7 @@
 //! ```
 
 use crate::graph::models;
-use crate::netsim::{flowgen, flows, topo, MixSpec, SimMode, Simulation};
+use crate::netsim::{faults, flowgen, flows, topo, FaultSpec, MixSpec, SimMode, Simulation};
 use crate::network::Cluster;
 use crate::sim::Schedule;
 use crate::solver::refine::refine;
@@ -196,6 +196,45 @@ pub fn run_smoke(quick: bool) -> PerfSmoke {
     metrics.push(PerfMetric {
         name: "mix_flows_per_sec".into(),
         seconds: if mwall > 0.0 { mix_flows as f64 / mwall } else { 0.0 },
+    });
+
+    // Seeded fault draw + straggler lowering + capacity-event replay on
+    // the 4:1 spine-leaf: the `nest chaos` / `refine --fault-severity`
+    // hot path (one severity level: draw → lower_faulted → inject →
+    // fair-share). Reported as fault scenarios replayed per second
+    // (`_per_sec`: the gate trips only on a throughput drop).
+    let chaos_scenarios = if quick { 4 } else { 16 };
+    let mut csim = Simulation::new();
+    let chaosb = bench_n(
+        "bench_smoke_chaos_spineleaf",
+        if quick { 1 } else { 3 },
+        || {
+            let mut last = 0.0;
+            for j in 0..chaos_scenarios {
+                let spec = FaultSpec::at_severity(0.6, base_rep.batch_time, 0xFA17 + j as u64);
+                let sc = faults::draw(&stopo, &spec);
+                let mut wl = flows::lower_faulted(
+                    &graph,
+                    &scluster,
+                    &stopo,
+                    &ssol.plan,
+                    Schedule::OneFOneB,
+                    Some(&sc),
+                );
+                faults::inject(&mut wl, &stopo, &sc);
+                last = csim.run_workload(&stopo, &wl).train_batch_time;
+            }
+            last
+        },
+    );
+    let cwall = chaosb.min.as_secs_f64();
+    metrics.push(PerfMetric {
+        name: "chaos_scenarios_per_sec".into(),
+        seconds: if cwall > 0.0 {
+            chaos_scenarios as f64 / cwall
+        } else {
+            0.0
+        },
     });
 
     // End-to-end solve → top-8 shortlist → flow-level re-rank on the
@@ -489,6 +528,7 @@ mod tests {
             "netsim_fairshare_spineleaf",
             "netsim_scale_flows_per_sec",
             "mix_flows_per_sec",
+            "chaos_scenarios_per_sec",
             "solve_topk8_refine_dumbbell",
             "serve_qps",
         ] {

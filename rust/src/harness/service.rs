@@ -159,7 +159,10 @@ pub fn serve_bench(opts: &HarnessOpts, n_queries: usize, quiet: bool) -> ServeBe
     let migration = svc
         .reconcile(&eq, &ClusterDelta::FailOuterGroups { groups: 1 })
         .ok()
-        .map(|r| (r.delta.param_bytes, r.delta.migration_seconds));
+        .map(|o| {
+            let r = o.report();
+            (r.delta.param_bytes, r.delta.migration_seconds)
+        });
 
     let mean = |v: &[f64]| {
         if v.is_empty() {

@@ -13,6 +13,9 @@
 //!   refine-xval  cross-topology refinement table (where the ranking flips)
 //!   mix        multi-tenant harness: shortlist refined under background
 //!              load across topology families (plan flips per load level)
+//!   chaos      fault-injection survival table: shortlist replayed under
+//!              seeded link/straggler faults per severity, plus the
+//!              service's reconcile-under-failure column
 //!   bench-smoke  deterministic perf smoke + CI bench-regression gate
 //!   serve-bench  placement-service throughput (queries/s, cache hit rate,
 //!              warm-start speedup, elasticity migration cost)
@@ -96,31 +99,45 @@ fn netsim_topology(
     }
 }
 
-/// Parse a `--bg-load 0.3,0.6` comma-separated list of target max
-/// per-link background loads (fractions of capacity). Empty/absent ⇒ no
-/// background replay.
-fn parse_bg_loads(args: &mut Args) -> Result<Vec<f64>, String> {
-    let Some(raw) = args.get_opt("bg-load") else {
+/// Parse a `--key 0.3,0.6` comma-separated list of fractional levels
+/// (`--bg-load` background loads, `--fault-severity` fault severities).
+/// Every element is validated through `Args::get_f64_in_range`, so list
+/// elements reject with the exact message a scalar flag would.
+/// Empty/absent ⇒ no levels (the caller's default applies).
+fn parse_level_list(
+    args: &mut Args,
+    key: &str,
+    min: f64,
+    max: f64,
+) -> Result<Vec<f64>, String> {
+    let Some(raw) = args.get_opt(key) else {
         return Ok(Vec::new());
     };
-    let mut loads = Vec::new();
+    let mut levels = Vec::new();
     for part in raw.split(',') {
         let part = part.trim();
         if part.is_empty() {
             continue;
         }
-        let v: f64 = part
-            .parse()
-            .map_err(|_| format!("--bg-load: '{part}' is not a number"))?;
-        if !v.is_finite() || v < 0.0 {
-            return Err(format!("--bg-load: level {v} must be finite and ≥ 0"));
-        }
-        loads.push(v);
+        // The `=` form survives any element text (even a stray `--`),
+        // so garbage always reaches the numeric validator.
+        let mut one = Args::parse(vec![format!("--{key}={part}")]);
+        let v = one.get_f64_in_range(key, min, min, max);
+        one.check()?;
+        levels.push(v);
     }
-    if loads.is_empty() {
-        return Err("--bg-load: expected at least one level, e.g. 0.3,0.6".into());
+    if levels.is_empty() {
+        return Err(format!(
+            "--{key}: expected at least one level, e.g. 0.3,0.6"
+        ));
     }
-    Ok(loads)
+    Ok(levels)
+}
+
+/// Parse a `--bg-load 0.3,0.6` list of target max per-link background
+/// loads (fractions of capacity, each in [0, 1]).
+fn parse_bg_loads(args: &mut Args) -> Result<Vec<f64>, String> {
+    parse_level_list(args, "bg-load", 0.0, 1.0)
 }
 
 fn main() {
@@ -309,13 +326,10 @@ fn main() {
                 let k = args.get_usize_nonzero("k", if quick { 4 } else { 16 });
                 let flows = args.get_usize_nonzero("flows", if quick { 2_000 } else { 200_000 });
                 let seed = args.get_usize("seed", 42) as u64;
-                let locality = args.get_f64("locality", 0.9);
+                let locality = args.get_f64_in_range("locality", 0.9, 0.0, 1.0);
                 args.check()?;
                 if k % 2 != 0 {
                     return Err(format!("--k must be even (fat-tree arity), got {k}"));
-                }
-                if !(0.0..=1.0).contains(&locality) {
-                    return Err(format!("--locality must be in [0, 1], got {locality}"));
                 }
                 let out = nest::harness::scale::netsim_scale(&nest::harness::scale::ScaleOpts {
                     k,
@@ -346,6 +360,12 @@ fn main() {
                 let config = args.get("config", &cluster_name);
                 let topk = args.get_usize_nonzero("topk", 4);
                 let bg_loads = parse_bg_loads(args)?;
+                // Fault axis: `--fault-severity 0.4,0.8` replays the
+                // shortlist under seeded fault scenarios per level and
+                // re-ranks by throughput retention.
+                let fault_severities = parse_level_list(args, "fault-severity", 0.0, 1.0)?;
+                let fault_scenarios = args.get_usize_nonzero("fault-scenarios", 2);
+                let fault_seed = args.get_usize("fault-seed", 0xFA17) as u64;
                 // `--rank mean` averages degradation across levels instead
                 // of taking the worst case (the default).
                 let worst_case =
@@ -363,6 +383,9 @@ fn main() {
                     netsim: hopts.netsim,
                     bg_loads,
                     worst_case,
+                    fault_severities,
+                    fault_scenarios,
+                    fault_seed,
                     ..Default::default()
                 };
                 let report = refine_under_load(&graph, &cluster, &topo, &sopts, &ropts)
@@ -428,6 +451,27 @@ fn main() {
                         );
                     }
                 }
+                if !report.fault_severities.is_empty() {
+                    println!(
+                        "fault replay at {} severity level(s) × {fault_scenarios} \
+                         scenario(s): winner retains {:.0}% ({}) vs {:.0}% for the \
+                         analytic rank-1",
+                        report.fault_severities.len(),
+                        report.winner().retention * 100.0,
+                        if worst_case { "worst-case" } else { "mean" },
+                        report.analytic_winner().retention * 100.0,
+                    );
+                    // CI gate: the fault-aware winner must never retain less
+                    // throughput under faults than the analytic rank-1.
+                    if report.winner().retention < report.analytic_winner().retention {
+                        return Err(
+                            "refine --fault-severity regression: the fault-aware winner \
+                             retains less throughput under faults than the analytic \
+                             rank-1 plan"
+                                .into(),
+                        );
+                    }
+                }
                 println!("{}", report.winner().plan.describe());
                 Ok(())
             }
@@ -446,6 +490,29 @@ fn main() {
                     Err("workload-mix regression: a robust winner degraded more than \
                          the analytic rank-1 under background load (or a family was \
                          infeasible)"
+                        .into())
+                }
+            }
+            "chaos" => {
+                let topk = args.get_usize_nonzero("topk", 4);
+                let severities = parse_level_list(args, "fault-severity", 0.0, 1.0)?;
+                let scenarios = args.get_usize_nonzero("fault-scenarios", 2);
+                let seed = args.get_usize("fault-seed", 0xFA17) as u64;
+                args.check()?;
+                let severities = if severities.is_empty() {
+                    nest::harness::chaos::DEFAULT_FAULT_SEVERITIES.to_vec()
+                } else {
+                    severities
+                };
+                if nest::harness::chaos::chaos_table(
+                    &hopts, &severities, scenarios, seed, topk, quick,
+                ) {
+                    Ok(())
+                } else {
+                    Err("chaos regression: the fault-aware winner retained less \
+                         throughput under faults than the analytic rank-1, a faulted \
+                         replay was unsound, or reconcile failed on a survivable \
+                         fault (or a family was infeasible)"
                         .into())
                 }
             }
@@ -620,6 +687,20 @@ fn main() {
                          was infeasible)"
                         .into());
                 }
+                if !nest::harness::chaos::chaos_table(
+                    &hopts,
+                    &nest::harness::chaos::DEFAULT_FAULT_SEVERITIES,
+                    if quick { 1 } else { 2 },
+                    0xFA17,
+                    4,
+                    quick,
+                ) {
+                    return Err("chaos regression: the fault-aware winner retained less \
+                         throughput under faults than the analytic rank-1, a faulted \
+                         replay was unsound, or reconcile failed on a survivable fault \
+                         (or a family was infeasible)"
+                        .into());
+                }
                 Ok(())
             }
             _ => {
@@ -640,11 +721,19 @@ fn main() {
                      \x20            ever disagrees with plain solve). --bg-load 0.3,0.6 additionally replays every plan\n\
                      \x20            under seeded background traffic at each max per-link load level and re-ranks by\n\
                      \x20            degradation (--rank <worst|mean>; exits nonzero if the robust winner degrades\n\
-                     \x20            more than the analytic rank-1)\n\
+                     \x20            more than the analytic rank-1). --fault-severity 0.4,0.8 replays every plan under\n\
+                     \x20            seeded fault scenarios (link kills/brownouts/flaps + stragglers; --fault-scenarios N\n\
+                     \x20            --fault-seed S) and re-ranks by throughput retention (exits nonzero if the\n\
+                     \x20            fault-aware winner retains less than the analytic rank-1)\n\
                      \x20 refine-xval  cross-topology refinement table: where the re-ranked winner flips (--topk K)\n\
                      \x20 mix        multi-tenant harness: refine the top-K shortlist under background load on fat-tree,\n\
                      \x20            4:1 spine-leaf, and the dumbbell edge-list (--bg-load 0.2,0.4,0.6 --topk K);\n\
                      \x20            prints plan flips per load level, writes results/mix.csv, exits nonzero on regression\n\
+                     \x20 chaos      fault-injection survival table over the same families (--fault-severity 0.3,0.6,0.9\n\
+                     \x20            --fault-scenarios N --fault-seed S --topk K): throughput retention of the analytic\n\
+                     \x20            vs fault-aware winner per severity, plus reconcile-under-failed-devices; writes\n\
+                     \x20            results/chaos.csv, exits nonzero if the fault-aware winner retains less than the\n\
+                     \x20            analytic rank-1 or reconcile fails a survivable fault\n\
                      \x20 bench-smoke  perf smoke --out BENCH_PR.json [--baseline BENCH_BASELINE.json --tolerance 0.25]\n\
                      \x20            [--write-baseline: merge measured metrics into BENCH_BASELINE.json, keeping other keys]\n\
                      \x20 serve-bench  placement-as-a-service throughput: stream --queries N (default 16) over a model x\n\

@@ -157,6 +157,27 @@ pub fn partition(topo: &LinkGraph, wl: &Workload) -> Vec<Component> {
         // training completion time like the monolithic loop does.
         cwl.bg_from = tasks.partition_point(|&t| t < wl.bg_from) as u32;
     }
+
+    // Route injected capacity events to the component that owns each
+    // event's link — a faulted link is shared state of its component
+    // *only* (all flows crossing a link land in one component by
+    // construction), so this preserves bit-identity with the monolithic
+    // run. Events on links no flow ever uses cannot change any rate,
+    // but their rounds are still clocked — park them on the first
+    // component so the merged event count matches. Per-component order
+    // follows the original event order (the heap's stable-id tie-break
+    // relies on it for same-time same-link events).
+    if !wl.cap_events.is_empty() && !comps.is_empty() {
+        for ev in &wl.cap_events {
+            let owner = link_owner[ev.link as usize];
+            let ci = if owner == u32::MAX {
+                0
+            } else {
+                comp_of_root[dsu.find(owner) as usize] as usize
+            };
+            comps[ci].wl.cap_events.push(*ev);
+        }
+    }
     comps
 }
 
@@ -184,6 +205,12 @@ pub fn run_decomposed(
         for c in &comps {
             obs::record("netsim.component_flows", c.n_flows as u64);
         }
+    }
+    // A task-free workload with capacity events has no components to
+    // carry them: clock the events through one monolithic pass so the
+    // report (event rounds included) still matches SimMode::Monolithic.
+    if comps.is_empty() && !wl.cap_events.is_empty() {
+        return FairshareEngine::new(topo).run_with_mode(topo, wl, refill);
     }
 
     let run_one = |engine: &mut FairshareEngine, c: &Component| -> SubRun {
@@ -375,6 +402,39 @@ mod tests {
         let mono_full = FairshareEngine::new(&topo).run_with_mode(&topo, &wl, RefillMode::FullRefill);
         let dec_full = run_decomposed(&topo, &wl, RefillMode::FullRefill, 2);
         mono_full.assert_bits_eq(&dec_full, "decomposed vs monolithic (full refill)");
+    }
+
+    #[test]
+    fn cap_events_route_to_their_owning_component_and_replay_identically() {
+        let topo = two_rack_topo();
+        let mut wl = rack_local_workload();
+        let la = topo.path(0, 1).links[0] as u32;
+        let lb = topo.path(2, 3).links[0] as u32;
+        // A trunk link no rack-local flow uses: parked on the first
+        // component purely to clock its event round.
+        let cross = topo
+            .path(0, 2)
+            .links
+            .iter()
+            .copied()
+            .find(|l| !topo.path(0, 1).links.contains(l) && !topo.path(2, 3).links.contains(l))
+            .expect("cross-rack route has a trunk link") as u32;
+        for (at, link) in [(1e-4, la), (2e-4, lb), (3e-4, cross)] {
+            wl.cap_events.push(fairshare::CapEvent {
+                at,
+                link,
+                capacity: GB,
+            });
+        }
+        let comps = partition(&topo, &wl);
+        assert_eq!(comps.len(), 2);
+        assert_eq!(comps[0].wl.cap_events.len(), 2, "rack A fault + parked trunk");
+        assert_eq!(comps[1].wl.cap_events.len(), 1, "rack B fault");
+        let mono = FairshareEngine::new(&topo).run_with_mode(&topo, &wl, RefillMode::Incremental);
+        for threads in [1, 4] {
+            let dec = run_decomposed(&topo, &wl, RefillMode::Incremental, threads);
+            mono.assert_bits_eq(&dec, &format!("faulted decomposed ({threads} threads)"));
+        }
     }
 
     #[test]

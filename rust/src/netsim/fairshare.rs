@@ -91,6 +91,23 @@ pub(super) fn flow_is_degenerate(f: &FlowSpec) -> bool {
     f.src == f.dst || f.bytes <= 0.5
 }
 
+/// A timed change of one link's effective capacity, in absolute
+/// bytes/second from `at` onward. Materialized by `netsim::faults` from
+/// a [`super::faults::FaultScenario`] (hard kills, brownouts, flap
+/// windows); the engine honors them in every [`RefillMode`] and
+/// execution mode identically. Capacity events apply at the *start* of
+/// their scheduling round, before any drain or task completion at the
+/// same timestamp.
+#[derive(Debug, Clone, Copy)]
+pub struct CapEvent {
+    /// Simulation time the new capacity takes effect (seconds).
+    pub at: f64,
+    /// Link id into `LinkGraph::links`.
+    pub link: u32,
+    /// Effective capacity from `at` onward (bytes/second, > 0).
+    pub capacity: f64,
+}
+
 /// A schedulable unit of the lowered workload.
 #[derive(Debug, Clone)]
 pub enum TaskKind {
@@ -111,7 +128,7 @@ pub enum TaskKind {
 /// A DAG of tasks. Dependencies are by task id (the value returned by
 /// [`Workload::add`]); a task starts the instant its last prerequisite
 /// completes.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Workload {
     /// Visible to the sibling decomposition pass (`netsim::decompose`),
     /// which partitions tasks without going through the engine.
@@ -123,6 +140,9 @@ pub struct Workload {
     /// accounted separately in the report. `u32::MAX` (the default)
     /// means every task is the training job's own.
     pub(super) bg_from: u32,
+    /// Timed link-capacity changes (`netsim::faults::inject`), applied
+    /// by the engine in event order. Empty for a fault-free run.
+    pub(super) cap_events: Vec<CapEvent>,
 }
 
 impl Default for Workload {
@@ -131,6 +151,7 @@ impl Default for Workload {
             tasks: Vec::new(),
             deps: Vec::new(),
             bg_from: u32::MAX,
+            cap_events: Vec::new(),
         }
     }
 }
@@ -312,22 +333,28 @@ impl Ord for TimeKey {
     }
 }
 
-/// Heap payload: a predicted flow drain (validated against the flow's
-/// current generation on pop) or a task completion.
+/// Heap payload: a link-capacity change, a predicted flow drain
+/// (validated against the flow's current generation on pop), or a task
+/// completion.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum EvPayload {
+    /// Index into the workload's `cap_events`.
+    Cap(u32),
     Drain { slot: u32, gen: u32 },
     Task(u32),
 }
 
 /// Heap entries order by `(time, kind, stable id)` — the stable id is
-/// the flow's arrival number or the task id, *not* a push counter, so
-/// exact-time ties resolve identically no matter which [`RefillMode`]
-/// pushed them (push order differs between modes; results must not).
+/// the cap-event index, the flow's arrival number, or the task id, *not*
+/// a push counter, so exact-time ties resolve identically no matter
+/// which [`RefillMode`] pushed them (push order differs between modes;
+/// results must not). Capacity changes sort first within a round so a
+/// fault takes effect before any same-instant drain settles.
 type HeapEv = Reverse<(TimeKey, u8, u64, EvPayload)>;
 
-const EV_DRAIN: u8 = 0;
-const EV_TASK: u8 = 1;
+const EV_CAP: u8 = 0;
+const EV_DRAIN: u8 = 1;
+const EV_TASK: u8 = 2;
 
 /// One active flow in the engine's slab. `remaining` is the byte count
 /// *as of* `last_t`; bytes are settled lazily whenever the rate changes
@@ -468,6 +495,9 @@ pub struct FairshareEngine {
     /// Per-link list of active flow slots — the structure that makes
     /// component discovery O(component) instead of O(flows × links).
     link_flows: Vec<Vec<u32>>,
+    /// Effective per-link capacity: nominal at the start of every
+    /// sub-run, updated by [`CapEvent`]s as the clock passes them.
+    eff_cap: Vec<f64>,
     scratch: Scratch,
     busy: BusyLedger,
 }
@@ -480,6 +510,7 @@ impl FairshareEngine {
             slots: Vec::new(),
             free: Vec::new(),
             link_flows: vec![Vec::new(); nl],
+            eff_cap: topo.links.iter().map(|l| l.capacity).collect(),
             scratch: Scratch {
                 link_seen: vec![0; nl],
                 n_unfrozen: vec![0; nl],
@@ -565,13 +596,25 @@ impl FairshareEngine {
         for v in &mut self.link_flows {
             v.clear();
         }
+        for (e, l) in self.eff_cap.iter_mut().zip(&topo.links) {
+            *e = l.capacity;
+        }
         self.scratch.dirty_links.clear();
         self.scratch.flow_seen.clear();
 
         let mut heap: BinaryHeap<HeapEv> = BinaryHeap::new();
+        for (ci, ev) in wl.cap_events.iter().enumerate() {
+            heap.push(Reverse((
+                TimeKey(ev.at),
+                EV_CAP,
+                ci as u64,
+                EvPayload::Cap(ci as u32),
+            )));
+        }
         let mut records: Vec<FlowRecord> = Vec::new();
         let mut event_times: Vec<f64> = Vec::new();
         let mut done_count = 0usize;
+        let mut task_end = 0.0f64;
         let mut train_end = 0.0f64;
         let mut next_flow_id: u64 = 0;
         let mut flows_changed = false;
@@ -681,7 +724,7 @@ impl FairshareEngine {
         }
         if flows_changed {
             resolve_rates(
-                topo,
+                &self.eff_cap,
                 mode,
                 &mut self.slots,
                 &self.link_flows,
@@ -698,6 +741,7 @@ impl FairshareEngine {
             let mut t_next: Option<f64> = None;
             while let Some(&Reverse((tk, _, _, ev))) = heap.peek() {
                 let stale = match ev {
+                    EvPayload::Cap(_) => false,
                     EvPayload::Drain { slot, gen } => {
                         let f = &self.slots[slot as usize];
                         !f.alive || f.gen != gen
@@ -726,6 +770,15 @@ impl FairshareEngine {
                 let Reverse((_, _, _, ev)) = heap.pop().unwrap();
                 heap_pops += 1;
                 match ev {
+                    EvPayload::Cap(ci) => {
+                        // EV_CAP sorts first, so the new capacity is in
+                        // place before any same-instant drain settles;
+                        // rates re-resolve once at the end of the round.
+                        let ev = &wl.cap_events[ci as usize];
+                        self.eff_cap[ev.link as usize] = ev.capacity;
+                        self.scratch.dirty_links.push(ev.link as usize);
+                        flows_changed = true;
+                    }
                     EvPayload::Drain { slot, gen } => {
                         let sl = slot as usize;
                         {
@@ -788,6 +841,7 @@ impl FairshareEngine {
                         }
                         st[ti].done = true;
                         done_count += 1;
+                        task_end = task_end.max(t);
                         if task < wl.bg_from {
                             train_end = train_end.max(t);
                         }
@@ -804,7 +858,7 @@ impl FairshareEngine {
 
             if flows_changed {
                 resolve_rates(
-                    topo,
+                    &self.eff_cap,
                     mode,
                     &mut self.slots,
                     &self.link_flows,
@@ -828,8 +882,13 @@ impl FairshareEngine {
             obs::count("netsim.events", event_times.len() as u64);
         }
 
+        // The makespan is the last *task* completion, not the last event
+        // time: capacity events scheduled past the end of the workload
+        // (a flap restore after the batch drained) must not stretch the
+        // batch clock. Fault-free runs are unchanged — their final event
+        // is always a task completion.
         SubRun {
-            end_t: t,
+            end_t: task_end,
             train_end_t: train_end,
             event_times,
             busy: self.busy.drain_sorted(),
@@ -873,7 +932,10 @@ pub(super) fn finalize(
         }
     }
 
-    // Utilization report, hottest first, ties by link id.
+    // Utilization report, hottest first, ties by link id. Deliberately
+    // against *nominal* capacity even under injected faults: a browned
+    // out trunk showing low absolute utilization is the signal the
+    // chaos harness reads.
     let mut link_util: Vec<LinkUtil> = busy
         .iter()
         .filter(|&&(_, b)| b > 0.0)
@@ -946,16 +1008,19 @@ pub fn run_with_mode(topo: &LinkGraph, wl: &Workload, mode: RefillMode) -> Netsi
     FairshareEngine::new(topo).run_with_mode(topo, wl, mode)
 }
 
-/// Re-solve rates after flows arrived/completed. `Incremental` walks
-/// only the components reachable from the dirty links; `FullRefill`
-/// walks every alive flow. Both hand each component — flows in
-/// canonical (arrival-id) order — to [`fill_component`], so a flow's
-/// rate is the same bits no matter which mode computed it; flows whose
-/// rate is unchanged are left untouched (no byte settlement, no heap
-/// push), which is what keeps the two modes' event streams identical.
+/// Re-solve rates after flows arrived/completed or a link's effective
+/// capacity changed. `Incremental` walks only the components reachable
+/// from the dirty links; `FullRefill` walks every alive flow. Both hand
+/// each component — flows in canonical (arrival-id) order — to
+/// [`fill_component`], so a flow's rate is the same bits no matter
+/// which mode computed it; flows whose rate is unchanged are left
+/// untouched (no byte settlement, no heap push), which is what keeps
+/// the two modes' event streams identical. `eff_cap` is the engine's
+/// current per-link effective capacity (nominal minus any active
+/// faults).
 #[allow(clippy::too_many_arguments)]
 fn resolve_rates(
-    topo: &LinkGraph,
+    eff_cap: &[f64],
     mode: RefillMode,
     slots: &mut [ActiveFlow],
     link_flows: &[Vec<u32>],
@@ -1021,8 +1086,8 @@ fn resolve_rates(
                     obs::record("netsim.dirty_component", comp.len() as u64);
                 }
                 fill_component(
-                    topo, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t, busy,
-                    heap,
+                    eff_cap, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t,
+                    busy, heap,
                 );
             }
         }
@@ -1054,8 +1119,8 @@ fn resolve_rates(
                     obs::record("netsim.dirty_component", comp.len() as u64);
                 }
                 fill_component(
-                    topo, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t, busy,
-                    heap,
+                    eff_cap, slots, comp, comp_links, n_unfrozen, used, frozen, new_rates, t,
+                    busy, heap,
                 );
             }
         }
@@ -1072,10 +1137,13 @@ fn resolve_rates(
 /// makes incremental and full refills bit-identical. Flows whose rate
 /// is unchanged are not touched; changed flows settle their drained
 /// bytes at `t`, bump their generation, and push a fresh predicted
-/// drain event.
+/// drain event. Link constraints come from `eff_cap` — the *effective*
+/// capacities, so injected faults reshape the allocation; per-flow
+/// ceilings (`ActiveFlow::cap`) stay nominal, which is harmless because
+/// a degraded link always binds first through its slack.
 #[allow(clippy::too_many_arguments)]
 fn fill_component(
-    topo: &LinkGraph,
+    eff_cap: &[f64],
     slots: &mut [ActiveFlow],
     comp: &[u32],
     comp_links: &mut Vec<usize>,
@@ -1111,7 +1179,7 @@ fn fill_component(
         let mut bind_flow: Option<usize> = None;
         for &l in comp_links.iter() {
             if n_unfrozen[l] > 0 {
-                let slack = topo.links[l].capacity - used[l] - n_unfrozen[l] as f64 * fill;
+                let slack = eff_cap[l] - used[l] - n_unfrozen[l] as f64 * fill;
                 let d = slack / n_unfrozen[l] as f64;
                 if d < delta {
                     delta = d;
@@ -1141,8 +1209,8 @@ fn fill_component(
             let f = &slots[s as usize];
             let at_cap = fill >= f.cap * (1.0 - 1e-12);
             let on_saturated = f.links.iter().any(|&l| {
-                let slack = topo.links[l].capacity - used[l] - n_unfrozen[l] as f64 * fill;
-                slack <= topo.links[l].capacity * 1e-12
+                let slack = eff_cap[l] - used[l] - n_unfrozen[l] as f64 * fill;
+                slack <= eff_cap[l] * 1e-12
             });
             let forced =
                 bind_flow == Some(ci) || bind_link.is_some_and(|bl| f.links.contains(&bl));
@@ -1533,6 +1601,129 @@ mod tests {
         assert_ne!(RefillMode::Auto.resolve(), RefillMode::Auto);
         assert_eq!(RefillMode::Incremental.resolve(), RefillMode::Incremental);
         assert_eq!(RefillMode::FullRefill.resolve(), RefillMode::FullRefill);
+    }
+
+    /// The mini-dumbbell from `two_flows_share_a_bottleneck_fairly`,
+    /// plus the ids of the 25 GB/s waist links (both directions).
+    fn mini_dumbbell() -> (LinkGraph, Vec<u32>) {
+        let src = r#"{"name": "mini-dumbbell",
+            "nodes": ["a", "b", "c", "d",
+                      {"id": "s0", "kind": "switch"}, {"id": "s1", "kind": "switch"}],
+            "links": [
+              {"src": "a", "dst": "s0", "bw_gbps": 100, "latency_us": 1},
+              {"src": "b", "dst": "s0", "bw_gbps": 100, "latency_us": 1},
+              {"src": "c", "dst": "s1", "bw_gbps": 100, "latency_us": 1},
+              {"src": "d", "dst": "s1", "bw_gbps": 100, "latency_us": 1},
+              {"src": "s0", "dst": "s1", "bw_gbps": 25, "latency_us": 5}
+            ]}"#;
+        let topo = LinkGraph::from_json(&crate::util::json::parse(src).unwrap()).unwrap();
+        let waist: Vec<u32> = topo
+            .links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.capacity == 25.0 * GB)
+            .map(|(i, _)| i as u32)
+            .collect();
+        assert_eq!(waist.len(), 2, "bidirectional waist");
+        (topo, waist)
+    }
+
+    #[test]
+    fn cap_event_brownout_slows_a_flow_in_closed_form() {
+        // One flow over the waist; halfway through its drain the waist
+        // browns out to half capacity. The completion time is exact:
+        // t_half + remaining/(cap/2) + path latency.
+        let (topo, waist) = mini_dumbbell();
+        let cap = 25.0 * GB;
+        let bytes = 1e9;
+        let at = bytes / (2.0 * cap); // half the bytes drained
+        let mut wl = Workload::new();
+        wl.add(
+            TaskKind::Transfer {
+                flows: vec![FlowSpec { src: 0, dst: 2, bytes }],
+                extra_latency: 0.0,
+            },
+            &[],
+        );
+        for &l in &waist {
+            wl.cap_events.push(CapEvent {
+                at,
+                link: l,
+                capacity: cap * 0.5,
+            });
+        }
+        let rep = run(&topo, &wl);
+        let expect = at + (bytes - cap * at) / (cap * 0.5) + 7e-6;
+        assert!(
+            (rep.batch_time - expect).abs() / expect < 1e-9,
+            "browned-out flow: {} vs {expect}",
+            rep.batch_time
+        );
+        // And the fault replays bit-identically under both refill modes.
+        let inc = run_with_mode(&topo, &wl, RefillMode::Incremental);
+        let full = run_with_mode(&topo, &wl, RefillMode::FullRefill);
+        inc.assert_bits_eq(&full, "brownout incremental vs full refill");
+    }
+
+    #[test]
+    fn cap_event_restore_speeds_the_flow_back_up() {
+        // A flap window: degrade at t0, restore at t1. The flow must
+        // finish strictly later than a clean run and strictly earlier
+        // than under a permanent brownout.
+        let (topo, waist) = mini_dumbbell();
+        let cap = 25.0 * GB;
+        let bytes = 1e9;
+        let build = |events: &[(f64, f64)]| {
+            let mut wl = Workload::new();
+            wl.add(
+                TaskKind::Transfer {
+                    flows: vec![FlowSpec { src: 0, dst: 2, bytes }],
+                    extra_latency: 0.0,
+                },
+                &[],
+            );
+            for &(at, frac) in events {
+                for &l in &waist {
+                    wl.cap_events.push(CapEvent {
+                        at,
+                        link: l,
+                        capacity: cap * frac,
+                    });
+                }
+            }
+            wl
+        };
+        let t0 = bytes / (4.0 * cap);
+        let t1 = bytes / (2.0 * cap);
+        let clean = run(&topo, &build(&[])).batch_time;
+        let flap = run(&topo, &build(&[(t0, 0.1), (t1, 1.0)])).batch_time;
+        let brown = run(&topo, &build(&[(t0, 0.1)])).batch_time;
+        assert!(clean < flap, "flap must cost time: {clean} vs {flap}");
+        assert!(flap < brown, "restore must help: {flap} vs {brown}");
+    }
+
+    #[test]
+    fn cap_event_past_the_batch_does_not_stretch_the_clock() {
+        // A restore scheduled after the last task (flap window outlives
+        // the batch) adds an event round but must not move batch_time.
+        let (topo, waist) = mini_dumbbell();
+        let mut wl = Workload::new();
+        wl.add(
+            TaskKind::Transfer {
+                flows: vec![FlowSpec { src: 0, dst: 2, bytes: 1e9 }],
+                extra_latency: 0.0,
+            },
+            &[],
+        );
+        let base = run(&topo, &wl);
+        wl.cap_events.push(CapEvent {
+            at: base.batch_time * 2.0,
+            link: waist[0],
+            capacity: 25.0 * GB,
+        });
+        let rep = run(&topo, &wl);
+        assert_eq!(rep.batch_time.to_bits(), base.batch_time.to_bits());
+        assert_eq!(rep.events, base.events + 1, "the late round is still counted");
     }
 
     #[test]

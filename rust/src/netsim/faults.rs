@@ -1,0 +1,470 @@
+//! Seeded fault injection — the "things break" half of the flow
+//! simulator, mirroring [`super::flowgen`]'s determinism discipline.
+//!
+//! A production fabric loses links, browns out trunks, and grows
+//! stragglers. [`draw`] turns a [`FaultSpec`] (severity knob, window,
+//! fault budget, seed) into a concrete [`FaultScenario`]: link faults
+//! (hard kill, bandwidth brownout, timed flap windows — always applied
+//! to *both* directions of a link) and device stragglers (compute
+//! slowdown factors, applied during lowering by
+//! [`super::flows::lower_faulted`]). [`inject`] materializes the link
+//! faults as timed [`CapEvent`]s on an already-lowered [`Workload`];
+//! the [`super::fairshare::FairshareEngine`] honors them in both
+//! [`super::SimMode::Monolithic`] and [`super::SimMode::Decomposed`]
+//! bit-identically — a capacity change dirties only the link-sharing
+//! component that owns the link (see `decompose`'s cap-event routing).
+//!
+//! Everything here is a pure single-threaded function of
+//! `(topo, spec)` — same seed, same faults, bit for bit — which is
+//! what lets `solver::refine` and `nest chaos` replay the *same*
+//! scenario under every candidate plan and compare retention fairly.
+
+use super::fairshare::{CapEvent, Workload};
+use super::topo::LinkGraph;
+use crate::obs;
+use crate::util::rng::Rng;
+
+/// Residual capacity fraction of a hard-killed link. A true zero would
+/// strand in-flight bytes forever (the fair-share engine only finishes
+/// flows that drain); a 1e-4 trickle keeps every simulation finite
+/// while making the kill economically total — any plan still crossing
+/// the link pays a ~10 000× slowdown on those bytes.
+pub const KILL_FRACTION: f64 = 1e-4;
+
+/// One fault on one directed link. Times are absolute seconds on the
+/// simulation clock (the batch starts at 0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LinkFault {
+    /// Hard failure at `at`: capacity drops to
+    /// `nominal · KILL_FRACTION` for the rest of the batch.
+    Kill { at: f64 },
+    /// Bandwidth brownout at `at`: capacity drops to
+    /// `nominal · fraction` for the rest of the batch.
+    Brownout { at: f64, fraction: f64 },
+    /// Timed flap: capacity drops to `nominal · fraction` at `from`
+    /// and is restored to nominal at `until`.
+    Flap { from: f64, until: f64, fraction: f64 },
+}
+
+/// Full specification of one fault scenario. The scenario is a pure
+/// function of `(topo, spec)`; `seed` alone distinguishes replicates.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Fault severity in `[0, 1]`: scales how many faults fire, how
+    /// deep brownouts cut, and how slow stragglers run. 0 = nothing.
+    pub severity: f64,
+    /// Scenario window in seconds: faults strike within the first half
+    /// of `[0, duration)` so they overlap the work under study. Callers
+    /// typically pass the clean (fault-free) batch time.
+    pub duration: f64,
+    /// Link-fault budget: `ceil(links · severity)` distinct links are
+    /// faulted (both directions each).
+    pub links: usize,
+    /// Straggler budget: `ceil(stragglers · severity)` distinct devices
+    /// get a compute slowdown.
+    pub stragglers: usize,
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// A reasonable default scenario at `severity` over `duration`:
+    /// up to 3 faulted links and 2 stragglers, scaled by severity. The
+    /// chaos harness and `refine --fault-severity` build on this.
+    pub fn at_severity(severity: f64, duration: f64, seed: u64) -> Self {
+        FaultSpec {
+            severity,
+            duration,
+            links: 3,
+            stragglers: 2,
+            seed,
+        }
+    }
+}
+
+/// A drawn fault scenario, ready for [`inject`] (link faults) and
+/// [`super::flows::lower_faulted`] (stragglers).
+#[derive(Debug, Clone, Default)]
+pub struct FaultScenario {
+    /// `(link id, fault)` in draw order. Both directions of a faulted
+    /// link appear as separate entries carrying the same fault.
+    pub link_faults: Vec<(usize, LinkFault)>,
+    /// `(device id, slowdown ≥ 1)`: the device's compute stretches by
+    /// this factor.
+    pub stragglers: Vec<(usize, f64)>,
+}
+
+impl FaultScenario {
+    pub fn is_empty(&self) -> bool {
+        self.link_faults.is_empty() && self.stragglers.is_empty()
+    }
+
+    /// Compute slowdown of `device` (1.0 when healthy; the max factor
+    /// when a device was drawn more than once across merged scenarios).
+    pub fn slowdown_of(&self, device: usize) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|&&(d, _)| d == device)
+            .map(|&(_, s)| s)
+            .fold(1.0, f64::max)
+    }
+
+    /// Materialize the link faults as timed capacity-change events
+    /// against `topo`'s nominal capacities, in draw order (the engine's
+    /// heap breaks same-time ties by event index, so this order is part
+    /// of the bit-identity contract).
+    pub fn cap_events(&self, topo: &LinkGraph) -> Vec<CapEvent> {
+        let mut out = Vec::with_capacity(self.link_faults.len() * 2);
+        for &(l, fault) in &self.link_faults {
+            let nominal = topo.links[l].capacity;
+            match fault {
+                LinkFault::Kill { at } => out.push(CapEvent {
+                    at,
+                    link: l as u32,
+                    capacity: nominal * KILL_FRACTION,
+                }),
+                LinkFault::Brownout { at, fraction } => out.push(CapEvent {
+                    at,
+                    link: l as u32,
+                    capacity: nominal * fraction,
+                }),
+                LinkFault::Flap {
+                    from,
+                    until,
+                    fraction,
+                } => {
+                    out.push(CapEvent {
+                        at: from,
+                        link: l as u32,
+                        capacity: nominal * fraction,
+                    });
+                    out.push(CapEvent {
+                        at: until,
+                        link: l as u32,
+                        capacity: nominal,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Directed reverse of link `l` (the `(dst, src)` twin), if the
+/// topology has one. Tier-stack expansions always do; hand-written
+/// edge-lists may be asymmetric.
+fn reverse_of(topo: &LinkGraph, l: usize) -> Option<usize> {
+    let e = &topo.links[l];
+    topo.links
+        .iter()
+        .position(|r| r.src == e.dst && r.dst == e.src)
+}
+
+/// Brownout depth at `severity`: a fraction in `[0.05, 1)` that cuts
+/// deeper as severity rises.
+fn draw_fraction(severity: f64, rng: &mut Rng) -> f64 {
+    (1.0 - severity * (0.5 + 0.5 * rng.gen_f64())).max(0.05)
+}
+
+/// Draw the fault scenario for `topo` under `spec`. Pure and
+/// single-threaded: the same `(topo, spec)` always yields bit-identical
+/// faults, independent of simulator mode or thread count.
+///
+/// Severity scales three axes at once: the number of faults
+/// (`ceil(budget · severity)`), the kind mix (kills become more likely
+/// as severity rises), and the magnitudes (brownout depth, straggler
+/// slowdown). Fault times land in the first half of the window so they
+/// overlap the batch rather than striking after it drains.
+pub fn draw(topo: &LinkGraph, spec: &FaultSpec) -> FaultScenario {
+    let _span = obs::span_with("faults.draw", "netsim", || {
+        vec![
+            ("seed", spec.seed.to_string()),
+            ("severity", format!("{:.3}", spec.severity)),
+        ]
+    });
+    assert!(
+        (0.0..=1.0).contains(&spec.severity) && spec.severity.is_finite(),
+        "fault severity must be a fraction in [0, 1]"
+    );
+    assert!(
+        spec.duration > 0.0 && spec.duration.is_finite(),
+        "fault window duration must be positive"
+    );
+    let mut rng = Rng::new(spec.seed);
+    let mut sc = FaultScenario::default();
+    let n_link_faults = (spec.links as f64 * spec.severity).ceil() as usize;
+    let n_stragglers = (spec.stragglers as f64 * spec.severity).ceil() as usize;
+
+    if n_link_faults > 0 {
+        assert!(
+            !topo.links.is_empty(),
+            "cannot fault links on a linkless topology"
+        );
+        let mut hit = vec![false; topo.links.len()];
+        for _ in 0..n_link_faults {
+            // Bounded retry keeps the draw deterministic while avoiding
+            // double-faulting a link (a later Brownout would otherwise
+            // resurrect an earlier Kill). On tiny topologies the budget
+            // can exceed the distinct links; we then skip the leftovers.
+            let mut l = rng.gen_range(topo.links.len());
+            let mut tries = 0;
+            while hit[l] && tries < 32 {
+                l = rng.gen_range(topo.links.len());
+                tries += 1;
+            }
+            if hit[l] {
+                continue;
+            }
+            let rev = reverse_of(topo, l);
+            hit[l] = true;
+            if let Some(r) = rev {
+                hit[r] = true;
+            }
+            let at = rng.gen_f64() * 0.5 * spec.duration;
+            let u = rng.gen_f64();
+            let fault = if u < 0.3 * spec.severity {
+                LinkFault::Kill { at }
+            } else if u < 0.3 * spec.severity + 0.35 {
+                let until = at + (0.1 + 0.4 * rng.gen_f64()) * spec.duration;
+                let fraction = draw_fraction(spec.severity, &mut rng);
+                LinkFault::Flap {
+                    from: at,
+                    until,
+                    fraction,
+                }
+            } else {
+                let fraction = draw_fraction(spec.severity, &mut rng);
+                LinkFault::Brownout { at, fraction }
+            };
+            sc.link_faults.push((l, fault));
+            if let Some(r) = rev {
+                sc.link_faults.push((r, fault));
+            }
+        }
+    }
+
+    if n_stragglers > 0 {
+        let n = topo.n_devices();
+        assert!(n > 0, "cannot straggle devices on a deviceless topology");
+        let mut hit = vec![false; n];
+        for _ in 0..n_stragglers {
+            let mut d = rng.gen_range(n);
+            let mut tries = 0;
+            while hit[d] && tries < 32 {
+                d = rng.gen_range(n);
+                tries += 1;
+            }
+            if hit[d] {
+                continue;
+            }
+            hit[d] = true;
+            let slowdown = 1.0 + spec.severity * (0.5 + 1.5 * rng.gen_f64());
+            sc.stragglers.push((d, slowdown));
+        }
+    }
+
+    if obs::enabled() {
+        obs::count("faults.link_faults", sc.link_faults.len() as u64);
+        obs::count("faults.stragglers", sc.stragglers.len() as u64);
+    }
+    sc
+}
+
+/// Materialize `scenario`'s link faults onto an already-lowered
+/// workload as timed capacity-change events. Callable once per
+/// workload (faults are cluster state, not per-flow state — merging
+/// two scenarios is the caller's job, before injection). Returns the
+/// number of capacity events injected. Stragglers are *not* applied
+/// here — they act during lowering ([`super::flows::lower_faulted`]).
+pub fn inject(wl: &mut Workload, topo: &LinkGraph, scenario: &FaultScenario) -> usize {
+    assert!(
+        wl.cap_events.is_empty(),
+        "a fault scenario was already injected into this workload"
+    );
+    wl.cap_events = scenario.cap_events(topo);
+    if obs::enabled() {
+        obs::count("faults.cap_events", wl.cap_events.len() as u64);
+    }
+    wl.cap_events.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::fairshare::{FlowSpec, TaskKind};
+    use crate::netsim::{topo, SimMode, Simulation};
+
+    fn spec(severity: f64, seed: u64) -> FaultSpec {
+        FaultSpec::at_severity(severity, 1e-2, seed)
+    }
+
+    fn assert_scenarios_identical(a: &FaultScenario, b: &FaultScenario) {
+        assert_eq!(a.link_faults.len(), b.link_faults.len());
+        for (x, y) in a.link_faults.iter().zip(&b.link_faults) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1, y.1);
+        }
+        assert_eq!(a.stragglers.len(), b.stragglers.len());
+        for (x, y) in a.stragglers.iter().zip(&b.stragglers) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits());
+        }
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_scenario_bitwise() {
+        let t = topo::spineleaf(4, 4, 4.0);
+        let a = draw(&t, &spec(0.7, 7));
+        let b = draw(&t, &spec(0.7, 7));
+        assert_scenarios_identical(&a, &b);
+        assert!(!a.link_faults.is_empty());
+        assert!(!a.stragglers.is_empty());
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let t = topo::fattree(4);
+        let a = draw(&t, &spec(0.8, 1));
+        let b = draw(&t, &spec(0.8, 2));
+        let same = a.link_faults.len() == b.link_faults.len()
+            && a.link_faults.iter().zip(&b.link_faults).all(|(x, y)| x == y);
+        assert!(!same, "distinct seeds drew identical link faults");
+    }
+
+    #[test]
+    fn zero_severity_is_an_empty_scenario() {
+        let t = topo::spineleaf(2, 4, 2.0);
+        let sc = draw(&t, &spec(0.0, 3));
+        assert!(sc.is_empty());
+        assert_eq!(sc.slowdown_of(0), 1.0);
+        let mut wl = Workload::new();
+        assert_eq!(inject(&mut wl, &t, &sc), 0);
+    }
+
+    #[test]
+    fn both_directions_of_a_faulted_link_fault_together() {
+        let t = topo::spineleaf(4, 4, 4.0);
+        let sc = draw(&t, &spec(1.0, 11));
+        assert!(!sc.link_faults.is_empty());
+        // Tier expansions are symmetric: faults come in mirrored pairs
+        // carrying the same fault value.
+        assert_eq!(sc.link_faults.len() % 2, 0);
+        for pair in sc.link_faults.chunks(2) {
+            let (f, ff) = pair[0];
+            let (r, rf) = pair[1];
+            assert_eq!(ff, rf);
+            assert_eq!(t.links[f].src, t.links[r].dst);
+            assert_eq!(t.links[f].dst, t.links[r].src);
+        }
+    }
+
+    #[test]
+    fn kill_leaves_a_residual_trickle_and_flap_restores_nominal() {
+        let t = topo::spineleaf(2, 4, 2.0);
+        let sc = FaultScenario {
+            link_faults: vec![
+                (0, LinkFault::Kill { at: 1e-3 }),
+                (
+                    1,
+                    LinkFault::Flap {
+                        from: 2e-3,
+                        until: 5e-3,
+                        fraction: 0.25,
+                    },
+                ),
+            ],
+            stragglers: vec![],
+        };
+        let evs = sc.cap_events(&t);
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].capacity, t.links[0].capacity * KILL_FRACTION);
+        assert!(evs[0].capacity > 0.0, "a kill must leave the sim finite");
+        assert_eq!(evs[1].capacity, t.links[1].capacity * 0.25);
+        assert_eq!(evs[2].at, 5e-3);
+        assert_eq!(evs[2].capacity, t.links[1].capacity);
+    }
+
+    #[test]
+    fn stragglers_always_slow_down() {
+        let t = topo::fattree(4);
+        for seed in 0..8u64 {
+            let sc = draw(&t, &spec(0.9, 100 + seed));
+            for &(d, s) in &sc.stragglers {
+                assert!(s >= 1.0, "straggler {d} sped up: {s}");
+                assert_eq!(sc.slowdown_of(d), s);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "already injected")]
+    fn double_injection_panics() {
+        let t = topo::spineleaf(2, 4, 2.0);
+        let sc = draw(&t, &spec(0.9, 5));
+        assert!(!sc.link_faults.is_empty());
+        let mut wl = Workload::new();
+        inject(&mut wl, &t, &sc);
+        inject(&mut wl, &t, &sc);
+    }
+
+    #[test]
+    fn faulted_workload_rides_every_mode_bit_identically() {
+        // The tentpole bar in miniature: a seeded scenario injected into
+        // a multi-component workload produces the same bits monolithic
+        // and decomposed at 1 and 4 threads.
+        let t = topo::spineleaf(4, 8, 4.0);
+        let mut wl = Workload::new();
+        for r in 0..4 {
+            // Independent rack-local chains (separate components) plus
+            // one cross-rack flow so trunk faults matter.
+            let base = r * 8;
+            let c = wl.add(TaskKind::Compute { seconds: 1e-4 }, &[]);
+            let x = wl.add(
+                TaskKind::Transfer {
+                    flows: vec![FlowSpec {
+                        src: base,
+                        dst: base + 3,
+                        bytes: 2e8,
+                    }],
+                    extra_latency: 0.0,
+                },
+                &[c],
+            );
+            wl.add(
+                TaskKind::Transfer {
+                    flows: vec![FlowSpec {
+                        src: base + 1,
+                        dst: (base + 9) % 32,
+                        bytes: 1e8,
+                    }],
+                    extra_latency: 0.0,
+                },
+                &[x],
+            );
+        }
+        let sc = draw(&t, &FaultSpec::at_severity(0.8, 5e-2, 0xFA));
+        assert!(!sc.link_faults.is_empty());
+        assert!(inject(&mut wl, &t, &sc) > 0);
+        let mono = Simulation::new()
+            .mode(SimMode::Monolithic)
+            .run_workload(&t, &wl);
+        for threads in [1, 4] {
+            let dec = Simulation::new()
+                .mode(SimMode::Decomposed)
+                .threads(threads)
+                .run_workload(&t, &wl);
+            mono.assert_bits_eq(&dec, &format!("faulted workload decomposed@{threads}"));
+        }
+        // Faults only ever slow the drain relative to a clean run.
+        let mut clean = wl.clone();
+        clean.cap_events.clear();
+        let base = Simulation::new()
+            .mode(SimMode::Monolithic)
+            .run_workload(&t, &clean);
+        assert!(
+            mono.batch_time >= base.batch_time * (1.0 - 1e-12),
+            "faults sped the batch up: {} vs {}",
+            mono.batch_time,
+            base.batch_time
+        );
+    }
+}

@@ -34,6 +34,7 @@ use crate::sim::{stage_ops, Op, Schedule};
 use crate::solver::plan::{PlacementPlan, StagePlan};
 
 use super::fairshare::{FlowSpec, TaskKind, Workload};
+use super::faults::FaultScenario;
 use super::topo::LinkGraph;
 
 /// One sequential phase of a lowered collective: all flows run
@@ -318,6 +319,25 @@ pub fn lower(
     plan: &PlacementPlan,
     schedule: Schedule,
 ) -> Workload {
+    lower_faulted(graph, cluster, topo, plan, schedule, None)
+}
+
+/// [`lower`] with an optional fault scenario: each straggling device's
+/// compute slowdown stretches the fwd/bwd phases of every stage that
+/// places any replica on it. Stages run their replicas in lockstep
+/// (mirroring the slowest-class rule of `stage_class_mask`), so one
+/// straggler slows the whole stage across all replicas — the honest
+/// pipeline-parallel cost of a slow device. Link faults are *not*
+/// applied here; inject them into the returned workload with
+/// [`super::faults::inject`].
+pub fn lower_faulted(
+    graph: &LayerGraph,
+    cluster: &Cluster,
+    topo: &LinkGraph,
+    plan: &PlacementPlan,
+    schedule: Schedule,
+    faults: Option<&FaultScenario>,
+) -> Workload {
     let p = plan.n_stages();
     let m = plan.n_microbatches;
     let d = plan.dp_width;
@@ -357,8 +377,18 @@ pub fn lower(
         // (all replicas) cover — mirrors the analytic DES.
         let mask = crate::solver::assign::stage_class_mask(cluster, &st.devices, d, stride);
         let (f, b) = cm.stage_phase_compute_on(mask, st.layers.0, st.layers.1, &st.mem);
-        fwd_s[k] = f;
-        bwd_s[k] = b;
+        // Stragglers: lockstep means the slowest participant paces the
+        // stage, so take the max slowdown over every replica's devices.
+        let mut slow = 1.0f64;
+        if let Some(sc) = faults {
+            for r in 0..d {
+                for &dev in &st.devices {
+                    slow = slow.max(sc.slowdown_of(dev + r * stride));
+                }
+            }
+        }
+        fwd_s[k] = f * slow;
+        bwd_s[k] = b * slow;
         if k + 1 < p {
             act_bytes[k] = cm.boundary_bytes_after(st.layers.1);
         }
@@ -652,6 +682,40 @@ mod tests {
             flow.batch_time,
             ana.batch_time
         );
+    }
+
+    #[test]
+    fn straggler_slows_only_plans_that_touch_it() {
+        use crate::netsim::faults::FaultScenario;
+        let (g, c, topo, plan) = mini_setup();
+        let base = fairshare::run(&topo, &lower(&g, &c, &topo, &plan, Schedule::OneFOneB));
+        // Device 1 hosts stage 1 of replica 0: a 2× straggler there must
+        // stretch the batch.
+        let hit = FaultScenario {
+            link_faults: vec![],
+            stragglers: vec![(1, 2.0)],
+        };
+        let slow = fairshare::run(
+            &topo,
+            &lower_faulted(&g, &c, &topo, &plan, Schedule::OneFOneB, Some(&hit)),
+        );
+        assert!(
+            slow.batch_time > base.batch_time,
+            "straggler did not slow the batch: {} vs {}",
+            slow.batch_time,
+            base.batch_time
+        );
+        // The plan uses devices 0..4 (2 stages × 2 replicas, stride 2);
+        // a straggler on an unused device changes nothing, bit for bit.
+        let miss = FaultScenario {
+            link_faults: vec![],
+            stragglers: vec![(7, 4.0)],
+        };
+        let same = fairshare::run(
+            &topo,
+            &lower_faulted(&g, &c, &topo, &plan, Schedule::OneFOneB, Some(&miss)),
+        );
+        same.assert_bits_eq(&base, "straggler on an unused device");
     }
 
     #[test]

@@ -43,13 +43,15 @@
 
 pub mod decompose;
 pub mod fairshare;
+pub mod faults;
 pub mod flowgen;
 pub mod flows;
 pub mod topo;
 
 pub use fairshare::{
-    FairshareEngine, FlowSpec, LinkUtil, NetsimReport, RefillMode, TaskKind, Workload,
+    CapEvent, FairshareEngine, FlowSpec, LinkUtil, NetsimReport, RefillMode, TaskKind, Workload,
 };
+pub use faults::{FaultScenario, FaultSpec, LinkFault};
 pub use flowgen::{BgFlow, BgMix, MixSpec, SizeDist, SpatialMatrix};
 pub use topo::{Link, LinkGraph, Node, NodeKind, PathInfo};
 

@@ -36,7 +36,9 @@
 //! `nest mix` harness tables the flips across load levels.
 
 use crate::graph::LayerGraph;
-use crate::netsim::{flowgen, flows, LinkGraph, MixSpec, NetsimOpts, Simulation};
+use crate::netsim::{
+    faults, flowgen, flows, FaultSpec, LinkGraph, MixSpec, NetsimOpts, Simulation,
+};
 use crate::network::Cluster;
 use crate::sim::Schedule;
 use crate::util::table::{fmt_time, Table};
@@ -71,6 +73,16 @@ pub struct RefinedPlan {
     /// batch time across the background levels,
     /// `(bg_sim[i] − sim_batch) / sim_batch`. 0.0 without levels.
     pub degradation: f64,
+    /// Worst-case flow-simulated training batch time per fault severity
+    /// level, parallel to [`RefineOpts::fault_severities`] (the max over
+    /// that level's seeded scenarios; empty without fault replays).
+    pub fault_sim: Vec<f64>,
+    /// Failure-robustness key: throughput retention under faults,
+    /// `sim_batch / fault_sim[i]` per level, folded to the worst level
+    /// (or the mean of per-level worst cases — CVaR-style — when
+    /// [`RefineOpts::worst_case`] is false). In `(0, 1]`; 1.0 without
+    /// fault replays. Higher is better.
+    pub retention: f64,
     pub plan: PlacementPlan,
 }
 
@@ -78,13 +90,17 @@ pub struct RefinedPlan {
 #[derive(Debug, Clone)]
 pub struct RefineReport {
     /// Shortlisted plans sorted by `(sim_batch, analytic_rank)` — or,
-    /// when background levels were replayed
-    /// ([`refine_under_load`]), by `(degradation, sim_batch,
-    /// analytic_rank)` — index 0 is the re-ranked winner.
+    /// when background levels / fault severities were replayed
+    /// ([`refine_under_load`]), by `(retention desc, degradation,
+    /// sim_batch, analytic_rank)` — index 0 is the re-ranked winner.
     pub ranked: Vec<RefinedPlan>,
     /// Background-load levels the shortlist was replayed under (empty
     /// for plain refinement); `ranked[..].bg_sim` is parallel to this.
     pub bg_loads: Vec<f64>,
+    /// Fault severity levels the shortlist was replayed under (empty
+    /// when no fault replays were requested); `ranked[..].fault_sim` is
+    /// parallel to this.
+    pub fault_severities: Vec<f64>,
     pub solve_seconds: f64,
     pub dp_states: u64,
     pub configs_tried: u64,
@@ -142,6 +158,12 @@ impl RefineReport {
         if !self.bg_loads.is_empty() {
             headers.push("degradation".into());
         }
+        for sev in &self.fault_severities {
+            headers.push(format!("faults {:.0}%", sev * 100.0));
+        }
+        if !self.fault_severities.is_empty() {
+            headers.push("retention".into());
+        }
         let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
         let mut tbl = Table::new(&header_refs);
         for (i, r) in self.ranked.iter().enumerate() {
@@ -160,6 +182,14 @@ impl RefineReport {
             }
             if !self.bg_loads.is_empty() {
                 row.push(format!("{:+.1}%", r.degradation * 100.0));
+            }
+            // Per-level retention: the clean simulated time over that
+            // level's worst-case faulted time.
+            for ft in &r.fault_sim {
+                row.push(format!("{:.0}%", r.sim_batch / ft * 100.0));
+            }
+            if !self.fault_severities.is_empty() {
+                row.push(format!("{:.0}%", r.retention * 100.0));
             }
             tbl.row(row);
         }
@@ -210,6 +240,7 @@ pub fn refine_opts(
     Some(RefineReport {
         ranked,
         bg_loads: Vec::new(),
+        fault_severities: Vec::new(),
         solve_seconds: top.solve_seconds,
         dp_states: top.dp_states,
         configs_tried: top.configs_tried,
@@ -231,9 +262,20 @@ pub struct RefineOpts {
     /// `bg_seed + i`, and every plan at one level replays the *same*
     /// mix (robustness must compare like against like).
     pub bg_seed: u64,
-    /// Rank by worst-case degradation across the levels (default);
-    /// `false` ranks by the mean instead.
+    /// Rank by worst-case degradation/retention across the levels
+    /// (default); `false` ranks by the mean instead (for retention this
+    /// is the CVaR-style mean of per-level worst cases).
     pub worst_case: bool,
+    /// Fault severity levels to replay the shortlist under (`nest
+    /// refine --fault-severity 0.3,0.7`). Empty = no fault replays.
+    pub fault_severities: Vec<f64>,
+    /// Seeded scenarios replayed per severity level (each plan replays
+    /// every scenario; a level's score is its worst scenario).
+    pub fault_scenarios: usize,
+    /// Seed of the fault scenarios; level `i` scenario `j` draws with
+    /// `fault_seed + i·fault_scenarios + j`, and every plan replays the
+    /// *same* scenarios (robustness must compare like against like).
+    pub fault_seed: u64,
 }
 
 impl Default for RefineOpts {
@@ -244,6 +286,9 @@ impl Default for RefineOpts {
             bg_loads: Vec::new(),
             bg_seed: 0xB6,
             worst_case: true,
+            fault_severities: Vec::new(),
+            fault_scenarios: 2,
+            fault_seed: 0xFA17,
         }
     }
 }
@@ -269,17 +314,19 @@ pub fn refine_under_load(
     ropts: &RefineOpts,
 ) -> Option<RefineReport> {
     let mut report = refine_opts(graph, cluster, topo, opts, ropts.topk, ropts.netsim)?;
-    if ropts.bg_loads.is_empty() {
+    if ropts.bg_loads.is_empty() && ropts.fault_severities.is_empty() {
         return Some(report);
     }
     let _span = crate::obs::span_with("refine.under_load", "refine", || {
         vec![
             ("levels", ropts.bg_loads.len().to_string()),
+            ("fault_levels", ropts.fault_severities.len().to_string()),
             ("plans", report.ranked.len().to_string()),
         ]
     });
-    // The mixes' arrival window covers the slowest shortlisted plan, so
-    // every candidate sees the whole background churn.
+    // The mixes' arrival window (and the faults' strike window) covers
+    // the slowest shortlisted plan, so every candidate sees the whole
+    // background churn / every fault.
     let duration = report
         .ranked
         .iter()
@@ -299,29 +346,75 @@ pub fn refine_under_load(
             r.bg_sim.push(rep.train_batch_time);
         }
     }
-    for r in report.ranked.iter_mut() {
-        let sim_batch = r.sim_batch;
-        let d = if ropts.worst_case {
-            r.bg_sim
-                .iter()
-                .map(|&bg| (bg - sim_batch) / sim_batch)
-                .fold(f64::NEG_INFINITY, f64::max)
-        } else {
-            r.bg_sim
-                .iter()
-                .map(|&bg| (bg - sim_batch) / sim_batch)
-                .sum::<f64>()
-                / r.bg_sim.len() as f64
-        };
-        r.degradation = d;
+    if !ropts.bg_loads.is_empty() {
+        for r in report.ranked.iter_mut() {
+            let sim_batch = r.sim_batch;
+            let d = if ropts.worst_case {
+                r.bg_sim
+                    .iter()
+                    .map(|&bg| (bg - sim_batch) / sim_batch)
+                    .fold(f64::NEG_INFINITY, f64::max)
+            } else {
+                r.bg_sim
+                    .iter()
+                    .map(|&bg| (bg - sim_batch) / sim_batch)
+                    .sum::<f64>()
+                    / r.bg_sim.len() as f64
+            };
+            r.degradation = d;
+        }
+    }
+    // Fault axis: N seeded scenarios per severity level, shared across
+    // plans. A level scores a plan by its *worst* scenario (stragglers
+    // stretch the stage compute during lowering, link faults become
+    // timed capacity events), and the ranking key is throughput
+    // retention — worst level, or the CVaR-style mean of per-level
+    // worsts when `worst_case` is off.
+    let n_sc = ropts.fault_scenarios.max(1);
+    for (li, &sev) in ropts.fault_severities.iter().enumerate() {
+        for j in 0..n_sc {
+            let seed = ropts
+                .fault_seed
+                .wrapping_add((li * n_sc + j) as u64);
+            let sc = faults::draw(topo, &FaultSpec::at_severity(sev, duration, seed));
+            for r in report.ranked.iter_mut() {
+                let mut wl = flows::lower_faulted(
+                    graph,
+                    cluster,
+                    topo,
+                    &r.plan,
+                    Schedule::OneFOneB,
+                    Some(&sc),
+                );
+                faults::inject(&mut wl, topo, &sc);
+                let rep = sim.run_workload(topo, &wl);
+                if j == 0 {
+                    r.fault_sim.push(rep.train_batch_time);
+                } else {
+                    r.fault_sim[li] = r.fault_sim[li].max(rep.train_batch_time);
+                }
+            }
+        }
+    }
+    if !ropts.fault_severities.is_empty() {
+        for r in report.ranked.iter_mut() {
+            let rets = r.fault_sim.iter().map(|&ft| r.sim_batch / ft);
+            r.retention = if ropts.worst_case {
+                rets.fold(f64::INFINITY, f64::min)
+            } else {
+                rets.sum::<f64>() / r.fault_sim.len() as f64
+            };
+        }
     }
     report.ranked.sort_by(|a, b| {
-        a.degradation
-            .total_cmp(&b.degradation)
+        b.retention
+            .total_cmp(&a.retention)
+            .then(a.degradation.total_cmp(&b.degradation))
             .then(a.sim_batch.total_cmp(&b.sim_batch))
             .then(a.analytic_rank.cmp(&b.analytic_rank))
     });
     report.bg_loads = ropts.bg_loads.clone();
+    report.fault_severities = ropts.fault_severities.clone();
     Some(report)
 }
 
@@ -357,6 +450,8 @@ pub fn rerank(
                 n_flows: rep.n_flows,
                 bg_sim: Vec::new(),
                 degradation: 0.0,
+                fault_sim: Vec::new(),
+                retention: 1.0,
                 plan,
             }
         })
@@ -514,6 +609,80 @@ mod tests {
         assert!(table.contains("bg 30%"));
         assert!(table.contains("bg 60%"));
         assert!(table.contains("degradation"));
+    }
+
+    #[test]
+    fn under_faults_ranks_by_retention_and_is_thread_invariant() {
+        let g = models::llama2_7b(1);
+        let (c, topo) = dumbbell();
+        let ropts = RefineOpts {
+            topk: 3,
+            fault_severities: vec![0.4, 0.8],
+            fault_scenarios: 2,
+            ..Default::default()
+        };
+        let a = refine_under_load(&g, &c, &topo, &opts(1), &ropts).expect("feasible");
+        let b = refine_under_load(&g, &c, &topo, &opts(4), &ropts).expect("feasible");
+        assert_eq!(a.fault_severities, vec![0.4, 0.8]);
+        assert!(a.bg_loads.is_empty());
+        for r in &a.ranked {
+            assert_eq!(r.fault_sim.len(), 2, "one worst-case per severity level");
+            // Faults only slow: retention stays in (0, 1] up to dust.
+            assert!(r.retention > 0.0 && r.retention <= 1.0 + 1e-9, "{}", r.retention);
+            for &ft in &r.fault_sim {
+                assert!(ft >= r.sim_batch * (1.0 - 1e-9));
+            }
+            // Worst-case key: the minimum per-level retention.
+            let worst = r
+                .fault_sim
+                .iter()
+                .map(|&ft| r.sim_batch / ft)
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(r.retention.to_bits(), worst.to_bits());
+        }
+        for w in a.ranked.windows(2) {
+            assert!(w[0].retention >= w[1].retention, "ranked by retention desc");
+        }
+        // The fault-aware winner never retains less than the analytic pick.
+        assert!(a.winner().retention >= a.analytic_winner().retention);
+        // Field-for-field thread invariance.
+        assert_eq!(a.ranked.len(), b.ranked.len());
+        for (x, y) in a.ranked.iter().zip(&b.ranked) {
+            assert_eq!(x.plan, y.plan);
+            assert_eq!(x.retention.to_bits(), y.retention.to_bits());
+            for (p, q) in x.fault_sim.iter().zip(&y.fault_sim) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+        // The rendered table grows one column per level plus the key.
+        let table = a.render_table();
+        assert!(table.contains("faults 40%"));
+        assert!(table.contains("faults 80%"));
+        assert!(table.contains("retention"));
+    }
+
+    #[test]
+    fn faults_and_bg_axes_compose() {
+        let g = models::llama2_7b(1);
+        let (c, topo) = dumbbell();
+        let ropts = RefineOpts {
+            topk: 2,
+            bg_loads: vec![0.4],
+            fault_severities: vec![0.6],
+            fault_scenarios: 1,
+            ..Default::default()
+        };
+        let rep = refine_under_load(&g, &c, &topo, &opts(0), &ropts).expect("feasible");
+        for r in &rep.ranked {
+            assert_eq!(r.bg_sim.len(), 1);
+            assert_eq!(r.fault_sim.len(), 1);
+            assert!(r.degradation >= -1e-9);
+            assert!(r.retention > 0.0 && r.retention <= 1.0 + 1e-9);
+        }
+        // Retention is the primary key.
+        for w in rep.ranked.windows(2) {
+            assert!(w[0].retention >= w[1].retention);
+        }
     }
 
     #[test]

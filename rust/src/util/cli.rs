@@ -172,6 +172,27 @@ impl Args {
         }
     }
 
+    /// Like [`Args::get_f64`], but additionally requires the value to
+    /// lie in `[min, max]` (inclusive) and be finite. Out-of-range or
+    /// non-finite values record a clean error naming the accepted range
+    /// and return the default — the record-and-continue style of the
+    /// other accessors, so `--bg-load 1.5` and `--fault-severity 2`
+    /// reject with the same message shape everywhere.
+    pub fn get_f64_in_range(&mut self, key: &str, default: f64, min: f64, max: f64) -> f64 {
+        debug_assert!(
+            min <= max && (min..=max).contains(&default),
+            "default must lie in [min, max]"
+        );
+        let v = self.get_f64(key, default);
+        if !v.is_finite() || v < min || v > max {
+            self.errors.push(format!(
+                "--{key} expects a number in [{min}, {max}], got '{v}'"
+            ));
+            return default;
+        }
+        v
+    }
+
     /// Boolean flag (present or absent).
     pub fn has_flag(&mut self, key: &str) -> bool {
         self.known.push(key.to_string());
@@ -343,6 +364,40 @@ mod tests {
             "unexpected message: {err}"
         );
         assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn in_range_accepts_bounds_and_interior() {
+        for val in ["0", "0.5", "1"] {
+            let mut a = Args::parse(v(&["--fault-severity", val]));
+            let got = a.get_f64_in_range("fault-severity", 0.6, 0.0, 1.0);
+            assert_eq!(got, val.parse::<f64>().unwrap());
+            assert!(a.finish().is_ok(), "--fault-severity {val} rejected");
+        }
+        // Absent flag: the default, no error.
+        let mut a = Args::parse(v(&[]));
+        assert_eq!(a.get_f64_in_range("bg-load", 0.4, 0.0, 1.0), 0.4);
+        assert!(a.check().is_ok());
+    }
+
+    #[test]
+    fn in_range_rejects_outside_and_non_finite_with_the_range() {
+        for val in ["1.5", "-0.1", "inf", "NaN"] {
+            let mut a = Args::parse(v(&["--fault-severity", val]));
+            let got = a.get_f64_in_range("fault-severity", 0.6, 0.0, 1.0);
+            assert_eq!(got, 0.6, "--fault-severity {val} did not fall back");
+            let err = a.check().unwrap_err();
+            assert!(
+                err.contains("--fault-severity") && err.contains("[0, 1]"),
+                "unexpected message for {val}: {err}"
+            );
+            assert!(a.finish().is_err());
+        }
+        // Garbage still surfaces through the underlying get_f64 message.
+        let mut a = Args::parse(v(&["--bg-load", "heavy"]));
+        assert_eq!(a.get_f64_in_range("bg-load", 0.4, 0.0, 1.0), 0.4);
+        let err = a.check().unwrap_err();
+        assert!(err.contains("expects a number"), "unexpected: {err}");
     }
 
     #[test]

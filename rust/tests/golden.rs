@@ -1,6 +1,6 @@
 //! Golden-file snapshot tests: the rendered `nest refine` shortlist
 //! table, the harness netsim cross-validation row, and the `nest mix`
-//! shortlist-under-load table on the shipped dumbbell edge-list,
+//! and `nest chaos` shortlist tables on the shipped dumbbell edge-list,
 //! pinned against checked-in expected output so
 //! silent report-field drift (a renamed column, a re-scaled delta, a
 //! changed plan) fails loudly.
@@ -69,4 +69,13 @@ fn golden_netsim_xval_dumbbell_row() {
 #[test]
 fn golden_mix_snapshot_on_dumbbell() {
     golden_check("mix_dumbbell.txt", &nest::harness::mix::mix_snapshot());
+}
+
+/// The `nest chaos` shortlist-under-faults snapshot on the dumbbell
+/// (serial solver, fixed severities, scenario count, and fault seed):
+/// pins the fault draw, the capacity-event injection, the straggler
+/// lowering, and the retention ranking in one artifact.
+#[test]
+fn golden_chaos_snapshot_on_dumbbell() {
+    golden_check("chaos_dumbbell.txt", &nest::harness::chaos::chaos_snapshot());
 }

@@ -741,9 +741,11 @@ fn service_reconcile_prices_device_failure() {
     let mut svc = PlacementService::new(8);
     let q = Query::new(graph.clone(), cluster.clone(), threaded(1));
 
-    let report = svc
+    let outcome = svc
         .reconcile(&q, &ClusterDelta::FailOuterGroups { groups: 1 })
         .expect("bert-large feasible on 14 V100s");
+    assert!(!outcome.degraded(), "a clean fit concedes nothing");
+    let report = outcome.into_report();
     assert_eq!(report.cluster.n_devices(), 14);
     report
         .plan

@@ -836,6 +836,194 @@ fn prop_background_never_speeds_up_training_chains() {
 }
 
 // ---------------------------------------------------------------------
+// Fault injector (netsim::faults): seeded determinism across simulator
+// modes and thread counts, and the monotone-degradation property for
+// link kills/brownouts on chain workloads.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_faults_deterministic_across_modes_and_threads() {
+    // On random connected edge-lists × random multi-chain workloads:
+    // the same (topo, spec) draws a bit-identical fault scenario, and a
+    // fault-injected replay — timed capacity kills/brownouts/flaps
+    // riding the cap-event path — is bit-identical between Monolithic
+    // and Decomposed at 1 and 4 worker threads.
+    use nest::netsim::faults::{self, FaultSpec};
+
+    let seed = prop_seed(0xFA_D37E);
+    prop::forall(12, seed, |rng| {
+        let json = random_edgelist_json(rng);
+        let parsed = nest::util::json::parse(&json).expect("fuzz JSON parses");
+        let topo = LinkGraph::from_json(&parsed).expect("fuzz topology builds");
+        let n = topo.n_devices();
+        let build_wl = |rng: &mut Rng| {
+            let mut wl = Workload::new();
+            // 2–4 independent chains, so the decomposed partition has
+            // several components sharing the faulted links.
+            for _ in 0..(2 + rng.gen_range(3)) {
+                let mut prev: Option<u32> = None;
+                for _ in 0..(1 + rng.gen_range(4)) {
+                    let deps: Vec<u32> = prev.into_iter().collect();
+                    let cmp = wl.add(
+                        TaskKind::Compute {
+                            seconds: rng.gen_f64() * 1e-3,
+                        },
+                        &deps,
+                    );
+                    let mut flows = Vec::new();
+                    for _ in 0..(1 + rng.gen_range(5)) {
+                        let src = rng.gen_range(n);
+                        let mut dst = rng.gen_range(n);
+                        if src == dst {
+                            dst = (dst + 1) % n;
+                        }
+                        flows.push(FlowSpec {
+                            src,
+                            dst,
+                            bytes: 1e6 * (1.0 + rng.gen_f64() * 1e2),
+                        });
+                    }
+                    prev = Some(wl.add(
+                        TaskKind::Transfer {
+                            flows,
+                            extra_latency: 0.0,
+                        },
+                        &[cmp],
+                    ));
+                }
+            }
+            wl
+        };
+
+        let spec = FaultSpec::at_severity(
+            0.2 + 0.8 * rng.gen_f64(),
+            1e-3 * (1.0 + rng.gen_f64() * 9.0),
+            rng.next_u64(),
+        );
+        // Same (topo, spec) ⇒ bit-identical scenario and cap events.
+        let sc = faults::draw(&topo, &spec);
+        let sc2 = faults::draw(&topo, &spec);
+        let (ev, ev2) = (sc.cap_events(&topo), sc2.cap_events(&topo));
+        assert_eq!(ev.len(), ev2.len(), "fault draw diverged across calls");
+        for (x, y) in ev.iter().zip(&ev2) {
+            assert_eq!(x.at.to_bits(), y.at.to_bits());
+            assert_eq!(x.link, y.link);
+            assert_eq!(x.capacity.to_bits(), y.capacity.to_bits());
+        }
+
+        let mut probe = rng.clone();
+        let mut wl = build_wl(&mut probe);
+        faults::inject(&mut wl, &topo, &sc);
+        let mono = Simulation::new()
+            .mode(SimMode::Monolithic)
+            .run_workload(&topo, &wl);
+        assert!(mono.batch_time.is_finite() && mono.batch_time > 0.0);
+        for threads in [1usize, 4] {
+            let dec = Simulation::new()
+                .mode(SimMode::Decomposed)
+                .threads(threads)
+                .run_workload(&topo, &wl);
+            dec.assert_bits_eq(&mono, &format!("faulted decomposed {threads}t"));
+        }
+    });
+}
+
+#[test]
+fn prop_link_kill_never_speeds_up_training() {
+    // On random connected edge-lists × serial training chains (one
+    // training task active at a time — the regime where capacity loss
+    // is provably monotone): killing or degrading a link the chain
+    // actually crosses never decreases the training batch time.
+    use nest::netsim::faults::{self, FaultScenario, LinkFault};
+
+    let seed = prop_seed(0x1C11_5EED);
+    prop::forall(12, seed, |rng| {
+        let json = random_edgelist_json(rng);
+        let parsed = nest::util::json::parse(&json).expect("fuzz JSON parses");
+        let topo = LinkGraph::from_json(&parsed).expect("fuzz topology builds");
+        let n = topo.n_devices();
+
+        // A serial chain built inline so the flow endpoints are known:
+        // used links come from the same deterministic routes the engine
+        // takes.
+        let mut endpoints: Vec<(usize, usize)> = Vec::new();
+        let build_wl = |rng: &mut Rng, eps: &mut Vec<(usize, usize)>| {
+            let mut wl = Workload::new();
+            let mut prev: Option<u32> = None;
+            for _ in 0..(2 + rng.gen_range(4)) {
+                let deps: Vec<u32> = prev.into_iter().collect();
+                let cmp = wl.add(
+                    TaskKind::Compute {
+                        seconds: rng.gen_f64() * 1e-3,
+                    },
+                    &deps,
+                );
+                let mut flows = Vec::new();
+                for _ in 0..(1 + rng.gen_range(4)) {
+                    let src = rng.gen_range(n);
+                    let mut dst = rng.gen_range(n);
+                    if src == dst {
+                        dst = (dst + 1) % n;
+                    }
+                    eps.push((src, dst));
+                    flows.push(FlowSpec {
+                        src,
+                        dst,
+                        bytes: 1e6 * (1.0 + rng.gen_f64() * 1e2),
+                    });
+                }
+                prev = Some(wl.add(
+                    TaskKind::Transfer {
+                        flows,
+                        extra_latency: 0.0,
+                    },
+                    &[cmp],
+                ));
+            }
+            wl
+        };
+        let mut probe = rng.clone();
+        let wl = build_wl(&mut probe, &mut endpoints);
+        let base = Simulation::new().run_workload(&topo, &wl);
+        assert_eq!(base.train_batch_time.to_bits(), base.batch_time.to_bits());
+
+        // Pick a link a random training flow crosses and fault it —
+        // a hard kill or a brownout, striking inside the clean run.
+        let (src, dst) = endpoints[rng.gen_range(endpoints.len())];
+        let used = topo.path(src, dst).links;
+        let link = used[rng.gen_range(used.len())];
+        let at = rng.gen_f64() * 0.9 * base.batch_time;
+        let fault = if rng.gen_bool(0.5) {
+            LinkFault::Kill { at }
+        } else {
+            LinkFault::Brownout {
+                at,
+                fraction: (0.05 + 0.5 * rng.gen_f64()).min(1.0),
+            }
+        };
+        let sc = FaultScenario {
+            link_faults: vec![(link, fault)],
+            stragglers: Vec::new(),
+        };
+        let mut endpoints2 = Vec::new();
+        let mut probe = rng.clone();
+        let mut faulted_wl = build_wl(&mut probe, &mut endpoints2);
+        faults::inject(&mut faulted_wl, &topo, &sc);
+        let rep = Simulation::new().run_workload(&topo, &faulted_wl);
+        assert!(
+            rep.train_batch_time.is_finite() && rep.train_batch_time > 0.0,
+            "faulted chain never completed"
+        );
+        assert!(
+            rep.train_batch_time >= base.batch_time * (1.0 - 1e-9),
+            "fault {fault:?} on link {link} sped training up: {} < {}",
+            rep.train_batch_time,
+            base.batch_time
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
 // Flight recorder: tracing sits *outside* the determinism boundary.
 // Enabling the recorder may only observe the pipeline — every solver
 // shortlist, service response, and netsim report must be
